@@ -1,0 +1,100 @@
+//! Embedding server: the L3 coordinator as a long-running service.
+//! A producer thread streams edge events (social-network growth) while
+//! concurrent reader threads query snapshots, central nodes, and cluster
+//! assignments.  Reports ingest throughput and update/query latencies.
+//!
+//! ```bash
+//! cargo run --release --example embedding_server
+//! ```
+
+use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
+use grest::graph::generators;
+use grest::graph::stream::GraphEvent;
+use grest::linalg::rng::Rng;
+use grest::tracking::{GRest, SubspaceMode};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(1);
+    let g = generators::barabasi_albert(1000, 3, &mut rng);
+    println!("seed graph: {} nodes, {} edges", g.n_nodes(), g.n_edges());
+
+    let svc = TrackingService::spawn(
+        ServiceConfig {
+            initial: g,
+            k: 32,
+            policy: BatchPolicy::Either { events: 128, new_nodes: 32 },
+            seed: 2,
+        },
+        // the tracker is built on the worker thread — swap in
+        // XlaPhases-backed G-REST here to serve from the PJRT artifacts
+        Box::new(|_a0, init| {
+            Box::new(GRest::new(init.clone(), SubspaceMode::Rsvd { l: 16, p: 16 }))
+        }),
+    )?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    // concurrent readers: snapshot pollers + analytics queries
+    let mut readers = vec![];
+    for r in 0..3 {
+        let h = svc.handle.clone();
+        let stop = stop.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut reads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = h.snapshot();
+                assert!(snap.pairs.k() > 0);
+                reads += 1;
+                if reads % 50 == 0 && r == 0 {
+                    let _ = h.central_nodes(10);
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            reads
+        }));
+    }
+
+    // producer: stream 20k events
+    let n_events = 20_000u64;
+    let t0 = std::time::Instant::now();
+    let mut batch = Vec::with_capacity(64);
+    for i in 0..n_events {
+        let ev = if rng.flip(0.9) {
+            // preferential-ish growth: attach to low ids more often
+            let hub = (rng.below(1000) * rng.below(1000)) / 1000;
+            GraphEvent::AddEdge(hub as u64, 1000 + (i / 8))
+        } else {
+            GraphEvent::RemoveEdge(rng.below(1000) as u64, rng.below(1000) as u64)
+        };
+        batch.push(ev);
+        if batch.len() == 64 {
+            svc.handle.ingest(std::mem::take(&mut batch))?;
+        }
+    }
+    svc.handle.ingest(batch)?;
+    let final_version = svc.handle.flush()?;
+    let elapsed = t0.elapsed();
+
+    stop.store(true, Ordering::Relaxed);
+    let total_reads: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+
+    let snap = svc.handle.snapshot();
+    println!(
+        "ingested {} events in {:?} ({:.0} events/s), {} batches applied",
+        n_events,
+        elapsed,
+        n_events as f64 / elapsed.as_secs_f64(),
+        final_version
+    );
+    println!(
+        "final embedding: {} nodes x {} eigenpairs, lambda_1 = {:.3}",
+        snap.n_nodes,
+        snap.pairs.k(),
+        snap.pairs.values[0]
+    );
+    println!("snapshot reads served concurrently: {total_reads}");
+    println!("metrics: {}", svc.handle.metrics().report());
+    svc.join();
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! END-TO-END DRIVER — proves all three layers compose on a real
+//! workload:
+//!
+//!   L1 Pallas project-out kernel  ─┐ (lowered together at build time)
+//!   L2 JAX build_basis/form_t/rotate ─→ artifacts/*.hlo.txt
+//!   L3 Rust coordinator: sparse Δ products + PJRT execution of the
+//!      artifacts + native small eigh, over a streaming graph scenario.
+//!
+//! Workload: a scaled CM-Collab-like collaboration graph (power-law,
+//! ~960 nodes) revealed over 10 steps (Scenario 1), K = 64 eigenpairs —
+//! the t1024 artifact tier.  For every step we report:
+//!   * the XLA-backed G-REST₃ update time,
+//!   * the native-Rust G-REST₃ update time (same algorithm, no PJRT),
+//!   * a from-scratch Lanczos (`eigs`) time — the paper's baseline,
+//!   * eigenvector accuracy ψ of both backends vs the Lanczos reference,
+//!   * cross-backend top-eigenvalue agreement.
+//!
+//! Requires `make artifacts` (skips gracefully with instructions if
+//! absent).  Run: cargo run --release --example end_to_end
+//!
+//! The recorded run lives in EXPERIMENTS.md §End-to-end.
+
+use grest::eval::angle::mean_angle;
+use grest::graph::generators;
+use grest::graph::scenario::scenario1_from_static;
+use grest::linalg::rng::Rng;
+use grest::runtime::{ArtifactManifest, XlaPhases};
+use grest::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match ArtifactManifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+
+    // ---- workload -------------------------------------------------------
+    let n = 960; // fits the t1024 tier with headroom
+    let k = 64;
+    let t_steps = 10;
+    let mut rng = Rng::new(2026);
+    let w = generators::power_law_weights(n, 2.5, 4 * n);
+    let g = generators::chung_lu(&w, &mut rng);
+    let sc = scenario1_from_static("cm-collab-scaled", &g, t_steps);
+    let max_s = sc.steps.iter().map(|s| s.delta.s_new).max().unwrap_or(0);
+    println!(
+        "workload: {} nodes / {} edges revealed {} -> {} over {} steps (max S/step = {})",
+        g.n_nodes(),
+        g.n_edges(),
+        sc.initial.n_rows,
+        sc.max_nodes(),
+        t_steps,
+        max_s
+    );
+
+    // ---- trackers -------------------------------------------------------
+    let init = init_eigenpairs(&sc.initial, k, 7);
+    let phases = XlaPhases::for_problem(manifest, sc.max_nodes(), k, k + max_s)?;
+    println!("artifact tier: {:?}\n", phases.tier());
+    let mut xla = GRest::with_phases(init.clone(), SubspaceMode::Full, phases, 7);
+    let mut native = GRest::new(init, SubspaceMode::Full);
+
+    let (mut t_xla, mut t_nat, mut t_eigs) = (0.0f64, 0.0f64, 0.0f64);
+    // steady-state totals exclude step 1, which pays the one-time PJRT
+    // compilation of the artifacts
+    let (mut ss_xla, mut ss_nat, mut ss_eigs) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut psi_xla_sum, mut psi_nat_sum) = (0.0f64, 0.0f64);
+    println!("step |    N   S |   xla update | native update |     eigs     | psi_xla  psi_nat | dLambda1");
+    for (t, step) in sc.steps.iter().enumerate() {
+        let s0 = std::time::Instant::now();
+        xla.update(&step.delta)?;
+        let d_xla = s0.elapsed();
+
+        let s1 = std::time::Instant::now();
+        native.update(&step.delta)?;
+        let d_nat = s1.elapsed();
+
+        let s2 = std::time::Instant::now();
+        let reference = init_eigenpairs(&step.adjacency, k, 500 + t as u64);
+        let d_eigs = s2.elapsed();
+
+        let psi_x = mean_angle(xla.current(), &reference, 32);
+        let psi_n = mean_angle(native.current(), &reference, 32);
+        let dl1 = (xla.current().values[0] - native.current().values[0]).abs();
+        t_xla += d_xla.as_secs_f64();
+        t_nat += d_nat.as_secs_f64();
+        t_eigs += d_eigs.as_secs_f64();
+        if t > 0 {
+            ss_xla += d_xla.as_secs_f64();
+            ss_nat += d_nat.as_secs_f64();
+            ss_eigs += d_eigs.as_secs_f64();
+        }
+        psi_xla_sum += psi_x;
+        psi_nat_sum += psi_n;
+        println!(
+            "{:>4} | {:>5} {:>3} | {:>10.2?} | {:>11.2?} | {:>10.2?} | {:.4}   {:.4} | {:.2e}",
+            t + 1,
+            step.adjacency.n_rows,
+            step.delta.s_new,
+            d_xla,
+            d_nat,
+            d_eigs,
+            psi_x,
+            psi_n,
+            dl1
+        );
+    }
+
+    println!("\n================ headline =================");
+    println!(
+        "total incl. one-time PJRT compile: xla {:.3}s | native {:.3}s | eigs {:.3}s",
+        t_xla, t_nat, t_eigs
+    );
+    println!(
+        "steady-state (steps 2..T): xla {:.3}s | native {:.3}s | eigs {:.3}s",
+        ss_xla, ss_nat, ss_eigs
+    );
+    println!(
+        "steady-state speedup vs from-scratch eigs: xla {:.1}x, native {:.1}x",
+        ss_eigs / ss_xla,
+        ss_eigs / ss_nat
+    );
+    println!(
+        "mean psi over run (leading 32): xla {:.4}, native {:.4} (radians)",
+        psi_xla_sum / t_steps as f64,
+        psi_nat_sum / t_steps as f64
+    );
+    let ok = ((psi_xla_sum - psi_nat_sum).abs() / t_steps as f64) < 0.02;
+    println!(
+        "backend agreement: {}",
+        if ok { "OK (XLA == native within f32 tolerance)" } else { "MISMATCH" }
+    );
+    anyhow::ensure!(ok, "XLA and native backends disagree");
+    Ok(())
+}

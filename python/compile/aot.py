@@ -1,0 +1,137 @@
+"""AOT lowering of the G-REST L2 graphs to HLO text artifacts.
+
+Emits, for every size tier, three artifacts consumed by the Rust runtime
+(``rust/src/runtime``):
+
+    artifacts/build_basis_<tier>.hlo.txt     (xbar, panel)        -> (q, valid)
+    artifacts/form_t_<tier>.hlo.txt          (xbar, q, lam, dxk, dq) -> (t,)
+    artifacts/rotate_<tier>.hlo.txt          (xbar, q, f1, f2)    -> (x_new,)
+
+plus ``artifacts/manifest.json`` describing shapes.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Size tiers.  K = 64 matches the paper's tracked-eigenpair count; the
+# panel width M covers K columns of Delta*Xbar plus the node-expansion
+# block (Delta_2 or its RSVD sketch).  t256 is a miniature tier used by
+# tests and the quickstart.  All N are multiples of the Pallas TILE_N.
+TIERS = [
+    {"name": "t256", "n": 256, "k": 16, "m": 32},
+    {"name": "t1024", "n": 1024, "k": 64, "m": 128},
+    {"name": "t4096", "n": 4096, "k": 64, "m": 128},
+    {"name": "t16384", "n": 16384, "k": 64, "m": 192},
+]
+
+DTYPE = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def lower_tier(tier: dict) -> list[dict]:
+    n, k, m = tier["n"], tier["k"], tier["m"]
+    entries = []
+
+    fns = {
+        "build_basis": (
+            model.build_basis,
+            (_spec(n, k), _spec(n, m)),
+            [["q", [n, m]], ["valid", [m]]],
+        ),
+        "form_t": (
+            model.form_t,
+            (_spec(n, k), _spec(n, m), _spec(k), _spec(n, k), _spec(n, m)),
+            [["t", [k + m, k + m]]],
+        ),
+        "rotate": (
+            model.rotate,
+            (_spec(n, k), _spec(n, m), _spec(k, k), _spec(m, k)),
+            [["x_new", [n, k]]],
+        ),
+    }
+    for fname, (fn, args, outputs) in fns.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname_out = f"{fname}_{tier['name']}.hlo.txt"
+        entries.append(
+            {
+                "fn": fname,
+                "tier": tier["name"],
+                "file": fname_out,
+                "n": n,
+                "k": k,
+                "m": m,
+                "inputs": [list(a.shape) for a in args],
+                "outputs": outputs,
+                "text": text,
+            }
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--tiers",
+        default="all",
+        help="comma-separated tier names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    selected = TIERS
+    if args.tiers != "all":
+        names = set(args.tiers.split(","))
+        selected = [t for t in TIERS if t["name"] in names]
+
+    manifest = {"dtype": "f32", "tile_n": 256, "artifacts": []}
+    for tier in selected:
+        for entry in lower_tier(tier):
+            text = entry.pop("text")
+            path = os.path.join(args.out_dir, entry["file"])
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(entry)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Whitespace-delimited twin of the manifest for the dependency-free
+    # Rust parser: "fn tier file n k m" per line.
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        for e in manifest["artifacts"]:
+            f.write(
+                f"{e['fn']} {e['tier']} {e['file']} {e['n']} {e['k']} {e['m']}\n"
+            )
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

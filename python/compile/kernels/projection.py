@@ -1,0 +1,129 @@
+"""L1 Pallas kernels for G-REST's dense hot path.
+
+The per-step hot spot of G-REST (paper Sec. 3.3/4) is the tall-skinny
+"project-out" chain
+
+    P = B - X (X^T B),        X: (N, K) orthonormal,  B: (N, M) panel,
+
+which removes the tracked eigenspace Ran(X) from the update panel before
+orthonormalization (Table 1, row 4).  Both Gram accumulation and the
+correction are expressed as tiled Pallas kernels:
+
+  * ``gram``        C = X^T B          — one-pass reduction over N tiles,
+                                          (K, M) accumulator resident in VMEM.
+  * ``apply_proj``  P = B - X C        — streaming pass over N tiles.
+  * ``project_out`` composition of the two.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks the N
+dimension in ``TILE_N`` rows; each grid step holds an (TILE_N, K) slab of X,
+an (TILE_N, M) slab of B and the (K, M) accumulator in VMEM
+(256*64 + 256*192 + 64*192 floats ~ 0.3 MB at the large tier), and the
+contraction ``x.T @ b`` is MXU-shaped.  ``interpret=True`` everywhere:
+this repository executes on the CPU PJRT plugin; a real-TPU build would
+drop the flag and lower to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile of the streaming dimension.  256 keeps the VMEM working set
+# small while giving the MXU full 128-lane panels; it also divides every
+# artifact tier's N_cap (all tiers are multiples of 256).
+TILE_N = 256
+
+
+def _gram_kernel(x_ref, b_ref, o_ref):
+    """Accumulate one (TILE_N, K)^T @ (TILE_N, M) contribution of X^T B."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    b = b_ref[...]
+    o_ref[...] += jnp.dot(x.T, b, preferred_element_type=o_ref.dtype)
+
+
+def _apply_kernel(b_ref, x_ref, c_ref, o_ref):
+    """One (TILE_N, M) tile of P = B - X C."""
+    o_ref[...] = b_ref[...] - jnp.dot(
+        x_ref[...], c_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_rows(a: jax.Array, tile: int) -> jax.Array:
+    n = a.shape[0]
+    rem = (-n) % tile
+    if rem:
+        a = jnp.pad(a, ((0, rem),) + ((0, 0),) * (a.ndim - 1))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram(x: jax.Array, b: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """C = X^T B via a tiled Pallas reduction.
+
+    Args:
+      x: (N, K) left factor.
+      b: (N, M) right factor.
+    Returns:
+      (K, M) Gram product, in the promoted dtype of the inputs.
+    """
+    n, k = x.shape
+    _, m = b.shape
+    dtype = jnp.promote_types(x.dtype, b.dtype)
+    # Accumulate across N-tiles in f32 regardless of input dtype (matches
+    # the MXU's native f32 accumulation and keeps bf16 inputs accurate).
+    acc = jnp.float32 if dtype != jnp.float64 else dtype
+    xp = _pad_rows(x.astype(dtype), TILE_N)
+    bp = _pad_rows(b.astype(dtype), TILE_N)
+    steps = xp.shape[0] // TILE_N
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, k), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, m), acc),
+        interpret=interpret,
+    )(xp, bp)
+    return out.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_proj(
+    b: jax.Array, x: jax.Array, c: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """P = B - X C via a tiled streaming Pallas pass."""
+    n, m = b.shape
+    _, k = x.shape
+    dtype = jnp.promote_types(jnp.promote_types(b.dtype, x.dtype), c.dtype)
+    bp = _pad_rows(b.astype(dtype), TILE_N)
+    xp = _pad_rows(x.astype(dtype), TILE_N)
+    steps = bp.shape[0] // TILE_N
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, m), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp.shape[0], m), dtype),
+        interpret=interpret,
+    )(bp, xp, c.astype(dtype))
+    return out[:n]
+
+
+def project_out(x: jax.Array, b: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """P = (I - X X^T) B — the fused projection used by G-REST (Eq. 11)."""
+    c = gram(x, b, interpret=interpret)
+    return apply_proj(b, x, c, interpret=interpret)

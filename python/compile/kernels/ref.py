@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels in :mod:`projection`.
+
+Used by pytest/hypothesis to validate the tiled kernels over shape and
+dtype sweeps; never lowered into artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(x, b):
+    """C = X^T B."""
+    dtype = jnp.promote_types(x.dtype, b.dtype)
+    return jnp.dot(x.astype(dtype).T, b.astype(dtype))
+
+
+def apply_proj_ref(b, x, c):
+    """P = B - X C."""
+    dtype = jnp.promote_types(jnp.promote_types(b.dtype, x.dtype), c.dtype)
+    return b.astype(dtype) - jnp.dot(x.astype(dtype), c.astype(dtype))
+
+
+def project_out_ref(x, b):
+    """P = (I - X X^T) B."""
+    return apply_proj_ref(b, x, gram_ref(x, b))

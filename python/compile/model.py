@@ -1,0 +1,223 @@
+"""L2 JAX compute graphs for the G-REST update step (paper Alg. 2).
+
+Three build-time-lowered functions make up one G-REST time step; the Rust
+coordinator (L3) interleaves them with sparse Delta products and the small
+dense eigendecomposition:
+
+  1. ``build_basis(xbar, panel)``   -> (q, valid)
+         Orthonormal augmentation panel Q spanning
+         (I - XbarXbar^T) panel  (paper Eq. 11), via the Pallas
+         project-out kernel (L1) applied twice (BCGS2) followed by
+         CholeskyQR2.  ``valid`` flags columns that survived rank
+         screening; deflated columns are exactly zero.
+
+  2. ``form_t(xbar, q, lam, dxk, dq)`` -> t
+         The projected Rayleigh-Ritz matrix of Eq. (13) with
+         Z = [Xbar, Q].  Because Q is constructed orthogonal to Xbar and
+         Xbar is orthonormal, Z^T Abar Z = diag(lam) on the leading K x K
+         block and zero elsewhere; the Delta term uses the precomputed
+         sparse products dxk = Delta Xbar and dq = Delta Q supplied by L3.
+
+  3. ``rotate(xbar, q, f1, f2)``    -> x_new
+         Ritz rotation X_new = Xbar F1 + Q F2 after L3 eigendecomposes t
+         (small, (K+M) x (K+M), done natively in Rust).
+
+Everything is *custom-call-free*: the PJRT runtime bundled with the
+``xla`` crate (xla_extension 0.5.1) predates jax's current LAPACK FFI
+custom calls, so QR/Cholesky/triangular-inverse are implemented here in
+pure lax ops (masked ``fori_loop`` factorizations).  All shapes are
+static per artifact tier; the L3 runtime zero-pads N rows and M columns,
+which these kernels preserve exactly (zero rows stay zero through
+project-out and CholQR; zero columns are deflated by rank screening).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import projection
+
+# Ridge used to keep the masked Cholesky positive definite in the
+# presence of padded (exactly-zero) or rank-deficient panel columns.
+_RIDGE = 1e-10
+# Columns whose norm after CholQR2 falls below this are treated as rank
+# deficient and deflated to zero.  Valid columns exit CholQR2 with norm
+# ≈ 1 and rank-guarded dependent columns with norm ≈ 0, so 0.5 separates
+# the two populations with maximal margin.
+_DEFLATE_TOL = 0.5
+
+
+def cholesky_masked(g: jax.Array, pivot_tol: float = 1e-6) -> jax.Array:
+    """Rank-guarded lower Cholesky factor of an (m, m) PSD matrix in pure
+    lax ops.
+
+    Left-looking column algorithm with mask-based "dynamic" triangular
+    indexing so the loop body is shape-static (lowered as an XLA while
+    loop, no LAPACK custom call).
+
+    Rank guard: when the Schur-complement diagonal of column j collapses
+    below ``pivot_tol * max_diag(G)`` — i.e. panel column j is (numerically)
+    dependent on earlier columns — the column is replaced by eₗ.  Then
+    R = Lᵀ has R_jj = 1 and zero fill in that column's trailing part, so
+    P·R⁻¹ maps the dependent column to its (tiny) residual instead of
+    amplifying noise by 1/√ridge; the norm screen in ``build_basis``
+    deflates it exactly.  Without this guard, rank-deficient update
+    panels (common: pure-expansion Δ has rank ≤ 2S) produced
+    non-orthonormal junk directions that silently corrupted the
+    Rayleigh-Ritz matrix.
+    """
+    m = g.shape[0]
+    idx = jnp.arange(m)
+    scale = jnp.maximum(jnp.max(jnp.diag(g)), _RIDGE)
+
+    def body(j, l):
+        below = (idx < j).astype(g.dtype)  # strictly-earlier columns
+        lj_row = l[j, :] * below
+        c = g[:, j] - l @ lj_row
+        keep = c[j] > pivot_tol * scale
+        d = jnp.where(keep, jnp.sqrt(jnp.maximum(c[j], _RIDGE)), jnp.ones_like(c[j]))
+        col = jnp.where(keep, c / d, (idx == j).astype(g.dtype))
+        col = jnp.where(idx >= j, col, jnp.zeros_like(col))
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, m, body, jnp.zeros_like(g))
+
+
+def tri_inv_upper(r: jax.Array) -> jax.Array:
+    """Inverse of an (m, m) upper-triangular matrix via back substitution.
+
+    Row-oriented: processes rows bottom-up, each step a masked (m,) @
+    (m, m) contraction, so the whole solve is O(m^2) work per iteration
+    inside an XLA while loop.
+    """
+    m = r.shape[0]
+    idx = jnp.arange(m)
+
+    def body(step, x):
+        i = m - 1 - step
+        above = (idx > i).astype(r.dtype)
+        ri = r[i, :] * above
+        e_i = (idx == i).astype(r.dtype)
+        row = (e_i - ri @ x) / r[i, i]
+        return x.at[i, :].set(row)
+
+    return lax.fori_loop(0, m, body, jnp.zeros_like(r))
+
+
+def _cholqr(p: jax.Array, *, interpret: bool) -> jax.Array:
+    """One CholeskyQR pass: P -> P R^{-1} with R = chol(P^T P + ridge)^T."""
+    g = projection.gram(p, p, interpret=interpret)
+    scale = jnp.maximum(jnp.max(jnp.abs(jnp.diag(g))), 1.0)
+    g = g + (_RIDGE * scale) * jnp.eye(g.shape[0], dtype=g.dtype)
+    l = cholesky_masked(g)
+    rinv = tri_inv_upper(l.T)
+    return p @ rinv
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def build_basis(xbar: jax.Array, panel: jax.Array, *, interpret: bool = True):
+    """Phase 1: orthonormal basis of (I - XbarXbar^T) panel.
+
+    Args:
+      xbar: (N, K) orthonormal tracked eigenvectors (zero-padded rows ok).
+      panel: (N, M) update panel [Delta Xbar_K, Delta_2-or-sketch]
+        (zero-padded columns ok).
+
+    Returns:
+      q: (N, M) with orthonormal valid columns, zero deflated columns,
+        and Q^T xbar = 0.
+      valid: (M,) float mask of surviving columns.
+    """
+    # BCGS2: project out the tracked subspace twice for orthogonality to
+    # working precision, interleaved with CholQR passes for intra-panel
+    # orthonormality (CholeskyQR2).
+    p = projection.project_out(xbar, panel, interpret=interpret)
+    p = _cholqr(p, interpret=interpret)
+    p = projection.project_out(xbar, p, interpret=interpret)
+    p = _cholqr(p, interpret=interpret)
+    norms = jnp.sqrt(jnp.sum(p * p, axis=0))
+    valid = (norms > _DEFLATE_TOL).astype(p.dtype)
+    safe = jnp.where(norms > _DEFLATE_TOL, norms, jnp.ones_like(norms))
+    q = p * (valid / safe)[None, :]
+    return q, valid
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def form_t(
+    xbar: jax.Array,
+    q: jax.Array,
+    lam: jax.Array,
+    dxk: jax.Array,
+    dq: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Phase 2a: projected matrix T = Z^T Abar Z + Z^T Delta Z (Eq. 13).
+
+    Args:
+      xbar: (N, K) tracked eigenvectors.
+      q: (N, M) augmentation basis from :func:`build_basis`.
+      lam: (K,) tracked eigenvalues.
+      dxk: (N, K) sparse product Delta Xbar (computed by L3).
+      dq: (N, M) sparse product Delta Q (computed by L3).
+
+    Returns:
+      (K+M, K+M) symmetric projected matrix.
+    """
+    k = xbar.shape[1]
+    m = q.shape[1]
+    t11 = jnp.diag(lam) + projection.gram(xbar, dxk, interpret=interpret)
+    t12 = projection.gram(xbar, dq, interpret=interpret)
+    t22 = projection.gram(q, dq, interpret=interpret)
+    top = jnp.concatenate([t11, t12], axis=1)
+    bot = jnp.concatenate([t12.T, t22], axis=1)
+    t = jnp.concatenate([top, bot], axis=0)
+    return 0.5 * (t + t.T)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rotate(
+    xbar: jax.Array,
+    q: jax.Array,
+    f1: jax.Array,
+    f2: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Phase 2b: Ritz rotation X_new = Xbar F1 + Q F2.
+
+    F = [F1; F2] holds the top-K eigenvectors of T (columns), computed
+    natively by L3's dense eigensolver between phases 2a and 2b.
+    """
+    del interpret
+    return xbar @ f1 + q @ f2
+
+
+# ---------------------------------------------------------------------------
+# Reference single-call composition (testing only; artifacts ship the three
+# functions separately because the small eigh runs in Rust).
+# ---------------------------------------------------------------------------
+
+
+def grest_step_reference(xbar, lam, panel, delta_matvec, k_out=None):
+    """Full G-REST step in numpy-ish jax, for python-side validation.
+
+    ``delta_matvec`` maps an (N, j) block to Delta @ block (dense oracle
+    in tests).  Uses jnp.linalg.eigh (NOT artifact-safe) — test-only.
+    """
+    k = xbar.shape[1]
+    k_out = k_out or k
+    q, _ = build_basis(xbar, panel)
+    dxk = delta_matvec(xbar)
+    dq = delta_matvec(q)
+    t = form_t(xbar, q, lam, dxk, dq)
+    theta, f = jnp.linalg.eigh(t)
+    order = jnp.argsort(-jnp.abs(theta))[:k_out]
+    theta_k = theta[order]
+    f_k = f[:, order]
+    x_new = rotate(xbar, q, f_k[:k, :], f_k[k:, :])
+    return theta_k, x_new

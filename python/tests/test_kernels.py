@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including non-multiples of TILE_N, which
+exercise the padding path) and dtypes, asserting allclose against ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import projection, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, shape, dtype):
+    a = rng.standard_normal(shape)
+    return jnp.asarray(a, dtype=dtype)
+
+
+def _tols(dtype):
+    if dtype == jnp.bfloat16:
+        return dict(rtol=5e-2, atol=5e-2)
+    return dict(rtol=2e-4, atol=2e-4)
+
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=700),  # N (crosses TILE_N boundaries)
+    st.integers(min_value=1, max_value=48),  # K
+    st.integers(min_value=1, max_value=48),  # M
+)
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_gram_matches_ref(shape, dtype, seed):
+    n, k, m = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, k), dtype)
+    b = _rand(rng, (n, m), dtype)
+    got = projection.gram(x, b)
+    want = ref.gram_ref(x, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        **_tols(dtype),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_apply_proj_matches_ref(shape, dtype, seed):
+    n, k, m = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, k), dtype)
+    b = _rand(rng, (n, m), dtype)
+    c = _rand(rng, (k, m), dtype)
+    got = projection.apply_proj(b, x, c)
+    want = ref.apply_proj_ref(b, x, c)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        **_tols(dtype),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_project_out_matches_ref_f32(shape, seed):
+    n, k, m = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, k), jnp.float32)
+    b = _rand(rng, (n, m), jnp.float32)
+    got = projection.project_out(x, b)
+    want = ref.project_out_ref(x, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_project_out_annihilates_range():
+    """(I - XX^T)(X c) == 0 for orthonormal X."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((300, 12))
+    x, _ = np.linalg.qr(a)
+    c = rng.standard_normal((12, 5))
+    b = jnp.asarray(x @ c, jnp.float32)
+    p = projection.project_out(jnp.asarray(x, jnp.float32), b)
+    np.testing.assert_allclose(np.asarray(p), 0.0, atol=1e-4)
+
+
+def test_project_out_idempotent():
+    rng = np.random.default_rng(8)
+    x, _ = np.linalg.qr(rng.standard_normal((257, 9)))
+    x = jnp.asarray(x, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((257, 6)), jnp.float32)
+    p1 = projection.project_out(x, b)
+    p2 = projection.project_out(x, p1)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-3, atol=1e-4)
+
+
+def test_gram_zero_padding_rows_invariant():
+    """Zero rows contribute nothing: gram(pad(x), pad(b)) == gram(x, b)."""
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((100, 7)).astype(np.float32)
+    b = rng.standard_normal((100, 11)).astype(np.float32)
+    xp = np.zeros((512, 7), np.float32)
+    bp = np.zeros((512, 11), np.float32)
+    xp[:100], bp[:100] = x, b
+    np.testing.assert_allclose(
+        np.asarray(projection.gram(jnp.asarray(xp), jnp.asarray(bp))),
+        np.asarray(projection.gram(jnp.asarray(x), jnp.asarray(b))),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("n", [255, 256, 257, 512, 513])
+def test_tile_boundaries(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(projection.project_out(x, b)),
+        np.asarray(ref.project_out_ref(x, b)),
+        rtol=1e-3,
+        atol=1e-4,
+    )

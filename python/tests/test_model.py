@@ -1,0 +1,213 @@
+"""L2 correctness: model phases vs numpy references and spectral invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _sym(rng, n):
+    a = rng.standard_normal((n, n))
+    return (a + a.T) / 2
+
+
+def _leading(a, k):
+    w, v = np.linalg.eigh(a)
+    order = np.argsort(-np.abs(w))[:k]
+    return w[order], v[:, order]
+
+
+# ---------------------------------------------------------------------------
+# Pure-lax factorization building blocks
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+def test_cholesky_masked_matches_numpy(m, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, m + 3))
+    g = (a @ a.T + m * np.eye(m)).astype(np.float32)
+    l = np.asarray(model.cholesky_masked(jnp.asarray(g)))
+    np.testing.assert_allclose(l @ l.T, g, rtol=1e-3, atol=1e-3)
+    assert np.allclose(np.triu(l, 1), 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_tri_inv_upper(m, seed):
+    rng = np.random.default_rng(seed)
+    r = np.triu(rng.standard_normal((m, m))).astype(np.float32)
+    r[np.arange(m), np.arange(m)] = np.sign(r.diagonal()) * (
+        np.abs(r.diagonal()) + 1.0
+    )
+    rinv = np.asarray(model.tri_inv_upper(jnp.asarray(r)))
+    np.testing.assert_allclose(r @ rinv, np.eye(m), atol=2e-4)
+    assert np.allclose(np.tril(rinv, -1), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# build_basis invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(40, 500),
+    k=st.integers(1, 16),
+    m=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_build_basis_orthonormal(n, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    panel = rng.standard_normal((n, m))
+    q, valid = model.build_basis(
+        jnp.asarray(x, jnp.float32), jnp.asarray(panel, jnp.float32)
+    )
+    q, valid = np.asarray(q), np.asarray(valid)
+    nv = int(valid.sum())
+    assert nv >= 1  # generic random panel is full rank
+    qv = q[:, valid > 0.5]
+    np.testing.assert_allclose(qv.T @ qv, np.eye(nv), atol=2e-3)
+    np.testing.assert_allclose(qv.T @ x, 0.0, atol=2e-3)
+    # deflated columns are exactly zero
+    assert np.all(q[:, valid < 0.5] == 0.0)
+
+
+def test_build_basis_deflates_dependent_and_zero_columns():
+    rng = np.random.default_rng(3)
+    n, k = 200, 6
+    x, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    good = rng.standard_normal((n, 4))
+    panel = np.concatenate(
+        [good, good[:, :1] * 2.0, np.zeros((n, 3)), x[:, :2]], axis=1
+    )  # 4 good + 1 dependent + 3 zero + 2 in Ran(X)
+    q, valid = model.build_basis(
+        jnp.asarray(x, jnp.float32), jnp.asarray(panel, jnp.float32)
+    )
+    valid = np.asarray(valid)
+    assert valid.sum() <= 5  # at most the 4 independent + slack 1
+    qv = np.asarray(q)[:, valid > 0.5]
+    np.testing.assert_allclose(qv.T @ qv, np.eye(qv.shape[1]), atol=5e-3)
+
+
+def test_build_basis_zero_padded_rows_stay_zero():
+    rng = np.random.default_rng(4)
+    n, pad, k, m = 150, 106, 5, 8
+    x = np.zeros((n + pad, k), np.float32)
+    x[:n], _ = np.linalg.qr(rng.standard_normal((n, k)))
+    panel = np.zeros((n + pad, m), np.float32)
+    panel[:n] = rng.standard_normal((n, m))
+    q, valid = model.build_basis(jnp.asarray(x), jnp.asarray(panel))
+    q = np.asarray(q)
+    np.testing.assert_allclose(q[n:], 0.0, atol=1e-6)
+
+
+def test_build_basis_padding_equivalence():
+    """Padded (rows+cols) call reproduces the unpadded basis span."""
+    rng = np.random.default_rng(5)
+    n, k, m = 120, 4, 6
+    x, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    panel = rng.standard_normal((n, m)).astype(np.float32)
+    q0, _ = model.build_basis(jnp.asarray(x, jnp.float32), jnp.asarray(panel))
+    xp = np.zeros((256, k), np.float32)
+    xp[:n] = x
+    pp = np.zeros((256, m + 5), np.float32)
+    pp[:n, :m] = panel
+    qp, validp = model.build_basis(jnp.asarray(xp), jnp.asarray(pp))
+    qp, validp = np.asarray(qp), np.asarray(validp)
+    assert int(validp.sum()) == m
+    # spans agree: projector difference is tiny
+    p0 = np.asarray(q0) @ np.asarray(q0).T
+    pv = qp[:n][:, validp > 0.5]
+    np.testing.assert_allclose(pv @ pv.T, p0, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# form_t / rotate / full-step spectral accuracy
+# ---------------------------------------------------------------------------
+
+
+def test_form_t_matches_dense_projection():
+    rng = np.random.default_rng(11)
+    n, k, m = 90, 5, 7
+    a = _sym(rng, n)
+    lam, x = _leading(a, k)
+    d = np.zeros((n, n))
+    ii = rng.integers(0, n, size=(30, 2))
+    for i, j in ii:
+        if i != j:
+            d[i, j] = d[j, i] = 0.1
+    panel = (d @ x).astype(np.float32)[:, :m]
+    xf = jnp.asarray(x, jnp.float32)
+    q, _ = model.build_basis(xf, jnp.asarray(panel))
+    dxk = jnp.asarray(d, jnp.float32) @ xf
+    dq = jnp.asarray(d, jnp.float32) @ q
+    t = np.asarray(model.form_t(xf, q, jnp.asarray(lam, jnp.float32), dxk, dq))
+    z = np.concatenate([x, np.asarray(q)], axis=1)
+    abar_lowrank = x @ np.diag(lam) @ x.T
+    t_ref = z.T @ (abar_lowrank + d) @ z
+    np.testing.assert_allclose(t, t_ref, atol=2e-3)
+    np.testing.assert_allclose(t, t.T, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grest_step_tracks_perturbed_spectrum(seed):
+    """After one step, Ritz pairs approximate the exact leading eigenpairs
+    of A + Delta far better than the stale eigenvectors do."""
+    rng = np.random.default_rng(seed)
+    n, k = 120, 6
+    a = _sym(rng, n)
+    lam, x = _leading(a, k)
+    d = np.zeros((n, n))
+    for _ in range(25):
+        i, j = rng.integers(0, n, 2)
+        if i != j:
+            d[i, j] = d[j, i] = 0.2 * rng.standard_normal()
+    panel = (d @ x).astype(np.float32)
+    theta, xn = model.grest_step_reference(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(lam, jnp.float32),
+        jnp.asarray(panel),
+        lambda b: jnp.asarray(d, jnp.float32) @ b,
+    )
+    wh, vh = _leading(a + d, k)
+    theta, xn = np.asarray(theta), np.asarray(xn)
+    order = np.argsort(-np.abs(theta))
+    # residual of the top Ritz pair against the exact operator
+    top = xn[:, order[0]]
+    res_new = np.linalg.norm((a + d) @ top - theta[order[0]] * top)
+    res_old = np.linalg.norm((a + d) @ x[:, 0] - lam[0] * x[:, 0])
+    assert res_new < res_old * 0.9 or res_new < 1e-3
+
+
+def test_grest_step_exact_when_delta_zero():
+    rng = np.random.default_rng(21)
+    n, k = 80, 4
+    a = _sym(rng, n)
+    lam, x = _leading(a, k)
+    panel = np.zeros((n, 5), np.float32)
+    theta, xn = model.grest_step_reference(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(lam, jnp.float32),
+        jnp.asarray(panel),
+        lambda b: jnp.zeros_like(b),
+    )
+    theta = np.sort(np.asarray(theta))
+    np.testing.assert_allclose(theta, np.sort(lam), atol=1e-4)
+
+
+def test_rotate_is_plain_matmul():
+    rng = np.random.default_rng(22)
+    xbar = rng.standard_normal((60, 4)).astype(np.float32)
+    q = rng.standard_normal((60, 7)).astype(np.float32)
+    f1 = rng.standard_normal((4, 4)).astype(np.float32)
+    f2 = rng.standard_normal((7, 4)).astype(np.float32)
+    got = np.asarray(model.rotate(*map(jnp.asarray, (xbar, q, f1, f2))))
+    np.testing.assert_allclose(got, xbar @ f1 + q @ f2, rtol=1e-5, atol=1e-5)

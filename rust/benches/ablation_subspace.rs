@@ -1,0 +1,147 @@
+//! Ablation bench: the design choices DESIGN.md calls out, isolated on
+//! one expansion-heavy workload (CM-Collab-scaled, Scenario 1):
+//!
+//!  A1  subspace content (Table 1 of the paper): X̄-only RR vs +ΔX̄_K
+//!      (G-REST₂) vs +Δ₂ (G-REST₃) vs RSVD-compressed Δ₂.
+//!  A2  rank-K Ā approximation in Eq. (13): G-REST₃ as shipped
+//!      (Zᵀ(X̄ΛX̄ᵀ)Z) vs the exact ZᵀĀZ (requires retaining Ā — the
+//!      memory trade-off the paper's Remark 1 discusses).
+//!  A3  projection hygiene: single vs double (BCGS2) project-out pass
+//!      in the basis construction.
+//!
+//! Prints mean ψ (leading 8) and per-variant time.
+
+mod common;
+
+use grest::eval::angle::mean_angle;
+use grest::graph::{generators, scenario::scenario1_from_static};
+use grest::linalg::{blas, mat::Mat, rng::Rng};
+use grest::sparse::csr::Csr;
+use grest::tracking::grest::{DensePhases, NativePhases};
+use grest::tracking::traits::{apply_delta, init_eigenpairs};
+use grest::tracking::{EigTracker, GRest, SubspaceMode};
+
+/// A2: exact-Ā variant of G-REST₃ — retains the adjacency and forms
+/// ZᵀÂZ directly (instead of the rank-K approximation of Eq. 13).
+struct ExactAGrest {
+    a: Csr,
+    state: grest::tracking::EigenPairs,
+}
+
+impl EigTracker for ExactAGrest {
+    fn name(&self) -> String {
+        "G-REST3-exactA".into()
+    }
+    fn update(&mut self, delta: &grest::Delta) -> anyhow::Result<()> {
+        let phases = NativePhases;
+        let k = self.state.k();
+        self.a = apply_delta(&self.a, delta);
+        let xbar = self.state.vectors.pad_rows(delta.s_new);
+        let dxk = delta.mul_padded(&self.state.vectors);
+        let panel = if delta.s_new == 0 { dxk.clone() } else { dxk.hcat(&delta.d2_dense()) };
+        let q = phases.build_basis(&xbar, &panel);
+        // exact T = Zᵀ Â Z with Z = [X̄ Q] (Â already includes Δ)
+        let z = xbar.hcat(&q);
+        let az = self.a.matmul_dense(&z);
+        let t = z.t_matmul(&az);
+        let e = grest::linalg::eigh::eigh(&t);
+        let order = e.leading_by_magnitude(k);
+        let mut f = Mat::zeros(z.cols(), k);
+        let mut vals = Vec::with_capacity(k);
+        for (c, &idx) in order.iter().enumerate() {
+            vals.push(e.values[idx]);
+            for i in 0..z.cols() {
+                f.set(i, c, e.vectors.get(i, idx));
+            }
+        }
+        let new_vecs = z.matmul(&f);
+        self.state = grest::tracking::EigenPairs { values: vals, vectors: new_vecs };
+        Ok(())
+    }
+    fn current(&self) -> &grest::tracking::EigenPairs {
+        &self.state
+    }
+}
+
+/// A3: single-pass (non-BCGS2) basis construction.
+struct SinglePassPhases;
+
+impl DensePhases for SinglePassPhases {
+    fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
+        // one projection + one CholQR only
+        let p = blas::project_out(xbar, panel);
+        let g = p.t_matmul(&p);
+        let (l, _keep) = grest::linalg::chol::cholesky_guarded(&g, 1e-8);
+        let rinv = grest::linalg::chol::tri_inv_upper(&l.t());
+        let p = p.matmul(&rinv);
+        let kept: Vec<usize> = (0..p.cols())
+            .filter(|&j| blas::nrm2(p.col(j)) > 0.5)
+            .collect();
+        let mut q = p.select_cols(&kept);
+        for j in 0..q.cols() {
+            let n = blas::nrm2(q.col(j));
+            for e in q.col_mut(j) {
+                *e /= n;
+            }
+        }
+        q
+    }
+    fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
+        NativePhases.form_t(xbar, q, lam, dxk, dq)
+    }
+    fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
+        NativePhases.rotate(xbar, q, f1, f2)
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let n = 1200;
+    let k = 32;
+    let w = generators::power_law_weights(n, 2.3, 5 * n);
+    let g = generators::chung_lu(&w, &mut rng);
+    let sc = scenario1_from_static("ablation", &g, 8);
+    println!(
+        "# Ablation workload: {} -> {} nodes over {} steps, K={k}",
+        sc.initial.n_rows,
+        sc.max_nodes(),
+        sc.t_steps()
+    );
+    let init = init_eigenpairs(&sc.initial, k, 3);
+    let reference = grest::eval::harness::reference_run(&sc, k, 9);
+
+    let mut variants: Vec<(String, Box<dyn EigTracker>)> = vec![
+        ("A1 G-REST2 (no Delta2)".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Rm))),
+        ("A1 G-REST3 (+Delta2)".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
+        (
+            "A1 RSVD(16,16)".into(),
+            Box::new(GRest::new(init.clone(), SubspaceMode::Rsvd { l: 16, p: 16 })),
+        ),
+        (
+            "A2 exact-Abar (Remark 1)".into(),
+            Box::new(ExactAGrest { a: sc.initial.clone(), state: init.clone() }),
+        ),
+        (
+            "A3 single-pass basis".into(),
+            Box::new(GRest::with_phases(init.clone(), SubspaceMode::Full, SinglePassPhases, 3)),
+        ),
+    ];
+
+    println!("{:<28} {:>12} {:>12}", "variant", "mean_psi(8)", "total_time");
+    for (name, tracker) in variants.iter_mut() {
+        let t0 = std::time::Instant::now();
+        let mut psi_sum = 0.0;
+        for (t, step) in sc.steps.iter().enumerate() {
+            tracker.update(&step.delta).unwrap();
+            psi_sum += mean_angle(tracker.current(), &reference.per_step[t], 8);
+        }
+        println!(
+            "{:<28} {:>12.5} {:>11.3}s",
+            name,
+            psi_sum / sc.steps.len() as f64,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("\n(A2 shows what the rank-K approximation of Eq. 13 costs in accuracy;");
+    println!(" A3 shows the orthogonality loss of skipping the second BCGS2 pass.)");
+}

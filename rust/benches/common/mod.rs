@@ -1,0 +1,50 @@
+#![allow(dead_code)]
+//! Shared mini-bench harness (criterion is unavailable offline): each
+//! bench target regenerates one paper table/figure, printing the same
+//! rows/series the paper reports plus wall-clock, honoring
+//! `GREST_BENCH_QUICK=1` for smoke runs.
+
+use grest::eval::experiments::ExpConfig;
+
+/// Config for bench runs: quick if requested via env, paper-scale
+/// otherwise.
+pub fn bench_config() -> ExpConfig {
+    if std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1") {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::paper()
+    }
+}
+
+/// Time a closure, print a bench-style line, return the result.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    println!(
+        "bench {label:<28} ... {:>10.3}s",
+        t0.elapsed().as_secs_f64()
+    );
+    out
+}
+
+/// Micro-bench: run `f` repeatedly for ~`budget_ms`, report mean time.
+pub fn micro(label: &str, budget_ms: u64, mut f: impl FnMut()) {
+    // warmup
+    f();
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let t0 = std::time::Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed() < budget {
+        f();
+        iters += 1;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per < 1e-3 {
+        format!("{:.1} us", per * 1e6)
+    } else if per < 1.0 {
+        format!("{:.3} ms", per * 1e3)
+    } else {
+        format!("{per:.3} s")
+    };
+    println!("micro {label:<40} {unit:>12}/iter  ({iters} iters)");
+}

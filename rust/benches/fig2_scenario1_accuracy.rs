@@ -1,0 +1,21 @@
+//! Bench: reproduce paper Fig. 2 — eigenvector approximation accuracy on
+//! dynamic graphs built from static (Type-S) datasets (Scenario 1).
+//! Prints (a) time-averaged ψ for the three leading eigenvectors and
+//! (b) the mean-ψ-vs-t series, per dataset per tracker.
+
+mod common;
+
+use grest::eval::experiments::figure_accuracy_runtime;
+use grest::graph::datasets::Kind;
+
+fn main() {
+    let cfg = common::bench_config();
+    println!("# Fig. 2 — Scenario 1 accuracy (K={}, angles over {}, MC={})", cfg.k, cfg.angles_k, cfg.mc);
+    let (_, ta, tb, _) = common::timed("fig2_scenario1_accuracy", || {
+        figure_accuracy_runtime(Kind::Static, &cfg)
+    });
+    println!("\n## Fig. 2(a): time-averaged psi, leading 3 eigenvectors\n{}", ta.render());
+    println!("## Fig. 2(b): mean psi over leading {} vs t\n{}", cfg.angles_k, tb.render());
+    let _ = ta.write_csv("fig2_a");
+    let _ = tb.write_csv("fig2_b");
+}

@@ -1,0 +1,19 @@
+//! Bench: reproduce paper Fig. 3 — eigenvector approximation accuracy on
+//! graphs with timestamped edges (Scenario 2, Type-D datasets).
+
+mod common;
+
+use grest::eval::experiments::figure_accuracy_runtime;
+use grest::graph::datasets::Kind;
+
+fn main() {
+    let cfg = common::bench_config();
+    println!("# Fig. 3 — Scenario 2 accuracy (K={}, angles over {}, MC={})", cfg.k, cfg.angles_k, cfg.mc);
+    let (_, ta, tb, _) = common::timed("fig3_scenario2_accuracy", || {
+        figure_accuracy_runtime(Kind::Dynamic, &cfg)
+    });
+    println!("\n## Fig. 3(a): time-averaged psi, leading 3 eigenvectors\n{}", ta.render());
+    println!("## Fig. 3(b): mean psi over leading {} vs t\n{}", cfg.angles_k, tb.render());
+    let _ = ta.write_csv("fig3_a");
+    let _ = tb.write_csv("fig3_b");
+}

@@ -1,0 +1,22 @@
+//! Bench: reproduce paper Fig. 4 — runtimes of all trackers (plus the
+//! `eigs` baseline) on the Scenario 1 (a) and Scenario 2 (b) datasets.
+
+mod common;
+
+use grest::eval::experiments::figure_accuracy_runtime;
+use grest::graph::datasets::Kind;
+
+fn main() {
+    let cfg = common::bench_config();
+    println!("# Fig. 4 — runtimes (K={}, MC={})", cfg.k, cfg.mc);
+    let (_, _, _, ta) = common::timed("fig4a_static_runtimes", || {
+        figure_accuracy_runtime(Kind::Static, &cfg)
+    });
+    println!("\n## Fig. 4(a): Scenario 1 runtimes\n{}", ta.render());
+    let _ = ta.write_csv("fig4_a");
+    let (_, _, _, tb) = common::timed("fig4b_dynamic_runtimes", || {
+        figure_accuracy_runtime(Kind::Dynamic, &cfg)
+    });
+    println!("\n## Fig. 4(b): Scenario 2 runtimes\n{}", tb.render());
+    let _ = tb.write_csv("fig4_b");
+}

@@ -1,0 +1,20 @@
+//! Bench: reproduce paper Fig. 5 — the RSVD complexity/accuracy
+//! trade-off on CM-Collab: mean ψ difference vs G-REST₃ and the runtime
+//! speedup ratio, over an (L, P) grid.
+
+mod common;
+
+use grest::eval::experiments::fig5_rsvd_tradeoff;
+
+fn main() {
+    let cfg = common::bench_config();
+    let grid: Vec<usize> = if cfg.mc <= 1 && cfg.t_override.is_some() {
+        vec![8, 16]
+    } else {
+        vec![10, 20, 40, 80]
+    };
+    println!("# Fig. 5 — RSVD (L, P) trade-off on CM-Collab, grid {grid:?}");
+    let t = common::timed("fig5_rsvd_tradeoff", || fig5_rsvd_tradeoff(&cfg, &grid));
+    println!("\n{}", t.render());
+    let _ = t.write_csv("fig5");
+}

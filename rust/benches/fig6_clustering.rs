@@ -1,0 +1,20 @@
+//! Bench: reproduce paper Fig. 6 — clustering performance (ARI relative
+//! to the eigs reference) on synthetic SBM dynamic graphs, sweeping the
+//! inter-cluster edge probability (a) and the number of clusters (b).
+
+mod common;
+
+use grest::eval::experiments::fig6_clustering;
+
+fn main() {
+    let cfg = common::bench_config();
+    let (n, p_outs, ks): (usize, Vec<f64>, Vec<usize>) = if cfg.t_override.is_some() {
+        (400, vec![0.002, 0.01], vec![2, 4])
+    } else {
+        (2000, vec![0.002, 0.005, 0.01, 0.02], vec![2, 4, 6, 8])
+    };
+    println!("# Fig. 6 — SBM clustering ARI ratio (N={n}, p_in=0.05)");
+    let t = common::timed("fig6_clustering", || fig6_clustering(&cfg, n, &p_outs, &ks));
+    println!("\n{}", t.render());
+    let _ = t.write_csv("fig6");
+}

@@ -1,0 +1,116 @@
+//! Micro-benchmarks of the hot-path kernels (the §Perf instrument):
+//! gemm / Gram / project-out / orthonormalize / small eigh / SpMM /
+//! per-step G-REST update (native and, if artifacts exist, XLA-backed).
+
+mod common;
+
+use grest::linalg::{blas, eigh::eigh, mat::Mat, qr, rng::Rng};
+use grest::sparse::coo::Coo;
+use grest::sparse::delta::Delta;
+use grest::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
+
+fn main() {
+    let quick = std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let n: usize = if quick { 2048 } else { 16384 };
+    let k = 64;
+    let m = 128;
+    let mut rng = Rng::new(1);
+    println!("# linalg micro-benches (N={n}, K={k}, M={m})");
+
+    let x = {
+        let (q, _) = qr::thin_qr(&Mat::randn(n, k, &mut rng));
+        q
+    };
+    let b = Mat::randn(n, m, &mut rng);
+
+    common::micro("gram  X^T B           (NxK)'(NxM)", 800, || {
+        std::hint::black_box(blas::gemm_tn(&x, &b));
+    });
+    common::micro("gemm  X C             (NxK)(KxM)", 800, || {
+        let c = Mat::randn(k, m, &mut Rng::new(2));
+        std::hint::black_box(x.matmul(&c));
+    });
+    common::micro("project_out (I-XX')B", 800, || {
+        std::hint::black_box(blas::project_out(&x, &b));
+    });
+    common::micro("orthonormalize_against (panel M)", 1000, || {
+        std::hint::black_box(qr::orthonormalize_against(&x, &b, 1e-8));
+    });
+    let t = {
+        let raw = Mat::randn(k + m, k + m, &mut rng);
+        let mut s = raw.clone();
+        s.axpy(1.0, &raw.t());
+        s
+    };
+    common::micro("eigh  (K+M)x(K+M)", 800, || {
+        std::hint::black_box(eigh(&t));
+    });
+
+    // sparse: power-law graph SpMM
+    let w = grest::graph::generators::power_law_weights(n, 2.2, 6 * n);
+    let g = grest::graph::generators::chung_lu(&w, &mut rng);
+    let a = g.adjacency();
+    println!("# graph: {} nodes {} edges", g.n_nodes(), g.n_edges());
+    common::micro("spmm  A X             (sparse NxN)(NxK)", 800, || {
+        std::hint::black_box(a.matmul_dense(&x));
+    });
+
+    // per-step tracker update at bench scale
+    let scenario_n = if quick { 1500 } else { 4000 };
+    let w2 = grest::graph::generators::power_law_weights(scenario_n, 2.2, 5 * scenario_n);
+    let g2 = grest::graph::generators::chung_lu(&w2, &mut rng);
+    let a2 = g2.adjacency();
+    let init = init_eigenpairs(&a2, k, 5);
+    let delta = {
+        let mut kb = Coo::new(scenario_n, scenario_n);
+        for _ in 0..200 {
+            let (u, v) = (rng.below(scenario_n), rng.below(scenario_n));
+            if u != v {
+                kb.push_sym(u, v, 1.0);
+            }
+        }
+        let mut gb = Coo::new(scenario_n, 48);
+        for j in 0..48 {
+            for _ in 0..4 {
+                gb.push(rng.below(scenario_n), j, 1.0);
+            }
+        }
+        Delta::from_blocks(scenario_n, 48, &kb, &gb, &Coo::new(48, 48))
+    };
+    common::micro("G-REST3 native update (N=4000,S=48)", 2000, || {
+        let mut t = GRest::new(init.clone(), SubspaceMode::Full);
+        t.update(&delta).unwrap();
+        std::hint::black_box(t.current().values[0]);
+    });
+    common::micro("G-REST-RSVD(32,32) update", 2000, || {
+        let mut t = GRest::new(init.clone(), SubspaceMode::Rsvd { l: 32, p: 32 });
+        t.update(&delta).unwrap();
+        std::hint::black_box(t.current().values[0]);
+    });
+
+    // XLA-backed update, if artifacts are present
+    if let Ok(manifest) = grest::runtime::ArtifactManifest::load_default() {
+        if let Ok(phases) = grest::runtime::XlaPhases::for_problem(
+            manifest,
+            scenario_n + 48,
+            k,
+            k + 48,
+        ) {
+            println!("# XLA tier {:?}", phases.tier());
+            let phases = std::rc::Rc::new(phases);
+            // pay the one-time PJRT compile outside the timed region
+            let mut warm = GRest::with_phases(init.clone(), SubspaceMode::Full, phases.clone(), 5);
+            warm.update(&delta).unwrap();
+            common::micro("G-REST3 XLA update (steady-state)", 2000, || {
+                let mut t =
+                    GRest::with_phases(init.clone(), SubspaceMode::Full, phases.clone(), 5);
+                t.update(&delta).unwrap();
+                std::hint::black_box(t.current().values[0]);
+            });
+        } else {
+            println!("# no XLA tier fits this micro-bench (need n>=4048); skipped");
+        }
+    } else {
+        println!("# artifacts not built; XLA micro-bench skipped");
+    }
+}

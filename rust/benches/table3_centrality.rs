@@ -1,0 +1,15 @@
+//! Bench: reproduce paper Table 3 — accuracy of detecting central nodes
+//! via subgraph centrality, J ∈ {100, 1000}, on the Type-S datasets.
+
+mod common;
+
+use grest::eval::experiments::table3_centrality;
+
+fn main() {
+    let cfg = common::bench_config();
+    let js: Vec<usize> = if cfg.t_override.is_some() { vec![50, 200] } else { vec![100, 1000] };
+    println!("# Table 3 — central-node identification (J = {js:?})");
+    let t = common::timed("table3_centrality", || table3_centrality(&cfg, &js));
+    println!("\n{}", t.render());
+    let _ = t.write_csv("table3");
+}

@@ -1,0 +1,57 @@
+//! Batching policies: when to close the pending event batch and run a
+//! tracker update (the coordinator's "time step" boundary).
+//!
+//! Trade-off mirrors the paper's complexity analysis: more events per
+//! batch amortize the O(N(K+L)²) dense phase, but enlarge ‖Δ‖ and hence
+//! the subspace drift per step.
+
+/// Policy deciding when a pending batch should be flushed.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchPolicy {
+    /// Flush after this many events.
+    ByCount(usize),
+    /// Flush when this many new nodes accumulated (bounds S, so the
+    /// G-REST₃ panel and the artifact tier stay small).
+    ByNewNodes(usize),
+    /// Flush when either bound trips.
+    Either { events: usize, new_nodes: usize },
+}
+
+impl BatchPolicy {
+    /// Should the batch (with `events` pending and `new_nodes` pending
+    /// arrivals) be flushed now?
+    pub fn should_flush(&self, events: usize, new_nodes: usize) -> bool {
+        match *self {
+            BatchPolicy::ByCount(c) => events >= c,
+            BatchPolicy::ByNewNodes(s) => new_nodes >= s,
+            BatchPolicy::Either { events: c, new_nodes: s } => events >= c || new_nodes >= s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_count() {
+        let p = BatchPolicy::ByCount(3);
+        assert!(!p.should_flush(2, 100));
+        assert!(p.should_flush(3, 0));
+    }
+
+    #[test]
+    fn by_new_nodes() {
+        let p = BatchPolicy::ByNewNodes(2);
+        assert!(!p.should_flush(1000, 1));
+        assert!(p.should_flush(0, 2));
+    }
+
+    #[test]
+    fn either() {
+        let p = BatchPolicy::Either { events: 5, new_nodes: 2 };
+        assert!(p.should_flush(5, 0));
+        assert!(p.should_flush(0, 2));
+        assert!(!p.should_flush(4, 1));
+    }
+}

@@ -1,0 +1,139 @@
+//! Lightweight metrics: counters and log-bucketed latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Log₂-bucketed duration histogram (1µs … ~1000s).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^{i+1}) microseconds
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn observe(&self, d: std::time::Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> std::time::Duration {
+        let c = self.count();
+        if c == 0 {
+            return std::time::Duration::ZERO;
+        }
+        std::time::Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> std::time::Duration {
+        std::time::Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile(&self, q: f64) -> std::time::Duration {
+        let total = self.count();
+        if total == 0 {
+            return std::time::Duration::ZERO;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return std::time::Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Shared metric set for the tracking service.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub events_ingested: AtomicU64,
+    pub batches_applied: AtomicU64,
+    pub nodes_added: AtomicU64,
+    pub update_latency: Histogram,
+    pub query_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "events={} batches={} nodes_added={} update_mean={:?} update_p99={:?} update_max={:?} queries={} query_mean={:?}",
+            self.events_ingested.load(Ordering::Relaxed),
+            self.batches_applied.load(Ordering::Relaxed),
+            self.nodes_added.load(Ordering::Relaxed),
+            self.update_latency.mean(),
+            self.update_latency.quantile(0.99),
+            self.update_latency.max(),
+            self.query_latency.count(),
+            self.query_latency.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn histogram_mean_and_count() {
+        let h = Histogram::new();
+        h.observe(Duration::from_micros(100));
+        h.observe(Duration::from_micros(300));
+        assert_eq!(h.count(), 2);
+        let m = h.mean().as_micros();
+        assert_eq!(m, 200);
+        assert_eq!(h.max().as_micros(), 300);
+    }
+
+    #[test]
+    fn quantile_monotone() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.observe(Duration::from_micros(i));
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p99.as_micros() >= 512);
+    }
+
+    #[test]
+    fn concurrent_observe() {
+        let h = Arc::new(Histogram::new());
+        let mut handles = vec![];
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.observe(Duration::from_micros((t * 1000 + i) as u64 + 1));
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

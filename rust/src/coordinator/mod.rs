@@ -1,0 +1,17 @@
+//! L3 coordinator: a streaming embedding-tracking service.
+//!
+//! Edge events flow in; a batching policy groups them into time steps; a
+//! dedicated worker thread applies each batch to the configured tracker
+//! (native or PJRT-backed — the PJRT client is thread-bound, which is
+//! exactly why the tracker lives on one worker thread); versioned
+//! snapshots of the embedding are published for lock-cheap concurrent
+//! reads; metrics record ingest/update latencies.
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+pub mod snapshot;
+
+pub use batcher::BatchPolicy;
+pub use service::{ServiceConfig, ServiceHandle, TrackingService};
+pub use snapshot::EmbeddingSnapshot;

@@ -1,0 +1,321 @@
+//! The tracking service: a worker thread that owns the graph state and
+//! the tracker, fed by an mpsc command channel.
+//!
+//! Why a dedicated thread: the PJRT client and compiled executables are
+//! thread-bound (`Rc` internals), so the XLA-backed tracker must be
+//! constructed *and* driven on one thread.  The handle is `Clone + Send`,
+//! queries are answered over per-call reply channels, and embedding reads
+//! go through the lock-cheap [`SnapshotStore`] without touching the
+//! worker at all.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
+use crate::graph::graph::Graph;
+use crate::graph::stream::{DeltaBuilder, GraphEvent};
+use crate::sparse::csr::Csr;
+use crate::tracking::traits::{EigTracker, EigenPairs};
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Builds the tracker inside the worker thread (lets callers choose the
+/// native or XLA backend without `Send` bounds on the tracker itself).
+pub type TrackerFactory =
+    Box<dyn FnOnce(&Csr, &EigenPairs) -> Box<dyn EigTracker> + Send>;
+
+/// Service configuration.
+pub struct ServiceConfig {
+    /// Initial graph (defines A⁽⁰⁾ and the id space 0..n).
+    pub initial: Graph,
+    /// Tracked eigenpairs.
+    pub k: usize,
+    /// Batch-closing policy.
+    pub policy: BatchPolicy,
+    /// Lanczos seed for initialization.
+    pub seed: u64,
+}
+
+enum Command {
+    Events(Vec<GraphEvent>),
+    Flush(Sender<u64>),
+    CentralNodes(usize, Sender<Vec<usize>>),
+    Clusters(usize, Sender<Vec<usize>>),
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the service.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Command>,
+    snapshots: SnapshotStore,
+    metrics: Arc<Metrics>,
+}
+
+impl ServiceHandle {
+    /// Ingest a batch of events (non-blocking; worker applies policy).
+    pub fn ingest(&self, events: Vec<GraphEvent>) -> Result<()> {
+        self.metrics
+            .events_ingested
+            .fetch_add(events.len() as u64, Ordering::Relaxed);
+        self.tx.send(Command::Events(events))?;
+        Ok(())
+    }
+
+    /// Force a flush; returns the published snapshot version.
+    pub fn flush(&self) -> Result<u64> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Command::Flush(rtx))?;
+        Ok(rrx.recv()?)
+    }
+
+    /// Latest embedding snapshot (never blocks the worker).
+    pub fn snapshot(&self) -> Arc<EmbeddingSnapshot> {
+        self.snapshots.latest()
+    }
+
+    /// Top-J central nodes by subgraph centrality on the current state.
+    pub fn central_nodes(&self, j: usize) -> Result<Vec<usize>> {
+        let t0 = Instant::now();
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Command::CentralNodes(j, rtx))?;
+        let out = rrx.recv()?;
+        self.metrics.query_latency.observe(t0.elapsed());
+        Ok(out)
+    }
+
+    /// Cluster assignment from the current embedding.
+    pub fn clusters(&self, k: usize) -> Result<Vec<usize>> {
+        let t0 = Instant::now();
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Command::Clusters(k, rtx))?;
+        let out = rrx.recv()?;
+        self.metrics.query_latency.observe(t0.elapsed());
+        Ok(out)
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Stop the worker (drains outstanding commands first).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// The running service (join handle + public handle).
+pub struct TrackingService {
+    pub handle: ServiceHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TrackingService {
+    /// Spawn the worker.  `factory` runs on the worker thread with the
+    /// initial adjacency and the Lanczos-computed initial pairs.
+    pub fn spawn(config: ServiceConfig, factory: TrackerFactory) -> Result<TrackingService> {
+        let a0 = config.initial.adjacency();
+        let init = crate::tracking::traits::init_eigenpairs(&a0, config.k, config.seed);
+        let store = SnapshotStore::new(EmbeddingSnapshot {
+            version: 0,
+            n_nodes: a0.n_rows,
+            pairs: init.clone(),
+            published_at: Instant::now(),
+        });
+        let metrics = Metrics::new();
+        let (tx, rx) = mpsc::channel();
+        let handle = ServiceHandle { tx, snapshots: store.clone(), metrics: metrics.clone() };
+        let cfg_policy = config.policy;
+        let initial_graph = config.initial;
+        let worker = std::thread::Builder::new()
+            .name("grest-tracker".into())
+            .spawn(move || {
+                worker_loop(rx, initial_graph, a0, init, factory, cfg_policy, store, metrics)
+            })?;
+        Ok(TrackingService { handle: handle.clone(), worker: Some(worker) })
+    }
+
+    /// Shut down and join.
+    pub fn join(mut self) {
+        self.handle.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for TrackingService {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rx: Receiver<Command>,
+    initial_graph: Graph,
+    a0: Csr,
+    init: EigenPairs,
+    factory: TrackerFactory,
+    policy: BatchPolicy,
+    store: SnapshotStore,
+    metrics: Arc<Metrics>,
+) {
+    let mut tracker = factory(&a0, &init);
+    let mut builder = DeltaBuilder::from_graph(initial_graph);
+    let mut adjacency = a0;
+    let mut version = 0u64;
+
+    let flush =
+        |builder: &mut DeltaBuilder, adjacency: &mut Csr, tracker: &mut Box<dyn EigTracker>, version: &mut u64| {
+            if let Some((delta, adj)) = builder.emit(adjacency) {
+                let t0 = Instant::now();
+                metrics.nodes_added.fetch_add(delta.s_new as u64, Ordering::Relaxed);
+                if let Err(e) = tracker.update(&delta) {
+                    eprintln!("tracker update failed: {e}");
+                    return;
+                }
+                metrics.update_latency.observe(t0.elapsed());
+                metrics.batches_applied.fetch_add(1, Ordering::Relaxed);
+                *adjacency = adj;
+                *version += 1;
+                store.publish(EmbeddingSnapshot {
+                    version: *version,
+                    n_nodes: adjacency.n_rows,
+                    pairs: tracker.current().clone(),
+                    published_at: Instant::now(),
+                });
+            }
+        };
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Events(events) => {
+                for ev in events {
+                    builder.push(ev);
+                }
+                if policy.should_flush(builder.pending_events(), builder.pending_new_nodes()) {
+                    flush(&mut builder, &mut adjacency, &mut tracker, &mut version);
+                }
+            }
+            Command::Flush(reply) => {
+                flush(&mut builder, &mut adjacency, &mut tracker, &mut version);
+                let _ = reply.send(version);
+            }
+            Command::CentralNodes(j, reply) => {
+                let out = crate::tasks::centrality::central_nodes(tracker.current(), j);
+                let _ = reply.send(out);
+            }
+            Command::Clusters(kc, reply) => {
+                let out = crate::tasks::clustering::spectral_cluster(
+                    &tracker.current().vectors,
+                    kc,
+                    42,
+                );
+                let _ = reply.send(out);
+            }
+            Command::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+    use crate::tracking::{GRest, SubspaceMode};
+
+    fn base_graph(n: usize, seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        crate::graph::generators::erdos_renyi(n, 0.08, &mut rng)
+    }
+
+    fn grest_factory() -> TrackerFactory {
+        Box::new(|_a0, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full)))
+    }
+
+    #[test]
+    fn service_tracks_streamed_updates() {
+        let g = base_graph(60, 1);
+        let svc = TrackingService::spawn(
+            ServiceConfig { initial: g, k: 4, policy: BatchPolicy::ByCount(8), seed: 2 },
+            grest_factory(),
+        )
+        .unwrap();
+        let h = &svc.handle;
+        assert_eq!(h.snapshot().version, 0);
+        // stream 40 events referencing new node ids 1000+
+        let mut events = vec![];
+        for i in 0..40u64 {
+            events.push(GraphEvent::AddEdge(i % 60, 1000 + (i % 7)));
+        }
+        h.ingest(events).unwrap();
+        let v = h.flush().unwrap();
+        assert!(v >= 1, "at least one batch applied");
+        let snap = h.snapshot();
+        assert!(snap.n_nodes > 60, "new nodes tracked");
+        assert_eq!(snap.pairs.k(), 4);
+        let central = h.central_nodes(5).unwrap();
+        assert_eq!(central.len(), 5);
+        let m = h.metrics();
+        assert!(m.batches_applied.load(Ordering::Relaxed) >= 1);
+        svc.join();
+    }
+
+    #[test]
+    fn snapshot_versions_monotone_under_stream() {
+        let g = base_graph(40, 3);
+        let svc = TrackingService::spawn(
+            ServiceConfig { initial: g, k: 3, policy: BatchPolicy::ByCount(4), seed: 4 },
+            grest_factory(),
+        )
+        .unwrap();
+        let h = svc.handle.clone();
+        let reader = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut last = 0;
+                for _ in 0..500 {
+                    let v = h.snapshot().version;
+                    assert!(v >= last);
+                    last = v;
+                }
+            })
+        };
+        for b in 0..10u64 {
+            let ev: Vec<GraphEvent> =
+                (0..4).map(|i| GraphEvent::AddEdge(b * 4 + i, (b * 4 + i + 1) % 40)).collect();
+            h.ingest(ev).unwrap();
+        }
+        h.flush().unwrap();
+        reader.join().unwrap();
+        svc.join();
+    }
+
+    #[test]
+    fn queries_work_mid_stream() {
+        let g = base_graph(50, 5);
+        let svc = TrackingService::spawn(
+            ServiceConfig { initial: g, k: 4, policy: BatchPolicy::ByNewNodes(3), seed: 6 },
+            grest_factory(),
+        )
+        .unwrap();
+        let h = &svc.handle;
+        h.ingest(vec![
+            GraphEvent::AddEdge(0, 900),
+            GraphEvent::AddEdge(1, 901),
+            GraphEvent::AddEdge(2, 902),
+        ])
+        .unwrap();
+        let clusters = h.clusters(2).unwrap();
+        assert!(!clusters.is_empty());
+        let snap = h.snapshot();
+        assert!(snap.pairs.k() > 0);
+        svc.join();
+    }
+}

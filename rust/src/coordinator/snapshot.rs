@@ -1,0 +1,101 @@
+//! Versioned embedding snapshots with lock-cheap concurrent reads:
+//! the worker publishes `Arc<EmbeddingSnapshot>` swaps; readers clone the
+//! Arc under a short read lock and never block the tracker.
+
+use crate::tracking::traits::EigenPairs;
+use std::sync::{Arc, RwLock};
+
+/// An immutable published embedding state.
+pub struct EmbeddingSnapshot {
+    /// Monotone version, one per applied batch.
+    pub version: u64,
+    /// Nodes covered by this snapshot.
+    pub n_nodes: usize,
+    /// The tracked eigenpairs.
+    pub pairs: EigenPairs,
+    /// Wall time of publication.
+    pub published_at: std::time::Instant,
+}
+
+/// Single-writer multi-reader snapshot cell.
+#[derive(Clone)]
+pub struct SnapshotStore {
+    inner: Arc<RwLock<Arc<EmbeddingSnapshot>>>,
+}
+
+impl SnapshotStore {
+    pub fn new(initial: EmbeddingSnapshot) -> SnapshotStore {
+        SnapshotStore { inner: Arc::new(RwLock::new(Arc::new(initial))) }
+    }
+
+    /// Latest snapshot (cheap: clones an Arc).
+    pub fn latest(&self) -> Arc<EmbeddingSnapshot> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Publish a new snapshot; enforces monotone versions.
+    pub fn publish(&self, snap: EmbeddingSnapshot) {
+        let mut w = self.inner.write().unwrap();
+        assert!(
+            snap.version > w.version,
+            "snapshot versions must be monotone ({} -> {})",
+            w.version,
+            snap.version
+        );
+        *w = Arc::new(snap);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+
+    fn snap(version: u64, n: usize) -> EmbeddingSnapshot {
+        EmbeddingSnapshot {
+            version,
+            n_nodes: n,
+            pairs: EigenPairs { values: vec![1.0], vectors: Mat::zeros(n, 1) },
+            published_at: std::time::Instant::now(),
+        }
+    }
+
+    #[test]
+    fn publish_and_read() {
+        let store = SnapshotStore::new(snap(0, 3));
+        assert_eq!(store.latest().version, 0);
+        store.publish(snap(1, 4));
+        assert_eq!(store.latest().version, 1);
+        assert_eq!(store.latest().n_nodes, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn non_monotone_rejected() {
+        let store = SnapshotStore::new(snap(5, 3));
+        store.publish(snap(5, 3));
+    }
+
+    #[test]
+    fn concurrent_readers_see_consistent_versions() {
+        let store = SnapshotStore::new(snap(0, 1));
+        let mut readers = vec![];
+        for _ in 0..4 {
+            let s = store.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..2000 {
+                    let v = s.latest().version;
+                    assert!(v >= last, "version went backwards");
+                    last = v;
+                }
+            }));
+        }
+        for v in 1..200 {
+            store.publish(snap(v, 1));
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! The eigenvector-approximation metric ψ of paper Eq. (15):
+//! ψ_i = arccos(|x_iᵀ x̃_i|) with both vectors unit-normalized.
+
+use crate::linalg::blas;
+use crate::tracking::traits::EigenPairs;
+
+/// ψ between two vectors (radians in [0, π/2] after |·|).
+pub fn angle(a: &[f64], b: &[f64]) -> f64 {
+    let na = blas::nrm2(a).max(1e-300);
+    let nb = blas::nrm2(b).max(1e-300);
+    let c = (blas::dot(a, b).abs() / (na * nb)).min(1.0);
+    c.acos()
+}
+
+/// Per-index angles ψ_i between estimate and reference, i = 0..k.
+/// The estimate may live in a larger space (padded rows are compared
+/// against implicit zeros in the reference — both sides are padded to the
+/// longer length).
+pub fn angles(estimate: &EigenPairs, reference: &EigenPairs, k: usize) -> Vec<f64> {
+    let k = k.min(estimate.k()).min(reference.k());
+    let n = estimate.n().max(reference.n());
+    let mut out = Vec::with_capacity(k);
+    let pad = |v: &[f64]| {
+        let mut p = v.to_vec();
+        p.resize(n, 0.0);
+        p
+    };
+    for i in 0..k {
+        let a = pad(estimate.vectors.col(i));
+        let b = pad(reference.vectors.col(i));
+        out.push(angle(&a, &b));
+    }
+    out
+}
+
+/// Mean of the first `k` angles — the paper's Fig. 2(b)/3(b) series.
+pub fn mean_angle(estimate: &EigenPairs, reference: &EigenPairs, k: usize) -> f64 {
+    let a = angles(estimate, reference, k);
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().sum::<f64>() / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+
+    fn pairs(cols: Vec<Vec<f64>>) -> EigenPairs {
+        let n = cols[0].len();
+        let k = cols.len();
+        let mut m = Mat::zeros(n, k);
+        for (j, c) in cols.iter().enumerate() {
+            m.set_col(j, c);
+        }
+        EigenPairs { values: vec![0.0; k], vectors: m }
+    }
+
+    #[test]
+    fn identical_vectors_zero_angle() {
+        let p = pairs(vec![vec![1.0, 0.0, 0.0]]);
+        assert!(mean_angle(&p, &p, 1) < 1e-12);
+    }
+
+    #[test]
+    fn sign_flip_is_zero_angle() {
+        let a = pairs(vec![vec![0.6, 0.8]]);
+        let b = pairs(vec![vec![-0.6, -0.8]]);
+        assert!(mean_angle(&a, &b, 1) < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_vectors_right_angle() {
+        let a = pairs(vec![vec![1.0, 0.0]]);
+        let b = pairs(vec![vec![0.0, 1.0]]);
+        assert!((mean_angle(&a, &b, 1) - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padding_to_longer_space() {
+        let a = pairs(vec![vec![1.0, 0.0, 0.0, 0.0]]); // estimate in R⁴
+        let b = pairs(vec![vec![1.0, 0.0]]); // reference in R²
+        assert!(mean_angle(&a, &b, 1) < 1e-12);
+    }
+}

@@ -1,0 +1,419 @@
+//! One driver per paper table/figure (see DESIGN.md experiment index).
+//! Shared by the CLI (`grest experiment <id>`) and the bench targets.
+
+use crate::eval::harness::{
+    paper_trackers, reference_run, run_trackers, timers_spec, RunResult,
+};
+use crate::eval::table::{fmt_secs, Table};
+use crate::graph::datasets::{self, DatasetSpec, Kind};
+use crate::graph::scenario::sbm_expansion;
+use crate::linalg::rng::Rng;
+use crate::tasks::{ari::adjusted_rand_index, centrality, clustering};
+use crate::tracking::laplacian::{shifted_normalized_laplacian, shifted_scenario};
+use crate::tracking::traits::init_eigenpairs;
+use crate::tracking::{EigTracker, GRest, SubspaceMode};
+use std::time::{Duration, Instant};
+
+/// Scaled-down knobs for smoke runs (CI / quick bench).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpConfig {
+    /// tracked eigenpairs (paper: 64)
+    pub k: usize,
+    /// eigenvector angles recorded (paper: 32)
+    pub angles_k: usize,
+    /// RSVD L=P (paper: 100 for SNAP runs)
+    pub rsvd_lp: usize,
+    /// Monte-Carlo repetitions (paper: 10)
+    pub mc: usize,
+    /// time-step override (None = dataset default)
+    pub t_override: Option<usize>,
+    /// dataset size divisor on top of the registry scaling
+    pub extra_scale: usize,
+}
+
+impl ExpConfig {
+    /// Paper-faithful (at registry scale) configuration.
+    pub fn paper() -> ExpConfig {
+        let mc = std::env::var("GREST_MC")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2);
+        ExpConfig { k: 64, angles_k: 32, rsvd_lp: 32, mc, t_override: None, extra_scale: 1 }
+    }
+
+    /// Fast smoke configuration (~seconds per figure).
+    pub fn quick() -> ExpConfig {
+        ExpConfig { k: 16, angles_k: 8, rsvd_lp: 8, mc: 1, t_override: Some(4), extra_scale: 4 }
+    }
+}
+
+fn scale_spec(spec: &DatasetSpec, extra: usize) -> DatasetSpec {
+    let mut s = spec.clone();
+    if extra > 1 {
+        s.nodes = (s.nodes / extra).max(64);
+        s.edges = (s.edges / extra).max(4 * s.nodes);
+        s.scale *= extra;
+    }
+    s
+}
+
+/// Aggregated result of one dataset (MC-averaged).
+pub struct DatasetResult {
+    pub dataset: String,
+    /// tracker name → time-averaged ψ_i for i = 0,1,2 (Fig. 2a/3a)
+    pub top3: Vec<(String, [f64; 3])>,
+    /// tracker name → per-step mean-ψ over angles_k (Fig. 2b/3b)
+    pub series: Vec<(String, Vec<f64>)>,
+    /// tracker name → total tracking time (Fig. 4)
+    pub times: Vec<(String, Duration)>,
+    /// reference (`eigs`) total time
+    pub eigs_time: Duration,
+}
+
+/// Run the full roster on one dataset spec, MC-averaged.
+pub fn run_dataset(spec: &DatasetSpec, cfg: &ExpConfig) -> DatasetResult {
+    let spec = scale_spec(spec, cfg.extra_scale);
+    let mut agg: Option<DatasetResult> = None;
+    for mc in 0..cfg.mc {
+        let mut rng = Rng::new(1000 + mc as u64);
+        let sc = datasets::scenario_for(&spec, cfg.t_override, &mut rng);
+        let reference = reference_run(&sc, cfg.k, 7 + mc as u64);
+        let mut roster = paper_trackers(false, cfg.rsvd_lp);
+        roster.push(timers_spec(cfg.k));
+        let results = run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 7 + mc as u64);
+        let cur = summarize(&spec.name, &results, reference.total_time, cfg.angles_k);
+        agg = Some(match agg {
+            None => cur,
+            Some(mut prev) => {
+                merge_into(&mut prev, &cur, mc + 1);
+                prev
+            }
+        });
+    }
+    agg.unwrap()
+}
+
+fn summarize(
+    name: &str,
+    results: &[RunResult],
+    eigs_time: Duration,
+    angles_k: usize,
+) -> DatasetResult {
+    DatasetResult {
+        dataset: name.to_string(),
+        top3: results
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    [
+                        r.avg_angle_for_index(0),
+                        r.avg_angle_for_index(1),
+                        r.avg_angle_for_index(2),
+                    ],
+                )
+            })
+            .collect(),
+        series: results
+            .iter()
+            .map(|r| (r.name.clone(), r.mean_angle_series(angles_k)))
+            .collect(),
+        times: results.iter().map(|r| (r.name.clone(), r.total_time)).collect(),
+        eigs_time,
+    }
+}
+
+fn merge_into(prev: &mut DatasetResult, cur: &DatasetResult, runs_so_far: usize) {
+    // running mean with weight 1/runs
+    let w = 1.0 / runs_so_far as f64;
+    for (p, c) in prev.top3.iter_mut().zip(cur.top3.iter()) {
+        for i in 0..3 {
+            p.1[i] += (c.1[i] - p.1[i]) * w;
+        }
+    }
+    for (p, c) in prev.series.iter_mut().zip(cur.series.iter()) {
+        for (a, b) in p.1.iter_mut().zip(c.1.iter()) {
+            *a += (b - *a) * w;
+        }
+    }
+    for (p, c) in prev.times.iter_mut().zip(cur.times.iter()) {
+        p.1 = p.1.mul_f64(1.0 - w) + c.1.mul_f64(w);
+    }
+    prev.eigs_time = prev.eigs_time.mul_f64(1.0 - w) + cur.eigs_time.mul_f64(w);
+}
+
+/// Table 2: the dataset registry (paper vs build sizes).
+pub fn table2() -> Table {
+    let mut t = Table::new(&[
+        "Dataset", "Type", "|V| paper", "|E| paper", "|V| built", "|E| target", "scale", "T",
+    ]);
+    for d in datasets::registry() {
+        t.row(vec![
+            d.name.into(),
+            match d.kind {
+                Kind::Static => "S".into(),
+                Kind::Dynamic => "D".into(),
+            },
+            d.paper_nodes.to_string(),
+            d.paper_edges.to_string(),
+            d.nodes.to_string(),
+            d.edges.to_string(),
+            format!("1/{}", d.scale),
+            d.t_steps.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 2 / Fig. 3 (accuracy) + Fig. 4 (runtime) for a dataset kind.
+pub fn figure_accuracy_runtime(kind: Kind, cfg: &ExpConfig) -> (Vec<DatasetResult>, Table, Table, Table) {
+    let specs: Vec<DatasetSpec> = datasets::registry()
+        .into_iter()
+        .filter(|d| d.kind == kind)
+        .collect();
+    let results: Vec<DatasetResult> = specs.iter().map(|s| run_dataset(s, cfg)).collect();
+
+    // (a): time-averaged ψ for the first three eigenvectors
+    let mut ta = Table::new(&["Dataset", "Tracker", "psi_1", "psi_2", "psi_3"]);
+    for r in &results {
+        for (name, t3) in &r.top3 {
+            ta.row(vec![
+                r.dataset.clone(),
+                name.clone(),
+                format!("{:.4}", t3[0]),
+                format!("{:.4}", t3[1]),
+                format!("{:.4}", t3[2]),
+            ]);
+        }
+    }
+    // (b): mean-ψ over the leading angles_k as a function of t
+    let mut tb = Table::new(&["Dataset", "Tracker", "t", "mean_psi"]);
+    for r in &results {
+        for (name, series) in &r.series {
+            for (t, v) in series.iter().enumerate() {
+                tb.row(vec![
+                    r.dataset.clone(),
+                    name.clone(),
+                    (t + 1).to_string(),
+                    format!("{v:.5}"),
+                ]);
+            }
+        }
+    }
+    // Fig. 4: total runtimes incl. eigs
+    let mut tt = Table::new(&["Dataset", "Tracker", "total_time", "seconds"]);
+    for r in &results {
+        for (name, d) in &r.times {
+            tt.row(vec![
+                r.dataset.clone(),
+                name.clone(),
+                fmt_secs(*d),
+                format!("{:.4}", d.as_secs_f64()),
+            ]);
+        }
+        tt.row(vec![
+            r.dataset.clone(),
+            "eigs".into(),
+            fmt_secs(r.eigs_time),
+            format!("{:.4}", r.eigs_time.as_secs_f64()),
+        ]);
+    }
+    (results, ta, tb, tt)
+}
+
+/// Fig. 5: RSVD (L, P) accuracy/runtime trade-off on CM-Collab.
+pub fn fig5_rsvd_tradeoff(cfg: &ExpConfig, grid: &[usize]) -> Table {
+    let spec = scale_spec(&datasets::by_name("CM-Collab").unwrap(), cfg.extra_scale);
+    let mut rng = Rng::new(42);
+    let sc = datasets::scenario_for(&spec, cfg.t_override, &mut rng);
+    let reference = reference_run(&sc, cfg.k, 9);
+
+    // G-REST3 baseline
+    let roster3 = vec![crate::eval::harness::TrackerSpec::new(
+        "G-REST3",
+        Box::new(|_, p, _| Box::new(GRest::new(p.clone(), SubspaceMode::Full))),
+    )];
+    let base = &run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster3, 9)[0];
+    let base_psi = base.grand_mean_angle(cfg.angles_k);
+    let base_time = base.total_time;
+
+    let mut t = Table::new(&["L", "P", "mean_psi", "delta_vs_grest3", "speedup_x"]);
+    t.row(vec![
+        "full".into(),
+        "full".into(),
+        format!("{base_psi:.5}"),
+        "0".into(),
+        "1.00".into(),
+    ]);
+    for &l in grid {
+        for &p in grid {
+            let roster = vec![crate::eval::harness::TrackerSpec::new(
+                "rsvd",
+                Box::new(move |_, pairs, _| {
+                    Box::new(GRest::new(pairs.clone(), SubspaceMode::Rsvd { l, p }))
+                }),
+            )];
+            let r = &run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 9)[0];
+            let psi = r.grand_mean_angle(cfg.angles_k);
+            t.row(vec![
+                l.to_string(),
+                p.to_string(),
+                format!("{psi:.5}"),
+                format!("{:+.5}", psi - base_psi),
+                format!("{:.2}", base_time.as_secs_f64() / r.total_time.as_secs_f64()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table 3: central-node identification accuracy on the static datasets.
+pub fn table3_centrality(cfg: &ExpConfig, js: &[usize]) -> Table {
+    let specs: Vec<DatasetSpec> = datasets::registry()
+        .into_iter()
+        .filter(|d| d.kind == Kind::Static)
+        .collect();
+    let mut t = Table::new(&["Method", "J", "Dataset", "overlap_%"]);
+    for spec in &specs {
+        let spec = scale_spec(spec, cfg.extra_scale);
+        let mut rng = Rng::new(77);
+        let sc = datasets::scenario_for(&spec, cfg.t_override, &mut rng);
+        let reference = reference_run(&sc, cfg.k, 3);
+        let mut roster = paper_trackers(false, cfg.rsvd_lp);
+        roster.push(timers_spec(cfg.k));
+        // rerun trackers capturing eigenpairs per step for centrality
+        let init = init_eigenpairs(&sc.initial, cfg.k, 3);
+        for specr in &roster {
+            let mut tracker = (specr.build)(&sc.initial, &init, 3);
+            let mut overlaps: Vec<Vec<f64>> = vec![vec![]; js.len()];
+            for (step_idx, step) in sc.steps.iter().enumerate() {
+                tracker.update(&step.delta).unwrap();
+                // use the leading 32 (angles_k) pairs as in the paper
+                let kk = cfg.angles_k.min(cfg.k);
+                let trunc = |p: &crate::tracking::EigenPairs| crate::tracking::EigenPairs {
+                    values: p.values[..kk.min(p.k())].to_vec(),
+                    vectors: p.vectors.select_cols(&(0..kk.min(p.k())).collect::<Vec<_>>()),
+                };
+                let est = trunc(tracker.current());
+                let refp = trunc(&reference.per_step[step_idx]);
+                for (ji, &j) in js.iter().enumerate() {
+                    let j = j.min(step.adjacency.n_rows);
+                    let got = centrality::central_nodes(&est, j);
+                    let want = centrality::central_nodes(&refp, j);
+                    overlaps[ji].push(centrality::overlap(&want, &got));
+                }
+            }
+            for (ji, &j) in js.iter().enumerate() {
+                let mean = overlaps[ji].iter().sum::<f64>() / overlaps[ji].len().max(1) as f64;
+                t.row(vec![
+                    specr.name.clone(),
+                    j.to_string(),
+                    spec.name.into(),
+                    format!("{:.1}", 100.0 * mean),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig. 6: clustering ARI ratio vs p_out (a) and #clusters (b) on SBM
+/// expansions, via shifted normalized-Laplacian tracking.
+pub fn fig6_clustering(cfg: &ExpConfig, n: usize, p_outs: &[f64], ks: &[usize]) -> Table {
+    let mut t = Table::new(&["sweep", "value", "Tracker", "ARI_ratio"]);
+    // (a) vary p_out at fixed k=5; (b) vary k at fixed p_out = middle
+    let mid_pout = p_outs[p_outs.len() / 2];
+    let mut jobs: Vec<(String, f64, usize)> = p_outs.iter().map(|&p| ("p_out".to_string(), p, 5usize)).collect();
+    jobs.extend(ks.iter().map(|&k| ("clusters".to_string(), mid_pout, k)));
+    for (sweep, p_out, k_clusters) in jobs {
+        let value = if sweep == "p_out" { format!("{p_out}") } else { format!("{k_clusters}") };
+        let mut per_tracker: Vec<(String, Vec<f64>)> = Vec::new();
+        for mc in 0..cfg.mc {
+            let mut rng = Rng::new(500 + mc as u64);
+            let n0 = n - n / 20;
+            let s_per = (n - n0) / 5;
+            let sc = sbm_expansion(n, k_clusters, 0.05, p_out, n0, s_per, 5, &mut rng);
+            let labels = sc.labels_per_step.clone().unwrap();
+            // shifted normalized Laplacian stream
+            let (t0, steps) = shifted_scenario(&sc, shifted_normalized_laplacian, 0.0);
+            let init = init_eigenpairs(&t0, k_clusters, 21 + mc as u64);
+            let lp = cfg.rsvd_lp.min(20).max(4);
+            let mut trackers: Vec<(String, Box<dyn EigTracker>)> = vec![
+                ("TRIP".into(), Box::new(crate::tracking::trip::Trip::new(init.clone()))),
+                ("RM".into(), Box::new(crate::tracking::residual_modes::ResidualModes::new(init.clone()))),
+                ("IASC".into(), Box::new(crate::tracking::iasc::Iasc::new(init.clone()))),
+                ("G-REST2".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Rm))),
+                ("G-REST3".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
+                ("G-REST-RSVD".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Rsvd { l: lp, p: lp }))),
+                ("TIMERS".into(), Box::new(crate::tracking::timers::Timers::new(&t0, k_clusters, 33))),
+            ];
+            let mut ratios: Vec<(String, Vec<f64>)> =
+                trackers.iter().map(|(n, _)| (n.clone(), vec![])).collect();
+            for (step_idx, (delta, t_now)) in steps.iter().enumerate() {
+                let truth = &labels[step_idx + 1];
+                // reference clustering from exact trailing eigenvectors
+                let refp = init_eigenpairs(t_now, k_clusters, 99 + step_idx as u64);
+                let ref_labels = clustering::spectral_cluster(&refp.vectors, k_clusters, 1);
+                let ref_ari = adjusted_rand_index(&ref_labels, truth).max(1e-6);
+                for (ti, (_, tracker)) in trackers.iter_mut().enumerate() {
+                    tracker.update(delta).unwrap();
+                    let est_labels =
+                        clustering::spectral_cluster(&tracker.current().vectors, k_clusters, 1);
+                    let ari = adjusted_rand_index(&est_labels, truth);
+                    ratios[ti].1.push(ari / ref_ari);
+                }
+            }
+            if per_tracker.is_empty() {
+                per_tracker = ratios;
+            } else {
+                for (p, c) in per_tracker.iter_mut().zip(ratios.iter()) {
+                    p.1.extend(c.1.iter().copied());
+                }
+            }
+        }
+        for (name, rs) in per_tracker {
+            let mean = rs.iter().sum::<f64>() / rs.len().max(1) as f64;
+            t.row(vec![sweep.clone(), value.clone(), name, format!("{mean:.3}")]);
+        }
+    }
+    t
+}
+
+/// End-to-end wall-clock of one full experiment id (for logs).
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    eprintln!("[experiment] {label} finished in {}", fmt_secs(t0.elapsed()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_all_rows() {
+        let t = table2();
+        let r = t.render();
+        assert!(r.contains("Crocodile") && r.contains("AskUbuntu"));
+    }
+
+    #[test]
+    fn quick_fig5_grid_runs() {
+        let mut cfg = ExpConfig::quick();
+        cfg.t_override = Some(2);
+        cfg.extra_scale = 8;
+        let t = fig5_rsvd_tradeoff(&cfg, &[4]);
+        let csv = t.to_csv();
+        assert!(csv.lines().count() >= 3); // header + full + one grid point
+    }
+
+    #[test]
+    fn quick_fig6_runs_and_orders_sanely() {
+        let cfg = ExpConfig { mc: 1, ..ExpConfig::quick() };
+        let t = fig6_clustering(&cfg, 300, &[0.005], &[3]);
+        let csv = t.to_csv();
+        // 7 trackers × 2 sweeps (p_out row + clusters row)
+        assert_eq!(csv.lines().count(), 1 + 14, "{csv}");
+    }
+}

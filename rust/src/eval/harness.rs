@@ -1,0 +1,225 @@
+//! Experiment harness: runs a set of trackers over a dynamic-graph
+//! scenario, recording per-step eigenvector angles against a shared
+//! Lanczos reference and per-step wall-clock — the raw material of every
+//! figure and table in the paper's Sec. 5.
+
+use crate::graph::scenario::DynamicScenario;
+use crate::sparse::csr::Csr;
+use crate::tracking::reference::Reference;
+use crate::tracking::residual_modes::ResidualModes;
+use crate::tracking::timers::Timers;
+use crate::tracking::traits::{init_eigenpairs, EigTracker, EigenPairs};
+use crate::tracking::trip::Trip;
+use crate::tracking::trip_basic::TripBasic;
+use crate::tracking::{iasc::Iasc, GRest, SubspaceMode};
+use std::time::{Duration, Instant};
+
+/// Builder for a tracker given (A⁽⁰⁾, precomputed initial pairs, seed).
+pub type TrackerBuilder = Box<dyn Fn(&Csr, &EigenPairs, u64) -> Box<dyn EigTracker>>;
+
+/// Named tracker constructor.
+pub struct TrackerSpec {
+    pub name: String,
+    pub build: TrackerBuilder,
+}
+
+impl TrackerSpec {
+    pub fn new(name: &str, build: TrackerBuilder) -> TrackerSpec {
+        TrackerSpec { name: name.into(), build }
+    }
+}
+
+/// The paper's evaluation roster minus TIMERS (add [`timers_spec`], which
+/// needs K up front): TRIP, RM, IASC, G-REST₂, G-REST₃, G-REST_RSVD.
+/// `rsvd_lp` scales with graph expansion (paper: 100 for the SNAP runs,
+/// 20 for the SBM runs).
+pub fn paper_trackers(include_trip_basic: bool, rsvd_lp: usize) -> Vec<TrackerSpec> {
+    let mut v: Vec<TrackerSpec> = vec![
+        TrackerSpec::new("TRIP", Box::new(|_, p, _| Box::new(Trip::new(p.clone())))),
+        TrackerSpec::new("RM", Box::new(|_, p, _| Box::new(ResidualModes::new(p.clone())))),
+        TrackerSpec::new("IASC", Box::new(|_, p, _| Box::new(Iasc::new(p.clone())))),
+        TrackerSpec::new(
+            "G-REST2",
+            Box::new(|_, p, _| Box::new(GRest::new(p.clone(), SubspaceMode::Rm))),
+        ),
+        TrackerSpec::new(
+            "G-REST3",
+            Box::new(|_, p, _| Box::new(GRest::new(p.clone(), SubspaceMode::Full))),
+        ),
+        TrackerSpec::new(
+            "G-REST-RSVD",
+            Box::new(move |_, p, _| {
+                Box::new(GRest::new(p.clone(), SubspaceMode::Rsvd { l: rsvd_lp, p: rsvd_lp }))
+            }),
+        ),
+    ];
+    if include_trip_basic {
+        v.insert(
+            0,
+            TrackerSpec::new("TRIP-Basic", Box::new(|_, p, _| Box::new(TripBasic::new(p.clone())))),
+        );
+    }
+    v
+}
+
+/// Build TIMERS with explicit k (used instead of the roster helper when
+/// the K is known up front).
+pub fn timers_spec(k: usize) -> TrackerSpec {
+    TrackerSpec::new(
+        "TIMERS",
+        Box::new(move |a0, _, seed| Box::new(Timers::new(a0, k, seed))),
+    )
+}
+
+/// Result of one tracker over one scenario.
+pub struct RunResult {
+    pub name: String,
+    /// per-step ψ_i for i < angles_k, vs the Lanczos reference
+    pub per_step_angles: Vec<Vec<f64>>,
+    /// per-step tracker update time
+    pub per_step_time: Vec<Duration>,
+    pub total_time: Duration,
+}
+
+impl RunResult {
+    /// Time-average of ψ_i for one eigenindex i (Fig. 2a/3a bars).
+    pub fn avg_angle_for_index(&self, i: usize) -> f64 {
+        let vals: Vec<f64> = self
+            .per_step_angles
+            .iter()
+            .filter_map(|a| a.get(i).copied())
+            .collect();
+        vals.iter().sum::<f64>() / vals.len().max(1) as f64
+    }
+
+    /// Per-step mean over the first `k` indices (Fig. 2b/3b series).
+    pub fn mean_angle_series(&self, k: usize) -> Vec<f64> {
+        self.per_step_angles
+            .iter()
+            .map(|a| {
+                let kk = k.min(a.len()).max(1);
+                a[..kk].iter().sum::<f64>() / kk as f64
+            })
+            .collect()
+    }
+
+    /// Grand mean over time and indices (Fig. 5 scalar).
+    pub fn grand_mean_angle(&self, k: usize) -> f64 {
+        let s = self.mean_angle_series(k);
+        s.iter().sum::<f64>() / s.len().max(1) as f64
+    }
+}
+
+/// Per-step reference eigenpairs (shared across trackers) plus the time
+/// the reference computation took (the `eigs` baseline of Fig. 4).
+pub struct ReferenceRun {
+    pub per_step: Vec<EigenPairs>,
+    pub per_step_time: Vec<Duration>,
+    pub total_time: Duration,
+}
+
+/// Compute the Lanczos reference for every step of a scenario.
+pub fn reference_run(sc: &DynamicScenario, k: usize, seed: u64) -> ReferenceRun {
+    let mut per_step = Vec::with_capacity(sc.steps.len());
+    let mut per_step_time = Vec::with_capacity(sc.steps.len());
+    let t0 = Instant::now();
+    for (t, step) in sc.steps.iter().enumerate() {
+        let s0 = Instant::now();
+        per_step.push(Reference::compute(&step.adjacency, k, seed.wrapping_add(t as u64)));
+        per_step_time.push(s0.elapsed());
+    }
+    ReferenceRun { per_step, per_step_time, total_time: t0.elapsed() }
+}
+
+/// Run every tracker over the scenario against a precomputed reference.
+///
+/// `angles_k` — how many leading eigenvector angles to record per step.
+pub fn run_trackers(
+    sc: &DynamicScenario,
+    reference: &ReferenceRun,
+    k: usize,
+    angles_k: usize,
+    trackers: &[TrackerSpec],
+    seed: u64,
+) -> Vec<RunResult> {
+    let init = init_eigenpairs(&sc.initial, k, seed);
+    trackers
+        .iter()
+        .map(|spec| {
+            let mut tracker = (spec.build)(&sc.initial, &init, seed);
+            let mut per_step_angles = Vec::with_capacity(sc.steps.len());
+            let mut per_step_time = Vec::with_capacity(sc.steps.len());
+            let t0 = Instant::now();
+            for (t, step) in sc.steps.iter().enumerate() {
+                let s0 = Instant::now();
+                tracker
+                    .update(&step.delta)
+                    .unwrap_or_else(|e| panic!("{} failed at step {t}: {e}", spec.name));
+                per_step_time.push(s0.elapsed());
+                per_step_angles.push(crate::eval::angle::angles(
+                    tracker.current(),
+                    &reference.per_step[t],
+                    angles_k,
+                ));
+            }
+            RunResult {
+                name: spec.name.clone(),
+                per_step_angles,
+                per_step_time,
+                total_time: t0.elapsed(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::rng::Rng;
+
+    fn small_scenario(seed: u64) -> DynamicScenario {
+        let mut rng = Rng::new(seed);
+        let w = generators::power_law_weights(120, 2.3, 360);
+        let g = generators::chung_lu(&w, &mut rng);
+        crate::graph::scenario::scenario1_from_static("test", &g, 4)
+    }
+
+    #[test]
+    fn harness_runs_full_roster() {
+        let sc = small_scenario(1);
+        let k = 8;
+        let reference = reference_run(&sc, k, 7);
+        let mut roster = paper_trackers(false, 8);
+        roster.push(timers_spec(k));
+        let results = run_trackers(&sc, &reference, k, 3, &roster, 7);
+        assert_eq!(results.len(), 7);
+        for r in &results {
+            assert_eq!(r.per_step_angles.len(), 4);
+            assert!(r.grand_mean_angle(3).is_finite());
+        }
+    }
+
+    #[test]
+    fn grest3_at_least_as_accurate_as_trip_on_expansion() {
+        // paper's core qualitative claim, at harness level
+        let sc = small_scenario(2);
+        let k = 8;
+        let reference = reference_run(&sc, k, 11);
+        let roster = paper_trackers(false, 8);
+        let results = run_trackers(&sc, &reference, k, 3, &roster, 11);
+        let get = |n: &str| {
+            results
+                .iter()
+                .find(|r| r.name == n)
+                .unwrap()
+                .grand_mean_angle(3)
+        };
+        let trip = get("TRIP");
+        let g3 = get("G-REST3");
+        assert!(
+            g3 <= trip + 1e-9,
+            "G-REST3 mean ψ {g3} should beat TRIP {trip}"
+        );
+    }
+}

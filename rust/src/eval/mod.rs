@@ -1,0 +1,7 @@
+//! Evaluation: the ψ angle metric (Eq. 15), the experiment harness that
+//! drives every tracker over a scenario, and table/CSV reporters.
+
+pub mod angle;
+pub mod experiments;
+pub mod harness;
+pub mod table;

@@ -1,0 +1,241 @@
+//! Random graph generators: Erdős–Rényi, stochastic block model,
+//! Chung–Lu (expected-degree power law), Barabási–Albert preferential
+//! attachment, and a timestamped preferential-attachment stream for the
+//! temporal (Type-D) datasets.
+
+use crate::graph::graph::Graph;
+use crate::linalg::rng::Rng;
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+    let mut g = Graph::with_nodes(n);
+    // geometric skipping for sparse p
+    if p <= 0.0 {
+        return g;
+    }
+    if p >= 1.0 {
+        for u in 0..n {
+            for v in u + 1..n {
+                g.add_edge(u, v);
+            }
+        }
+        return g;
+    }
+    let lq = (1.0 - p).ln();
+    let (mut u, mut v) = (1usize, 0usize);
+    while u < n {
+        let r = 1.0 - rng.uniform();
+        let skip = (r.ln() / lq).floor() as usize + 1;
+        v += skip;
+        while v >= u && u < n {
+            v -= u;
+            u += 1;
+        }
+        if u < n {
+            g.add_edge(u, v);
+        }
+    }
+    g
+}
+
+/// Stochastic block model with `k` equal-probability clusters.
+/// Returns (graph, cluster labels).
+pub fn sbm(n: usize, k: usize, p_in: f64, p_out: f64, rng: &mut Rng) -> (Graph, Vec<usize>) {
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(k)).collect();
+    let mut g = Graph::with_nodes(n);
+    for u in 0..n {
+        for v in u + 1..n {
+            let p = if labels[u] == labels[v] { p_in } else { p_out };
+            if rng.flip(p) {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    (g, labels)
+}
+
+/// Power-law expected degree sequence: w_i ∝ (i + i0)^{-1/(γ-1)}, scaled
+/// so the expected edge count is ~`target_edges`.
+pub fn power_law_weights(n: usize, gamma: f64, target_edges: usize) -> Vec<f64> {
+    let alpha = 1.0 / (gamma - 1.0);
+    let i0 = 1.0;
+    let mut w: Vec<f64> = (0..n).map(|i| (i as f64 + i0).powf(-alpha)).collect();
+    let sum: f64 = w.iter().sum();
+    // expected edges of Chung-Lu = (Σw)²/(2Σw) scaled... after normalizing
+    // Σw = 2E the expected degree of node i is w_i.
+    let scale = (2.0 * target_edges as f64) / sum;
+    for x in w.iter_mut() {
+        *x *= scale;
+    }
+    // cap weights for well-posed Chung-Lu: w_i w_j / Σw ≤ 1
+    let total: f64 = w.iter().sum();
+    let cap = total.sqrt();
+    for x in w.iter_mut() {
+        if *x > cap {
+            *x = cap;
+        }
+    }
+    w
+}
+
+/// Chung–Lu model: P(i~j) = min(1, w_i w_j / Σw).  Heavy-tailed degree
+/// profile matching real SNAP graphs (the dataset substitution of
+/// DESIGN.md).  Uses the efficient weight-sorted skipping sampler.
+pub fn chung_lu(weights: &[f64], rng: &mut Rng) -> Graph {
+    let n = weights.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+    let w: Vec<f64> = order.iter().map(|&i| weights[i]).collect();
+    let total: f64 = w.iter().sum();
+    let mut g = Graph::with_nodes(n);
+    for i in 0..n {
+        let mut j = i + 1;
+        while j < n {
+            let p = (w[i] * w[j] / total).min(1.0);
+            if p <= 0.0 {
+                break;
+            }
+            if p < 1.0 {
+                // skip ahead geometrically using the current p as an upper
+                // bound for subsequent (sorted, decreasing) weights
+                let r = 1.0 - rng.uniform();
+                let skip = (r.ln() / (1.0 - p).ln()).floor() as usize;
+                j += skip;
+                if j >= n {
+                    break;
+                }
+                let q = (w[i] * w[j] / total).min(1.0);
+                if rng.uniform() < q / p {
+                    g.add_edge(order[i], order[j]);
+                }
+                j += 1;
+            } else {
+                g.add_edge(order[i], order[j]);
+                j += 1;
+            }
+        }
+    }
+    g
+}
+
+/// Barabási–Albert: each new node attaches to `m` existing nodes chosen
+/// by preferential attachment.  Returns the graph.
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    let g = ba_with_arrivals(n, m, rng).0;
+    g
+}
+
+/// Barabási–Albert that also returns the arrival-ordered edge list
+/// (u, v) with u the newly arrived node — the temporal stream used to
+/// synthesize the Type-D datasets.
+pub fn ba_with_arrivals(n: usize, m: usize, rng: &mut Rng) -> (Graph, Vec<(usize, usize)>) {
+    assert!(m >= 1 && n > m);
+    let mut g = Graph::with_nodes(n);
+    let mut stream = Vec::with_capacity(n * m);
+    // repeated-node list for preferential sampling
+    let mut targets: Vec<usize> = Vec::with_capacity(2 * n * m);
+    // seed clique on m+1 nodes
+    for u in 0..=m {
+        for v in u + 1..=m {
+            g.add_edge(u, v);
+            stream.push((v, u));
+            targets.push(u);
+            targets.push(v);
+        }
+    }
+    for u in m + 1..n {
+        let mut chosen = std::collections::HashSet::new();
+        while chosen.len() < m {
+            let t = targets[rng.below(targets.len())];
+            if t != u {
+                chosen.insert(t);
+            }
+        }
+        for &v in chosen.iter() {
+            g.add_edge(u, v);
+            stream.push((u, v));
+            targets.push(u);
+            targets.push(v);
+        }
+    }
+    (g, stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_edge_count_close_to_expectation() {
+        let mut rng = Rng::new(1);
+        let n = 400;
+        let p = 0.02;
+        let g = erdos_renyi(n, p, &mut rng);
+        let expected = p * (n * (n - 1) / 2) as f64;
+        let got = g.n_edges() as f64;
+        assert!(
+            (got - expected).abs() < 4.0 * expected.sqrt() + 10.0,
+            "got {got}, expected {expected}"
+        );
+    }
+
+    #[test]
+    fn er_extremes() {
+        let mut rng = Rng::new(2);
+        assert_eq!(erdos_renyi(10, 0.0, &mut rng).n_edges(), 0);
+        assert_eq!(erdos_renyi(10, 1.0, &mut rng).n_edges(), 45);
+    }
+
+    #[test]
+    fn sbm_denser_within_clusters() {
+        let mut rng = Rng::new(3);
+        let (g, labels) = sbm(300, 3, 0.15, 0.01, &mut rng);
+        let (mut win, mut wout, mut pin_pairs, mut pout_pairs) = (0usize, 0usize, 0usize, 0usize);
+        for u in 0..300 {
+            for v in u + 1..300 {
+                let same = labels[u] == labels[v];
+                if same {
+                    pin_pairs += 1;
+                } else {
+                    pout_pairs += 1;
+                }
+                if g.has_edge(u, v) {
+                    if same {
+                        win += 1;
+                    } else {
+                        wout += 1;
+                    }
+                }
+            }
+        }
+        let din = win as f64 / pin_pairs as f64;
+        let dout = wout as f64 / pout_pairs as f64;
+        assert!(din > 5.0 * dout, "din={din} dout={dout}");
+    }
+
+    #[test]
+    fn chung_lu_matches_target_edges() {
+        let mut rng = Rng::new(4);
+        let w = power_law_weights(1000, 2.3, 5000);
+        let g = chung_lu(&w, &mut rng);
+        let e = g.n_edges() as f64;
+        assert!(
+            e > 2500.0 && e < 7500.0,
+            "edges {e} far from target 5000"
+        );
+        // heavy tail: max degree well above mean
+        let mean_deg = 2.0 * e / 1000.0;
+        assert!(g.max_degree() as f64 > 4.0 * mean_deg);
+    }
+
+    #[test]
+    fn ba_properties() {
+        let mut rng = Rng::new(5);
+        let (g, stream) = ba_with_arrivals(500, 3, &mut rng);
+        assert_eq!(g.n_edges(), stream.len());
+        // every non-seed arrival contributes exactly m edges
+        assert_eq!(stream.len(), 3 * (500 - 4) + 6);
+        // hubs exist
+        assert!(g.max_degree() > 20);
+    }
+}

@@ -1,0 +1,242 @@
+//! A mutable undirected graph with adjacency-set storage, convertible to
+//! the CSR adjacency / Laplacian matrices the trackers consume.
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use std::collections::BTreeSet;
+
+/// Undirected simple graph (no self loops, unweighted).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    adj: Vec<BTreeSet<usize>>,
+    n_edges: usize,
+}
+
+impl Graph {
+    /// Empty graph with `n` isolated nodes.
+    pub fn with_nodes(n: usize) -> Graph {
+        Graph { adj: vec![BTreeSet::new(); n], n_edges: 0 }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    /// Append `count` isolated nodes; returns the first new index.
+    pub fn add_nodes(&mut self, count: usize) -> usize {
+        let first = self.adj.len();
+        self.adj.extend((0..count).map(|_| BTreeSet::new()));
+        first
+    }
+
+    /// Add edge (u,v); returns true if it was new.  Self loops ignored.
+    pub fn add_edge(&mut self, u: usize, v: usize) -> bool {
+        if u == v || u >= self.adj.len() || v >= self.adj.len() {
+            return false;
+        }
+        let added = self.adj[u].insert(v);
+        if added {
+            self.adj[v].insert(u);
+            self.n_edges += 1;
+        }
+        added
+    }
+
+    /// Remove edge (u,v); returns true if it existed.
+    pub fn remove_edge(&mut self, u: usize, v: usize) -> bool {
+        if u >= self.adj.len() || v >= self.adj.len() {
+            return false;
+        }
+        let removed = self.adj[u].remove(&v);
+        if removed {
+            self.adj[v].remove(&u);
+            self.n_edges -= 1;
+        }
+        removed
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        u < self.adj.len() && self.adj[u].contains(&v)
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    pub fn neighbors(&self, u: usize) -> impl Iterator<Item = usize> + '_ {
+        self.adj[u].iter().copied()
+    }
+
+    /// All edges (u < v).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.n_edges);
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &v in nbrs.iter() {
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Adjacency matrix as symmetric CSR.
+    pub fn adjacency(&self) -> Csr {
+        let n = self.n_nodes();
+        let mut indptr = vec![0usize; n + 1];
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            indptr[u + 1] = indptr[u] + nbrs.len();
+        }
+        let mut indices = Vec::with_capacity(2 * self.n_edges);
+        for nbrs in self.adj.iter() {
+            indices.extend(nbrs.iter().copied());
+        }
+        let data = vec![1.0; indices.len()];
+        Csr { n_rows: n, n_cols: n, indptr, indices, data }
+    }
+
+    /// Combinatorial Laplacian L = D − A as CSR.
+    pub fn laplacian(&self) -> Csr {
+        let n = self.n_nodes();
+        let mut coo = Coo::new(n, n);
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            coo.push(u, u, nbrs.len() as f64);
+            for &v in nbrs.iter() {
+                coo.push(u, v, -1.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Normalized adjacency D^{-1/2} A D^{-1/2} (isolated nodes get zero
+    /// rows), so that Lₙ = I − normalized_adjacency().
+    pub fn normalized_adjacency(&self) -> Csr {
+        let n = self.n_nodes();
+        let dinv: Vec<f64> = self
+            .adj
+            .iter()
+            .map(|nb| {
+                if nb.is_empty() {
+                    0.0
+                } else {
+                    1.0 / (nb.len() as f64).sqrt()
+                }
+            })
+            .collect();
+        let mut coo = Coo::new(n, n);
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &v in nbrs.iter() {
+                coo.push(u, v, dinv[u] * dinv[v]);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+
+    /// Subgraph induced by `nodes` (relabelled 0..nodes.len() in order).
+    pub fn induced_subgraph(&self, nodes: &[usize]) -> Graph {
+        let mut index = vec![usize::MAX; self.n_nodes()];
+        for (new, &old) in nodes.iter().enumerate() {
+            index[old] = new;
+        }
+        let mut g = Graph::with_nodes(nodes.len());
+        for (new_u, &old_u) in nodes.iter().enumerate() {
+            for &old_v in self.adj[old_u].iter() {
+                let new_v = index[old_v];
+                if new_v != usize::MAX && new_u < new_v {
+                    g.add_edge(new_u, new_v);
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        let mut g = Graph::with_nodes(3);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g
+    }
+
+    #[test]
+    fn add_remove_edges() {
+        let mut g = path3();
+        assert_eq!(g.n_edges(), 2);
+        assert!(g.has_edge(1, 0));
+        assert!(!g.add_edge(0, 1)); // duplicate
+        assert!(!g.add_edge(2, 2)); // self loop
+        assert!(g.remove_edge(0, 1));
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.n_edges(), 1);
+    }
+
+    #[test]
+    fn adjacency_symmetric_and_binary() {
+        let g = path3();
+        let a = g.adjacency();
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn laplacian_row_sums_zero() {
+        let g = path3();
+        let l = g.laplacian();
+        for s in l.row_sums() {
+            assert!(s.abs() < 1e-12);
+        }
+        assert_eq!(l.get(1, 1), 2.0);
+        assert_eq!(l.get(0, 1), -1.0);
+    }
+
+    #[test]
+    fn normalized_adjacency_spectrum_bounded() {
+        // eigenvalues of D^{-1/2}AD^{-1/2} lie in [-1, 1]
+        let mut g = Graph::with_nodes(6);
+        for (u, v) in [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0), (0, 3)] {
+            g.add_edge(u, v);
+        }
+        let na = g.normalized_adjacency();
+        let e = crate::linalg::eigh::eigh(&na.to_dense());
+        for v in e.values {
+            assert!(v > -1.0 - 1e-9 && v < 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn induced_subgraph_relabels() {
+        let mut g = Graph::with_nodes(5);
+        g.add_edge(0, 2);
+        g.add_edge(2, 4);
+        g.add_edge(1, 3);
+        let s = g.induced_subgraph(&[0, 2, 4]);
+        assert_eq!(s.n_nodes(), 3);
+        assert_eq!(s.n_edges(), 2);
+        assert!(s.has_edge(0, 1)); // old (0,2)
+        assert!(s.has_edge(1, 2)); // old (2,4)
+    }
+
+    #[test]
+    fn add_nodes_grows() {
+        let mut g = path3();
+        let first = g.add_nodes(2);
+        assert_eq!(first, 3);
+        assert_eq!(g.n_nodes(), 5);
+        assert!(g.add_edge(3, 4));
+    }
+}

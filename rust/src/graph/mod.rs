@@ -1,0 +1,10 @@
+//! Graph substrate: dynamic graphs, synthetic generators, the evaluation
+//! scenarios of paper Sec. 5, and the (substituted) dataset registry.
+
+pub mod datasets;
+pub mod generators;
+#[allow(clippy::module_inception)]
+pub mod graph;
+pub mod io;
+pub mod scenario;
+pub mod stream;

@@ -1,0 +1,245 @@
+//! The paper's two evaluation protocols (Sec. 5.1) as reusable scenario
+//! builders, plus the SBM-expansion protocol of the clustering test
+//! (Sec. 5.5).
+//!
+//! A scenario is the initial adjacency A⁽⁰⁾ plus a sequence of per-step
+//! updates Δ⁽ᵗ⁾, with the post-step adjacency kept for reference
+//! (`eigs`) computations and downstream-task ground truth.
+
+use crate::graph::graph::Graph;
+use crate::linalg::rng::Rng;
+use crate::sparse::csr::Csr;
+use crate::sparse::delta::Delta;
+
+/// One time-step of graph evolution.
+pub struct TimeStep {
+    /// Update matrix Δ⁽ᵗ⁺¹⁾ relative to the previous adjacency.
+    pub delta: Delta,
+    /// Adjacency after applying the update.
+    pub adjacency: Csr,
+}
+
+/// A dynamic graph: initial adjacency plus T update steps.
+pub struct DynamicScenario {
+    pub name: String,
+    pub initial: Csr,
+    pub steps: Vec<TimeStep>,
+    /// Node labels (cluster ground truth) per step, when known (SBM):
+    /// `labels_per_step[t]` matches `steps[t].adjacency` rows; index 0 of
+    /// the vec corresponds to the *initial* graph.
+    pub labels_per_step: Option<Vec<Vec<usize>>>,
+}
+
+impl DynamicScenario {
+    pub fn t_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Largest node count reached.
+    pub fn max_nodes(&self) -> usize {
+        self.steps
+            .last()
+            .map(|s| s.adjacency.n_rows)
+            .unwrap_or(self.initial.n_rows)
+    }
+
+    /// Total update nnz across steps (cost driver for all trackers).
+    pub fn total_delta_nnz(&self) -> usize {
+        self.steps.iter().map(|s| s.delta.nnz()).sum()
+    }
+}
+
+/// Scenario 1 (Sec. 5.1): a static graph is revealed by degree order.
+/// V⁽⁰⁾ = the ⌊N/2⌋ highest-degree nodes; each of the T steps adds the
+/// next ⌊(N−N⁽⁰⁾)/T⌋ highest-degree nodes, inducing subgraphs.
+/// Updates consist purely of graph expansion (S > 0, K = 0 up to the
+/// induced edges among previously present nodes... which by construction
+/// do not change).
+pub fn scenario1_from_static(name: &str, g: &Graph, t_steps: usize) -> DynamicScenario {
+    let n = g.n_nodes();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| g.degree(b).cmp(&g.degree(a)).then(a.cmp(&b)));
+    let n0 = n / 2;
+    let s_per = (n - n0) / t_steps;
+    assert!(s_per > 0, "too many steps for graph size");
+    let mut current: Vec<usize> = order[..n0].to_vec();
+    let initial = g.induced_subgraph(&current).adjacency();
+    let mut prev_adj = initial.clone();
+    let mut steps = Vec::with_capacity(t_steps);
+    for t in 0..t_steps {
+        let lo = n0 + t * s_per;
+        let hi = if t + 1 == t_steps { n0 + (t + 1) * s_per } else { n0 + (t + 1) * s_per };
+        let hi = hi.min(n);
+        current.extend_from_slice(&order[lo..hi]);
+        let adj = g.induced_subgraph(&current).adjacency();
+        let delta = Delta::from_diff(&prev_adj, &adj);
+        prev_adj = adj.clone();
+        steps.push(TimeStep { delta, adjacency: adj });
+    }
+    DynamicScenario { name: name.to_string(), initial, steps, labels_per_step: None }
+}
+
+/// Scenario 2 (Sec. 5.1): timestamped edge stream.  E⁽⁰⁾ = the first
+/// ⌊M/2⌋ edges; each step appends the next ⌊(M−M⁽⁰⁾)/T⌋ edges.  Nodes are
+/// indexed by first appearance, so updates mix topological changes
+/// (K block) and expansion (G/C blocks).
+pub fn scenario2_from_stream(
+    name: &str,
+    stream: &[(usize, usize)],
+    t_steps: usize,
+) -> DynamicScenario {
+    let m = stream.len();
+    let m0 = m / 2;
+    let m_per = (m - m0) / t_steps;
+    assert!(m_per > 0, "too many steps for stream length");
+    // Relabel nodes by first appearance.
+    let mut label = std::collections::HashMap::new();
+    let relabel = |x: usize, label: &mut std::collections::HashMap<usize, usize>| {
+        let next = label.len();
+        *label.entry(x).or_insert(next)
+    };
+    let edges: Vec<(usize, usize)> = stream
+        .iter()
+        .map(|&(u, v)| (relabel(u, &mut label), relabel(v, &mut label)))
+        .collect();
+    let build = |upto: usize| -> Csr {
+        let n_nodes = edges[..upto]
+            .iter()
+            .map(|&(u, v)| u.max(v) + 1)
+            .max()
+            .unwrap_or(0);
+        let mut g = Graph::with_nodes(n_nodes);
+        for &(u, v) in &edges[..upto] {
+            g.add_edge(u, v);
+        }
+        g.adjacency()
+    };
+    let initial = build(m0);
+    let mut prev = initial.clone();
+    let mut steps = Vec::with_capacity(t_steps);
+    for t in 0..t_steps {
+        let hi = if t + 1 == t_steps { m } else { m0 + (t + 1) * m_per };
+        let adj = build(hi);
+        let delta = Delta::from_diff(&prev, &adj);
+        prev = adj.clone();
+        steps.push(TimeStep { delta, adjacency: adj });
+    }
+    DynamicScenario { name: name.to_string(), initial, steps, labels_per_step: None }
+}
+
+/// SBM expansion protocol of Sec. 5.5: generate a full SBM graph, start
+/// from a random N⁽⁰⁾-subset, add `s_per` random remaining nodes per step.
+/// Ground-truth labels per step are returned for ARI evaluation.
+pub fn sbm_expansion(
+    n: usize,
+    k_clusters: usize,
+    p_in: f64,
+    p_out: f64,
+    n0: usize,
+    s_per: usize,
+    t_steps: usize,
+    rng: &mut Rng,
+) -> DynamicScenario {
+    assert!(n0 + s_per * t_steps <= n);
+    let (g, labels) = crate::graph::generators::sbm(n, k_clusters, p_in, p_out, rng);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut current: Vec<usize> = order[..n0].to_vec();
+    let lab_of = |nodes: &[usize]| nodes.iter().map(|&i| labels[i]).collect::<Vec<_>>();
+    let initial = g.induced_subgraph(&current).adjacency();
+    let mut labels_per_step = vec![lab_of(&current)];
+    let mut prev = initial.clone();
+    let mut steps = Vec::with_capacity(t_steps);
+    for t in 0..t_steps {
+        let lo = n0 + t * s_per;
+        current.extend_from_slice(&order[lo..lo + s_per]);
+        let adj = g.induced_subgraph(&current).adjacency();
+        let delta = Delta::from_diff(&prev, &adj);
+        prev = adj.clone();
+        labels_per_step.push(lab_of(&current));
+        steps.push(TimeStep { delta, adjacency: adj });
+    }
+    DynamicScenario {
+        name: format!("sbm_n{n}_k{k_clusters}"),
+        initial,
+        steps,
+        labels_per_step: Some(labels_per_step),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn scenario1_consistency() {
+        let mut rng = Rng::new(1);
+        let g = generators::erdos_renyi(200, 0.05, &mut rng);
+        let sc = scenario1_from_static("er", &g, 5);
+        assert_eq!(sc.t_steps(), 5);
+        assert_eq!(sc.initial.n_rows, 100);
+        // each step: Ā + Δ == Â  (checked via from_diff reconstruction)
+        let mut prev = sc.initial.clone();
+        for step in &sc.steps {
+            assert_eq!(step.delta.n_old, prev.n_rows);
+            assert_eq!(step.delta.n_new(), step.adjacency.n_rows);
+            // reconstruct: padded prev + delta == adjacency
+            let n = step.adjacency.n_rows;
+            let mut dense = prev.to_dense().pad_rows(n - prev.n_rows);
+            // pad cols too
+            let mut full = crate::linalg::mat::Mat::zeros(n, n);
+            for i in 0..prev.n_rows {
+                for j in 0..prev.n_cols {
+                    full.set(i, j, dense.get(i, j));
+                }
+            }
+            let _ = &mut dense;
+            full.axpy(1.0, &step.delta.full.to_dense());
+            let mut diff = full;
+            diff.axpy(-1.0, &step.adjacency.to_dense());
+            assert!(diff.max_abs() < 1e-12);
+            prev = step.adjacency.clone();
+        }
+        // final graph has all nodes
+        assert_eq!(sc.max_nodes(), 200);
+    }
+
+    #[test]
+    fn scenario1_pure_expansion_has_no_k_block() {
+        // degree-ordered reveal never changes edges among existing nodes
+        let mut rng = Rng::new(2);
+        let g = generators::erdos_renyi(100, 0.08, &mut rng);
+        let sc = scenario1_from_static("er", &g, 4);
+        for step in &sc.steps {
+            let kb = step.delta.k_block_dense();
+            assert!(kb.max_abs() == 0.0, "K block must be empty in Scenario 1");
+        }
+    }
+
+    #[test]
+    fn scenario2_node_growth_and_symmetry() {
+        let mut rng = Rng::new(3);
+        let (_, stream) = generators::ba_with_arrivals(150, 2, &mut rng);
+        let sc = scenario2_from_stream("ba", &stream, 6);
+        let mut prev_n = sc.initial.n_rows;
+        for step in &sc.steps {
+            assert!(step.adjacency.n_rows >= prev_n);
+            assert!(step.adjacency.is_symmetric(0.0));
+            assert!(step.delta.full.is_symmetric(0.0));
+            prev_n = step.adjacency.n_rows;
+        }
+        assert_eq!(sc.max_nodes(), 150);
+    }
+
+    #[test]
+    fn sbm_expansion_labels_track_nodes() {
+        let mut rng = Rng::new(4);
+        let sc = sbm_expansion(120, 3, 0.2, 0.02, 80, 10, 4, &mut rng);
+        let labels = sc.labels_per_step.as_ref().unwrap();
+        assert_eq!(labels.len(), 5);
+        assert_eq!(labels[0].len(), 80);
+        assert_eq!(labels[4].len(), 120);
+        assert_eq!(sc.steps[3].adjacency.n_rows, 120);
+    }
+}

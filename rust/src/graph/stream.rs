@@ -1,0 +1,176 @@
+//! Edge-event streams: the ingestion format of the L3 coordinator.
+//!
+//! Events arrive one at a time (edge add/remove, possibly referencing
+//! never-seen node ids); [`DeltaBuilder`] accumulates them against the
+//! current graph state and emits the structured update matrix Δ when the
+//! coordinator decides to close a batch (paper's "time step").
+
+use crate::graph::graph::Graph;
+use crate::sparse::delta::Delta;
+use std::collections::HashMap;
+
+/// A single graph mutation event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphEvent {
+    /// Add an undirected edge between external node ids.
+    AddEdge(u64, u64),
+    /// Remove an undirected edge.
+    RemoveEdge(u64, u64),
+}
+
+/// Accumulates events into a pending batch on top of a committed graph,
+/// mapping external ids to dense internal indices (new ids allocate the
+/// next index, i.e. the expansion block of Eq. 2).
+pub struct DeltaBuilder {
+    graph: Graph,
+    ids: HashMap<u64, usize>,
+    /// committed node count (N in Eq. 2) at the last emit
+    committed_nodes: usize,
+    pending: Vec<GraphEvent>,
+}
+
+impl Default for DeltaBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeltaBuilder {
+    pub fn new() -> DeltaBuilder {
+        DeltaBuilder {
+            graph: Graph::with_nodes(0),
+            ids: HashMap::new(),
+            committed_nodes: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Seed from an existing graph whose nodes use ids 0..n.
+    pub fn from_graph(g: Graph) -> DeltaBuilder {
+        let n = g.n_nodes();
+        let ids = (0..n as u64).map(|i| (i, i as usize)).collect();
+        DeltaBuilder { graph: g, ids, committed_nodes: n, pending: Vec::new() }
+    }
+
+    pub fn committed_nodes(&self) -> usize {
+        self.committed_nodes
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Number of not-yet-committed new nodes referenced by pending events.
+    pub fn pending_new_nodes(&self) -> usize {
+        self.graph.n_nodes() - self.committed_nodes
+    }
+
+    fn intern(&mut self, id: u64) -> usize {
+        if let Some(&idx) = self.ids.get(&id) {
+            idx
+        } else {
+            let idx = self.graph.add_nodes(1);
+            self.ids.insert(id, idx);
+            idx
+        }
+    }
+
+    /// Apply an event to the working graph and remember it in the batch.
+    pub fn push(&mut self, ev: GraphEvent) {
+        match ev {
+            GraphEvent::AddEdge(a, b) => {
+                let (u, v) = (self.intern(a), self.intern(b));
+                self.graph.add_edge(u, v);
+            }
+            GraphEvent::RemoveEdge(a, b) => {
+                if let (Some(&u), Some(&v)) = (self.ids.get(&a), self.ids.get(&b)) {
+                    self.graph.remove_edge(u, v);
+                }
+            }
+        }
+        self.pending.push(ev);
+    }
+
+    /// Close the batch: emit Δ relative to the last committed state and
+    /// the new adjacency.  Returns `None` when nothing changed.
+    pub fn emit(&mut self, prev_adjacency: &crate::sparse::csr::Csr) -> Option<(Delta, crate::sparse::csr::Csr)> {
+        if self.pending.is_empty() && self.graph.n_nodes() == self.committed_nodes {
+            return None;
+        }
+        let adj = self.graph.adjacency();
+        let delta = Delta::from_diff(prev_adjacency, &adj);
+        self.committed_nodes = self.graph.n_nodes();
+        self.pending.clear();
+        if delta.nnz() == 0 && delta.s_new == 0 {
+            return None;
+        }
+        Some((delta, adj))
+    }
+
+    /// Current (uncommitted) graph view.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_accumulate_into_delta() {
+        let mut b = DeltaBuilder::new();
+        b.push(GraphEvent::AddEdge(10, 20));
+        b.push(GraphEvent::AddEdge(20, 30));
+        let empty = crate::sparse::csr::Csr::empty(0, 0);
+        let (d, adj) = b.emit(&empty).unwrap();
+        assert_eq!(d.n_old, 0);
+        assert_eq!(d.s_new, 3);
+        assert_eq!(adj.n_rows, 3);
+        assert_eq!(adj.get(0, 1), 1.0);
+
+        // second batch: remove one edge, add a node
+        b.push(GraphEvent::RemoveEdge(10, 20));
+        b.push(GraphEvent::AddEdge(30, 40));
+        let (d2, adj2) = b.emit(&adj).unwrap();
+        assert_eq!(d2.n_old, 3);
+        assert_eq!(d2.s_new, 1);
+        assert_eq!(d2.full.get(0, 1), -1.0); // removal in K block
+        assert_eq!(adj2.get(2, 3), 1.0);
+    }
+
+    #[test]
+    fn emit_none_when_no_change() {
+        let mut b = DeltaBuilder::new();
+        let empty = crate::sparse::csr::Csr::empty(0, 0);
+        assert!(b.emit(&empty).is_none());
+        b.push(GraphEvent::AddEdge(1, 2));
+        let (_, adj) = b.emit(&empty).unwrap();
+        // add+remove cancels, but the events still touched the graph:
+        b.push(GraphEvent::AddEdge(1, 2)); // already exists -> no-op
+        b.push(GraphEvent::RemoveEdge(5, 6)); // unknown ids -> no-op
+        assert!(b.emit(&adj).is_none());
+    }
+
+    #[test]
+    fn remove_unknown_edge_is_noop() {
+        let mut b = DeltaBuilder::new();
+        b.push(GraphEvent::RemoveEdge(1, 2));
+        let empty = crate::sparse::csr::Csr::empty(0, 0);
+        assert!(b.emit(&empty).is_none());
+    }
+
+    #[test]
+    fn event_multiplicity_preserved_within_batch() {
+        // add then remove within one batch -> net zero delta for that pair
+        let mut b = DeltaBuilder::new();
+        b.push(GraphEvent::AddEdge(1, 2));
+        b.push(GraphEvent::AddEdge(2, 3));
+        b.push(GraphEvent::RemoveEdge(1, 2));
+        let empty = crate::sparse::csr::Csr::empty(0, 0);
+        let (d, adj) = b.emit(&empty).unwrap();
+        assert_eq!(adj.get(0, 1), 0.0);
+        assert_eq!(adj.get(1, 2), 1.0);
+        assert_eq!(d.s_new, 3);
+    }
+}

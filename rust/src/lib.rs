@@ -1,0 +1,44 @@
+//! # G-REST — Graph Rayleigh-Ritz Eigenspace Tracking
+//!
+//! A production-oriented reproduction of *"Subspace Projection Methods for
+//! Fast Spectral Embeddings of Evolving Graphs"* (Eini, Karaaslanli,
+//! Kalantzis, Traganitis; 2026).
+//!
+//! The crate tracks the K leading eigenpairs of the adjacency (or shifted
+//! Laplacian) matrix of an evolving graph under edge updates and node
+//! additions, using Rayleigh–Ritz projections onto the subspace
+//!
+//! ```text
+//! Z = Ran([ X̄_K , (I − X̄_K X̄_Kᵀ)[ Δ X̄_K , Δ₂ ] ])      (paper Eq. 11)
+//! ```
+//!
+//! ## Layout
+//!
+//! * [`sparse`]   — CSR/COO matrices and the structured update matrix Δ.
+//! * [`linalg`]   — dense kernels (QR, symmetric eigh, Jacobi SVD, Lanczos,
+//!   randomized SVD) built from scratch; no external BLAS/LAPACK.
+//! * [`graph`]    — dynamic graphs, synthetic generators, the paper's two
+//!   evaluation scenarios, and the (substituted) dataset registry.
+//! * [`tracking`] — the trackers: TRIP-Basic, TRIP, Residual Modes, IASC,
+//!   TIMERS, and the proposed G-REST₂ / G-REST₃ / G-REST_RSVD (Alg. 2),
+//!   plus Laplacian and matrix-function tracking (paper Sec. 4).
+//! * [`runtime`]  — PJRT execution of the AOT-compiled JAX/Pallas dense
+//!   pipeline (`artifacts/*.hlo.txt`); Python is never on the request path.
+//! * [`coordinator`] — the L3 streaming service: event ingestion, update
+//!   batching, snapshot store, metrics.
+//! * [`tasks`]    — downstream tasks: subgraph centrality, spectral
+//!   clustering (k-means + ARI).
+//! * [`eval`]     — experiment harness reproducing every table/figure.
+
+pub mod coordinator;
+pub mod eval;
+pub mod graph;
+pub mod linalg;
+pub mod runtime;
+pub mod sparse;
+pub mod tasks;
+pub mod tracking;
+
+pub use linalg::mat::Mat;
+pub use sparse::csr::Csr;
+pub use sparse::delta::Delta;

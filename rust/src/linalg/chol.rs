@@ -1,0 +1,119 @@
+//! Rank-guarded Cholesky and triangular inversion — the small dense
+//! pieces of the CholeskyQR2 orthonormalizer (mirrors the pure-lax
+//! implementation in python/compile/model.py).
+
+use crate::linalg::mat::Mat;
+
+/// Lower Cholesky factor of a PSD matrix with a pivot guard: when the
+/// Schur-complement diagonal of column j falls below
+/// `pivot_tol · max_diag(G)`, the column is replaced by e_j and flagged
+/// dependent (so the inverse stays bounded and the dependent direction
+/// maps to its tiny residual).  Returns (L, keep-flags).
+pub fn cholesky_guarded(g: &Mat, pivot_tol: f64) -> (Mat, Vec<bool>) {
+    let m = g.rows();
+    assert_eq!(m, g.cols());
+    let mut l = Mat::zeros(m, m);
+    let mut keep = vec![true; m];
+    let scale = (0..m).fold(0.0f64, |a, i| a.max(g.get(i, i))).max(1e-300);
+    for j in 0..m {
+        // c = G[:, j] − L[:, :j] · L[j, :j]ᵀ  (only rows ≥ j needed)
+        let mut diag = g.get(j, j);
+        for p in 0..j {
+            diag -= l.get(j, p) * l.get(j, p);
+        }
+        if diag <= pivot_tol * scale {
+            keep[j] = false;
+            l.set(j, j, 1.0);
+            continue;
+        }
+        let d = diag.sqrt();
+        l.set(j, j, d);
+        for i in j + 1..m {
+            let mut v = g.get(i, j);
+            for p in 0..j {
+                v -= l.get(i, p) * l.get(j, p);
+            }
+            l.set(i, j, v / d);
+        }
+    }
+    (l, keep)
+}
+
+/// Inverse of an upper-triangular matrix (back substitution, column by
+/// column).  Panics on zero diagonal.
+pub fn tri_inv_upper(r: &Mat) -> Mat {
+    let m = r.rows();
+    assert_eq!(m, r.cols());
+    let mut x = Mat::zeros(m, m);
+    for j in 0..m {
+        // solve R x = e_j ; x supported on rows 0..=j
+        x.set(j, j, 1.0 / r.get(j, j));
+        for i in (0..j).rev() {
+            let mut s = 0.0;
+            for p in i + 1..=j {
+                s += r.get(i, p) * x.get(p, j);
+            }
+            x.set(i, j, -s / r.get(i, i));
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn cholesky_reconstructs_spd() {
+        let mut rng = Rng::new(1);
+        for &m in &[1usize, 3, 10, 40] {
+            let a = Mat::randn(m, m + 2, &mut rng);
+            let mut g = a.matmul(&a.t());
+            for i in 0..m {
+                g.add_at(i, i, 0.5);
+            }
+            let (l, keep) = cholesky_guarded(&g, 1e-14);
+            assert!(keep.iter().all(|&k| k));
+            let rec = l.matmul(&l.t());
+            let mut diff = rec;
+            diff.axpy(-1.0, &g);
+            assert!(diff.max_abs() < 1e-9, "m={m}");
+        }
+    }
+
+    #[test]
+    fn guard_flags_dependent_columns() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(20, 3, &mut rng);
+        let mut panel = Mat::zeros(20, 5);
+        for j in 0..3 {
+            panel.set_col(j, a.col(j));
+        }
+        panel.set_col(3, a.col(0)); // duplicate
+        // col 4 zero
+        let g = panel.t_matmul(&panel);
+        let (_, keep) = cholesky_guarded(&g, 1e-10);
+        assert_eq!(keep, vec![true, true, true, false, false]);
+    }
+
+    #[test]
+    fn tri_inv_matches_identity() {
+        let mut rng = Rng::new(3);
+        for &m in &[1usize, 4, 17] {
+            let mut r = Mat::zeros(m, m);
+            for j in 0..m {
+                for i in 0..=j {
+                    r.set(i, j, rng.normal());
+                }
+                let d = r.get(j, j);
+                r.set(j, j, d.signum() * (d.abs() + 1.0));
+            }
+            let rinv = tri_inv_upper(&r);
+            let prod = r.matmul(&rinv);
+            let mut eye = Mat::eye(m);
+            eye.axpy(-1.0, &prod);
+            assert!(eye.max_abs() < 1e-10, "m={m}");
+        }
+    }
+}

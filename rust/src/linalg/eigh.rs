@@ -1,0 +1,370 @@
+//! Dense symmetric eigensolver: Householder tridiagonalization followed by
+//! the implicit-shift QL iteration (EISPACK `tred2`/`tql2` lineage).  This
+//! is the "direct eigenvalue solver" of Alg. 2 line 9, applied to the
+//! small (K+M)×(K+M) Rayleigh-Ritz matrix.
+
+use crate::linalg::mat::Mat;
+
+/// Result of a symmetric eigendecomposition, eigenvalues ascending.
+pub struct EighResult {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors as columns, matching `values`.
+    pub vectors: Mat,
+}
+
+impl EighResult {
+    /// Indices of the K leading eigenvalues by |λ| (paper's ordering),
+    /// largest magnitude first; exact-|λ| ties break toward the positive
+    /// eigenvalue so that ± pairs order deterministically.
+    pub fn leading_by_magnitude(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.values.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.values[b]
+                .abs()
+                .partial_cmp(&self.values[a].abs())
+                .unwrap()
+                .then(self.values[b].partial_cmp(&self.values[a]).unwrap())
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    /// Indices of the K algebraically largest eigenvalues, largest first.
+    pub fn leading_by_value(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.values.len()).collect();
+        idx.sort_by(|&a, &b| self.values[b].partial_cmp(&self.values[a]).unwrap());
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Full symmetric eigendecomposition of `a` (upper part referenced).
+pub fn eigh(a: &Mat) -> EighResult {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh requires a square matrix");
+    if n == 0 {
+        return EighResult { values: vec![], vectors: Mat::zeros(0, 0) };
+    }
+    let mut v = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e);
+    // Sort ascending (tql2 output is already sorted, but keep the
+    // invariant explicit and robust).
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&x, &y| d[x].partial_cmp(&d[y]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let vectors = v.select_cols(&idx);
+    EighResult { values, vectors }
+}
+
+/// Householder reduction to tridiagonal form (ports EISPACK/JAMA tred2).
+/// On exit `v` holds the accumulated orthogonal transform, `d` the
+/// diagonal and `e` the sub-diagonal.
+fn tred2(v: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = v.rows();
+    for j in 0..n {
+        d[j] = v.get(n - 1, j);
+    }
+    for i in (1..n).rev() {
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for item in d.iter().take(i) {
+            scale += item.abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v.get(i - 1, j);
+                v.set(i, j, 0.0);
+                v.set(j, i, 0.0);
+            }
+        } else {
+            for item in d.iter_mut().take(i) {
+                *item /= scale;
+                h += *item * *item;
+            }
+            let mut f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for item in e.iter_mut().take(i) {
+                *item = 0.0;
+            }
+            for j in 0..i {
+                f = d[j];
+                v.set(j, i, f);
+                g = e[j] + v.get(j, j) * f;
+                for k in j + 1..i {
+                    g += v.get(k, j) * d[k];
+                    e[k] += v.get(k, j) * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                f = d[j];
+                g = e[j];
+                for k in j..i {
+                    let cur = v.get(k, j);
+                    v.set(k, j, cur - (f * e[k] + g * d[k]));
+                }
+                d[j] = v.get(i - 1, j);
+                v.set(i, j, 0.0);
+            }
+        }
+        d[i] = h;
+    }
+    // Accumulate transformations.
+    for i in 0..n - 1 {
+        let vii = v.get(i, i);
+        v.set(n - 1, i, vii);
+        v.set(i, i, 1.0);
+        let h = d[i + 1];
+        if h != 0.0 {
+            for (k, item) in d.iter_mut().enumerate().take(i + 1) {
+                *item = v.get(k, i + 1) / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v.get(k, i + 1) * v.get(k, j);
+                }
+                for k in 0..=i {
+                    let cur = v.get(k, j);
+                    v.set(k, j, cur - g * d[k]);
+                }
+            }
+        }
+        for k in 0..=i {
+            v.set(k, i + 1, 0.0);
+        }
+    }
+    for j in 0..n {
+        d[j] = v.get(n - 1, j);
+        v.set(n - 1, j, 0.0);
+    }
+    v.set(n - 1, n - 1, 1.0);
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL for a symmetric tridiagonal matrix (ports tql2),
+/// accumulating rotations into `v`.
+fn tql2(v: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = v.rows();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    let mut f = 0.0;
+    let mut tst1: f64 = 0.0;
+    let eps = 2.0_f64.powi(-52);
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter < 200, "tql2 failed to converge");
+                let g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for item in d.iter_mut().take(n).skip(l + 2) {
+                    *item -= h;
+                }
+                f += h;
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    let g2 = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g2;
+                    d[i + 1] = h + s * (c * g2 + s * d[i]);
+                    for k in 0..n {
+                        h = v.get(k, i + 1);
+                        let vk = v.get(k, i);
+                        v.set(k, i + 1, s * vk + c * h);
+                        v.set(k, i, c * vk - s * h);
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+    // Sort ascending (selection sort, swapping vector columns).
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in i + 1..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d.swap(i, k);
+            for r in 0..n {
+                let tmp = v.get(r, i);
+                v.set(r, i, v.get(r, k));
+                v.set(r, k, tmp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::linalg::rng::Rng;
+
+    fn rand_sym(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::randn(n, n, rng);
+        let mut s = a.clone();
+        s.axpy(1.0, &a.t());
+        s.scale(0.5);
+        s
+    }
+
+    fn check_decomposition(a: &Mat, r: &EighResult, tol: f64) {
+        let n = a.rows();
+        // A v_i = λ_i v_i
+        for i in 0..n {
+            let av = blas::gemv(a, r.vectors.col(i));
+            for k in 0..n {
+                assert!(
+                    (av[k] - r.values[i] * r.vectors.get(k, i)).abs() < tol,
+                    "residual at eigenpair {i}"
+                );
+            }
+        }
+        // orthonormal
+        let g = r.vectors.t_matmul(&r.vectors);
+        let mut eye = Mat::eye(n);
+        eye.axpy(-1.0, &g);
+        assert!(eye.max_abs() < tol);
+        // ascending
+        for i in 1..n {
+            assert!(r.values[i] >= r.values[i - 1]);
+        }
+    }
+
+    #[test]
+    fn analytic_2x2() {
+        let a = Mat::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let r = eigh(&a);
+        assert!((r.values[0] - 1.0).abs() < 1e-12);
+        assert!((r.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::diag(&[3.0, -1.0, 2.0, 0.5]);
+        let r = eigh(&a);
+        let want = [-1.0, 0.5, 2.0, 3.0];
+        for (got, w) in r.values.iter().zip(want.iter()) {
+            assert!((got - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn random_matrices_various_sizes() {
+        let mut rng = Rng::new(10);
+        for &n in &[1usize, 2, 3, 5, 10, 33, 64, 128] {
+            let a = rand_sym(n, &mut rng);
+            let r = eigh(&a);
+            check_decomposition(&a, &r, 1e-8);
+        }
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // I + rank-1: eigenvalues {1 (n-1 times), 1 + n}
+        let n = 12;
+        let ones = Mat::from_fn(n, n, |_, _| 1.0);
+        let mut a = Mat::eye(n);
+        a.axpy(1.0, &ones);
+        let r = eigh(&a);
+        for i in 0..n - 1 {
+            assert!((r.values[i] - 1.0).abs() < 1e-9);
+        }
+        assert!((r.values[n - 1] - (1.0 + n as f64)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leading_by_magnitude_ordering() {
+        let a = Mat::diag(&[-5.0, 1.0, 3.0, -0.5]);
+        let r = eigh(&a);
+        let idx = r.leading_by_magnitude(2);
+        let vals: Vec<f64> = idx.iter().map(|&i| r.values[i]).collect();
+        assert_eq!(vals, vec![-5.0, 3.0]);
+    }
+
+    #[test]
+    fn matches_power_iteration_top_eigenpair() {
+        let mut rng = Rng::new(77);
+        let a = rand_sym(40, &mut rng);
+        // make it PSD-dominant so power iteration converges to top-|λ|
+        let r = eigh(&a);
+        let top = *r
+            .values
+            .iter()
+            .max_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
+            .unwrap();
+        let mut v = vec![1.0; 40];
+        for _ in 0..2000 {
+            let w = blas::gemv(&a, &v);
+            let n = blas::nrm2(&w);
+            v = w.iter().map(|x| x / n).collect();
+        }
+        let rayleigh = blas::dot(&v, &blas::gemv(&a, &v));
+        assert!((rayleigh.abs() - top.abs()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,259 @@
+//! Lanczos with full reorthogonalization — the crate's stand-in for
+//! MATLAB's `eigs` (reference eigenpairs, TIMERS restarts, tracker
+//! initialization).
+
+use crate::linalg::blas;
+use crate::linalg::eigh::eigh;
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Rng;
+
+/// A symmetric linear operator (adjacency, shifted Laplacian, ...).
+pub trait LinOp {
+    /// Dimension of the (square) operator.
+    fn dim(&self) -> usize;
+    /// y = A x.
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+}
+
+/// Top-K eigenpairs of a symmetric operator, ordered by |λ| descending
+/// (the paper's convention for adjacency matrices).
+///
+/// Full reorthogonalization Lanczos: the basis grows until the top-K Ritz
+/// residual estimates fall below `tol · |θ₁|` or `max_basis` is reached.
+/// Invariant-subspace breakdowns restart with a fresh random direction, so
+/// disconnected graphs are handled.
+pub fn lanczos_topk(
+    op: &dyn LinOp,
+    k: usize,
+    tol: f64,
+    max_basis: usize,
+    rng: &mut Rng,
+) -> (Vec<f64>, Mat) {
+    let n = op.dim();
+    let k = k.min(n);
+    let max_m = max_basis.min(n).max(k);
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(max_m);
+    let mut alphas: Vec<f64> = Vec::with_capacity(max_m);
+    let mut betas: Vec<f64> = Vec::with_capacity(max_m); // beta[j] links v_j -> v_{j+1}
+
+    // random normalized start
+    let mut v = random_unit(n, rng);
+    let mut w = vec![0.0; n];
+    let check_every = 8.max(k / 4);
+
+    loop {
+        let j = basis.len();
+        basis.push(v.clone());
+        op.apply(&v, &mut w);
+        if j > 0 {
+            let beta_prev = betas[j - 1];
+            blas::axpy(-beta_prev, &basis[j - 1], &mut w);
+        }
+        let alpha = blas::dot(&w, &v);
+        alphas.push(alpha);
+        blas::axpy(-alpha, &v, &mut w);
+        // full reorthogonalization (two passes)
+        for _ in 0..2 {
+            for b in basis.iter() {
+                let c = blas::dot(b, &w);
+                if c != 0.0 {
+                    blas::axpy(-c, b, &mut w);
+                }
+            }
+        }
+        let beta = blas::nrm2(&w);
+        let m = basis.len();
+
+        let converged_or_full = m >= max_m
+            || m >= n
+            || ((m >= k + 2) && (m % check_every == 0) && {
+                let (vals, _, resid) = ritz_from_tridiag(&alphas, &betas, beta, k);
+                let top = vals.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1e-300);
+                resid.iter().all(|&r| r < tol * top)
+            });
+        if converged_or_full {
+            break;
+        }
+
+        if beta < 1e-12 {
+            // invariant subspace found: restart with a random direction
+            // orthogonal to the current basis.
+            let mut r = random_unit(n, rng);
+            for _ in 0..2 {
+                for b in basis.iter() {
+                    let c = blas::dot(b, &r);
+                    blas::axpy(-c, b, &mut r);
+                }
+            }
+            let nr = blas::nrm2(&r);
+            if nr < 1e-12 {
+                break; // full space exhausted
+            }
+            for e in r.iter_mut() {
+                *e /= nr;
+            }
+            betas.push(0.0);
+            v = r;
+        } else {
+            betas.push(beta);
+            v = w.iter().map(|x| x / beta).collect();
+        }
+    }
+
+    // Final Rayleigh-Ritz on the tridiagonal matrix.
+    let m = basis.len();
+    let mut t = Mat::zeros(m, m);
+    for i in 0..m {
+        t.set(i, i, alphas[i]);
+        if i + 1 < m {
+            t.set(i, i + 1, betas[i]);
+            t.set(i + 1, i, betas[i]);
+        }
+    }
+    let e = eigh(&t);
+    let order = e.leading_by_magnitude(k.min(m));
+    let mut values = Vec::with_capacity(order.len());
+    let mut vectors = Mat::zeros(n, order.len());
+    for (c, &idx) in order.iter().enumerate() {
+        values.push(e.values[idx]);
+        let s = e.vectors.col(idx);
+        let out = vectors.col_mut(c);
+        for (b, &si) in basis.iter().zip(s.iter()) {
+            blas::axpy(si, b, out);
+        }
+    }
+    (values, vectors)
+}
+
+fn random_unit(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let nrm = blas::nrm2(&v).max(1e-300);
+    for e in v.iter_mut() {
+        *e /= nrm;
+    }
+    v
+}
+
+/// Ritz values of the current tridiagonal plus residual bounds
+/// |β_m s_{m,i}| for the top-k pairs by |θ|.
+fn ritz_from_tridiag(
+    alphas: &[f64],
+    betas: &[f64],
+    beta_last: f64,
+    k: usize,
+) -> (Vec<f64>, Mat, Vec<f64>) {
+    let m = alphas.len();
+    let mut t = Mat::zeros(m, m);
+    for i in 0..m {
+        t.set(i, i, alphas[i]);
+        if i + 1 < m {
+            t.set(i, i + 1, betas[i]);
+            t.set(i + 1, i, betas[i]);
+        }
+    }
+    let e = eigh(&t);
+    let order = e.leading_by_magnitude(k.min(m));
+    let vals: Vec<f64> = order.iter().map(|&i| e.values[i]).collect();
+    let resid: Vec<f64> = order
+        .iter()
+        .map(|&i| (beta_last * e.vectors.get(m - 1, i)).abs())
+        .collect();
+    (vals, e.vectors, resid)
+}
+
+/// Dense symmetric matrix viewed as a LinOp (tests/benches).
+pub struct DenseOp<'a>(pub &'a Mat);
+
+impl LinOp for DenseOp<'_> {
+    fn dim(&self) -> usize {
+        self.0.rows()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let out = blas::gemv(self.0, x);
+        y.copy_from_slice(&out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_sym(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::randn(n, n, rng);
+        let mut s = a.clone();
+        s.axpy(1.0, &a.t());
+        s.scale(0.5);
+        s
+    }
+
+    #[test]
+    fn matches_dense_eigh_topk() {
+        let mut rng = Rng::new(42);
+        let a = rand_sym(120, &mut rng);
+        let (vals, vecs) = lanczos_topk(&DenseOp(&a), 6, 1e-10, 120, &mut rng);
+        let dense = eigh(&a);
+        let order = dense.leading_by_magnitude(6);
+        for i in 0..6 {
+            assert!(
+                (vals[i] - dense.values[order[i]]).abs() < 1e-7,
+                "λ{i}: {} vs {}",
+                vals[i],
+                dense.values[order[i]]
+            );
+            let dot = blas::dot(vecs.col(i), dense.vectors.col(order[i])).abs();
+            assert!(dot > 1.0 - 1e-6, "vector {i} overlap {dot}");
+        }
+    }
+
+    #[test]
+    fn ordering_is_by_magnitude() {
+        let mut rng = Rng::new(1);
+        let a = Mat::diag(&[-9.0, 8.0, -7.0, 1.0, 0.5, -0.2, 3.0, 2.0]);
+        let (vals, _) = lanczos_topk(&DenseOp(&a), 4, 1e-12, 8, &mut rng);
+        let got: Vec<f64> = vals.clone();
+        assert_eq!(got.len(), 4);
+        assert!((got[0] - -9.0).abs() < 1e-9);
+        assert!((got[1] - 8.0).abs() < 1e-9);
+        assert!((got[2] - -7.0).abs() < 1e-9);
+        assert!((got[3] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn handles_disconnected_blocks() {
+        // block-diagonal with two strong blocks -> invariant subspace
+        // breakdown path must still find both top eigenvalues.
+        let mut a = Mat::zeros(40, 40);
+        for i in 0..20 {
+            for j in 0..20 {
+                if i != j {
+                    a.set(i, j, 1.0);
+                    a.set(20 + i, 20 + j, 0.5);
+                }
+            }
+        }
+        let mut rng = Rng::new(2);
+        let (vals, _) = lanczos_topk(&DenseOp(&a), 2, 1e-10, 40, &mut rng);
+        assert!((vals[0] - 19.0).abs() < 1e-6);
+        assert!((vals[1] - 9.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn k_larger_than_matrix_is_clamped() {
+        let a = Mat::diag(&[3.0, 1.0]);
+        let mut rng = Rng::new(3);
+        let (vals, vecs) = lanczos_topk(&DenseOp(&a), 10, 1e-10, 50, &mut rng);
+        assert_eq!(vals.len(), 2);
+        assert_eq!(vecs.cols(), 2);
+    }
+
+    #[test]
+    fn orthonormal_output_vectors() {
+        let mut rng = Rng::new(4);
+        let a = rand_sym(60, &mut rng);
+        let (_, vecs) = lanczos_topk(&DenseOp(&a), 8, 1e-10, 60, &mut rng);
+        let g = vecs.t_matmul(&vecs);
+        let mut eye = Mat::eye(8);
+        eye.axpy(-1.0, &g);
+        assert!(eye.max_abs() < 1e-7);
+    }
+}

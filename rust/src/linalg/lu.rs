@@ -1,0 +1,93 @@
+//! Dense LU solve with partial pivoting — used by the TRIP baseline
+//! (paper Eq. 7) for its K×K linear systems.
+
+use crate::linalg::mat::Mat;
+
+/// Solve A x = b for a dense square A (destroys a working copy).
+/// Returns `None` if the matrix is numerically singular.
+pub fn solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    assert_eq!(n, b.len());
+    let mut lu = a.clone();
+    let mut x = b.to_vec();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // partial pivot
+        let mut pk = k;
+        let mut pmax = lu.get(k, k).abs();
+        for i in k + 1..n {
+            let v = lu.get(i, k).abs();
+            if v > pmax {
+                pmax = v;
+                pk = i;
+            }
+        }
+        if pmax < 1e-300 {
+            return None;
+        }
+        if pk != k {
+            piv.swap(pk, k);
+            for j in 0..n {
+                let t = lu.get(k, j);
+                lu.set(k, j, lu.get(pk, j));
+                lu.set(pk, j, t);
+            }
+            x.swap(pk, k);
+        }
+        let dkk = lu.get(k, k);
+        for i in k + 1..n {
+            let f = lu.get(i, k) / dkk;
+            lu.set(i, k, f);
+            if f != 0.0 {
+                for j in k + 1..n {
+                    let cur = lu.get(i, j);
+                    lu.set(i, j, cur - f * lu.get(k, j));
+                }
+                x[i] -= f * x[k];
+            }
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in i + 1..n {
+            s -= lu.get(i, j) * x[j];
+        }
+        x[i] = s / lu.get(i, i);
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{blas, rng::Rng};
+
+    #[test]
+    fn solves_random_systems() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 5, 20, 64] {
+            let a = Mat::randn(n, n, &mut rng);
+            let xtrue: Vec<f64> = (0..n).map(|i| (i as f64) - 1.5).collect();
+            let b = blas::gemv(&a, &xtrue);
+            let x = solve(&a, &b).expect("nonsingular");
+            for i in 0..n {
+                assert!((x[i] - xtrue[i]).abs() < 1e-8, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn detects_singular() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(solve(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        let x = solve(&a, &[3.0, 7.0]).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,303 @@
+//! Column-major dense matrix.
+//!
+//! Column-major is chosen so that eigenvector panels (N×K with K≈64–192)
+//! expose each eigenvector as one contiguous slice — the access pattern of
+//! every tracker and of the PJRT marshalling code.
+
+use crate::linalg::rng::Rng;
+
+/// Dense column-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(6);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>11.4e} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    /// Build from row-major data.
+    pub fn from_rows(rows: usize, cols: usize, row_major: &[f64]) -> Mat {
+        assert_eq!(row_major.len(), rows * cols);
+        Mat::from_fn(rows, cols, |i, j| row_major[i * cols + j])
+    }
+
+    /// Column-major constructor taking ownership of the buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Mat {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m.set(i, i, v);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.rows + i] += v;
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Two distinct mutable columns (for Jacobi rotations).
+    pub fn two_cols_mut(&mut self, a: usize, b: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(a != b);
+        let r = self.rows;
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let (left, right) = self.data.split_at_mut(hi * r);
+        let sa = &mut left[lo * r..(lo + 1) * r];
+        let sb = &mut right[..r];
+        if a < b {
+            (sa, sb)
+        } else {
+            (sb, sa)
+        }
+    }
+
+    /// Entire backing buffer (column-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Copy column `src` of `other` into column `dst` of `self`.
+    pub fn set_col(&mut self, dst: usize, src: &[f64]) {
+        assert_eq!(src.len(), self.rows);
+        self.col_mut(dst).copy_from_slice(src);
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// Horizontal concatenation [self, other].
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut m = Mat::zeros(self.rows, self.cols + other.cols);
+        m.data[..self.data.len()].copy_from_slice(&self.data);
+        m.data[self.data.len()..].copy_from_slice(&other.data);
+        m
+    }
+
+    /// Sub-matrix of the first `r` rows and `c` columns.
+    pub fn top_left(&self, r: usize, c: usize) -> Mat {
+        assert!(r <= self.rows && c <= self.cols);
+        Mat::from_fn(r, c, |i, j| self.get(i, j))
+    }
+
+    /// Copy with `extra` zero rows appended (the padding X̄ of Eq. 3).
+    pub fn pad_rows(&self, extra: usize) -> Mat {
+        let mut m = Mat::zeros(self.rows + extra, self.cols);
+        for j in 0..self.cols {
+            m.col_mut(j)[..self.rows].copy_from_slice(self.col(j));
+        }
+        m
+    }
+
+    /// Keep a subset of columns (in the given order).
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(self.rows, idx.len());
+        for (dst, &src) in idx.iter().enumerate() {
+            m.set_col(dst, self.col(src));
+        }
+        m
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |a, &v| a.max(v.abs()))
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in self.data.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Matrix product via the blocked gemm kernel.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        crate::linalg::blas::gemm(self, other)
+    }
+
+    /// selfᵀ · other without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        crate::linalg::blas::gemm_tn(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_get_set() {
+        let mut m = Mat::zeros(3, 2);
+        m.set(2, 1, 5.0);
+        assert_eq!(m.get(2, 1), 5.0);
+        assert_eq!(m.col(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn from_rows_layout() {
+        let m = Mat::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 2), 3.0);
+        assert_eq!(m.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn transpose() {
+        let m = Mat::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let t = m.t();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn pad_rows_appends_zeros() {
+        let m = Mat::from_rows(2, 2, &[1., 2., 3., 4.]);
+        let p = m.pad_rows(3);
+        assert_eq!(p.rows(), 5);
+        assert_eq!(p.get(1, 1), 4.0);
+        assert_eq!(p.get(4, 0), 0.0);
+    }
+
+    #[test]
+    fn hcat_and_select() {
+        let a = Mat::from_rows(2, 1, &[1., 2.]);
+        let b = Mat::from_rows(2, 2, &[3., 4., 5., 6.]);
+        let c = a.hcat(&b);
+        assert_eq!(c.cols(), 3);
+        assert_eq!(c.get(1, 2), 6.0);
+        let s = c.select_cols(&[2, 0]);
+        assert_eq!(s.get(0, 0), 4.0);
+        assert_eq!(s.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn two_cols_mut_disjoint() {
+        let mut m = Mat::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        {
+            let (a, b) = m.two_cols_mut(2, 0);
+            a[0] = 30.0;
+            b[1] = 40.0;
+        }
+        assert_eq!(m.get(0, 2), 30.0);
+        assert_eq!(m.get(1, 0), 40.0);
+    }
+
+    #[test]
+    fn fro_norm() {
+        let m = Mat::from_rows(2, 2, &[3., 0., 0., 4.]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+    }
+}

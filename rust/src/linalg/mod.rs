@@ -1,0 +1,19 @@
+//! Dense numerical linear algebra substrate, written from scratch.
+//!
+//! The paper's reference implementation leans on MATLAB's `eigs`/`qr`/
+//! `svd`; this module provides the equivalents: a column-major dense
+//! matrix, blocked BLAS-like micro-kernels, Householder QR, a symmetric
+//! eigensolver (tridiagonalization + implicit-shift QL), a one-sided
+//! Jacobi SVD, Lanczos with full reorthogonalization (the `eigs` stand-in),
+//! and the randomized range finder of paper Sec. 3.5.
+
+pub mod blas;
+pub mod chol;
+pub mod eigh;
+pub mod lanczos;
+pub mod lu;
+pub mod mat;
+pub mod qr;
+pub mod rng;
+pub mod rsvd;
+pub mod svd;

@@ -1,0 +1,225 @@
+//! Householder QR with thin-Q recovery, plus the CGS2 block
+//! orthonormalizer used on the G-REST hot path.
+
+use crate::linalg::blas;
+use crate::linalg::mat::Mat;
+
+/// Thin QR factorization A = Q R with Q (m×n, orthonormal columns) and R
+/// (n×n upper-triangular), m >= n, via Householder reflectors.
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "thin_qr requires rows >= cols");
+    let mut work = a.clone();
+    // tau[j] and the reflector stored below the diagonal of `work`.
+    let mut tau = vec![0.0; n];
+    for j in 0..n {
+        // Householder vector for column j, rows j..m.
+        let col = work.col(j);
+        let alpha = col[j];
+        let xnorm = blas::nrm2(&col[j + 1..]);
+        if xnorm == 0.0 && alpha >= 0.0 {
+            tau[j] = 0.0;
+            continue;
+        }
+        let beta = -(alpha.signum()) * (alpha * alpha + xnorm * xnorm).sqrt();
+        let t = (beta - alpha) / beta;
+        tau[j] = t;
+        let scale = 1.0 / (alpha - beta);
+        {
+            let colm = work.col_mut(j);
+            for v in colm[j + 1..].iter_mut() {
+                *v *= scale;
+            }
+            colm[j] = beta;
+        }
+        // Apply H = I - tau v vᵀ to the trailing columns, v = [1; work[j+1.., j]].
+        for jj in j + 1..n {
+            let mut w = work.get(j, jj);
+            for i in j + 1..m {
+                w += work.get(i, j) * work.get(i, jj);
+            }
+            w *= tau[j];
+            let d = work.get(j, jj) - w;
+            work.set(j, jj, d);
+            for i in j + 1..m {
+                let v = work.get(i, j);
+                let cur = work.get(i, jj);
+                work.set(i, jj, cur - w * v);
+            }
+        }
+    }
+    // Extract R.
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        for i in 0..=j {
+            r.set(i, j, work.get(i, j));
+        }
+    }
+    // Form thin Q by applying the reflectors to the first n identity columns,
+    // from the last reflector to the first.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for j in (0..n).rev() {
+        if tau[j] == 0.0 {
+            continue;
+        }
+        for jj in 0..n {
+            let mut w = q.get(j, jj);
+            for i in j + 1..m {
+                w += work.get(i, j) * q.get(i, jj);
+            }
+            w *= tau[j];
+            let cur = q.get(j, jj);
+            q.set(j, jj, cur - w);
+            for i in j + 1..m {
+                let v = work.get(i, j);
+                let cur = q.get(i, jj);
+                q.set(i, jj, cur - w * v);
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Orthonormalize the columns of `panel` against the orthonormal block `x`
+/// and against each other, deflating (numerically) dependent columns.
+///
+/// Implementation: BCGS2 + rank-guarded CholeskyQR2 — two rounds of
+/// (project-out X, Gram, guarded Cholesky, triangular solve).  This is
+/// entirely matmul-shaped (unlike column-by-column MGS), which is why the
+/// native G-REST phase-1 runs at gemm speed; it also mirrors the lowered
+/// jax `build_basis` exactly.  `tol` is the relative pivot threshold of
+/// the Cholesky rank guard (norm² scale; 1e-8 ⇒ drop below ~1e-4·‖panel‖).
+///
+/// Returns (q, kept) where `q` has only the surviving columns and `kept`
+/// maps them back to panel column indices.  This is the construction of
+/// the paper's Eq. (11).
+pub fn orthonormalize_against(x: &Mat, panel: &Mat, tol: f64) -> (Mat, Vec<usize>) {
+    assert_eq!(x.rows(), panel.rows());
+    let m = panel.cols();
+    if m == 0 {
+        return (Mat::zeros(panel.rows(), 0), vec![]);
+    }
+    let mut p = panel.clone();
+    let mut alive = vec![true; m];
+    for _pass in 0..2 {
+        p = blas::project_out(x, &p);
+        let g = p.t_matmul(&p);
+        let (l, keep) = crate::linalg::chol::cholesky_guarded(&g, tol.max(1e-14));
+        for (a, k) in alive.iter_mut().zip(keep.iter()) {
+            *a &= k;
+        }
+        let rinv = crate::linalg::chol::tri_inv_upper(&l.t());
+        p = p.matmul(&rinv);
+    }
+    // survivors have unit norm; dependent columns collapsed to ~0
+    let mut kept: Vec<usize> = Vec::new();
+    for (j, a) in alive.iter().enumerate() {
+        let nrm = blas::nrm2(p.col(j));
+        if *a && nrm > 0.5 {
+            kept.push(j);
+            let inv = 1.0 / nrm;
+            for e in p.col_mut(j) {
+                *e *= inv;
+            }
+        }
+    }
+    (p.select_cols(&kept), kept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    fn check_orthonormal(q: &Mat, tol: f64) {
+        let g = q.t_matmul(q);
+        for i in 0..g.rows() {
+            for j in 0..g.cols() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (g.get(i, j) - want).abs() < tol,
+                    "QtQ[{i},{j}]={}",
+                    g.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(1usize, 1usize), (5, 5), (40, 7), (123, 30)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let (q, r) = thin_qr(&a);
+            check_orthonormal(&q, 1e-10);
+            let qr = q.matmul(&r);
+            let mut diff = qr.clone();
+            diff.axpy(-1.0, &a);
+            assert!(diff.max_abs() < 1e-10, "({m},{n})");
+            // R upper triangular
+            for j in 0..n {
+                for i in j + 1..n {
+                    assert_eq!(r.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qr_zero_rows_stay_zero() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(30, 5, &mut rng).pad_rows(20);
+        let (q, _) = thin_qr(&a);
+        for i in 30..50 {
+            for j in 0..5 {
+                assert!(q.get(i, j).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormalize_against_basics() {
+        let mut rng = Rng::new(3);
+        let (x, _) = thin_qr(&Mat::randn(80, 6, &mut rng));
+        let panel = Mat::randn(80, 9, &mut rng);
+        let (q, kept) = orthonormalize_against(&x, &panel, 1e-10);
+        assert_eq!(kept.len(), 9);
+        check_orthonormal(&q, 1e-9);
+        let cross = x.t_matmul(&q);
+        assert!(cross.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn orthonormalize_deflates_dependent_columns() {
+        let mut rng = Rng::new(4);
+        let (x, _) = thin_qr(&Mat::randn(60, 4, &mut rng));
+        let good = Mat::randn(60, 3, &mut rng);
+        // panel: 3 good, 1 duplicate, 1 zero, 1 inside Ran(x)
+        let mut panel = Mat::zeros(60, 6);
+        for j in 0..3 {
+            panel.set_col(j, good.col(j));
+        }
+        panel.set_col(3, good.col(0));
+        // col 4 stays zero
+        panel.set_col(5, x.col(1));
+        let (q, kept) = orthonormalize_against(&x, &panel, 1e-8);
+        assert_eq!(kept, vec![0, 1, 2]);
+        check_orthonormal(&q, 1e-9);
+    }
+
+    #[test]
+    fn span_is_preserved() {
+        let mut rng = Rng::new(5);
+        let (x, _) = thin_qr(&Mat::randn(50, 3, &mut rng));
+        let panel = Mat::randn(50, 5, &mut rng);
+        let (q, _) = orthonormalize_against(&x, &panel, 1e-10);
+        // (I-XXᵀ)panel must lie in Ran(q): residual after projecting onto q is 0
+        let p = blas::project_out(&x, &panel);
+        let resid = blas::project_out(&q, &p);
+        assert!(resid.max_abs() < 1e-9);
+    }
+}

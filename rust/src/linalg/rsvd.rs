@@ -1,0 +1,142 @@
+//! Randomized SVD range finder (paper Sec. 3.5, steps S.1–S.4).
+//!
+//! Computes an approximate orthonormal basis `R` for the column space of
+//! `(I − X Xᵀ) Δ₂` with target rank `L` and oversampling `P`, touching Δ₂
+//! only through sparse products (supplied as closures), so the dense
+//! N×S matrix is never materialized.
+
+use crate::linalg::blas;
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Rng;
+use crate::linalg::svd::thin_svd;
+
+/// Randomized basis of (I − XXᵀ)Δ₂.
+///
+/// * `s` — number of columns of Δ₂ (newly added nodes).
+/// * `d2_mult(Ω)`   — Δ₂ · Ω for Ω (S×j), returns (N×j).
+/// * `d2_t_mult(M)` — Δ₂ᵀ · M for M (N×j), returns (S×j).
+/// * `x` — orthonormal panel to project out (pass `None` to skip).
+/// * `l`, `p` — rank and oversampling (paper's L and P).
+///
+/// Returns an N×L′ orthonormal matrix, L′ ≤ L (smaller if the sketch
+/// reveals lower rank — Prop. 5 guarantees exact recovery when
+/// rank(Δ₂) ≤ L+P).
+pub fn rsvd_basis(
+    s: usize,
+    d2_mult: &dyn Fn(&Mat) -> Mat,
+    d2_t_mult: &dyn Fn(&Mat) -> Mat,
+    x: Option<&Mat>,
+    l: usize,
+    p: usize,
+    rng: &mut Rng,
+) -> Mat {
+    let lp = (l + p).min(s).max(1);
+    // S.1: Y = (I − XXᵀ) Δ₂ Ω
+    let omega = Mat::randn(s, lp, rng);
+    let mut y = d2_mult(&omega);
+    if let Some(xm) = x {
+        y = blas::project_out(xm, &y);
+    }
+    // Orthonormal M = Ran(Y); deflate numerically-zero directions.
+    let (m_basis, kept) = crate::linalg::qr::orthonormalize_against(
+        &Mat::zeros(y.rows(), 0),
+        &y,
+        1e-10,
+    );
+    if kept.is_empty() {
+        return Mat::zeros(y.rows(), 0);
+    }
+    // S.2: small SVD of B = Mᵀ (I − XXᵀ) Δ₂  ((L+P)×S), computed as
+    //      (Δ₂ᵀ M)ᵀ − (Mᵀ X)(Xᵀ Δ₂) without densifying Δ₂.
+    let d2t_m = d2_t_mult(&m_basis); // S×(L+P)
+    let mut b_t = d2t_m; // Bᵀ: S×(L+P)
+    if let Some(xm) = x {
+        // Bᵀ -= (Δ₂ᵀ X)(Xᵀ M)  — Xᵀ M is ~0 by construction of M, but we
+        // keep the exact correction for robustness.
+        let d2t_x = d2_t_mult(xm); // S×K
+        let xt_m = xm.t_matmul(&m_basis); // K×(L+P)
+        blas::gemm_acc(&mut b_t, &d2t_x, &xt_m, -1.0);
+    }
+    // thin_svd wants rows >= cols; Bᵀ is S×(L+P).  If S < L+P (clamped
+    // above: lp <= s) this holds with equality allowed.
+    let svd = thin_svd(&b_t);
+    // Left singular vectors of B = right singular vectors of Bᵀ = svd.v.
+    let rank = svd
+        .s
+        .iter()
+        .take_while(|&&sv| sv > 1e-10 * svd.s.first().copied().unwrap_or(0.0).max(1e-300))
+        .count()
+        .min(l);
+    // S.4: R = M Û(:, 1..rank)
+    let u_hat = svd.v.top_left(svd.v.rows(), rank);
+    m_basis.matmul(&u_hat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::thin_qr;
+
+    fn dense_ops(d2: &Mat) -> (impl Fn(&Mat) -> Mat + '_, impl Fn(&Mat) -> Mat + '_) {
+        (
+            move |om: &Mat| d2.matmul(om),
+            move |m: &Mat| d2.t_matmul(m),
+        )
+    }
+
+    #[test]
+    fn exact_recovery_of_low_rank() {
+        // rank(Δ₂)=3 ≤ L+P ⇒ range recovered exactly (Prop. 5 / Sec. 3.5)
+        let mut rng = Rng::new(1);
+        let left = Mat::randn(80, 3, &mut rng);
+        let right = Mat::randn(3, 20, &mut rng);
+        let d2 = left.matmul(&right);
+        let (mul, tmul) = dense_ops(&d2);
+        let r = rsvd_basis(20, &mul, &tmul, None, 5, 3, &mut rng);
+        assert!(r.cols() <= 5);
+        assert!(r.cols() >= 3);
+        // Ran(d2) ⊆ Ran(r): projecting d2 out of r leaves nothing
+        let resid = blas::project_out(&r, &d2);
+        assert!(resid.max_abs() < 1e-8, "resid {}", resid.max_abs());
+    }
+
+    #[test]
+    fn output_is_orthonormal_and_orthogonal_to_x() {
+        let mut rng = Rng::new(2);
+        let (x, _) = thin_qr(&Mat::randn(60, 5, &mut rng));
+        let d2 = Mat::randn(60, 30, &mut rng);
+        let (mul, tmul) = dense_ops(&d2);
+        let r = rsvd_basis(30, &mul, &tmul, Some(&x), 8, 4, &mut rng);
+        assert_eq!(r.cols(), 8);
+        let g = r.t_matmul(&r);
+        let mut eye = Mat::eye(8);
+        eye.axpy(-1.0, &g);
+        assert!(eye.max_abs() < 1e-8);
+        assert!(x.t_matmul(&r).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn captures_dominant_directions() {
+        // Δ₂ with a strongly dominant rank-2 part: the L=2 basis must
+        // capture most of its energy.
+        let mut rng = Rng::new(3);
+        let strong = Mat::randn(100, 2, &mut rng);
+        let mut d2 = strong.matmul(&Mat::randn(2, 40, &mut rng));
+        d2.scale(10.0);
+        let noise = Mat::randn(100, 40, &mut rng);
+        d2.axpy(0.01, &noise);
+        let (mul, tmul) = dense_ops(&d2);
+        let r = rsvd_basis(40, &mul, &tmul, None, 2, 6, &mut rng);
+        let resid = blas::project_out(&r, &d2);
+        assert!(resid.fro_norm() < 0.05 * d2.fro_norm());
+    }
+
+    #[test]
+    fn zero_delta2_yields_empty_basis() {
+        let mut rng = Rng::new(4);
+        let d2 = Mat::zeros(50, 10);
+        let (mul, tmul) = dense_ops(&d2);
+        let r = rsvd_basis(10, &mul, &tmul, None, 4, 2, &mut rng);
+        assert_eq!(r.cols(), 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Thin SVD via one-sided Jacobi (Hestenes) rotations — accurate for the
+//! tall-skinny panels this codebase produces (N×m, m ≤ a few hundred).
+
+use crate::linalg::blas;
+use crate::linalg::mat::Mat;
+
+/// Thin singular value decomposition A = U Σ Vᵀ for A (m×n, m ≥ n).
+pub struct SvdResult {
+    /// Left singular vectors (m×n), orthonormal columns (zero columns for
+    /// zero singular values).
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors (n×n).
+    pub v: Mat,
+}
+
+/// One-sided Jacobi SVD.  Rotates column pairs of a working copy of `a`
+/// until all pairs are numerically orthogonal; the column norms are the
+/// singular values.
+pub fn thin_svd(a: &Mat) -> SvdResult {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "thin_svd requires rows >= cols");
+    let mut u = a.clone();
+    let mut v = Mat::eye(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                let (alpha, beta, gamma);
+                {
+                    let up = u.col(p);
+                    let uq = u.col(q);
+                    alpha = blas::dot(up, up);
+                    beta = blas::dot(uq, uq);
+                    gamma = blas::dot(up, uq);
+                }
+                if gamma.abs() <= eps * (alpha * beta).sqrt() || gamma == 0.0 {
+                    continue;
+                }
+                off = off.max(gamma.abs() / (alpha * beta).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                {
+                    let (up, uq) = u.two_cols_mut(p, q);
+                    for i in 0..m {
+                        let a0 = up[i];
+                        let b0 = uq[i];
+                        up[i] = c * a0 - s * b0;
+                        uq[i] = s * a0 + c * b0;
+                    }
+                }
+                {
+                    let (vp, vq) = v.two_cols_mut(p, q);
+                    for i in 0..n {
+                        let a0 = vp[i];
+                        let b0 = vq[i];
+                        vp[i] = c * a0 - s * b0;
+                        vq[i] = s * a0 + c * b0;
+                    }
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+    // Extract singular values = column norms; normalize U columns.
+    let mut s: Vec<f64> = (0..n).map(|j| blas::nrm2(u.col(j))).collect();
+    for j in 0..n {
+        if s[j] > 1e-300 {
+            let inv = 1.0 / s[j];
+            for e in u.col_mut(j) {
+                *e *= inv;
+            }
+        } else {
+            s[j] = 0.0;
+            for e in u.col_mut(j) {
+                *e = 0.0;
+            }
+        }
+    }
+    // Sort descending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&x, &y| s[y].partial_cmp(&s[x]).unwrap());
+    let s_sorted: Vec<f64> = idx.iter().map(|&i| s[i]).collect();
+    SvdResult {
+        u: u.select_cols(&idx),
+        s: s_sorted,
+        v: v.select_cols(&idx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    fn check(a: &Mat, r: &SvdResult, tol: f64) {
+        // A = U diag(s) Vᵀ
+        let us = Mat::from_fn(r.u.rows(), r.s.len(), |i, j| r.u.get(i, j) * r.s[j]);
+        let rec = us.matmul(&r.v.t());
+        let mut diff = rec;
+        diff.axpy(-1.0, a);
+        assert!(diff.max_abs() < tol, "reconstruction {}", diff.max_abs());
+        // descending
+        for i in 1..r.s.len() {
+            assert!(r.s[i] <= r.s[i - 1] + 1e-12);
+        }
+        // V orthonormal
+        let g = r.v.t_matmul(&r.v);
+        let mut eye = Mat::eye(g.rows());
+        eye.axpy(-1.0, &g);
+        assert!(eye.max_abs() < tol);
+    }
+
+    #[test]
+    fn random_tall() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(1usize, 1usize), (8, 3), (50, 10), (120, 40)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let r = thin_svd(&a);
+            check(&a, &r, 1e-9);
+        }
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let mut rng = Rng::new(2);
+        let b = Mat::randn(40, 3, &mut rng);
+        let c = Mat::randn(3, 8, &mut rng);
+        let a = b.matmul(&c); // rank 3 of 8 columns
+        let r = thin_svd(&a);
+        check(&a, &r, 1e-8);
+        for i in 3..8 {
+            assert!(r.s[i] < 1e-8, "s[{i}]={}", r.s[i]);
+        }
+        // surviving U columns orthonormal
+        let u3 = r.u.top_left(40, 3);
+        let g = u3.t_matmul(&u3);
+        let mut eye = Mat::eye(3);
+        eye.axpy(-1.0, &g);
+        assert!(eye.max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn singular_values_match_eigh_of_gram() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(30, 6, &mut rng);
+        let r = thin_svd(&a);
+        let g = a.t_matmul(&a);
+        let e = crate::linalg::eigh::eigh(&g);
+        let mut lam: Vec<f64> = e.values.iter().map(|v| v.max(0.0).sqrt()).collect();
+        lam.reverse();
+        for (sv, ev) in r.s.iter().zip(lam.iter()) {
+            assert!((sv - ev).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! `grest` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   table2                         print the dataset registry (Table 2)
+//!   experiment <id> [--quick]      regenerate a paper table/figure
+//!                                  (ids: fig2 fig3 fig4 fig5 table3 fig6 all)
+//!   track [--dataset D] [--k K] [--tracker T] [--xla] [--t T]
+//!                                  run one tracker over one dataset
+//!   serve-demo [--events N]        run the streaming coordinator demo
+//!   generate --dataset D --out F   write a synthetic dataset edge list
+//!
+//! Argument parsing is hand-rolled (offline build: no clap).
+
+use grest::eval::experiments::{self, ExpConfig};
+use grest::eval::table::fmt_secs;
+use grest::graph::datasets::{self, Kind};
+use grest::linalg::rng::Rng;
+use grest::tracking::{self, EigTracker, GRest, SubspaceMode};
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut positional = vec![];
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    (positional, flags)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
+    let cfg = if flags.contains_key("quick") { ExpConfig::quick() } else { ExpConfig::paper() };
+
+    match cmd {
+        "table2" => {
+            println!("{}", experiments::table2().render());
+        }
+        "experiment" => {
+            let id = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
+            run_experiment(id, &cfg)?;
+        }
+        "track" => {
+            cmd_track(&flags)?;
+        }
+        "serve-demo" => {
+            cmd_serve_demo(&flags)?;
+        }
+        "generate" => {
+            cmd_generate(&flags)?;
+        }
+        _ => {
+            println!(
+                "grest — Graph Rayleigh-Ritz Eigenspace Tracking\n\
+                 usage: grest <table2|experiment|track|serve-demo|generate> [flags]\n\
+                 see rust/src/main.rs header for details"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_experiment(id: &str, cfg: &ExpConfig) -> anyhow::Result<()> {
+    let run_acc = |kind: Kind, label: &str| {
+        let (_, ta, tb, tt) = experiments::timed(label, || {
+            experiments::figure_accuracy_runtime(kind, cfg)
+        });
+        println!("== {label}(a): time-averaged psi for leading 3 eigenvectors ==");
+        println!("{}", ta.render());
+        println!("== {label}(b): mean psi over leading {} vs t ==", cfg.angles_k);
+        println!("{}", tb.render());
+        println!("== Fig4 slice: total runtimes ==");
+        println!("{}", tt.render());
+        let _ = ta.write_csv(&format!("{label}_a"));
+        let _ = tb.write_csv(&format!("{label}_b"));
+        let _ = tt.write_csv(&format!("{label}_runtime"));
+    };
+    match id {
+        "table2" => println!("{}", experiments::table2().render()),
+        "fig2" | "fig4a" => run_acc(Kind::Static, "fig2"),
+        "fig3" | "fig4b" => run_acc(Kind::Dynamic, "fig3"),
+        "fig4" => {
+            run_acc(Kind::Static, "fig2");
+            run_acc(Kind::Dynamic, "fig3");
+        }
+        "fig5" => {
+            let grid = if cfg.mc <= 1 && cfg.t_override.is_some() {
+                vec![8usize, 16]
+            } else {
+                vec![10usize, 20, 40, 80]
+            };
+            let t = experiments::timed("fig5", || experiments::fig5_rsvd_tradeoff(cfg, &grid));
+            println!("== Fig5: RSVD L/P trade-off (CM-Collab) ==");
+            println!("{}", t.render());
+            let _ = t.write_csv("fig5");
+        }
+        "table3" => {
+            let t = experiments::timed("table3", || {
+                experiments::table3_centrality(cfg, &[100, 1000])
+            });
+            println!("== Table 3: central-node overlap ==");
+            println!("{}", t.render());
+            let _ = t.write_csv("table3");
+        }
+        "fig6" => {
+            let n = if cfg.extra_scale > 1 { 500 } else { 2000 };
+            let t = experiments::timed("fig6", || {
+                experiments::fig6_clustering(
+                    cfg,
+                    n,
+                    &[0.002, 0.005, 0.01, 0.02],
+                    &[2, 4, 6, 8],
+                )
+            });
+            println!("== Fig6: clustering ARI ratio ==");
+            println!("{}", t.render());
+            let _ = t.write_csv("fig6");
+        }
+        "all" => {
+            for e in ["fig2", "fig3", "fig5", "table3", "fig6"] {
+                run_experiment(e, cfg)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment id {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_track(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dataset = flags.get("dataset").map(|s| s.as_str()).unwrap_or("CM-Collab");
+    let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let t_steps: Option<usize> = flags.get("t").and_then(|s| s.parse().ok());
+    let tracker_name = flags.get("tracker").map(|s| s.as_str()).unwrap_or("grest3");
+    let use_xla = flags.contains_key("xla");
+
+    let spec = datasets::by_name(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let mut rng = Rng::new(1);
+    let sc = datasets::scenario_for(&spec, t_steps, &mut rng);
+    println!(
+        "dataset {dataset}: N0={} -> N={} over {} steps, total delta nnz {}",
+        sc.initial.n_rows,
+        sc.max_nodes(),
+        sc.t_steps(),
+        sc.total_delta_nnz()
+    );
+    let init = tracking::init_eigenpairs(&sc.initial, k, 7);
+    let mut tracker: Box<dyn EigTracker> = match tracker_name {
+        "trip-basic" => Box::new(tracking::trip_basic::TripBasic::new(init)),
+        "trip" => Box::new(tracking::trip::Trip::new(init)),
+        "rm" => Box::new(tracking::residual_modes::ResidualModes::new(init)),
+        "iasc" => Box::new(tracking::iasc::Iasc::new(init)),
+        "timers" => Box::new(tracking::timers::Timers::new(&sc.initial, k, 7)),
+        "grest2" => Box::new(GRest::new(init, SubspaceMode::Rm)),
+        "grest3" if use_xla => {
+            let manifest = grest::runtime::ArtifactManifest::load_default()?;
+            // panel width: K cols of ΔX̄ plus per-step expansion
+            let max_s = sc.steps.iter().map(|s| s.delta.s_new).max().unwrap_or(0);
+            let phases = grest::runtime::XlaPhases::for_problem(
+                manifest,
+                sc.max_nodes(),
+                k,
+                k + max_s.min(128),
+            )?;
+            println!("XLA backend tier: {:?}", phases.tier());
+            Box::new(GRest::with_phases(init, SubspaceMode::Full, phases, 7))
+        }
+        "grest3" => Box::new(GRest::new(init, SubspaceMode::Full)),
+        "grest-rsvd" => Box::new(GRest::new(init, SubspaceMode::Rsvd { l: 32, p: 32 })),
+        other => anyhow::bail!("unknown tracker {other}"),
+    };
+
+    let t0 = std::time::Instant::now();
+    for (i, step) in sc.steps.iter().enumerate() {
+        let s0 = std::time::Instant::now();
+        tracker.update(&step.delta)?;
+        let update_t = s0.elapsed();
+        let reference =
+            tracking::traits::init_eigenpairs(&step.adjacency, k, 100 + i as u64);
+        let psi = grest::eval::angle::mean_angle(tracker.current(), &reference, 3.min(k));
+        println!(
+            "step {:>3}: N={:>6} S={:>4} nnz(d)={:>6} update={} mean_psi(top3)={:.4}",
+            i + 1,
+            step.adjacency.n_rows,
+            step.delta.s_new,
+            step.delta.nnz(),
+            fmt_secs(update_t),
+            psi
+        );
+    }
+    println!("total tracking time {}", fmt_secs(t0.elapsed()));
+    Ok(())
+}
+
+fn cmd_serve_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
+    use grest::graph::stream::GraphEvent;
+    let n_events: usize = flags.get("events").and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let mut rng = Rng::new(3);
+    let g = grest::graph::generators::erdos_renyi(500, 0.02, &mut rng);
+    let svc = TrackingService::spawn(
+        ServiceConfig {
+            initial: g,
+            k: 16,
+            policy: BatchPolicy::Either { events: 64, new_nodes: 16 },
+            seed: 5,
+        },
+        Box::new(|_a0, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
+    )?;
+    let h = svc.handle.clone();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_events as u64 {
+        let ev = if rng.flip(0.85) {
+            GraphEvent::AddEdge(rng.below(500) as u64, rng.below(700) as u64)
+        } else {
+            GraphEvent::RemoveEdge(rng.below(500) as u64, rng.below(500) as u64)
+        };
+        h.ingest(vec![ev])?;
+        if i % 500 == 0 {
+            let snap = h.snapshot();
+            println!(
+                "event {:>6}: snapshot v{} over {} nodes, lambda1={:.3}",
+                i,
+                snap.version,
+                snap.n_nodes,
+                snap.pairs.values.first().copied().unwrap_or(0.0)
+            );
+        }
+    }
+    h.flush()?;
+    let snap = h.snapshot();
+    println!(
+        "final: v{} nodes={} | ingest+track {} for {n_events} events",
+        snap.version,
+        snap.n_nodes,
+        fmt_secs(t0.elapsed())
+    );
+    println!("top-5 central: {:?}", h.central_nodes(5)?);
+    println!("metrics: {}", h.metrics().report());
+    svc.join();
+    Ok(())
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dataset = flags
+        .get("dataset")
+        .ok_or_else(|| anyhow::anyhow!("--dataset required"))?;
+    let out = flags.get("out").ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    let spec = datasets::by_name(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let mut rng = Rng::new(11);
+    match spec.kind {
+        Kind::Static => {
+            let g = datasets::build_static(&spec, &mut rng);
+            grest::graph::io::save_graph(&g, std::path::Path::new(out))?;
+            println!("wrote {} ({} nodes, {} edges)", out, g.n_nodes(), g.n_edges());
+        }
+        Kind::Dynamic => {
+            let stream = datasets::build_stream(&spec, &mut rng);
+            let mut text = String::new();
+            for (i, (u, v)) in stream.iter().enumerate() {
+                text.push_str(&format!("{u} {v} {i}\n"));
+            }
+            std::fs::write(out, text)?;
+            println!("wrote {} ({} timestamped edges)", out, stream.len());
+        }
+    }
+    Ok(())
+}

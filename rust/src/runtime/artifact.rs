@@ -1,0 +1,152 @@
+//! Artifact manifest: which HLO files exist, at which size tiers.
+//!
+//! Parses `artifacts/manifest.txt` (whitespace format emitted by
+//! `python/compile/aot.py` next to the JSON manifest, so no JSON
+//! dependency is needed here):
+//!
+//! ```text
+//! fn tier file n k m
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One size tier of compiled artifacts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tier {
+    pub name: String,
+    /// Row capacity (padded N).
+    pub n: usize,
+    /// Tracked eigenpairs.
+    pub k: usize,
+    /// Panel width capacity (padded M).
+    pub m: usize,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub fn_name: String,
+    pub tier: String,
+    pub file: PathBuf,
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+}
+
+/// Parsed manifest plus base directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load from a directory containing `manifest.txt`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Default location: `$GREST_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<ArtifactManifest> {
+        let dir = std::env::var("GREST_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<ArtifactManifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 6 {
+                bail!("manifest line {}: expected 6 fields", lineno + 1);
+            }
+            entries.push(ArtifactEntry {
+                fn_name: parts[0].to_string(),
+                tier: parts[1].to_string(),
+                file: dir.join(parts[2]),
+                n: parts[3].parse()?,
+                k: parts[4].parse()?,
+                m: parts[5].parse()?,
+            });
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Distinct tiers, sorted by capacity.
+    pub fn tiers(&self) -> Vec<Tier> {
+        let mut tiers: Vec<Tier> = Vec::new();
+        for e in &self.entries {
+            if !tiers.iter().any(|t| t.name == e.tier) {
+                tiers.push(Tier { name: e.tier.clone(), n: e.n, k: e.k, m: e.m });
+            }
+        }
+        tiers.sort_by_key(|t| (t.n, t.m));
+        tiers
+    }
+
+    /// Smallest tier able to hold (n, k, m); k must match exactly (the
+    /// tracked eigencount is baked into the artifact shapes).
+    pub fn pick_tier(&self, n: usize, k: usize, m: usize) -> Option<Tier> {
+        self.tiers()
+            .into_iter()
+            .find(|t| t.n >= n && t.k == k && t.m >= m)
+    }
+
+    /// Path for (fn, tier).
+    pub fn path_for(&self, fn_name: &str, tier: &str) -> Option<PathBuf> {
+        self.entries
+            .iter()
+            .find(|e| e.fn_name == fn_name && e.tier == tier)
+            .map(|e| e.file.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+build_basis t256 build_basis_t256.hlo.txt 256 16 32
+form_t t256 form_t_t256.hlo.txt 256 16 32
+rotate t256 rotate_t256.hlo.txt 256 16 32
+build_basis t1024 build_basis_t1024.hlo.txt 1024 64 128
+";
+
+    #[test]
+    fn parse_and_pick() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        let tiers = m.tiers();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(m.pick_tier(200, 16, 30).unwrap().name, "t256");
+        assert_eq!(m.pick_tier(200, 64, 30).unwrap().name, "t1024");
+        assert!(m.pick_tier(5000, 16, 30).is_none());
+        assert!(m
+            .path_for("form_t", "t256")
+            .unwrap()
+            .ends_with("form_t_t256.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse(Path::new("/tmp"), "one two").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        // integration sanity: if the repo's artifacts are built, the
+        // manifest must parse and include the t256 tier.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.pick_tier(256, 16, 32).is_some());
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (neither `Send` nor
+//! `Sync`), so the client is cached per thread; creating one takes
+//! ~100 ms, so anything that executes artifacts should stay on one
+//! thread (the coordinator runs the tracker on a dedicated worker
+//! thread for exactly this reason).
+
+use anyhow::{anyhow, Result};
+use std::cell::OnceCell;
+
+thread_local! {
+    static CLIENT: OnceCell<std::result::Result<&'static xla::PjRtClient, String>> =
+        const { OnceCell::new() };
+}
+
+/// The calling thread's CPU PJRT client (created and leaked on first use).
+pub fn cpu_client() -> Result<&'static xla::PjRtClient> {
+    CLIENT.with(|cell| {
+        cell.get_or_init(|| {
+            xla::PjRtClient::cpu()
+                .map(|c| &*Box::leak(Box::new(c)))
+                .map_err(|e| e.to_string())
+        })
+        .clone()
+        .map_err(|e| anyhow!("PJRT client init failed: {e}"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_boots_and_is_cached() {
+        let a = cpu_client().unwrap();
+        assert!(a.device_count() >= 1);
+        let b = cpu_client().unwrap();
+        assert!(std::ptr::eq(a, b));
+    }
+}

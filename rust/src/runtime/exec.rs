@@ -1,0 +1,148 @@
+//! Literal marshalling and compiled-executable cache.
+//!
+//! Our dense matrices are f64 column-major; PJRT literals here are f32
+//! row-major (the artifacts are compiled at f32 — see DESIGN.md).  All
+//! padding/unpadding to the artifact tier shapes happens in this module
+//! so the callers deal only in logical shapes.
+
+use crate::linalg::mat::Mat;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// f64 column-major (rows×cols) → f32 row-major literal padded to
+/// (pad_rows×pad_cols).
+pub fn mat_to_literal(m: &Mat, pad_rows: usize, pad_cols: usize) -> Result<xla::Literal> {
+    assert!(m.rows() <= pad_rows && m.cols() <= pad_cols, "mat {}x{} exceeds pad {}x{}", m.rows(), m.cols(), pad_rows, pad_cols);
+    let mut buf = vec![0f32; pad_rows * pad_cols];
+    for j in 0..m.cols() {
+        let col = m.col(j);
+        for (i, &v) in col.iter().enumerate() {
+            buf[i * pad_cols + j] = v as f32;
+        }
+    }
+    Ok(xla::Literal::vec1(&buf).reshape(&[pad_rows as i64, pad_cols as i64])?)
+}
+
+/// f64 slice → f32 rank-1 literal padded to `pad_len`.
+pub fn vec_to_literal(v: &[f64], pad_len: usize) -> Result<xla::Literal> {
+    assert!(v.len() <= pad_len);
+    let mut buf = vec![0f32; pad_len];
+    for (b, &x) in buf.iter_mut().zip(v.iter()) {
+        *b = x as f32;
+    }
+    Ok(xla::Literal::vec1(&buf).reshape(&[pad_len as i64])?)
+}
+
+/// f32 row-major literal (pad_rows×pad_cols) → f64 column-major Mat
+/// cropped to (rows×cols).
+pub fn literal_to_mat(
+    lit: &xla::Literal,
+    pad_rows: usize,
+    pad_cols: usize,
+    rows: usize,
+    cols: usize,
+) -> Result<Mat> {
+    let data: Vec<f32> = lit.to_vec()?;
+    if data.len() != pad_rows * pad_cols {
+        return Err(anyhow!(
+            "literal size {} != padded {}x{}",
+            data.len(),
+            pad_rows,
+            pad_cols
+        ));
+    }
+    let mut out = Mat::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            out.set(i, j, data[i * pad_cols + j] as f64);
+        }
+    }
+    Ok(out)
+}
+
+/// Rank-1 literal → f64 vec cropped to `len`.
+pub fn literal_to_vec(lit: &xla::Literal, len: usize) -> Result<Vec<f64>> {
+    let data: Vec<f32> = lit.to_vec()?;
+    Ok(data.iter().take(len).map(|&x| x as f64).collect())
+}
+
+/// Cache of compiled executables, keyed by artifact path.  Compilation of
+/// a large tier takes O(seconds); each artifact compiles exactly once per
+/// process.
+pub struct ExecCache {
+    compiled: RefCell<HashMap<PathBuf, &'static xla::PjRtLoadedExecutable>>,
+}
+
+impl Default for ExecCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecCache {
+    pub fn new() -> ExecCache {
+        ExecCache { compiled: RefCell::new(HashMap::new()) }
+    }
+
+    /// Get (or compile) the executable for an HLO text file.  Like the
+    /// client, executables are thread-bound (`Rc` internals), so the
+    /// cache is a `RefCell` and `ExecCache` is deliberately `!Send`.
+    pub fn get(&self, path: &Path) -> Result<&'static xla::PjRtLoadedExecutable> {
+        if let Some(exe) = self.compiled.borrow().get(path) {
+            return Ok(exe);
+        }
+        let client = crate::runtime::client::cpu_client()?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        // Executables live for the process lifetime (compiled once, shared
+        // within the thread); leaking avoids self-referential lifetimes.
+        let exe: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
+        self.compiled.borrow_mut().insert(path.to_path_buf(), exe);
+        Ok(exe)
+    }
+}
+
+/// Run an executable whose output is a tuple of `n_outputs` literals.
+pub fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(inputs)?;
+    let lit = result[0][0].to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_literal_roundtrip_with_padding() {
+        let m = Mat::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let lit = mat_to_literal(&m, 4, 5).unwrap();
+        let back = literal_to_mat(&lit, 4, 5, 2, 3).unwrap();
+        let mut diff = back.clone();
+        diff.axpy(-1.0, &m);
+        assert!(diff.max_abs() < 1e-6);
+        // padded area is zero
+        let full: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(full[3], 0.0); // row 0, col 3
+        assert_eq!(full[3 * 5], 0.0); // row 3, col 0
+    }
+
+    #[test]
+    fn vec_literal_roundtrip() {
+        let v = [1.5, -2.5, 3.25];
+        let lit = vec_to_literal(&v, 6).unwrap();
+        let back = literal_to_vec(&lit, 3).unwrap();
+        for (a, b) in back.iter().zip(v.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! [`XlaPhases`] — the G-REST dense phases executed by the AOT-compiled
+//! JAX/Pallas artifacts on PJRT, implementing the same [`DensePhases`]
+//! contract as the native Rust pipeline (and unit-tested equal to it).
+//!
+//! The artifacts are compiled at fixed tier shapes (N_cap, K, M_cap);
+//! this wrapper zero-pads inputs to the tier, runs the three phases, and
+//! crops the results.  Zero padding is exact, not approximate: padded
+//! rows stay zero through project-out/CholQR and padded panel columns are
+//! deflated by `build_basis`'s rank screening (invariants tested both in
+//! pytest and here).
+
+use crate::linalg::mat::Mat;
+use crate::runtime::artifact::{ArtifactManifest, Tier};
+use crate::runtime::exec::{self, ExecCache};
+use crate::tracking::grest::DensePhases;
+use anyhow::{anyhow, Result};
+
+/// PJRT-backed dense phases pinned to one artifact tier.
+pub struct XlaPhases {
+    manifest: ArtifactManifest,
+    tier: Tier,
+    cache: ExecCache,
+}
+
+impl XlaPhases {
+    /// Pick the smallest tier that fits (n, k, m) from the manifest.
+    pub fn for_problem(manifest: ArtifactManifest, n: usize, k: usize, m: usize) -> Result<XlaPhases> {
+        let tier = manifest
+            .pick_tier(n, k, m)
+            .ok_or_else(|| anyhow!("no artifact tier fits n={n} k={k} m={m}"))?;
+        Ok(XlaPhases { manifest, tier, cache: ExecCache::new() })
+    }
+
+    pub fn tier(&self) -> &Tier {
+        &self.tier
+    }
+
+    fn exe(&self, fn_name: &str) -> Result<&'static xla::PjRtLoadedExecutable> {
+        let path = self
+            .manifest
+            .path_for(fn_name, &self.tier.name)
+            .ok_or_else(|| anyhow!("artifact {fn_name}/{} missing", self.tier.name))?;
+        self.cache.get(&path)
+    }
+
+    fn check_fits(&self, n: usize, k: usize, m: usize) {
+        assert!(
+            n <= self.tier.n && k == self.tier.k && m <= self.tier.m,
+            "problem (n={n},k={k},m={m}) exceeds tier {:?}",
+            self.tier
+        );
+    }
+
+    fn run_build_basis(&self, xbar: &Mat, panel: &Mat) -> Result<Mat> {
+        let (n, k) = (xbar.rows(), xbar.cols());
+        let m = panel.cols();
+        self.check_fits(n, k, m);
+        let t = &self.tier;
+        let exe = self.exe("build_basis")?;
+        let lits = exec::run_tuple(
+            exe,
+            &[
+                exec::mat_to_literal(xbar, t.n, t.k)?,
+                exec::mat_to_literal(panel, t.n, t.m)?,
+            ],
+        )?;
+        // outputs: q (n×m), valid (m)
+        let q = exec::literal_to_mat(&lits[0], t.n, t.m, n, t.m)?;
+        let valid = exec::literal_to_vec(&lits[1], t.m)?;
+        // keep only valid columns (they are exactly zero otherwise)
+        let kept: Vec<usize> = (0..t.m).filter(|&j| valid[j] > 0.5).collect();
+        Ok(q.select_cols(&kept))
+    }
+
+    fn run_form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Result<Mat> {
+        let (n, k) = (xbar.rows(), xbar.cols());
+        let m = q.cols();
+        self.check_fits(n, k, m);
+        let t = &self.tier;
+        let exe = self.exe("form_t")?;
+        let lits = exec::run_tuple(
+            exe,
+            &[
+                exec::mat_to_literal(xbar, t.n, t.k)?,
+                exec::mat_to_literal(q, t.n, t.m)?,
+                exec::vec_to_literal(lam, t.k)?,
+                exec::mat_to_literal(dxk, t.n, t.k)?,
+                exec::mat_to_literal(dq, t.n, t.m)?,
+            ],
+        )?;
+        let dim = t.k + t.m;
+        // crop to the logical (k+m)×(k+m): rows/cols [0..k] ∪ [k..k+m]
+        let full = exec::literal_to_mat(&lits[0], dim, dim, dim, dim)?;
+        let mut out = Mat::zeros(k + m, k + m);
+        let map = |i: usize| if i < k { i } else { t.k + (i - k) };
+        for i in 0..k + m {
+            for j in 0..k + m {
+                out.set(i, j, full.get(map(i), map(j)));
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Result<Mat> {
+        let (n, k) = (xbar.rows(), xbar.cols());
+        let m = q.cols();
+        self.check_fits(n, k, m);
+        let t = &self.tier;
+        let exe = self.exe("rotate")?;
+        let lits = exec::run_tuple(
+            exe,
+            &[
+                exec::mat_to_literal(xbar, t.n, t.k)?,
+                exec::mat_to_literal(q, t.n, t.m)?,
+                exec::mat_to_literal(f1, t.k, t.k)?,
+                exec::mat_to_literal(f2, t.m, t.k)?,
+            ],
+        )?;
+        exec::literal_to_mat(&lits[0], t.n, t.k, n, k)
+    }
+}
+
+impl DensePhases for XlaPhases {
+    fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
+        self.run_build_basis(xbar, panel)
+            .expect("XLA build_basis failed")
+    }
+
+    fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
+        self.run_form_t(xbar, q, lam, dxk, dq)
+            .expect("XLA form_t failed")
+    }
+
+    fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
+        self.run_rotate(xbar, q, f1, f2).expect("XLA rotate failed")
+    }
+
+    fn label(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::thin_qr;
+    use crate::linalg::rng::Rng;
+    use crate::tracking::grest::NativePhases;
+
+    fn phases() -> Option<XlaPhases> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping XLA tests: artifacts not built");
+            return None;
+        }
+        let manifest = ArtifactManifest::load(&dir).unwrap();
+        Some(XlaPhases::for_problem(manifest, 200, 16, 20).unwrap())
+    }
+
+    #[test]
+    fn xla_matches_native_build_basis() {
+        let Some(xp) = phases() else { return };
+        let mut rng = Rng::new(1);
+        let (x, _) = thin_qr(&Mat::randn(200, 16, &mut rng));
+        let panel = Mat::randn(200, 20, &mut rng);
+        let q_xla = xp.build_basis(&x, &panel);
+        let q_nat = NativePhases.build_basis(&x, &panel);
+        assert_eq!(q_xla.cols(), q_nat.cols());
+        // bases may differ by rotation; compare projectors P = QQᵀ on a
+        // probe block
+        let probe = Mat::randn(200, 5, &mut rng);
+        let p_xla = q_xla.matmul(&q_xla.t_matmul(&probe));
+        let p_nat = q_nat.matmul(&q_nat.t_matmul(&probe));
+        let mut diff = p_xla.clone();
+        diff.axpy(-1.0, &p_nat);
+        assert!(diff.max_abs() < 1e-3, "projector mismatch {}", diff.max_abs());
+        // orthonormality & orthogonality to x (f32 tolerance)
+        let g = q_xla.t_matmul(&q_xla);
+        let mut eye = Mat::eye(q_xla.cols());
+        eye.axpy(-1.0, &g);
+        assert!(eye.max_abs() < 1e-4);
+        assert!(x.t_matmul(&q_xla).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn xla_matches_native_form_t_and_rotate() {
+        let Some(xp) = phases() else { return };
+        let mut rng = Rng::new(2);
+        let (x, _) = thin_qr(&Mat::randn(150, 16, &mut rng));
+        let (qfull, _) = thin_qr(&Mat::randn(150, 36, &mut rng));
+        // q must be orthogonal to x for the contract; project and renorm
+        let q = NativePhases.build_basis(&x, &qfull.top_left(150, 12));
+        let lam: Vec<f64> = (0..16).map(|i| 8.0 - i as f64).collect();
+        let dxk = Mat::randn(150, 16, &mut rng);
+        let dq = Mat::randn(150, q.cols(), &mut rng);
+        let t_xla = xp.form_t(&x, &q, &lam, &dxk, &dq);
+        let t_nat = NativePhases.form_t(&x, &q, &lam, &dxk, &dq);
+        let mut diff = t_xla.clone();
+        diff.axpy(-1.0, &t_nat);
+        assert!(diff.max_abs() < 1e-3, "form_t mismatch {}", diff.max_abs());
+
+        let f1 = Mat::randn(16, 16, &mut rng);
+        let f2 = Mat::randn(q.cols(), 16, &mut rng);
+        let r_xla = xp.rotate(&x, &q, &f1, &f2);
+        let r_nat = NativePhases.rotate(&x, &q, &f1, &f2);
+        let mut rdiff = r_xla.clone();
+        rdiff.axpy(-1.0, &r_nat);
+        assert!(rdiff.max_abs() < 1e-3, "rotate mismatch {}", rdiff.max_abs());
+    }
+
+    #[test]
+    fn xla_grest_end_to_end_matches_native() {
+        let Some(xp) = phases() else { return };
+        use crate::sparse::coo::Coo;
+        use crate::sparse::delta::Delta;
+        use crate::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
+        let mut rng = Rng::new(3);
+        let w = crate::graph::generators::power_law_weights(120, 2.2, 400);
+        let a = crate::graph::generators::chung_lu(&w, &mut rng).adjacency();
+        let init = init_eigenpairs(&a, 16, 4);
+        // a rich Δ (rank > panel width) so the native and XLA pipelines
+        // face a full-rank panel and deflation plays no role — deflation
+        // thresholds differ by design (f32 vs f64) and rank-deficient
+        // panels legitimately yield different (equally valid) subspaces.
+        let mut kb = Coo::new(120, 120);
+        let mut krng = Rng::new(99);
+        for _ in 0..60 {
+            let (u, v) = (krng.below(120), krng.below(120));
+            if u != v {
+                kb.push(u, v, 1.0);
+                kb.push(v, u, 1.0);
+            }
+        }
+        let kb = {
+            // clamp duplicate pushes back to ±1
+            let csr = kb.to_csr();
+            let mut c2 = Coo::new(120, 120);
+            for i in 0..120 {
+                let (cols, vals) = csr.row(i);
+                for (&j, &v) in cols.iter().zip(vals.iter()) {
+                    c2.push(i, j, v.clamp(-1.0, 1.0));
+                }
+            }
+            c2
+        };
+        let mut g = Coo::new(120, 2);
+        g.push(0, 0, 1.0);
+        g.push(5, 1, 1.0);
+        g.push(17, 0, 1.0);
+        g.push(44, 1, 1.0);
+        let mut c = Coo::new(2, 2);
+        c.push_sym(0, 1, 1.0);
+        let d = Delta::from_blocks(120, 2, &kb, &g, &c);
+
+        let mut t_xla = GRest::with_phases(init.clone(), SubspaceMode::Full, xp, 7);
+        let mut t_nat = GRest::new(init, SubspaceMode::Full);
+        t_xla.update(&d).unwrap();
+        t_nat.update(&d).unwrap();
+        for j in 0..16 {
+            assert!(
+                (t_xla.current().values[j] - t_nat.current().values[j]).abs() < 1e-3,
+                "λ{j}: xla {} vs native {}",
+                t_xla.current().values[j],
+                t_nat.current().values[j]
+            );
+        }
+        // top eigenvector agreement
+        let ov = crate::linalg::blas::dot(
+            t_xla.current().vectors.col(0),
+            t_nat.current().vectors.col(0),
+        )
+        .abs();
+        assert!(ov > 1.0 - 1e-4, "top vector overlap {ov}");
+    }
+}

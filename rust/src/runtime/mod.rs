@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes the G-REST dense phases on the
+//! XLA CPU client.  Python never runs here — artifacts are produced once
+//! by `make artifacts` and this module is pure Rust + PJRT.
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+pub mod grest_xla;
+
+pub use artifact::{ArtifactManifest, Tier};
+pub use grest_xla::XlaPhases;

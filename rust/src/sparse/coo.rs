@@ -1,0 +1,127 @@
+//! Coordinate-format sparse matrix: the assembly format for graph deltas.
+
+use crate::sparse::csr::Csr;
+
+/// COO triplets (row, col, value).  Duplicates are summed on conversion.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Coo {
+        Coo { rows, cols, entries: Vec::new() }
+    }
+
+    /// Add a single entry.
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols, "({i},{j}) out of {}x{}", self.rows, self.cols);
+        if v != 0.0 {
+            self.entries.push((i, j, v));
+        }
+    }
+
+    /// Add both (i,j) and (j,i) — symmetric assembly (square only).
+    pub fn push_sym(&mut self, i: usize, j: usize, v: f64) {
+        assert_eq!(self.rows, self.cols);
+        self.push(i, j, v);
+        if i != j {
+            self.push(j, i, v);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Convert to CSR, summing duplicates and dropping exact zeros.
+    pub fn to_csr(&self) -> Csr {
+        let mut entries = self.entries.clone();
+        entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(entries.len());
+        let mut data = Vec::with_capacity(entries.len());
+        let mut it = entries.into_iter().peekable();
+        while let Some((i, j, mut v)) = it.next() {
+            while let Some(&(i2, j2, v2)) = it.peek() {
+                if i2 == i && j2 == j {
+                    v += v2;
+                    it.next();
+                } else {
+                    break;
+                }
+            }
+            if v != 0.0 {
+                indices.push(j);
+                data.push(v);
+                indptr[i + 1] += 1;
+            }
+        }
+        for r in 0..self.rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Csr { n_rows: self.rows, n_cols: self.cols, indptr, indices, data }
+    }
+
+    /// y += alpha * (self · x) without converting to CSR.
+    pub fn matvec_acc(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for &(i, j, v) in &self.entries {
+            y[i] += alpha * v * x[j];
+        }
+    }
+
+    /// Frobenius norm (duplicates summed first).
+    pub fn fro_norm(&self) -> f64 {
+        self.to_csr().data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sums_duplicates_and_drops_zeros() {
+        let mut c = Coo::new(3, 3);
+        c.push(0, 1, 1.0);
+        c.push(0, 1, 2.0);
+        c.push(2, 2, 5.0);
+        c.push(1, 0, 3.0);
+        c.push(1, 0, -3.0); // cancels to zero -> dropped
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.get(2, 2), 5.0);
+        assert_eq!(m.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn push_sym() {
+        let mut c = Coo::new(4, 4);
+        c.push_sym(1, 2, -1.0);
+        c.push_sym(3, 3, 2.0);
+        let m = c.to_csr();
+        assert_eq!(m.get(1, 2), -1.0);
+        assert_eq!(m.get(2, 1), -1.0);
+        assert_eq!(m.get(3, 3), 2.0);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn matvec_acc_matches_csr() {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 3, 2.0);
+        c.push(2, 0, -1.0);
+        c.push(0, 3, 1.0);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; 3];
+        c.matvec_acc(1.0, &x, &mut y);
+        let mut want = vec![0.0; 3];
+        c.to_csr().matvec_acc(1.0, &x, &mut want);
+        assert_eq!(y, want);
+    }
+}

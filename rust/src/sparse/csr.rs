@@ -1,0 +1,267 @@
+//! Compressed sparse row matrix with the operations the trackers need:
+//! SpMV, SpMM against dense panels, transpose products, and sparse
+//! difference (for Laplacian deltas).
+
+use crate::linalg::lanczos::LinOp;
+use crate::linalg::mat::Mat;
+
+/// CSR sparse matrix.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Empty rows×cols matrix.
+    pub fn empty(rows: usize, cols: usize) -> Csr {
+        Csr { n_rows: rows, n_cols: cols, indptr: vec![0; rows + 1], indices: vec![], data: vec![] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Entry lookup (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        match self.indices[lo..hi].binary_search(&j) {
+            Ok(pos) => self.data[lo + pos],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Row view: (column indices, values).
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.data[lo..hi])
+    }
+
+    /// y += alpha * A x.
+    pub fn matvec_acc(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n_cols);
+        debug_assert_eq!(y.len(), self.n_rows);
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0;
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                s += v * x[j];
+            }
+            y[i] += alpha * s;
+        }
+    }
+
+    /// A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_acc(1.0, x, &mut y);
+        y
+    }
+
+    /// A · B for a dense panel B (n_cols × m) → (n_rows × m).
+    pub fn matmul_dense(&self, b: &Mat) -> Mat {
+        assert_eq!(self.n_cols, b.rows());
+        let mut out = Mat::zeros(self.n_rows, b.cols());
+        for j in 0..b.cols() {
+            let bj = b.col(j);
+            let oj = out.col_mut(j);
+            for i in 0..self.n_rows {
+                let lo = self.indptr[i];
+                let hi = self.indptr[i + 1];
+                let mut s = 0.0;
+                for p in lo..hi {
+                    s += self.data[p] * bj[self.indices[p]];
+                }
+                oj[i] = s;
+            }
+        }
+        out
+    }
+
+    /// Aᵀ · B for a dense panel B (n_rows × m) → (n_cols × m),
+    /// without materializing the transpose.
+    pub fn t_matmul_dense(&self, b: &Mat) -> Mat {
+        assert_eq!(self.n_rows, b.rows());
+        let mut out = Mat::zeros(self.n_cols, b.cols());
+        for j in 0..b.cols() {
+            let bj = b.col(j);
+            let oj = out.col_mut(j);
+            for i in 0..self.n_rows {
+                let lo = self.indptr[i];
+                let hi = self.indptr[i + 1];
+                let bij = bj[i];
+                if bij == 0.0 {
+                    continue;
+                }
+                for p in lo..hi {
+                    oj[self.indices[p]] += self.data[p] * bij;
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Row sums (degrees for a 0/1 adjacency).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.n_rows)
+            .map(|i| self.row(i).1.iter().sum())
+            .collect()
+    }
+
+    /// self − other as a new sparse matrix (dimensions must match; `other`
+    /// may be logically padded when smaller — see `sub_padded`).
+    pub fn sub(&self, other: &Csr) -> Csr {
+        assert_eq!((self.n_rows, self.n_cols), (other.n_rows, other.n_cols));
+        self.sub_padded(other)
+    }
+
+    /// self − P(other) where P pads `other` with zero rows/cols up to
+    /// self's shape.  This is exactly Δ = Â − Ā of paper Eq. (2).
+    pub fn sub_padded(&self, other: &Csr) -> Csr {
+        assert!(other.n_rows <= self.n_rows && other.n_cols <= self.n_cols);
+        let mut coo = crate::sparse::coo::Coo::new(self.n_rows, self.n_cols);
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                coo.push(i, j, v);
+            }
+        }
+        for i in 0..other.n_rows {
+            let (cols, vals) = other.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                coo.push(i, j, -v);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Dense copy (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n_rows, self.n_cols);
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    /// Check structural symmetry (values too).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                if (self.get(j, i) - v).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl LinOp for Csr {
+    fn dim(&self) -> usize {
+        assert_eq!(self.n_rows, self.n_cols);
+        self.n_rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        self.matvec_acc(1.0, x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+    use crate::sparse::coo::Coo;
+
+    fn random_csr(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Csr {
+        let mut coo = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            coo.push(rng.below(rows), rng.below(cols), rng.normal());
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Rng::new(1);
+        let a = random_csr(20, 15, 60, &mut rng);
+        let d = a.to_dense();
+        let x: Vec<f64> = (0..15).map(|i| i as f64 * 0.3 - 1.0).collect();
+        let y = a.matvec(&x);
+        let want = crate::linalg::blas::gemv(&d, &x);
+        for i in 0..20 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_dense_matches() {
+        let mut rng = Rng::new(2);
+        let a = random_csr(25, 18, 80, &mut rng);
+        let b = Mat::randn(18, 7, &mut rng);
+        let got = a.matmul_dense(&b);
+        let want = a.to_dense().matmul(&b);
+        let mut diff = got.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_matmul_dense_matches() {
+        let mut rng = Rng::new(3);
+        let a = random_csr(25, 18, 80, &mut rng);
+        let b = Mat::randn(25, 5, &mut rng);
+        let got = a.t_matmul_dense(&b);
+        let want = a.to_dense().t().matmul(&b);
+        let mut diff = got.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_padded_reconstructs_delta() {
+        // Â (4x4) minus padded A (3x3): exactly paper Eq. (2).
+        let mut a = Coo::new(3, 3);
+        a.push_sym(0, 1, 1.0);
+        a.push_sym(1, 2, 1.0);
+        let a = a.to_csr();
+        let mut ahat = Coo::new(4, 4);
+        ahat.push_sym(0, 1, 1.0); // kept
+        ahat.push_sym(0, 2, 1.0); // added (K block)
+        ahat.push_sym(2, 3, 1.0); // new node edge (G block)
+        let ahat = ahat.to_csr();
+        let delta = ahat.sub_padded(&a);
+        assert_eq!(delta.get(1, 2), -1.0); // removed edge
+        assert_eq!(delta.get(0, 2), 1.0);
+        assert_eq!(delta.get(2, 3), 1.0);
+        assert_eq!(delta.get(0, 1), 0.0);
+        assert!(delta.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn row_sums_are_degrees() {
+        let mut c = Coo::new(3, 3);
+        c.push_sym(0, 1, 1.0);
+        c.push_sym(0, 2, 1.0);
+        let a = c.to_csr();
+        assert_eq!(a.row_sums(), vec![2.0, 1.0, 1.0]);
+    }
+}

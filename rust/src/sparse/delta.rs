@@ -1,0 +1,293 @@
+//! The structured update matrix Δ of paper Eq. (2):
+//!
+//! ```text
+//!       Δ = [ K  G ]   K: N×N topological updates (±1),
+//!           [ Gᵀ C ]   G: N×S old↔new edges, C: S×S new↔new edges.
+//! ```
+//!
+//! Stored as one symmetric (N+S)×(N+S) CSR plus the block split, with the
+//! products the trackers need: Δ·B, Δ₂·Ω, Δ₂ᵀ·M, dense Δ₂.
+
+use crate::linalg::mat::Mat;
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+
+/// Structured graph update (one time step).
+#[derive(Clone, Debug)]
+pub struct Delta {
+    /// N — dimension before the update.
+    pub n_old: usize,
+    /// S — number of newly added nodes.
+    pub s_new: usize,
+    /// Full (N+S)×(N+S) symmetric update matrix.
+    pub full: Csr,
+}
+
+impl Delta {
+    /// Dimension after the update (N+S).
+    pub fn n_new(&self) -> usize {
+        self.n_old + self.s_new
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.full.nnz()
+    }
+
+    /// Assemble from the three blocks.
+    ///
+    /// * `k` — symmetric COO over old nodes (entries ±w; edge add/remove).
+    /// * `g` — COO (old node, new-node-offset) connections.
+    /// * `c` — symmetric COO among new nodes (offsets).
+    pub fn from_blocks(n_old: usize, s_new: usize, k: &Coo, g: &Coo, c: &Coo) -> Delta {
+        assert_eq!((k.rows, k.cols), (n_old, n_old));
+        assert_eq!((g.rows, g.cols), (n_old, s_new));
+        assert_eq!((c.rows, c.cols), (s_new, s_new));
+        let n = n_old + s_new;
+        let mut coo = Coo::new(n, n);
+        for &(i, j, v) in &k.entries {
+            coo.push(i, j, v);
+        }
+        for &(i, j, v) in &g.entries {
+            coo.push(i, n_old + j, v);
+            coo.push(n_old + j, i, v);
+        }
+        for &(i, j, v) in &c.entries {
+            coo.push(n_old + i, n_old + j, v);
+        }
+        Delta { n_old, s_new, full: coo.to_csr() }
+    }
+
+    /// Δ = Â − Ā: difference between the updated matrix and the
+    /// zero-padded old one (Eq. 2).  Works for adjacency or (shifted)
+    /// Laplacian matrices alike.
+    pub fn from_diff(a_old: &Csr, a_new: &Csr) -> Delta {
+        assert!(a_new.n_rows >= a_old.n_rows);
+        let n_old = a_old.n_rows;
+        let s_new = a_new.n_rows - n_old;
+        Delta { n_old, s_new, full: a_new.sub_padded(a_old) }
+    }
+
+    /// Δ · B for a dense (N+S)×m panel.
+    pub fn matmul_dense(&self, b: &Mat) -> Mat {
+        self.full.matmul_dense(b)
+    }
+
+    /// Δ · X̄ where X̄ is the zero-padded eigenvector panel: accepts the
+    /// *unpadded* N×K matrix and returns (N+S)×K (uses that the padded
+    /// rows of X̄ are zero, Prop. 4).
+    pub fn mul_padded(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n_old);
+        let n = self.n_new();
+        let mut out = Mat::zeros(n, x.cols());
+        for j in 0..x.cols() {
+            let xj = x.col(j);
+            let oj = out.col_mut(j);
+            for i in 0..n {
+                let lo = self.full.indptr[i];
+                let hi = self.full.indptr[i + 1];
+                let mut s = 0.0;
+                for p in lo..hi {
+                    let c = self.full.indices[p];
+                    if c < self.n_old {
+                        s += self.full.data[p] * xj[c];
+                    }
+                }
+                oj[i] = s;
+            }
+        }
+        out
+    }
+
+    /// Δ₂ · Ω  (Ω: S×j) — product with the trailing S columns of Δ.
+    pub fn d2_mult(&self, omega: &Mat) -> Mat {
+        assert_eq!(omega.rows(), self.s_new);
+        let n = self.n_new();
+        let mut out = Mat::zeros(n, omega.cols());
+        for j in 0..omega.cols() {
+            let oj = out.col_mut(j);
+            let wj = omega.col(j);
+            for i in 0..n {
+                let lo = self.full.indptr[i];
+                let hi = self.full.indptr[i + 1];
+                let mut s = 0.0;
+                for p in lo..hi {
+                    let c = self.full.indices[p];
+                    if c >= self.n_old {
+                        s += self.full.data[p] * wj[c - self.n_old];
+                    }
+                }
+                oj[i] = s;
+            }
+        }
+        out
+    }
+
+    /// Δ₂ᵀ · M (M: (N+S)×j) — by symmetry of Δ this is the bottom S rows
+    /// of Δ·M, so it costs one sparse pass over those rows only.
+    pub fn d2_t_mult(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows(), self.n_new());
+        let mut out = Mat::zeros(self.s_new, m.cols());
+        for j in 0..m.cols() {
+            let mj = m.col(j);
+            let oj = out.col_mut(j);
+            for (r, orow) in oj.iter_mut().enumerate() {
+                let i = self.n_old + r;
+                let lo = self.full.indptr[i];
+                let hi = self.full.indptr[i + 1];
+                let mut s = 0.0;
+                for p in lo..hi {
+                    s += self.full.data[p] * mj[self.full.indices[p]];
+                }
+                *orow = s;
+            }
+        }
+        out
+    }
+
+    /// Dense Δ₂ ((N+S)×S) — only for small S (G-REST₃'s exact panel).
+    pub fn d2_dense(&self) -> Mat {
+        let n = self.n_new();
+        let mut out = Mat::zeros(n, self.s_new);
+        for i in 0..n {
+            let lo = self.full.indptr[i];
+            let hi = self.full.indptr[i + 1];
+            for p in lo..hi {
+                let c = self.full.indices[p];
+                if c >= self.n_old {
+                    out.set(i, c - self.n_old, self.full.data[p]);
+                }
+            }
+        }
+        out
+    }
+
+    /// The K (topological) block as a dense matrix (tests only).
+    pub fn k_block_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.n_old, self.n_old);
+        for i in 0..self.n_old {
+            let (cols, vals) = self.full.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                if j < self.n_old {
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    /// Build the Fig. 1 example: 4 old nodes, 2 new; edge (1,3) and (3,5)
+    /// added among old+? — here a simpler structured example.
+    fn example() -> Delta {
+        let mut k = Coo::new(4, 4);
+        k.push_sym(0, 2, 1.0); // edge added
+        k.push_sym(1, 3, -1.0); // edge removed
+        let mut g = Coo::new(4, 2);
+        g.push(2, 0, 1.0); // old 2 — new 0
+        g.push(3, 1, 1.0); // old 3 — new 1
+        let mut c = Coo::new(2, 2);
+        c.push_sym(0, 1, 1.0); // new 0 — new 1
+        Delta::from_blocks(4, 2, &k, &g, &c)
+    }
+
+    #[test]
+    fn blocks_land_in_right_places() {
+        let d = example();
+        assert_eq!(d.n_new(), 6);
+        let f = &d.full;
+        assert_eq!(f.get(0, 2), 1.0);
+        assert_eq!(f.get(3, 1), -1.0);
+        assert_eq!(f.get(2, 4), 1.0);
+        assert_eq!(f.get(4, 2), 1.0);
+        assert_eq!(f.get(4, 5), 1.0);
+        assert!(f.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn mul_padded_matches_full_product() {
+        let d = example();
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(4, 3, &mut rng);
+        let xbar = x.pad_rows(2);
+        let want = d.matmul_dense(&xbar);
+        let got = d.mul_padded(&x);
+        let mut diff = got.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn d2_products_match_dense() {
+        let d = example();
+        let mut rng = Rng::new(2);
+        let d2 = d.d2_dense();
+        let omega = Mat::randn(2, 5, &mut rng);
+        let got = d.d2_mult(&omega);
+        let want = d2.matmul(&omega);
+        let mut diff = got.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-12);
+
+        let m = Mat::randn(6, 4, &mut rng);
+        let got_t = d.d2_t_mult(&m);
+        let want_t = d2.t_matmul(&m);
+        let mut diff_t = got_t.clone();
+        diff_t.axpy(-1.0, &want_t);
+        assert!(diff_t.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_diff_round_trips() {
+        // Â = Ā + Δ must hold entry-wise.
+        let mut a_old = Coo::new(3, 3);
+        a_old.push_sym(0, 1, 1.0);
+        a_old.push_sym(1, 2, 1.0);
+        let a_old = a_old.to_csr();
+        let mut a_new = Coo::new(5, 5);
+        a_new.push_sym(0, 1, 1.0);
+        a_new.push_sym(0, 2, 1.0);
+        a_new.push_sym(2, 3, 1.0);
+        a_new.push_sym(3, 4, 1.0);
+        let a_new = a_new.to_csr();
+        let d = Delta::from_diff(&a_old, &a_new);
+        assert_eq!(d.n_old, 3);
+        assert_eq!(d.s_new, 2);
+        // Ā + Δ == Â
+        let dense_sum = {
+            let mut m = a_old.to_dense().pad_rows(2);
+            let mut full = Mat::zeros(5, 5);
+            for i in 0..3 {
+                for j in 0..3 {
+                    full.set(i, j, m.get(i, j));
+                }
+            }
+            let _ = &mut m;
+            full.axpy(1.0, &d.full.to_dense());
+            full
+        };
+        let mut diff = dense_sum;
+        diff.axpy(-1.0, &a_new.to_dense());
+        assert!(diff.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn proposition1_xbar_delta_xbar_only_sees_k_block() {
+        // x̄ᵢᵀ Δ x̄ⱼ = xᵢᵀ K xⱼ (Prop. 1)
+        let d = example();
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(4, 2, &mut rng);
+        let xbar = x.pad_rows(2);
+        let dx = d.matmul_dense(&xbar);
+        let quad = xbar.t_matmul(&dx);
+        let kx = d.k_block_dense().matmul(&x);
+        let want = x.t_matmul(&kx);
+        let mut diff = quad.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-12);
+    }
+}

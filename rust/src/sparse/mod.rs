@@ -1,0 +1,6 @@
+//! Sparse matrix substrate: COO assembly, symmetric CSR operations, and
+//! the structured evolving-graph update matrix Δ of paper Eq. (2).
+
+pub mod coo;
+pub mod csr;
+pub mod delta;

@@ -1,0 +1,82 @@
+//! Adjusted Rand Index (Hubert & Arabie 1985) — the clustering-agreement
+//! metric of paper Sec. 5.5.
+
+/// ARI between two labelings of the same points.  1 = identical
+/// partitions (up to relabeling), ~0 = chance agreement.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n <= 1 {
+        return 1.0;
+    }
+    let ka = a.iter().max().map(|&m| m + 1).unwrap_or(0);
+    let kb = b.iter().max().map(|&m| m + 1).unwrap_or(0);
+    // contingency table
+    let mut table = vec![0u64; ka * kb];
+    let mut ra = vec![0u64; ka];
+    let mut rb = vec![0u64; kb];
+    for i in 0..n {
+        table[a[i] * kb + b[i]] += 1;
+        ra[a[i]] += 1;
+        rb[b[i]] += 1;
+    }
+    let c2 = |x: u64| (x * x.saturating_sub(1)) as f64 / 2.0;
+    let sum_ij: f64 = table.iter().map(|&x| c2(x)).sum();
+    let sum_a: f64 = ra.iter().map(|&x| c2(x)).sum();
+    let sum_b: f64 = rb.iter().map(|&x| c2(x)).sum();
+    let total = c2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn identical_partitions() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relabeled_partitions_are_identical() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_partitions_near_zero() {
+        let mut rng = Rng::new(1);
+        let n = 5000;
+        let a: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.03, "ARI {ari}");
+    }
+
+    #[test]
+    fn partial_agreement_between_zero_and_one() {
+        let a = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let b = vec![0, 0, 0, 1, 1, 1, 1, 0];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari > 0.0 && ari < 1.0, "ARI {ari}");
+    }
+
+    #[test]
+    fn known_value_example() {
+        // classic example: ARI is symmetric
+        let a = vec![0, 0, 1, 1];
+        let b = vec![0, 1, 0, 1];
+        let x = adjusted_rand_index(&a, &b);
+        let y = adjusted_rand_index(&b, &a);
+        assert!((x - y).abs() < 1e-12);
+        assert!(x < 0.01);
+    }
+}

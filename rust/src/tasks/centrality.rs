@@ -1,0 +1,84 @@
+//! Central-node identification via subgraph centrality (paper Sec. 5.4):
+//! scores = exp(A)·1 ≈ X_K exp(Λ_K) X_Kᵀ 1; performance is the overlap
+//! |Ĩ ∩ I| / J between the top-J sets under estimated vs reference
+//! eigenpairs.
+
+use crate::tracking::matfun::subgraph_centrality_scores;
+use crate::tracking::traits::EigenPairs;
+
+/// Indices of the J largest entries of `scores` (ties by index).
+pub fn top_j(scores: &[f64], j: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(j);
+    idx
+}
+
+/// Top-J central nodes from tracked eigenpairs.
+pub fn central_nodes(pairs: &EigenPairs, j: usize) -> Vec<usize> {
+    let scores = subgraph_centrality_scores(pairs);
+    top_j(&scores, j)
+}
+
+/// |a ∩ b| / |a| — the overlap accuracy of Table 3.
+pub fn overlap(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() {
+        return 1.0;
+    }
+    let sb: std::collections::HashSet<usize> = b.iter().copied().collect();
+    let inter = a.iter().filter(|x| sb.contains(x)).count();
+    inter as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracking::traits::init_eigenpairs;
+
+    #[test]
+    fn top_j_basics() {
+        let s = [0.1, 5.0, 3.0, 4.0];
+        assert_eq!(top_j(&s, 2), vec![1, 3]);
+        assert_eq!(top_j(&s, 10), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn overlap_metric() {
+        assert_eq!(overlap(&[1, 2, 3], &[3, 2, 9]), 2.0 / 3.0);
+        assert_eq!(overlap(&[], &[1]), 1.0);
+        assert_eq!(overlap(&[5], &[5]), 1.0);
+    }
+
+    #[test]
+    fn hub_is_most_central_from_tracked_pairs() {
+        // star + path: node 0 is the hub
+        let mut coo = crate::sparse::coo::Coo::new(12, 12);
+        for i in 1..9 {
+            coo.push_sym(0, i, 1.0);
+        }
+        coo.push_sym(9, 10, 1.0);
+        coo.push_sym(10, 11, 1.0);
+        let a = coo.to_csr();
+        let pairs = init_eigenpairs(&a, 4, 1);
+        let top = central_nodes(&pairs, 3);
+        assert_eq!(top[0], 0, "hub must rank first, got {top:?}");
+    }
+
+    #[test]
+    fn tracked_vs_reference_overlap_high_for_good_tracker() {
+        use crate::linalg::rng::Rng;
+        let mut rng = Rng::new(2);
+        let w = crate::graph::generators::power_law_weights(150, 2.3, 500);
+        let g = crate::graph::generators::chung_lu(&w, &mut rng);
+        let a = g.adjacency();
+        let exact = init_eigenpairs(&a, 16, 3);
+        let rough = init_eigenpairs(&a, 16, 4); // different seed, same answer
+        let o = overlap(&central_nodes(&rough, 20), &central_nodes(&exact, 20));
+        assert!(o > 0.95, "overlap {o}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Spectral clustering (paper Sec. 5.5): k-means++ on the rows of the
+//! tracked eigenvector matrix of the (shifted) normalized Laplacian.
+
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Rng;
+
+/// K-means result.
+pub struct KMeansResult {
+    pub labels: Vec<usize>,
+    pub centers: Mat,
+    pub inertia: f64,
+}
+
+/// K-means++ with `n_init` restarts on the *rows* of `x` (n points of
+/// dimension d = x.cols()); returns the best run by inertia.
+pub fn kmeans(x: &Mat, k: usize, n_init: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    assert!(k >= 1);
+    let n = x.rows();
+    let mut best: Option<KMeansResult> = None;
+    for _ in 0..n_init.max(1) {
+        let r = kmeans_single(x, k, max_iter, rng);
+        if best.as_ref().map(|b| r.inertia < b.inertia).unwrap_or(true) {
+            best = Some(r);
+        }
+    }
+    let mut out = best.unwrap();
+    if out.labels.len() != n {
+        out.labels.resize(n, 0);
+    }
+    out
+}
+
+fn row_dist2(x: &Mat, i: usize, center: &[f64]) -> f64 {
+    let d = x.cols();
+    let mut s = 0.0;
+    for c in 0..d {
+        let diff = x.get(i, c) - center[c];
+        s += diff * diff;
+    }
+    s
+}
+
+fn kmeans_single(x: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    let n = x.rows();
+    let d = x.cols();
+    let k = k.min(n.max(1));
+    // k-means++ seeding
+    let mut centers = Mat::zeros(d, k); // column c = center c
+    let first = rng.below(n.max(1));
+    for c in 0..d {
+        centers.set(c, 0, x.get(first, c));
+    }
+    let mut min_d2: Vec<f64> = (0..n).map(|i| row_dist2(x, i, centers.col(0))).collect();
+    for cidx in 1..k {
+        let total: f64 = min_d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut r = rng.uniform() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in min_d2.iter().enumerate() {
+                if r < w {
+                    chosen = i;
+                    break;
+                }
+                r -= w;
+            }
+            chosen
+        };
+        for c in 0..d {
+            centers.set(c, cidx, x.get(pick, c));
+        }
+        for i in 0..n {
+            let nd = row_dist2(x, i, centers.col(cidx));
+            if nd < min_d2[i] {
+                min_d2[i] = nd;
+            }
+        }
+    }
+    // Lloyd iterations
+    let mut labels = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    for _ in 0..max_iter {
+        // assign
+        let mut changed = false;
+        let mut new_inertia = 0.0;
+        for i in 0..n {
+            let mut bestc = 0;
+            let mut bestd = f64::INFINITY;
+            for c in 0..k {
+                let dd = row_dist2(x, i, centers.col(c));
+                if dd < bestd {
+                    bestd = dd;
+                    bestc = c;
+                }
+            }
+            if labels[i] != bestc {
+                labels[i] = bestc;
+                changed = true;
+            }
+            new_inertia += bestd;
+        }
+        inertia = new_inertia;
+        if !changed {
+            break;
+        }
+        // update
+        let mut counts = vec![0usize; k];
+        let mut sums = Mat::zeros(d, k);
+        for i in 0..n {
+            counts[labels[i]] += 1;
+            for c in 0..d {
+                sums.add_at(c, labels[i], x.get(i, c));
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        row_dist2(x, a, centers.col(labels[a]))
+                            .partial_cmp(&row_dist2(x, b, centers.col(labels[b])))
+                            .unwrap()
+                    })
+                    .unwrap_or(0);
+                for cc in 0..d {
+                    centers.set(cc, c, x.get(far, cc));
+                }
+            } else {
+                for cc in 0..d {
+                    centers.set(cc, c, sums.get(cc, c) / counts[c] as f64);
+                }
+            }
+        }
+    }
+    KMeansResult { labels, centers, inertia }
+}
+
+/// Row-normalize an eigenvector block before k-means (standard spectral
+/// clustering post-processing; zero rows left untouched).
+pub fn normalize_rows(x: &Mat) -> Mat {
+    let mut out = x.clone();
+    for i in 0..x.rows() {
+        let mut s = 0.0;
+        for j in 0..x.cols() {
+            s += x.get(i, j) * x.get(i, j);
+        }
+        let nrm = s.sqrt();
+        if nrm > 1e-12 {
+            for j in 0..x.cols() {
+                out.set(i, j, x.get(i, j) / nrm);
+            }
+        }
+    }
+    out
+}
+
+/// Full spectral-clustering step from tracked eigenvectors.
+pub fn spectral_cluster(eigvecs: &Mat, k: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let xn = normalize_rows(eigvecs);
+    kmeans(&xn, k, 5, 100, &mut rng).labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_separates_blobs() {
+        let mut rng = Rng::new(1);
+        let n = 90;
+        let mut x = Mat::zeros(n, 2);
+        for i in 0..n {
+            let c = i / 30;
+            x.set(i, 0, c as f64 * 10.0 + 0.3 * rng.normal());
+            x.set(i, 1, (c as f64 - 1.0) * 8.0 + 0.3 * rng.normal());
+        }
+        let r = kmeans(&x, 3, 4, 100, &mut rng);
+        // all points in one true blob share a label
+        for blob in 0..3 {
+            let l0 = r.labels[blob * 30];
+            for i in 0..30 {
+                assert_eq!(r.labels[blob * 30 + i], l0, "blob {blob}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_k1_and_k_equals_n() {
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(10, 3, &mut rng);
+        let r1 = kmeans(&x, 1, 1, 50, &mut rng);
+        assert!(r1.labels.iter().all(|&l| l == 0));
+        let rn = kmeans(&x, 10, 1, 50, &mut rng);
+        let distinct: std::collections::HashSet<_> = rn.labels.iter().collect();
+        assert!(distinct.len() >= 8); // nearly one point per cluster
+    }
+
+    #[test]
+    fn spectral_clustering_recovers_sbm_blocks() {
+        let mut rng = Rng::new(3);
+        let (g, truth) = crate::graph::generators::sbm(150, 3, 0.25, 0.01, &mut rng);
+        let tn = crate::tracking::laplacian::shifted_normalized_laplacian(&g.adjacency(), 0.0);
+        let pairs = crate::tracking::traits::init_eigenpairs(&tn, 3, 4);
+        let labels = spectral_cluster(&pairs.vectors, 3, 5);
+        let ari = crate::tasks::ari::adjusted_rand_index(&labels, &truth);
+        assert!(ari > 0.9, "ARI {ari}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Downstream learning tasks driven by the tracked eigenembeddings:
+//! central-node identification (Sec. 5.4) and spectral clustering
+//! (Sec. 5.5).
+
+pub mod ari;
+pub mod centrality;
+pub mod clustering;

@@ -1,0 +1,182 @@
+//! Laplacian eigenpair tracking (paper Sec. 4.2).
+//!
+//! The trailing eigenpairs of L (or Lₙ) are the leading eigenpairs of the
+//! shifted operator T = αI − L (resp. Tₙ = 2I − Lₙ = I + D^{-1/2}AD^{-1/2}),
+//! so any adjacency tracker runs unchanged on the shifted matrices.  This
+//! module converts adjacency snapshots to shifted (normalized) Laplacians
+//! and their per-step Δ_T updates, and maps tracked (μ, φ) back to
+//! Laplacian eigenpairs ν = α − μ.
+
+use crate::graph::scenario::DynamicScenario;
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::sparse::delta::Delta;
+
+/// T = αI − (D − A) for an adjacency matrix.
+pub fn shifted_laplacian(adj: &Csr, alpha: f64) -> Csr {
+    let n = adj.n_rows;
+    let deg = adj.row_sums();
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, alpha - deg[i]);
+        let (cols, vals) = adj.row(i);
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            if j != i {
+                coo.push(i, j, v);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Tₙ = 2I − Lₙ = I + D^{-1/2} A D^{-1/2}.
+pub fn shifted_normalized_laplacian(adj: &Csr, _unused: f64) -> Csr {
+    let n = adj.n_rows;
+    let deg = adj.row_sums();
+    let dinv: Vec<f64> = deg
+        .iter()
+        .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+        .collect();
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 1.0);
+        let (cols, vals) = adj.row(i);
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            if j != i {
+                coo.push(i, j, v * dinv[i] * dinv[j]);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// A picked shift α for a whole scenario: 2·d_max over the horizon (the
+/// Gershgorin bound of Sec. 4.2), so the shift never needs to change
+/// mid-run (a changing α would shift old eigenvalues inconsistently).
+pub fn pick_alpha(sc: &DynamicScenario) -> f64 {
+    let final_adj = sc
+        .steps
+        .last()
+        .map(|s| &s.adjacency)
+        .unwrap_or(&sc.initial);
+    let dmax = final_adj
+        .row_sums()
+        .into_iter()
+        .fold(0.0f64, f64::max);
+    2.0 * dmax
+}
+
+/// Convert an adjacency scenario into a shifted-operator scenario:
+/// returns (T⁽⁰⁾, per-step (Δ_T, T⁽ᵗ⁾)).  `shift` is either
+/// [`shifted_laplacian`] (with `alpha`) or
+/// [`shifted_normalized_laplacian`] (alpha ignored).
+pub fn shifted_scenario(
+    sc: &DynamicScenario,
+    shift: fn(&Csr, f64) -> Csr,
+    alpha: f64,
+) -> (Csr, Vec<(Delta, Csr)>) {
+    let t0 = shift(&sc.initial, alpha);
+    let mut prev = t0.clone();
+    let mut steps = Vec::with_capacity(sc.steps.len());
+    for s in &sc.steps {
+        let t = shift(&s.adjacency, alpha);
+        let d = Delta::from_diff(&prev, &t);
+        prev = t.clone();
+        steps.push((d, t));
+    }
+    (t0, steps)
+}
+
+/// Map tracked shifted eigenvalues μ back to Laplacian eigenvalues
+/// ν = α − μ (use α = 2 for the normalized variant).
+pub fn unshift_values(mu: &[f64], alpha: f64) -> Vec<f64> {
+    mu.iter().map(|m| alpha - m).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh::eigh;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn shifted_laplacian_spectrum_relation() {
+        let mut rng = Rng::new(1);
+        let g = crate::graph::generators::erdos_renyi(30, 0.15, &mut rng);
+        let adj = g.adjacency();
+        let alpha = 2.0 * adj.row_sums().into_iter().fold(0.0f64, f64::max);
+        let t = shifted_laplacian(&adj, alpha);
+        // eig(T) = alpha - eig(L), eigenvectors shared
+        let l = g.laplacian();
+        let et = eigh(&t.to_dense());
+        let el = eigh(&l.to_dense());
+        for i in 0..30 {
+            let vt = et.values[i];
+            let vl = el.values[29 - i];
+            assert!((vt - (alpha - vl)).abs() < 1e-8);
+        }
+        // leading eigenvalue of T corresponds to the trailing of L (=0)
+        let top_t = et.values[29];
+        assert!((top_t - alpha).abs() < 1e-8);
+    }
+
+    #[test]
+    fn shifted_normalized_in_range() {
+        let mut rng = Rng::new(2);
+        let g = crate::graph::generators::erdos_renyi(25, 0.2, &mut rng);
+        let tn = shifted_normalized_laplacian(&g.adjacency(), 0.0);
+        let e = eigh(&tn.to_dense());
+        for v in &e.values {
+            assert!(*v > -1e-9 && *v < 2.0 + 1e-9, "eig {v}");
+        }
+        // top eigenvalue is 2 - λmin(Ln) = 2 for each connected component
+        assert!((e.values[24] - 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn shifted_scenario_consistency() {
+        let mut rng = Rng::new(3);
+        let g = crate::graph::generators::erdos_renyi(40, 0.15, &mut rng);
+        let sc = crate::graph::scenario::scenario1_from_static("er", &g, 3);
+        let alpha = pick_alpha(&sc);
+        let (t0, steps) = shifted_scenario(&sc, shifted_laplacian, alpha);
+        assert_eq!(t0.n_rows, sc.initial.n_rows);
+        let mut prev = t0;
+        for (d, t) in &steps {
+            let rebuilt = crate::tracking::traits::apply_delta(&prev, d);
+            let mut diff = rebuilt.to_dense();
+            diff.axpy(-1.0, &t.to_dense());
+            assert!(diff.max_abs() < 1e-10);
+            prev = t.clone();
+        }
+    }
+
+    #[test]
+    fn tracking_smallest_laplacian_eigenpairs_via_grest() {
+        // end-to-end: track trailing eigenpairs of L via T = αI − L
+        use crate::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
+        let mut rng = Rng::new(4);
+        let g = crate::graph::generators::erdos_renyi(60, 0.12, &mut rng);
+        let sc = crate::graph::scenario::scenario1_from_static("er", &g, 3);
+        let alpha = pick_alpha(&sc);
+        let (t0, steps) = shifted_scenario(&sc, shifted_laplacian, alpha);
+        let init = init_eigenpairs(&t0, 4, 5);
+        let mut tracker = GRest::new(init, SubspaceMode::Full);
+        for (d, _) in &steps {
+            tracker.update(d).unwrap();
+        }
+        let final_t = &steps.last().unwrap().1;
+        let exact = eigh(&final_t.to_dense());
+        // the top tracked eigenvalue of T must match 2dmax - 0 = alpha
+        // only for connected graphs; instead compare against exact top
+        let top_exact = exact.values[final_t.n_rows - 1];
+        assert!(
+            (tracker.current().values[0] - top_exact).abs() < 0.05 * top_exact.abs().max(1.0),
+            "{} vs {}",
+            tracker.current().values[0],
+            top_exact
+        );
+        let nu = unshift_values(&tracker.current().values, alpha);
+        assert!(nu[0] < 1.0, "smallest Laplacian eigenvalue ~0, got {}", nu[0]);
+    }
+}

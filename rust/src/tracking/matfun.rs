@@ -1,0 +1,132 @@
+//! Matrix-function tracking (paper Sec. 4.1): h(A) ≈ X_K h(Λ_K) X_Kᵀ
+//! from the tracked truncated eigendecomposition.  Used for subgraph
+//! centrality (h = exp) and provided generically for polynomials, powers
+//! and logs.
+
+use crate::linalg::mat::Mat;
+use crate::tracking::traits::EigenPairs;
+
+/// h(A)·v ≈ X h(Λ) (Xᵀ v).
+pub fn matfun_apply(pairs: &EigenPairs, h: impl Fn(f64) -> f64, v: &[f64]) -> Vec<f64> {
+    let xt_v = crate::linalg::blas::gemv_t(&pairs.vectors, v);
+    let scaled: Vec<f64> = xt_v
+        .iter()
+        .zip(pairs.values.iter())
+        .map(|(c, &l)| c * h(l))
+        .collect();
+    crate::linalg::blas::gemv(&pairs.vectors, &scaled)
+}
+
+/// Dense h(A) ≈ X h(Λ) Xᵀ (small graphs / tests).
+pub fn matfun_dense(pairs: &EigenPairs, h: impl Fn(f64) -> f64) -> Mat {
+    let k = pairs.k();
+    let mut xh = pairs.vectors.clone();
+    for j in 0..k {
+        let s = h(pairs.values[j]);
+        for v in xh.col_mut(j) {
+            *v *= s;
+        }
+    }
+    xh.matmul(&pairs.vectors.t())
+}
+
+/// exp(A)·1 — the subgraph-centrality vector (Sec. 5.4).  Scaling by
+/// e^{-λ₁} is applied for numerical stability; rankings are unaffected.
+pub fn subgraph_centrality_scores(pairs: &EigenPairs) -> Vec<f64> {
+    let lam_max = pairs
+        .values
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    let ones = vec![1.0; pairs.n()];
+    matfun_apply(pairs, |l| (l - lam_max).exp(), &ones)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh::eigh;
+    use crate::linalg::rng::Rng;
+
+    fn full_pairs(a: &Mat) -> EigenPairs {
+        let e = eigh(a);
+        let order = e.leading_by_magnitude(a.rows());
+        let values: Vec<f64> = order.iter().map(|&i| e.values[i]).collect();
+        EigenPairs { values, vectors: e.vectors.select_cols(&order) }
+    }
+
+    #[test]
+    fn identity_function_reconstructs_matrix() {
+        let mut rng = Rng::new(1);
+        let raw = Mat::randn(12, 12, &mut rng);
+        let mut a = raw.clone();
+        a.axpy(1.0, &raw.t());
+        a.scale(0.5);
+        let pairs = full_pairs(&a);
+        let rec = matfun_dense(&pairs, |l| l);
+        let mut diff = rec;
+        diff.axpy(-1.0, &a);
+        assert!(diff.max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn square_function_matches_a_squared() {
+        let mut rng = Rng::new(2);
+        let raw = Mat::randn(10, 10, &mut rng);
+        let mut a = raw.clone();
+        a.axpy(1.0, &raw.t());
+        a.scale(0.5);
+        let pairs = full_pairs(&a);
+        let sq = matfun_dense(&pairs, |l| l * l);
+        let want = a.matmul(&a);
+        let mut diff = sq;
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-7);
+    }
+
+    #[test]
+    fn exp_via_taylor_agreement() {
+        // small-norm symmetric matrix: exp(A)·1 vs 12-term Taylor
+        let mut rng = Rng::new(3);
+        let raw = Mat::randn(8, 8, &mut rng);
+        let mut a = raw.clone();
+        a.axpy(1.0, &raw.t());
+        a.scale(0.05);
+        let pairs = full_pairs(&a);
+        let got = matfun_apply(&pairs, f64::exp, &vec![1.0; 8]);
+        // Taylor
+        let mut term = vec![1.0; 8];
+        let mut sum = vec![1.0; 8];
+        for k in 1..13 {
+            term = crate::linalg::blas::gemv(&a, &term);
+            for t in term.iter_mut() {
+                *t /= k as f64;
+            }
+            for (s, t) in sum.iter_mut().zip(term.iter()) {
+                *s += t;
+            }
+        }
+        for i in 0..8 {
+            assert!((got[i] - sum[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn centrality_ranks_hub_highest() {
+        // star graph: center has the largest subgraph centrality
+        let mut coo = crate::sparse::coo::Coo::new(7, 7);
+        for i in 1..7 {
+            coo.push_sym(0, i, 1.0);
+        }
+        let a = coo.to_csr().to_dense();
+        let pairs = full_pairs(&a);
+        let scores = subgraph_centrality_scores(&pairs);
+        let max_idx = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Eigenpair tracking algorithms.
+//!
+//! Baselines from the literature (Sec. 2.3 of the paper): TRIP-Basic,
+//! TRIP, Residual Modes, IASC, TIMERS; the proposed Rayleigh-Ritz family
+//! G-REST₂ / G-REST₃ / G-REST_RSVD (Alg. 2); a full-recompute reference
+//! (`eigs` stand-in); and the Laplacian / matrix-function extensions of
+//! Sec. 4.
+
+pub mod grest;
+pub mod iasc;
+pub mod laplacian;
+pub mod matfun;
+pub mod reference;
+pub mod residual_modes;
+pub mod timers;
+pub mod traits;
+pub mod trip;
+pub mod trip_basic;
+
+pub use grest::{GRest, SubspaceMode};
+pub use traits::{init_eigenpairs, EigTracker, EigenPairs};

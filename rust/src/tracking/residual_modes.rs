@@ -1,0 +1,174 @@
+//! Residual Modes (Mitz, Sharon & Shkolnisky 2019; paper Sec. 2.3.3):
+//! TRIP-Basic plus a rank-one correction per eigenvector from the
+//! untracked spectrum, with the unknown eigenvalues replaced by a scalar
+//! μ (default 0, matching the paper's experiments).
+
+use crate::linalg::blas;
+use crate::linalg::mat::Mat;
+use crate::sparse::delta::Delta;
+use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
+
+const GAP_EPS: f64 = 1e-10;
+
+pub struct ResidualModes {
+    state: EigenPairs,
+    /// μ — stand-in for the untracked eigenvalues λ_{K+1..N}.
+    pub mu: f64,
+    flops: u64,
+}
+
+impl ResidualModes {
+    pub fn new(initial: EigenPairs) -> ResidualModes {
+        ResidualModes { state: initial, mu: 0.0, flops: 0 }
+    }
+
+    pub fn with_mu(initial: EigenPairs, mu: f64) -> ResidualModes {
+        ResidualModes { state: initial, mu, flops: 0 }
+    }
+}
+
+impl EigTracker for ResidualModes {
+    fn name(&self) -> String {
+        "RM".into()
+    }
+
+    fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {
+        let k = self.state.k();
+        let n_old = self.state.n();
+        let x = &self.state.vectors;
+        let dxk = delta.mul_padded(x); // (N+S)×K = ΔX̄
+        let b = interaction_matrix(x, &dxk);
+        self.flops =
+            (4 * n_old * k * k) as u64 + 2 * delta.nnz() as u64 * k as u64;
+
+        let mut new_vals = Vec::with_capacity(k);
+        for j in 0..k {
+            new_vals.push(self.state.values[j] + b.get(j, j));
+        }
+
+        // Residual block: R = (I − X̄X̄ᵀ) Δ X̄  — note the bottom S rows of
+        // ΔX̄ (the Gᵀx_j part) pass through untouched (Prop. 1 proof).
+        let xbar = x.pad_rows(delta.s_new);
+        let resid = blas::project_out(&xbar, &dxk); // (N+S)×K
+
+        let n_new = delta.n_new();
+        let mut new_vecs = Mat::zeros(n_new, k);
+        for j in 0..k {
+            {
+                let col = new_vecs.col_mut(j);
+                col[..n_old].copy_from_slice(x.col(j));
+            }
+            // tracked-spectrum corrections (same as TRIP-Basic)
+            for i in 0..k {
+                if i == j {
+                    continue;
+                }
+                let gap = self.state.values[j] - self.state.values[i];
+                if gap.abs() < GAP_EPS {
+                    continue;
+                }
+                let coeff = b.get(i, j) / gap;
+                let xi = x.col(i).to_vec();
+                let col = new_vecs.col_mut(j);
+                for (r, &v) in xi.iter().enumerate() {
+                    col[r] += coeff * v;
+                }
+            }
+            // residual-mode correction: + (λ_j − μ)^{-1} R[:, j]
+            let gap = self.state.values[j] - self.mu;
+            if gap.abs() > GAP_EPS {
+                let coeff = 1.0 / gap;
+                let rj = resid.col(j).to_vec();
+                let col = new_vecs.col_mut(j);
+                for (r, &v) in rj.iter().enumerate() {
+                    col[r] += coeff * v;
+                }
+            }
+            let nrm = blas::nrm2(new_vecs.col(j)).max(1e-300);
+            for v in new_vecs.col_mut(j) {
+                *v /= nrm;
+            }
+        }
+        self.state = EigenPairs { values: new_vals, vectors: new_vecs };
+        Ok(())
+    }
+
+    fn current(&self) -> &EigenPairs {
+        &self.state
+    }
+
+    fn last_step_flops(&self) -> u64 {
+        self.flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::tracking::traits::{apply_delta, init_eigenpairs};
+
+    fn banded(n: usize) -> crate::sparse::csr::Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, (n - i) as f64);
+        }
+        for i in 0..n - 1 {
+            coo.push_sym(i, i + 1, 0.5);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn residual_correction_improves_on_trip_basic() {
+        use crate::tracking::trip_basic::TripBasic;
+        let a = banded(20);
+        let init = init_eigenpairs(&a, 3, 1);
+        let mut rm = ResidualModes::new(init.clone());
+        let mut tb = TripBasic::new(init);
+        // perturbation coupling tracked and untracked directions
+        let mut k = Coo::new(20, 20);
+        k.push_sym(0, 15, 0.8);
+        k.push_sym(1, 18, 0.6);
+        let d = Delta::from_blocks(20, 0, &k, &Coo::new(20, 0), &Coo::new(0, 0));
+        rm.update(&d).unwrap();
+        tb.update(&d).unwrap();
+        let exact = crate::linalg::eigh::eigh(&apply_delta(&a, &d).to_dense());
+        let order = exact.leading_by_magnitude(3);
+        let mut rm_better = 0;
+        for j in 0..3 {
+            let ov_rm = blas::dot(rm.current().vectors.col(j), exact.vectors.col(order[j])).abs();
+            let ov_tb = blas::dot(tb.current().vectors.col(j), exact.vectors.col(order[j])).abs();
+            if ov_rm >= ov_tb - 1e-12 {
+                rm_better += 1;
+            }
+        }
+        assert!(rm_better >= 2, "RM better on {rm_better}/3");
+    }
+
+    #[test]
+    fn expansion_gives_nonzero_new_rows() {
+        // unlike TRIP, RM's residual term sees Gᵀx_j (Prop. 1 proof)
+        let a = banded(10);
+        let init = init_eigenpairs(&a, 2, 2);
+        let mut rm = ResidualModes::new(init);
+        let kb = Coo::new(10, 10);
+        let mut g = Coo::new(10, 1);
+        g.push(0, 0, 1.0);
+        let c = Coo::new(1, 1);
+        let d = Delta::from_blocks(10, 1, &kb, &g, &c);
+        rm.update(&d).unwrap();
+        assert!(
+            rm.current().vectors.get(10, 0).abs() > 1e-8,
+            "new-node row should receive residual mass"
+        );
+    }
+
+    #[test]
+    fn mu_zero_matches_paper_default() {
+        let a = banded(8);
+        let init = init_eigenpairs(&a, 2, 3);
+        let rm = ResidualModes::new(init);
+        assert_eq!(rm.mu, 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! The tracker interface shared by every algorithm, plus initialization
+//! helpers.
+
+use crate::linalg::lanczos::{lanczos_topk, LinOp};
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Rng;
+use crate::sparse::csr::Csr;
+use crate::sparse::delta::Delta;
+
+/// K tracked eigenpairs, ordered by |λ| descending (paper convention).
+#[derive(Clone)]
+pub struct EigenPairs {
+    pub values: Vec<f64>,
+    /// N×K matrix, column j is the eigenvector of `values[j]`.
+    pub vectors: Mat,
+}
+
+impl EigenPairs {
+    pub fn k(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.vectors.rows()
+    }
+
+    /// Rank-K reconstruction error ‖A − XΛXᵀ‖ restricted to the residual
+    /// of each tracked pair: max_j ‖A x_j − λ_j x_j‖.
+    pub fn max_residual(&self, a: &Csr) -> f64 {
+        let ax = a.matmul_dense(&self.vectors);
+        let mut worst = 0.0f64;
+        for j in 0..self.k() {
+            let mut r = 0.0;
+            for i in 0..self.n() {
+                let d = ax.get(i, j) - self.values[j] * self.vectors.get(i, j);
+                r += d * d;
+            }
+            worst = worst.max(r.sqrt());
+        }
+        worst
+    }
+}
+
+/// A tracker consumes a stream of structured updates Δ⁽ᵗ⁾ and maintains
+/// an estimate of the K leading eigenpairs.
+pub trait EigTracker {
+    /// Display name (used by the experiment harness / tables).
+    fn name(&self) -> String;
+
+    /// Apply one graph update.
+    fn update(&mut self, delta: &Delta) -> anyhow::Result<()>;
+
+    /// Current eigenpair estimate.
+    fn current(&self) -> &EigenPairs;
+
+    /// Approximate per-step FLOP count for complexity reporting
+    /// (optional; 0 when not tracked).
+    fn last_step_flops(&self) -> u64 {
+        0
+    }
+}
+
+/// Compute the initial K leading eigenpairs of A⁽⁰⁾ with Lanczos
+/// (the paper's line 3 of Alg. 2; "any direct eigendecomposition").
+pub fn init_eigenpairs(a0: &Csr, k: usize, seed: u64) -> EigenPairs {
+    let mut rng = Rng::new(seed);
+    let max_basis = (4 * k + 40).min(a0.n_rows);
+    let (values, vectors) = lanczos_topk(a0, k, 1e-10, max_basis, &mut rng);
+    EigenPairs { values, vectors }
+}
+
+/// Same, for an arbitrary symmetric operator.
+pub fn init_eigenpairs_op(op: &dyn LinOp, k: usize, seed: u64) -> EigenPairs {
+    let mut rng = Rng::new(seed);
+    let max_basis = (4 * k + 40).min(op.dim());
+    let (values, vectors) = lanczos_topk(op, k, 1e-10, max_basis, &mut rng);
+    EigenPairs { values, vectors }
+}
+
+/// Shared helper: X̄ᵀ Δ X̄ = Xᵀ (ΔX̄)[0..N] — the K×K interaction matrix
+/// every perturbation method needs (only sees the K block, Prop. 1).
+pub fn interaction_matrix(x: &Mat, dxk: &Mat) -> Mat {
+    let n = x.rows();
+    let k = x.cols();
+    let mut b = Mat::zeros(k, k);
+    for j in 0..k {
+        let dj = dxk.col(j);
+        for i in 0..k {
+            b.set(i, j, crate::linalg::blas::dot(x.col(i), &dj[..n]));
+        }
+    }
+    b
+}
+
+/// Pad an adjacency with `delta`, producing Â = Ā + Δ (used by trackers
+/// that must retain the explicit matrix: TIMERS, the reference).
+pub fn apply_delta(a: &Csr, delta: &Delta) -> Csr {
+    let n = delta.n_new();
+    assert_eq!(a.n_rows, delta.n_old);
+    let mut coo = crate::sparse::coo::Coo::new(n, n);
+    for i in 0..a.n_rows {
+        let (cols, vals) = a.row(i);
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            coo.push(i, j, v);
+        }
+    }
+    for i in 0..n {
+        let (cols, vals) = delta.full.row(i);
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            coo.push(i, j, v);
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    #[test]
+    fn init_matches_dense() {
+        let mut coo = Coo::new(10, 10);
+        for i in 0..9 {
+            coo.push_sym(i, i + 1, 1.0);
+        }
+        coo.push_sym(0, 9, 1.0);
+        let a = coo.to_csr();
+        let pairs = init_eigenpairs(&a, 3, 1);
+        let dense = crate::linalg::eigh::eigh(&a.to_dense());
+        let order = dense.leading_by_magnitude(3);
+        for j in 0..3 {
+            assert!((pairs.values[j].abs() - dense.values[order[j]].abs()).abs() < 1e-8);
+        }
+        assert!(pairs.max_residual(&a) < 1e-7);
+    }
+
+    #[test]
+    fn apply_delta_reconstructs() {
+        let mut a = Coo::new(3, 3);
+        a.push_sym(0, 1, 1.0);
+        let a = a.to_csr();
+        let mut k = Coo::new(3, 3);
+        k.push_sym(0, 1, -1.0);
+        k.push_sym(1, 2, 1.0);
+        let g = Coo::new(3, 1);
+        let mut c = Coo::new(1, 1);
+        let _ = &mut c;
+        let d = Delta::from_blocks(3, 1, &k, &g, &c);
+        let ahat = apply_delta(&a, &d);
+        assert_eq!(ahat.n_rows, 4);
+        assert_eq!(ahat.get(0, 1), 0.0);
+        assert_eq!(ahat.get(1, 2), 1.0);
+    }
+
+    #[test]
+    fn interaction_matrix_matches_dense() {
+        use crate::linalg::rng::Rng;
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(6, 3, &mut rng);
+        let mut k = Coo::new(6, 6);
+        k.push_sym(0, 3, 1.0);
+        k.push_sym(2, 4, -1.0);
+        let g = Coo::new(6, 2);
+        let c = Coo::new(2, 2);
+        let d = Delta::from_blocks(6, 2, &k, &g, &c);
+        let dxk = d.mul_padded(&x);
+        let b = interaction_matrix(&x, &dxk);
+        // dense check
+        let xbar = x.pad_rows(2);
+        let want = xbar.t_matmul(&d.full.to_dense().matmul(&xbar));
+        let mut diff = b.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-12);
+    }
+}

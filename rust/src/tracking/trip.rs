@@ -1,0 +1,174 @@
+//! TRIP (Chen & Tong 2015; paper Sec. 2.3.2): like TRIP-Basic but the
+//! eigenvector coefficients solve the K×K system of Eq. (7), delaying the
+//! eigenvector computation until the updated eigenvalue λ̃_j is available.
+
+use crate::linalg::lu;
+use crate::linalg::mat::Mat;
+use crate::sparse::delta::Delta;
+use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
+
+pub struct Trip {
+    state: EigenPairs,
+    flops: u64,
+}
+
+impl Trip {
+    pub fn new(initial: EigenPairs) -> Trip {
+        Trip { state: initial, flops: 0 }
+    }
+}
+
+impl EigTracker for Trip {
+    fn name(&self) -> String {
+        "TRIP".into()
+    }
+
+    fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {
+        let k = self.state.k();
+        let x = &self.state.vectors;
+        let dxk = delta.mul_padded(x);
+        let b = interaction_matrix(x, &dxk); // X̄ᵀΔX̄
+        self.flops = (2 * x.rows() * k * k + k * k * k) as u64 + 2 * delta.nnz() as u64 * k as u64;
+
+        let mut new_vals = Vec::with_capacity(k);
+        for j in 0..k {
+            new_vals.push(self.state.values[j] + b.get(j, j));
+        }
+        let n_new = delta.n_new();
+        let mut new_vecs = Mat::zeros(n_new, k);
+        for j in 0..k {
+            // (W_j − B) b_j = B[:, j]  with W_j = diag(λ̃_j − λ_i)   (Eq. 7)
+            let mut lhs = Mat::zeros(k, k);
+            for i in 0..k {
+                for p in 0..k {
+                    let w = if i == p { new_vals[j] - self.state.values[i] } else { 0.0 };
+                    lhs.set(i, p, w - b.get(i, p));
+                }
+            }
+            let rhs: Vec<f64> = (0..k).map(|i| b.get(i, j)).collect();
+            let coeffs = match lu::solve(&lhs, &rhs) {
+                Some(c) => c,
+                None => {
+                    // singular system (e.g. Δ=0): fall back to b_j = e_j,
+                    // i.e. keep the old eigenvector.
+                    let mut e = vec![0.0; k];
+                    e[j] = 1.0;
+                    e
+                }
+            };
+            // x̃_j = X̄ b_j; write b_j = e_j + correction so a zero solve
+            // reproduces x̄_j exactly.
+            {
+                let col = new_vecs.col_mut(j);
+                col[..x.rows()].copy_from_slice(x.col(j));
+            }
+            for i in 0..k {
+                let c = if i == j { coeffs[i] } else { coeffs[i] };
+                if i == j {
+                    continue; // e_j already placed; coeffs[j] folds into scaling
+                }
+                if c != 0.0 {
+                    let xi = x.col(i).to_vec();
+                    let col = new_vecs.col_mut(j);
+                    for (r, &v) in xi.iter().enumerate() {
+                        col[r] += c * v;
+                    }
+                }
+            }
+            let nrm = crate::linalg::blas::nrm2(new_vecs.col(j)).max(1e-300);
+            for v in new_vecs.col_mut(j) {
+                *v /= nrm;
+            }
+        }
+        self.state = EigenPairs { values: new_vals, vectors: new_vecs };
+        Ok(())
+    }
+
+    fn current(&self) -> &EigenPairs {
+        &self.state
+    }
+
+    fn last_step_flops(&self) -> u64 {
+        self.flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::tracking::traits::{apply_delta, init_eigenpairs};
+
+    fn diag_dominant(n: usize) -> crate::sparse::csr::Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, (n - i) as f64 * 3.0);
+        }
+        for i in 0..n - 1 {
+            coo.push_sym(i, i + 1, 0.3);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn zero_delta_keeps_state() {
+        let a = diag_dominant(9);
+        let init = init_eigenpairs(&a, 3, 1);
+        let v0 = init.vectors.clone();
+        let mut t = Trip::new(init);
+        let d = Delta::from_blocks(9, 0, &Coo::new(9, 9), &Coo::new(9, 0), &Coo::new(0, 0));
+        t.update(&d).unwrap();
+        let mut diff = t.current().vectors.clone();
+        diff.axpy(-1.0, &v0);
+        assert!(diff.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn tracks_small_topological_update() {
+        let a = diag_dominant(10);
+        let init = init_eigenpairs(&a, 4, 2);
+        let mut t = Trip::new(init);
+        let mut k = Coo::new(10, 10);
+        k.push_sym(0, 2, 0.05);
+        k.push_sym(1, 3, -0.02);
+        let d = Delta::from_blocks(10, 0, &k, &Coo::new(10, 0), &Coo::new(0, 0));
+        t.update(&d).unwrap();
+        let exact = crate::linalg::eigh::eigh(&apply_delta(&a, &d).to_dense());
+        let order = exact.leading_by_magnitude(4);
+        for j in 0..4 {
+            assert!(
+                (t.current().values[j] - exact.values[order[j]]).abs() < 5e-3,
+                "λ{j}: {} vs {}",
+                t.current().values[j],
+                exact.values[order[j]]
+            );
+            let overlap = crate::linalg::blas::dot(
+                t.current().vectors.col(j),
+                exact.vectors.col(order[j]),
+            )
+            .abs();
+            assert!(overlap > 0.995, "vector {j} overlap {overlap}");
+        }
+    }
+
+    #[test]
+    fn trip_at_least_as_good_as_trip_basic_on_vectors() {
+        use crate::tracking::trip_basic::TripBasic;
+        let a = diag_dominant(12);
+        let init = init_eigenpairs(&a, 3, 3);
+        let mut t1 = Trip::new(init.clone());
+        let mut t0 = TripBasic::new(init);
+        let mut k = Coo::new(12, 12);
+        k.push_sym(0, 5, 0.4);
+        k.push_sym(2, 7, 0.3);
+        k.push_sym(1, 4, -0.2);
+        let d = Delta::from_blocks(12, 0, &k, &Coo::new(12, 0), &Coo::new(0, 0));
+        t1.update(&d).unwrap();
+        t0.update(&d).unwrap();
+        let exact = crate::linalg::eigh::eigh(&apply_delta(&a, &d).to_dense());
+        let order = exact.leading_by_magnitude(1);
+        let ov1 = crate::linalg::blas::dot(t1.current().vectors.col(0), exact.vectors.col(order[0])).abs();
+        let ov0 = crate::linalg::blas::dot(t0.current().vectors.col(0), exact.vectors.col(order[0])).abs();
+        assert!(ov1 >= ov0 - 5e-3, "TRIP {ov1} vs TRIP-Basic {ov0}");
+    }
+}

@@ -1,0 +1,165 @@
+//! TRIP-Basic (Chen & Tong 2015; paper Sec. 2.3.1): first-order
+//! perturbation update restricted to the K tracked eigenpairs,
+//! Eqs. (5)–(6).
+
+use crate::linalg::mat::Mat;
+use crate::sparse::delta::Delta;
+use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
+
+/// Minimum eigenvalue gap before a correction term is skipped (the
+/// first-order formula assumes simple eigenvalues).
+const GAP_EPS: f64 = 1e-10;
+
+pub struct TripBasic {
+    state: EigenPairs,
+    flops: u64,
+}
+
+impl TripBasic {
+    pub fn new(initial: EigenPairs) -> TripBasic {
+        TripBasic { state: initial, flops: 0 }
+    }
+}
+
+impl EigTracker for TripBasic {
+    fn name(&self) -> String {
+        "TRIP-Basic".into()
+    }
+
+    fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {
+        let k = self.state.k();
+        let x = &self.state.vectors; // N×K (old dimension)
+        let dxk = delta.mul_padded(x); // (N+S)×K
+        let b = interaction_matrix(x, &dxk); // K×K, = X̄ᵀΔX̄
+        self.flops = (2 * x.rows() * k * k) as u64 + 2 * delta.nnz() as u64 * k as u64;
+
+        // eigenvalues: λ̃_j = λ_j + B_jj           (Eq. 5)
+        let mut new_vals = Vec::with_capacity(k);
+        for j in 0..k {
+            new_vals.push(self.state.values[j] + b.get(j, j));
+        }
+        // eigenvectors: x̃_j = x̄_j + Σ_{i≠j} B_ij/(λ_j−λ_i) x̄_i   (Eq. 6)
+        // (lives in the padded space; new-node rows stay zero — Prop. 1)
+        let n_new = delta.n_new();
+        let mut new_vecs = Mat::zeros(n_new, k);
+        for j in 0..k {
+            {
+                let col = new_vecs.col_mut(j);
+                col[..x.rows()].copy_from_slice(x.col(j));
+            }
+            for i in 0..k {
+                if i == j {
+                    continue;
+                }
+                let gap = self.state.values[j] - self.state.values[i];
+                if gap.abs() < GAP_EPS {
+                    continue;
+                }
+                let coeff = b.get(i, j) / gap;
+                let (src_start, _) = (0usize, 0usize);
+                let _ = src_start;
+                let xi = x.col(i).to_vec();
+                let col = new_vecs.col_mut(j);
+                for (r, &v) in xi.iter().enumerate() {
+                    col[r] += coeff * v;
+                }
+            }
+            // normalize
+            let nrm = crate::linalg::blas::nrm2(new_vecs.col(j)).max(1e-300);
+            for v in new_vecs.col_mut(j) {
+                *v /= nrm;
+            }
+        }
+        self.state = EigenPairs { values: new_vals, vectors: new_vecs };
+        Ok(())
+    }
+
+    fn current(&self) -> &EigenPairs {
+        &self.state
+    }
+
+    fn last_step_flops(&self) -> u64 {
+        self.flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::tracking::traits::init_eigenpairs;
+
+    /// ring graph adjacency
+    fn ring(n: usize) -> crate::sparse::csr::Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push_sym(i, (i + 1) % n, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn zero_delta_is_fixed_point() {
+        let a = ring(12);
+        let init = init_eigenpairs(&a, 3, 1);
+        let vals0 = init.values.clone();
+        let mut t = TripBasic::new(init);
+        let d = Delta::from_blocks(12, 0, &Coo::new(12, 12), &Coo::new(12, 0), &Coo::new(0, 0));
+        t.update(&d).unwrap();
+        for (a, b) in t.current().values.iter().zip(vals0.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn corollary2_pure_expansion_leaves_eigenvalues() {
+        // K = 0 block ⇒ λ̃ = λ exactly (paper Corollary 2)
+        let a = ring(10);
+        let init = init_eigenpairs(&a, 3, 2);
+        let vals0 = init.values.clone();
+        let mut t = TripBasic::new(init);
+        let k = Coo::new(10, 10);
+        let mut g = Coo::new(10, 2);
+        g.push(0, 0, 1.0);
+        g.push(5, 1, 1.0);
+        let mut c = Coo::new(2, 2);
+        c.push_sym(0, 1, 1.0);
+        let d = Delta::from_blocks(10, 2, &k, &g, &c);
+        t.update(&d).unwrap();
+        assert_eq!(t.current().n(), 12);
+        for (a, b) in t.current().values.iter().zip(vals0.iter()) {
+            assert!((a - b).abs() < 1e-12, "Corollary 2 violated");
+        }
+        // new-node rows of the eigenvectors are zero (Prop. 1)
+        for j in 0..3 {
+            assert_eq!(t.current().vectors.get(10, j), 0.0);
+            assert_eq!(t.current().vectors.get(11, j), 0.0);
+        }
+    }
+
+    #[test]
+    fn small_perturbation_tracks_first_order() {
+        // weighted perturbation of a diagonal-ish matrix with clear gaps
+        let mut coo = Coo::new(8, 8);
+        for i in 0..8 {
+            coo.push(i, i, (8 - i) as f64 * 2.0);
+        }
+        let a = coo.to_csr();
+        let init = init_eigenpairs(&a, 3, 3);
+        let mut t = TripBasic::new(init);
+        let mut k = Coo::new(8, 8);
+        k.push_sym(0, 1, 0.01);
+        let d = Delta::from_blocks(8, 0, &k, &Coo::new(8, 0), &Coo::new(0, 0));
+        t.update(&d).unwrap();
+        // exact: eigh of A+Δ
+        let ahat = crate::tracking::traits::apply_delta(&a, &d);
+        let exact = crate::linalg::eigh::eigh(&ahat.to_dense());
+        let order = exact.leading_by_magnitude(3);
+        for j in 0..3 {
+            assert!(
+                (t.current().values[j] - exact.values[order[j]]).abs() < 1e-3,
+                "λ{j}"
+            );
+        }
+    }
+}

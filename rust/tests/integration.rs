@@ -1,0 +1,222 @@
+//! Cross-module integration tests: scenario → trackers → metrics, the
+//! coordinator service under streams, and Laplacian-tracking paths.
+
+use grest::eval::angle::mean_angle;
+use grest::graph::datasets;
+use grest::graph::generators;
+use grest::graph::scenario::scenario1_from_static;
+use grest::linalg::rng::Rng;
+use grest::tracking::traits::apply_delta;
+use grest::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
+
+#[test]
+fn dataset_scenario_tracking_pipeline() {
+    // registry dataset → scenario → track → accuracy within sane bounds
+    let spec = {
+        let mut s = datasets::by_name("CM-Collab").unwrap();
+        s.nodes = 400;
+        s.edges = 1600;
+        s
+    };
+    let mut rng = Rng::new(1);
+    let sc = datasets::scenario_for(&spec, Some(5), &mut rng);
+    let k = 16;
+    let init = init_eigenpairs(&sc.initial, k, 2);
+    let mut tracker = GRest::new(init, SubspaceMode::Full);
+    for (t, step) in sc.steps.iter().enumerate() {
+        tracker.update(&step.delta).unwrap();
+        let reference = init_eigenpairs(&step.adjacency, k, 50 + t as u64);
+        let psi = mean_angle(tracker.current(), &reference, 3);
+        assert!(psi < 0.6, "step {t}: psi {psi}");
+    }
+}
+
+#[test]
+fn accuracy_ordering_matches_paper() {
+    // G-REST3 ≤ G-REST2 ≤ TRIP in mean ψ on an expansion-heavy scenario
+    // (averaged over seeds to avoid single-draw flukes)
+    let mut sums = [0.0f64; 3];
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(100 + seed);
+        let w = generators::power_law_weights(300, 2.3, 1200);
+        let g = generators::chung_lu(&w, &mut rng);
+        let sc = scenario1_from_static("t", &g, 4);
+        let k = 12;
+        let reference = grest::eval::harness::reference_run(&sc, k, 5 + seed);
+        let roster = grest::eval::harness::paper_trackers(false, 8);
+        let results =
+            grest::eval::harness::run_trackers(&sc, &reference, k, 4, &roster, 5 + seed);
+        let get = |n: &str| {
+            results
+                .iter()
+                .find(|r| r.name == n)
+                .unwrap()
+                .grand_mean_angle(4)
+        };
+        sums[0] += get("TRIP");
+        sums[1] += get("G-REST2");
+        sums[2] += get("G-REST3");
+    }
+    assert!(sums[2] <= sums[1] + 1e-9, "G-REST3 {} vs G-REST2 {}", sums[2], sums[1]);
+    assert!(sums[2] <= sums[0] + 1e-9, "G-REST3 {} vs TRIP {}", sums[2], sums[0]);
+}
+
+#[test]
+fn randomized_stream_delta_consistency() {
+    // property: for random event sequences, the builder's emitted deltas
+    // always reconstruct the adjacency exactly (Â = Ā + Δ at every batch)
+    use grest::graph::stream::{DeltaBuilder, GraphEvent};
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let mut builder = DeltaBuilder::new();
+        let mut adjacency = grest::sparse::csr::Csr::empty(0, 0);
+        for _batch in 0..6 {
+            let n_ev = 1 + rng.below(12);
+            for _ in 0..n_ev {
+                let a = rng.below(30) as u64;
+                let b = rng.below(40) as u64;
+                if rng.flip(0.75) {
+                    builder.push(GraphEvent::AddEdge(a, b));
+                } else {
+                    builder.push(GraphEvent::RemoveEdge(a, b));
+                }
+            }
+            if let Some((delta, adj)) = builder.emit(&adjacency) {
+                let rebuilt = apply_delta(&adjacency, &delta);
+                let mut diff = rebuilt.to_dense();
+                diff.axpy(-1.0, &adj.to_dense());
+                assert!(diff.max_abs() < 1e-12, "seed {seed}");
+                assert!(adj.is_symmetric(0.0));
+                adjacency = adj;
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_tracker_invariants() {
+    // property: over random update sequences, G-REST keeps orthonormal
+    // eigenvectors and its Ritz values within the spectral bounds of Â
+    use grest::sparse::coo::Coo;
+    use grest::sparse::delta::Delta;
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(40 + seed);
+        let w = generators::power_law_weights(120, 2.4, 500);
+        let g = generators::chung_lu(&w, &mut rng);
+        let mut a = g.adjacency();
+        let k = 8;
+        let init = init_eigenpairs(&a, k, seed);
+        let mut tracker = GRest::new(init, SubspaceMode::Rsvd { l: 6, p: 4 });
+        for step in 0..4 {
+            let n = a.n_rows;
+            let s = rng.below(4);
+            let mut kb = Coo::new(n, n);
+            for _ in 0..10 {
+                let (u, v) = (rng.below(n), rng.below(n));
+                if u != v && kb.entries.iter().all(|&(a0, b0, _)| (a0, b0) != (u, v)) {
+                    let sign = if a.get(u, v) > 0.0 { -1.0 } else { 1.0 };
+                    kb.push_sym(u, v, sign);
+                }
+            }
+            let mut gb = Coo::new(n, s);
+            for j in 0..s {
+                gb.push(rng.below(n), j, 1.0);
+            }
+            let d = Delta::from_blocks(n, s, &kb, &gb, &Coo::new(s, s));
+            tracker.update(&d).unwrap();
+            a = apply_delta(&a, &d);
+            // orthonormality
+            let v = &tracker.current().vectors;
+            let gm = v.t_matmul(v);
+            let mut eye = grest::Mat::eye(k);
+            eye.axpy(-1.0, &gm);
+            assert!(eye.max_abs() < 1e-7, "seed {seed} step {step}");
+            // Ritz values within ‖Â‖₁ bound
+            let bound = (0..a.n_rows)
+                .map(|i| a.row(i).1.iter().map(|x| x.abs()).sum::<f64>())
+                .fold(0.0f64, f64::max)
+                + 1e-9;
+            for &th in &tracker.current().values {
+                assert!(th.abs() <= bound, "Ritz {th} beyond bound {bound}");
+            }
+        }
+    }
+}
+
+#[test]
+fn laplacian_clustering_end_to_end() {
+    let mut rng = Rng::new(7);
+    let sc = grest::graph::scenario::sbm_expansion(300, 3, 0.1, 0.005, 260, 10, 4, &mut rng);
+    let (t0, steps) = grest::tracking::laplacian::shifted_scenario(
+        &sc,
+        grest::tracking::laplacian::shifted_normalized_laplacian,
+        0.0,
+    );
+    let init = init_eigenpairs(&t0, 3, 8);
+    let mut tracker = GRest::new(init, SubspaceMode::Full);
+    let labels = sc.labels_per_step.as_ref().unwrap();
+    for (t, (delta, _)) in steps.iter().enumerate() {
+        tracker.update(delta).unwrap();
+        let est =
+            grest::tasks::clustering::spectral_cluster(&tracker.current().vectors, 3, 1);
+        let ari = grest::tasks::ari::adjusted_rand_index(&est, &labels[t + 1]);
+        assert!(ari > 0.8, "step {t}: ARI {ari}");
+    }
+}
+
+#[test]
+fn coordinator_survives_burst_and_preserves_order() {
+    use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
+    use grest::graph::stream::GraphEvent;
+    let mut rng = Rng::new(3);
+    let g = generators::erdos_renyi(100, 0.08, &mut rng);
+    let svc = TrackingService::spawn(
+        ServiceConfig { initial: g, k: 6, policy: BatchPolicy::ByCount(16), seed: 2 },
+        Box::new(|_a, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
+    )
+    .unwrap();
+    // burst: add then remove the same edge repeatedly; final state must
+    // reflect the LAST event (ordering preserved)
+    for _ in 0..7 {
+        svc.handle
+            .ingest(vec![GraphEvent::AddEdge(0, 1), GraphEvent::RemoveEdge(0, 1)])
+            .unwrap();
+    }
+    svc.handle.ingest(vec![GraphEvent::AddEdge(0, 99)]).unwrap();
+    svc.handle.flush().unwrap();
+    let snap = svc.handle.snapshot();
+    assert!(snap.version >= 1);
+    assert_eq!(snap.n_nodes, 100);
+    svc.join();
+}
+
+#[test]
+fn xla_and_native_agree_on_dataset_run() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let manifest = grest::runtime::ArtifactManifest::load(&dir).unwrap();
+    let mut rng = Rng::new(11);
+    let w = generators::power_law_weights(220, 2.3, 900);
+    let g = generators::chung_lu(&w, &mut rng);
+    let sc = scenario1_from_static("x", &g, 8); // small S per step so the t256 tier (m=32) fits
+    let k = 16;
+    let max_s = sc.steps.iter().map(|s| s.delta.s_new).max().unwrap();
+    let phases =
+        grest::runtime::XlaPhases::for_problem(manifest, sc.max_nodes(), k, k + max_s).unwrap();
+    let init = init_eigenpairs(&sc.initial, k, 3);
+    let mut xla = GRest::with_phases(init.clone(), SubspaceMode::Full, phases, 5);
+    let mut native = GRest::new(init, SubspaceMode::Full);
+    for step in &sc.steps {
+        xla.update(&step.delta).unwrap();
+        native.update(&step.delta).unwrap();
+    }
+    for j in 0..k {
+        assert!(
+            (xla.current().values[j] - native.current().values[j]).abs() < 2e-3,
+            "λ{j} drifted between backends"
+        );
+    }
+}
