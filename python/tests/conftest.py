@@ -1,0 +1,26 @@
+"""Guard the JAX/Pallas test suite behind its optional dependencies.
+
+The offline image may lack `jax` and/or `hypothesis`; the test modules
+here import them at collection time, which would turn
+`pytest python/tests/` into hard collection errors.  Each module is
+dropped from collection when a dependency *it actually uses* is
+missing (the modules also self-guard with module-level
+`pytest.importorskip`, which covers directly-named files), and
+`test_environment.py` reports the situation as one visible skip so the
+run exits green.
+
+Note: `pytest.importorskip` must NOT be called at conftest scope — it
+raises during pytest's config stage and aborts the whole run.
+"""
+import importlib.util
+
+
+def _missing(*mods):
+    return any(importlib.util.find_spec(m) is None for m in mods)
+
+
+collect_ignore = []
+if _missing("jax"):
+    collect_ignore.append("test_aot.py")
+if _missing("jax", "hypothesis"):
+    collect_ignore.extend(["test_kernels.py", "test_model.py"])

@@ -1,10 +1,14 @@
 """AOT path: lowered HLO artifacts are custom-call-free and well-formed."""
 
+
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed; compile-pipeline suite skipped")
+
 import json
 import os
 
 import jax
-import pytest
 
 from compile import aot
 

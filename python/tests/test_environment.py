@@ -1,0 +1,13 @@
+"""Environment gate: reports the compile-pipeline suite as skipped when
+its optional dependencies are absent (see conftest.py)."""
+import importlib.util
+
+import pytest
+
+
+def test_compile_pipeline_deps_importable():
+    for mod in ("jax", "hypothesis"):
+        if importlib.util.find_spec(mod) is None:
+            pytest.skip(f"{mod} not installed; compile-pipeline suite skipped")
+    import jax  # noqa: F401
+    import hypothesis  # noqa: F401

@@ -4,10 +4,17 @@ Hypothesis sweeps shapes (including non-multiples of TILE_N, which
 exercise the padding path) and dtypes, asserting allclose against ref.
 """
 
+
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed; compile-pipeline suite skipped")
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; compile-pipeline suite skipped"
+)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import projection, ref

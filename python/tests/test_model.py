@@ -1,5 +1,13 @@
 """L2 correctness: model phases vs numpy references and spectral invariants."""
 
+
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed; compile-pipeline suite skipped")
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; compile-pipeline suite skipped"
+)
+
 import jax
 import jax.numpy as jnp
 import numpy as np

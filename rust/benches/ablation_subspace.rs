@@ -33,7 +33,7 @@ impl EigTracker for ExactAGrest {
         "G-REST3-exactA".into()
     }
     fn update(&mut self, delta: &grest::Delta) -> anyhow::Result<()> {
-        let phases = NativePhases;
+        let phases = NativePhases::default();
         let k = self.state.k();
         self.a = apply_delta(&self.a, delta);
         let xbar = self.state.vectors.pad_rows(delta.s_new);
@@ -87,10 +87,10 @@ impl DensePhases for SinglePassPhases {
         q
     }
     fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
-        NativePhases.form_t(xbar, q, lam, dxk, dq)
+        NativePhases::default().form_t(xbar, q, lam, dxk, dq)
     }
     fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
-        NativePhases.rotate(xbar, q, f1, f2)
+        NativePhases::default().rotate(xbar, q, f1, f2)
     }
 }
 

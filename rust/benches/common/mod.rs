@@ -28,7 +28,13 @@ pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
 }
 
 /// Micro-bench: run `f` repeatedly for ~`budget_ms`, report mean time.
-pub fn micro(label: &str, budget_ms: u64, mut f: impl FnMut()) {
+pub fn micro(label: &str, budget_ms: u64, f: impl FnMut()) {
+    micro_secs(label, budget_ms, f);
+}
+
+/// [`micro`] that also returns the mean seconds per iteration (the raw
+/// number behind `BENCH_linalg.json`).
+pub fn micro_secs(label: &str, budget_ms: u64, mut f: impl FnMut()) -> f64 {
     // warmup
     f();
     let budget = std::time::Duration::from_millis(budget_ms);
@@ -47,4 +53,5 @@ pub fn micro(label: &str, budget_ms: u64, mut f: impl FnMut()) {
         format!("{per:.3} s")
     };
     println!("micro {label:<40} {unit:>12}/iter  ({iters} iters)");
+    per
 }

@@ -1,21 +1,107 @@
 //! Micro-benchmarks of the hot-path kernels (the §Perf instrument):
-//! gemm / Gram / project-out / orthonormalize / small eigh / SpMM /
-//! per-step G-REST update (native and, if artifacts exist, XLA-backed).
+//! naive vs blocked vs blocked+threaded GEMM, Gram / project-out /
+//! orthonormalize, small eigh, SpMM, and the per-step G-REST update
+//! (native and, if artifacts exist, XLA-backed).
+//!
+//! Emits `BENCH_linalg.json` (name → {n, seconds, gflops}) in the
+//! working directory (`rust/` under `cargo bench`, which sets cwd to
+//! the package root) so the perf trajectory is machine-readable from
+//! this PR onward.  `GREST_BENCH_QUICK=1` shrinks every size for CI
+//! smoke runs.
 
 mod common;
 
+use grest::linalg::threads::Threads;
 use grest::linalg::{blas, eigh::eigh, mat::Mat, qr, rng::Rng};
 use grest::sparse::coo::Coo;
 use grest::sparse::delta::Delta;
 use grest::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
 
+struct BenchRecord {
+    name: String,
+    n: usize,
+    seconds: f64,
+    gflops: f64,
+}
+
+fn record(records: &mut Vec<BenchRecord>, name: &str, n: usize, flops: f64, seconds: f64) {
+    records.push(BenchRecord {
+        name: name.to_string(),
+        n,
+        seconds,
+        gflops: flops / seconds.max(1e-12) / 1e9,
+    });
+}
+
+/// The seed-style reference kernel: unblocked, single-threaded i-j-k
+/// triple loop.  The acceptance bar for the blocked+threaded layer is
+/// ≥ 2× this at n ≥ 256.
+fn naive_gemm(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0;
+            for k in 0..a.cols() {
+                s += a.get(i, k) * b.get(k, j);
+            }
+            c.set(i, j, s);
+        }
+    }
+    c
+}
+
+fn write_json(records: &[BenchRecord]) {
+    let mut out = String::from("{\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {{\"n\": {}, \"seconds\": {:.6e}, \"gflops\": {:.3}}}{}\n",
+            r.name,
+            r.n,
+            r.seconds,
+            r.gflops,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    let path = "BENCH_linalg.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("# wrote {path} ({} entries)", records.len()),
+        Err(e) => eprintln!("# failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let quick = std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rng = Rng::new(1);
+
+    // ---- GEMM ladder: naive (seed-style) vs blocked vs blocked+threaded
+    let gemm_sizes: &[usize] = if quick { &[256, 512] } else { &[256, 512, 1024] };
+    println!("# GEMM ladder (square n×n·n×n), naive vs blocked vs threaded");
+    for &n in gemm_sizes {
+        let a = Mat::randn(n, n, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        let budget = if n <= 256 { 600 } else { 1200 };
+        let s = common::micro_secs(&format!("gemm naive        n={n}"), budget, || {
+            std::hint::black_box(naive_gemm(&a, &b));
+        });
+        record(&mut records, &format!("gemm_naive_{n}"), n, flops, s);
+        let s = common::micro_secs(&format!("gemm blocked 1t   n={n}"), budget, || {
+            std::hint::black_box(blas::gemm_with(&a, &b, Threads::SINGLE));
+        });
+        record(&mut records, &format!("gemm_blocked_1t_{n}"), n, flops, s);
+        let s = common::micro_secs(&format!("gemm blocked auto n={n}"), budget, || {
+            std::hint::black_box(blas::gemm_with(&a, &b, Threads::AUTO));
+        });
+        record(&mut records, &format!("gemm_blocked_mt_{n}"), n, flops, s);
+    }
+
+    // ---- panel-shaped kernels at tracker scale
     let n: usize = if quick { 2048 } else { 16384 };
     let k = 64;
     let m = 128;
-    let mut rng = Rng::new(1);
-    println!("# linalg micro-benches (N={n}, K={k}, M={m})");
+    println!("# panel kernels (N={n}, K={k}, M={m})");
 
     let x = {
         let (q, _) = qr::thin_qr(&Mat::randn(n, k, &mut rng));
@@ -23,37 +109,53 @@ fn main() {
     };
     let b = Mat::randn(n, m, &mut rng);
 
-    common::micro("gram  X^T B           (NxK)'(NxM)", 800, || {
+    let s = common::micro_secs("gram  X^T B           (NxK)'(NxM)", 800, || {
         std::hint::black_box(blas::gemm_tn(&x, &b));
     });
-    common::micro("gemm  X C             (NxK)(KxM)", 800, || {
-        let c = Mat::randn(k, m, &mut Rng::new(2));
-        std::hint::black_box(x.matmul(&c));
+    record(&mut records, "gram_xtb", n, 2.0 * (n * k * m) as f64, s);
+    let s = common::micro_secs("syrk  sym(B^T B)      (NxM)'(NxM)", 800, || {
+        std::hint::black_box(blas::syrk_tn(&b, &b));
     });
-    common::micro("project_out (I-XX')B", 800, || {
+    record(&mut records, "syrk_btb", n, (n * m * (m + 1)) as f64, s);
+    let c64 = Mat::randn(k, m, &mut rng);
+    let s = common::micro_secs("gemm  X C             (NxK)(KxM)", 800, || {
+        std::hint::black_box(x.matmul(&c64));
+    });
+    record(&mut records, "gemm_xc", n, 2.0 * (n * k * m) as f64, s);
+    let s = common::micro_secs("project_out (I-XX')B", 800, || {
         std::hint::black_box(blas::project_out(&x, &b));
     });
-    common::micro("orthonormalize_against (panel M)", 1000, || {
+    record(&mut records, "project_out", n, 4.0 * (n * k * m) as f64, s);
+    let s = common::micro_secs("orthonormalize_against (panel M)", 1000, || {
         std::hint::black_box(qr::orthonormalize_against(&x, &b, 1e-8));
     });
+    record(
+        &mut records,
+        "orthonormalize_against",
+        n,
+        2.0 * (2 * n * k * m + n * m * m + 2 * n * m * m) as f64,
+        s,
+    );
     let t = {
         let raw = Mat::randn(k + m, k + m, &mut rng);
         let mut s = raw.clone();
         s.axpy(1.0, &raw.t());
         s
     };
-    common::micro("eigh  (K+M)x(K+M)", 800, || {
+    let s = common::micro_secs("eigh  (K+M)x(K+M)", 800, || {
         std::hint::black_box(eigh(&t));
     });
+    record(&mut records, "eigh_small", k + m, 9.0 * ((k + m) as f64).powi(3), s);
 
     // sparse: power-law graph SpMM
     let w = grest::graph::generators::power_law_weights(n, 2.2, 6 * n);
     let g = grest::graph::generators::chung_lu(&w, &mut rng);
     let a = g.adjacency();
     println!("# graph: {} nodes {} edges", g.n_nodes(), g.n_edges());
-    common::micro("spmm  A X             (sparse NxN)(NxK)", 800, || {
+    let s = common::micro_secs("spmm  A X             (sparse NxN)(NxK)", 800, || {
         std::hint::black_box(a.matmul_dense(&x));
     });
+    record(&mut records, "spmm_ax", n, 2.0 * (a.nnz() * k) as f64, s);
 
     // per-step tracker update at bench scale
     let scenario_n = if quick { 1500 } else { 4000 };
@@ -77,40 +179,65 @@ fn main() {
         }
         Delta::from_blocks(scenario_n, 48, &kb, &gb, &Coo::new(48, 48))
     };
-    common::micro("G-REST3 native update (N=4000,S=48)", 2000, || {
-        let mut t = GRest::new(init.clone(), SubspaceMode::Full);
+    let mut step_flops = 0u64;
+    let s = common::micro_secs("G-REST3 native update 1t", 1500, || {
+        let mut t = GRest::with_threads(init.clone(), SubspaceMode::Full, Threads::SINGLE);
+        t.update(&delta).unwrap();
+        step_flops = t.last_step_flops();
+        std::hint::black_box(t.current().values[0]);
+    });
+    record(&mut records, "grest3_update_1t", scenario_n, step_flops as f64, s);
+    let s = common::micro_secs("G-REST3 native update auto", 1500, || {
+        let mut t = GRest::with_threads(init.clone(), SubspaceMode::Full, Threads::AUTO);
         t.update(&delta).unwrap();
         std::hint::black_box(t.current().values[0]);
     });
-    common::micro("G-REST-RSVD(32,32) update", 2000, || {
+    record(&mut records, "grest3_update_mt", scenario_n, step_flops as f64, s);
+    let mut rsvd_flops = 0u64;
+    let s = common::micro_secs("G-REST-RSVD(32,32) update", 1500, || {
         let mut t = GRest::new(init.clone(), SubspaceMode::Rsvd { l: 32, p: 32 });
         t.update(&delta).unwrap();
+        rsvd_flops = t.last_step_flops();
         std::hint::black_box(t.current().values[0]);
     });
+    record(&mut records, "grest_rsvd_update", scenario_n, rsvd_flops as f64, s);
 
-    // XLA-backed update, if artifacts are present
+    // XLA-backed update, if artifacts are present (needs the `xla` feature)
     if let Ok(manifest) = grest::runtime::ArtifactManifest::load_default() {
-        if let Ok(phases) = grest::runtime::XlaPhases::for_problem(
-            manifest,
-            scenario_n + 48,
-            k,
-            k + 48,
-        ) {
-            println!("# XLA tier {:?}", phases.tier());
-            let phases = std::rc::Rc::new(phases);
-            // pay the one-time PJRT compile outside the timed region
-            let mut warm = GRest::with_phases(init.clone(), SubspaceMode::Full, phases.clone(), 5);
-            warm.update(&delta).unwrap();
-            common::micro("G-REST3 XLA update (steady-state)", 2000, || {
-                let mut t =
+        match grest::runtime::XlaPhases::for_problem(manifest, scenario_n + 48, k, k + 48) {
+            Ok(phases) => {
+                println!("# XLA tier {:?}", phases.tier());
+                let phases = std::rc::Rc::new(phases);
+                // pay the one-time PJRT compile outside the timed region
+                let mut warm =
                     GRest::with_phases(init.clone(), SubspaceMode::Full, phases.clone(), 5);
-                t.update(&delta).unwrap();
-                std::hint::black_box(t.current().values[0]);
-            });
-        } else {
-            println!("# no XLA tier fits this micro-bench (need n>=4048); skipped");
+                warm.update(&delta).unwrap();
+                let s = common::micro_secs("G-REST3 XLA update (steady-state)", 2000, || {
+                    let mut t =
+                        GRest::with_phases(init.clone(), SubspaceMode::Full, phases.clone(), 5);
+                    t.update(&delta).unwrap();
+                    std::hint::black_box(t.current().values[0]);
+                });
+                record(&mut records, "grest3_update_xla", scenario_n, step_flops as f64, s);
+            }
+            Err(e) => println!("# XLA micro-bench skipped: {e}"),
         }
     } else {
         println!("# artifacts not built; XLA micro-bench skipped");
     }
+
+    // ---- speedup summary + JSON
+    for &n in gemm_sizes {
+        let get = |name: &str| {
+            records
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.seconds)
+                .unwrap_or(f64::NAN)
+        };
+        let naive = get(&format!("gemm_naive_{n}"));
+        let mt = get(&format!("gemm_blocked_mt_{n}"));
+        println!("# speedup blocked+threaded vs naive @ n={n}: {:.2}x", naive / mt);
+    }
+    write_json(&records);
 }

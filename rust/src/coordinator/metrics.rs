@@ -66,6 +66,9 @@ impl Histogram {
 pub struct Metrics {
     pub events_ingested: AtomicU64,
     pub batches_applied: AtomicU64,
+    /// Tracker updates that returned an error; the batch stays pending
+    /// and is retried at the next flush (never silently dropped).
+    pub update_failures: AtomicU64,
     pub nodes_added: AtomicU64,
     pub update_latency: Histogram,
     pub query_latency: Histogram,
@@ -78,9 +81,10 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "events={} batches={} nodes_added={} update_mean={:?} update_p99={:?} update_max={:?} queries={} query_mean={:?}",
+            "events={} batches={} update_failures={} nodes_added={} update_mean={:?} update_p99={:?} update_max={:?} queries={} query_mean={:?}",
             self.events_ingested.load(Ordering::Relaxed),
             self.batches_applied.load(Ordering::Relaxed),
+            self.update_failures.load(Ordering::Relaxed),
             self.nodes_added.load(Ordering::Relaxed),
             self.update_latency.mean(),
             self.update_latency.quantile(0.99),

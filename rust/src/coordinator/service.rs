@@ -173,23 +173,38 @@ fn worker_loop(
 
     let flush =
         |builder: &mut DeltaBuilder, adjacency: &mut Csr, tracker: &mut Box<dyn EigTracker>, version: &mut u64| {
-            if let Some((delta, adj)) = builder.emit(adjacency) {
-                let t0 = Instant::now();
-                metrics.nodes_added.fetch_add(delta.s_new as u64, Ordering::Relaxed);
-                if let Err(e) = tracker.update(&delta) {
-                    eprintln!("tracker update failed: {e}");
-                    return;
+            match builder.prepare(adjacency) {
+                // batch netted out to no change: drop the pending events,
+                // committed state is already consistent
+                None => builder.commit(),
+                Some((delta, adj)) => {
+                    let t0 = Instant::now();
+                    match tracker.update(&delta) {
+                        Ok(()) => {
+                            // commit builder + adjacency only after the
+                            // tracker accepted the batch, so a failure
+                            // never leaves them diverged from the tracker
+                            builder.commit();
+                            metrics.nodes_added.fetch_add(delta.s_new as u64, Ordering::Relaxed);
+                            metrics.update_latency.observe(t0.elapsed());
+                            metrics.batches_applied.fetch_add(1, Ordering::Relaxed);
+                            *adjacency = adj;
+                            *version += 1;
+                            store.publish(EmbeddingSnapshot {
+                                version: *version,
+                                n_nodes: adjacency.n_rows,
+                                pairs: tracker.current().clone(),
+                                published_at: Instant::now(),
+                            });
+                        }
+                        Err(_) => {
+                            // batch stays pending; the next flush retries
+                            // the accumulated delta against the same
+                            // committed state
+                            metrics.update_failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                 }
-                metrics.update_latency.observe(t0.elapsed());
-                metrics.batches_applied.fetch_add(1, Ordering::Relaxed);
-                *adjacency = adj;
-                *version += 1;
-                store.publish(EmbeddingSnapshot {
-                    version: *version,
-                    n_nodes: adjacency.n_rows,
-                    pairs: tracker.current().clone(),
-                    published_at: Instant::now(),
-                });
             }
         };
 
@@ -264,6 +279,58 @@ mod tests {
         assert_eq!(central.len(), 5);
         let m = h.metrics();
         assert!(m.batches_applied.load(Ordering::Relaxed) >= 1);
+        svc.join();
+    }
+
+    #[test]
+    fn failed_update_keeps_batch_pending_and_retries() {
+        // regression: a failed tracker update must not drop the batch or
+        // advance the committed adjacency — the next flush retries the
+        // accumulated delta and the final state reflects every event.
+        struct Flaky {
+            inner: GRest,
+            failures_left: usize,
+        }
+        impl crate::tracking::traits::EigTracker for Flaky {
+            fn name(&self) -> String {
+                "flaky".into()
+            }
+            fn update(&mut self, delta: &crate::sparse::delta::Delta) -> anyhow::Result<()> {
+                if self.failures_left > 0 {
+                    self.failures_left -= 1;
+                    anyhow::bail!("injected failure");
+                }
+                self.inner.update(delta)
+            }
+            fn current(&self) -> &crate::tracking::traits::EigenPairs {
+                self.inner.current()
+            }
+        }
+
+        let g = base_graph(30, 7);
+        let svc = TrackingService::spawn(
+            ServiceConfig { initial: g, k: 3, policy: BatchPolicy::ByCount(1000), seed: 8 },
+            Box::new(|_a0, init| {
+                Box::new(Flaky {
+                    inner: GRest::new(init.clone(), SubspaceMode::Full),
+                    failures_left: 1,
+                })
+            }),
+        )
+        .unwrap();
+        let h = &svc.handle;
+        h.ingest(vec![GraphEvent::AddEdge(0, 700), GraphEvent::AddEdge(1, 701)]).unwrap();
+        // first flush: tracker fails — no snapshot, batch stays pending
+        let v = h.flush().unwrap();
+        assert_eq!(v, 0, "failed update must not publish");
+        assert_eq!(h.metrics().update_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(h.snapshot().n_nodes, 30);
+        // second flush: retry succeeds with the SAME accumulated batch
+        let v = h.flush().unwrap();
+        assert_eq!(v, 1);
+        let snap = h.snapshot();
+        assert_eq!(snap.n_nodes, 32, "retried batch must include both new nodes");
+        assert_eq!(h.metrics().batches_applied.load(Ordering::Relaxed), 1);
         svc.join();
     }
 

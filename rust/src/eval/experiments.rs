@@ -8,6 +8,7 @@ use crate::eval::table::{fmt_secs, Table};
 use crate::graph::datasets::{self, DatasetSpec, Kind};
 use crate::graph::scenario::sbm_expansion;
 use crate::linalg::rng::Rng;
+use crate::linalg::threads::Threads;
 use crate::tasks::{ari::adjusted_rand_index, centrality, clustering};
 use crate::tracking::laplacian::{shifted_normalized_laplacian, shifted_scenario};
 use crate::tracking::traits::init_eigenpairs;
@@ -29,6 +30,8 @@ pub struct ExpConfig {
     pub t_override: Option<usize>,
     /// dataset size divisor on top of the registry scaling
     pub extra_scale: usize,
+    /// dense-kernel worker budget for the G-REST trackers
+    pub threads: Threads,
 }
 
 impl ExpConfig {
@@ -38,12 +41,28 @@ impl ExpConfig {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(2);
-        ExpConfig { k: 64, angles_k: 32, rsvd_lp: 32, mc, t_override: None, extra_scale: 1 }
+        ExpConfig {
+            k: 64,
+            angles_k: 32,
+            rsvd_lp: 32,
+            mc,
+            t_override: None,
+            extra_scale: 1,
+            threads: Threads::AUTO,
+        }
     }
 
     /// Fast smoke configuration (~seconds per figure).
     pub fn quick() -> ExpConfig {
-        ExpConfig { k: 16, angles_k: 8, rsvd_lp: 8, mc: 1, t_override: Some(4), extra_scale: 4 }
+        ExpConfig {
+            k: 16,
+            angles_k: 8,
+            rsvd_lp: 8,
+            mc: 1,
+            t_override: Some(4),
+            extra_scale: 4,
+            threads: Threads::AUTO,
+        }
     }
 }
 
@@ -78,7 +97,7 @@ pub fn run_dataset(spec: &DatasetSpec, cfg: &ExpConfig) -> DatasetResult {
         let mut rng = Rng::new(1000 + mc as u64);
         let sc = datasets::scenario_for(&spec, cfg.t_override, &mut rng);
         let reference = reference_run(&sc, cfg.k, 7 + mc as u64);
-        let mut roster = paper_trackers(false, cfg.rsvd_lp);
+        let mut roster = paper_trackers(false, cfg.rsvd_lp, cfg.threads);
         roster.push(timers_spec(cfg.k));
         let results = run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 7 + mc as u64);
         let cur = summarize(&spec.name, &results, reference.total_time, cfg.angles_k);
@@ -229,9 +248,12 @@ pub fn fig5_rsvd_tradeoff(cfg: &ExpConfig, grid: &[usize]) -> Table {
     let reference = reference_run(&sc, cfg.k, 9);
 
     // G-REST3 baseline
+    let threads = cfg.threads;
     let roster3 = vec![crate::eval::harness::TrackerSpec::new(
         "G-REST3",
-        Box::new(|_, p, _| Box::new(GRest::new(p.clone(), SubspaceMode::Full))),
+        Box::new(move |_, p, _| {
+            Box::new(GRest::with_threads(p.clone(), SubspaceMode::Full, threads))
+        }),
     )];
     let base = &run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster3, 9)[0];
     let base_psi = base.grand_mean_angle(cfg.angles_k);
@@ -250,7 +272,11 @@ pub fn fig5_rsvd_tradeoff(cfg: &ExpConfig, grid: &[usize]) -> Table {
             let roster = vec![crate::eval::harness::TrackerSpec::new(
                 "rsvd",
                 Box::new(move |_, pairs, _| {
-                    Box::new(GRest::new(pairs.clone(), SubspaceMode::Rsvd { l, p }))
+                    Box::new(GRest::with_threads(
+                        pairs.clone(),
+                        SubspaceMode::Rsvd { l, p },
+                        threads,
+                    ))
                 }),
             )];
             let r = &run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 9)[0];
@@ -279,7 +305,7 @@ pub fn table3_centrality(cfg: &ExpConfig, js: &[usize]) -> Table {
         let mut rng = Rng::new(77);
         let sc = datasets::scenario_for(&spec, cfg.t_override, &mut rng);
         let reference = reference_run(&sc, cfg.k, 3);
-        let mut roster = paper_trackers(false, cfg.rsvd_lp);
+        let mut roster = paper_trackers(false, cfg.rsvd_lp, cfg.threads);
         roster.push(timers_spec(cfg.k));
         // rerun trackers capturing eigenpairs per step for centrality
         let init = init_eigenpairs(&sc.initial, cfg.k, 3);
@@ -342,9 +368,22 @@ pub fn fig6_clustering(cfg: &ExpConfig, n: usize, p_outs: &[f64], ks: &[usize]) 
                 ("TRIP".into(), Box::new(crate::tracking::trip::Trip::new(init.clone()))),
                 ("RM".into(), Box::new(crate::tracking::residual_modes::ResidualModes::new(init.clone()))),
                 ("IASC".into(), Box::new(crate::tracking::iasc::Iasc::new(init.clone()))),
-                ("G-REST2".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Rm))),
-                ("G-REST3".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
-                ("G-REST-RSVD".into(), Box::new(GRest::new(init.clone(), SubspaceMode::Rsvd { l: lp, p: lp }))),
+                (
+                    "G-REST2".into(),
+                    Box::new(GRest::with_threads(init.clone(), SubspaceMode::Rm, cfg.threads)),
+                ),
+                (
+                    "G-REST3".into(),
+                    Box::new(GRest::with_threads(init.clone(), SubspaceMode::Full, cfg.threads)),
+                ),
+                (
+                    "G-REST-RSVD".into(),
+                    Box::new(GRest::with_threads(
+                        init.clone(),
+                        SubspaceMode::Rsvd { l: lp, p: lp },
+                        cfg.threads,
+                    )),
+                ),
                 ("TIMERS".into(), Box::new(crate::tracking::timers::Timers::new(&t0, k_clusters, 33))),
             ];
             let mut ratios: Vec<(String, Vec<f64>)> =

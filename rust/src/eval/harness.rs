@@ -4,6 +4,7 @@
 //! figure and table in the paper's Sec. 5.
 
 use crate::graph::scenario::DynamicScenario;
+use crate::linalg::threads::Threads;
 use crate::sparse::csr::Csr;
 use crate::tracking::reference::Reference;
 use crate::tracking::residual_modes::ResidualModes;
@@ -32,24 +33,37 @@ impl TrackerSpec {
 /// The paper's evaluation roster minus TIMERS (add [`timers_spec`], which
 /// needs K up front): TRIP, RM, IASC, G-REST₂, G-REST₃, G-REST_RSVD.
 /// `rsvd_lp` scales with graph expansion (paper: 100 for the SNAP runs,
-/// 20 for the SBM runs).
-pub fn paper_trackers(include_trip_basic: bool, rsvd_lp: usize) -> Vec<TrackerSpec> {
+/// 20 for the SBM runs).  `threads` is the dense-kernel worker budget for
+/// the G-REST family.
+pub fn paper_trackers(
+    include_trip_basic: bool,
+    rsvd_lp: usize,
+    threads: Threads,
+) -> Vec<TrackerSpec> {
     let mut v: Vec<TrackerSpec> = vec![
         TrackerSpec::new("TRIP", Box::new(|_, p, _| Box::new(Trip::new(p.clone())))),
         TrackerSpec::new("RM", Box::new(|_, p, _| Box::new(ResidualModes::new(p.clone())))),
         TrackerSpec::new("IASC", Box::new(|_, p, _| Box::new(Iasc::new(p.clone())))),
         TrackerSpec::new(
             "G-REST2",
-            Box::new(|_, p, _| Box::new(GRest::new(p.clone(), SubspaceMode::Rm))),
+            Box::new(move |_, p, _| {
+                Box::new(GRest::with_threads(p.clone(), SubspaceMode::Rm, threads))
+            }),
         ),
         TrackerSpec::new(
             "G-REST3",
-            Box::new(|_, p, _| Box::new(GRest::new(p.clone(), SubspaceMode::Full))),
+            Box::new(move |_, p, _| {
+                Box::new(GRest::with_threads(p.clone(), SubspaceMode::Full, threads))
+            }),
         ),
         TrackerSpec::new(
             "G-REST-RSVD",
             Box::new(move |_, p, _| {
-                Box::new(GRest::new(p.clone(), SubspaceMode::Rsvd { l: rsvd_lp, p: rsvd_lp }))
+                Box::new(GRest::with_threads(
+                    p.clone(),
+                    SubspaceMode::Rsvd { l: rsvd_lp, p: rsvd_lp },
+                    threads,
+                ))
             }),
         ),
     ];
@@ -190,7 +204,7 @@ mod tests {
         let sc = small_scenario(1);
         let k = 8;
         let reference = reference_run(&sc, k, 7);
-        let mut roster = paper_trackers(false, 8);
+        let mut roster = paper_trackers(false, 8, Threads::AUTO);
         roster.push(timers_spec(k));
         let results = run_trackers(&sc, &reference, k, 3, &roster, 7);
         assert_eq!(results.len(), 7);
@@ -206,7 +220,7 @@ mod tests {
         let sc = small_scenario(2);
         let k = 8;
         let reference = reference_run(&sc, k, 11);
-        let roster = paper_trackers(false, 8);
+        let roster = paper_trackers(false, 8, Threads::AUTO);
         let results = run_trackers(&sc, &reference, k, 3, &roster, 11);
         let get = |n: &str| {
             results

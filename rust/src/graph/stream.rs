@@ -91,20 +91,45 @@ impl DeltaBuilder {
         self.pending.push(ev);
     }
 
-    /// Close the batch: emit Δ relative to the last committed state and
-    /// the new adjacency.  Returns `None` when nothing changed.
-    pub fn emit(&mut self, prev_adjacency: &crate::sparse::csr::Csr) -> Option<(Delta, crate::sparse::csr::Csr)> {
+    /// Build (Δ, new adjacency) for the pending batch relative to the
+    /// last committed state, WITHOUT committing.  Returns `None` when the
+    /// batch is empty or nets out to no change.
+    ///
+    /// Callers that can fail while applying the batch (the coordinator's
+    /// `tracker.update`) must call [`DeltaBuilder::commit`] only after
+    /// success; until then the batch stays pending and a later `prepare`
+    /// re-emits the accumulated delta against the same committed state.
+    pub fn prepare(
+        &self,
+        prev_adjacency: &crate::sparse::csr::Csr,
+    ) -> Option<(Delta, crate::sparse::csr::Csr)> {
         if self.pending.is_empty() && self.graph.n_nodes() == self.committed_nodes {
             return None;
         }
         let adj = self.graph.adjacency();
         let delta = Delta::from_diff(prev_adjacency, &adj);
-        self.committed_nodes = self.graph.n_nodes();
-        self.pending.clear();
         if delta.nnz() == 0 && delta.s_new == 0 {
             return None;
         }
         Some((delta, adj))
+    }
+
+    /// Mark the pending batch committed (the prepared delta was applied
+    /// downstream, or netted out to nothing).
+    pub fn commit(&mut self) {
+        self.committed_nodes = self.graph.n_nodes();
+        self.pending.clear();
+    }
+
+    /// Close the batch: [`DeltaBuilder::prepare`] + [`DeltaBuilder::commit`]
+    /// in one step, for callers with no fallible work in between.
+    pub fn emit(
+        &mut self,
+        prev_adjacency: &crate::sparse::csr::Csr,
+    ) -> Option<(Delta, crate::sparse::csr::Csr)> {
+        let out = self.prepare(prev_adjacency);
+        self.commit();
+        out
     }
 
     /// Current (uncommitted) graph view.

@@ -1,73 +1,78 @@
-//! BLAS-like micro-kernels on [`Mat`].
+//! The blocked BLAS-like kernel layer on [`Mat`].
 //!
-//! Hand-written (offline build: no external BLAS).  `gemm` uses cache
-//! blocking with a column-major-friendly loop order (j-k-i: the innermost
-//! loop is a contiguous axpy over a column of A/C), which reaches a decent
-//! fraction of scalar peak and vectorizes under `-O`.  Panels in this
-//! codebase are tall-skinny (N×K, K ≤ 256), so the kernels are tuned for
-//! that regime.
+//! Hand-written (offline build: no external BLAS) and organized as a
+//! two-level layer:
+//!
+//! * **Micro-kernels** (`*_cols`) compute a contiguous range of *output
+//!   columns* with cache tiling: `BLOCK_J`-wide column tiles of C stay
+//!   hot while `BLOCK_K`-deep panels of A stream through, and a 4-column
+//!   register kernel amortizes each load of an A column across four
+//!   outputs.
+//! * **Drivers** (`gemm_with`, `gemm_tn_with`, `syrk_tn_with`,
+//!   `proj_gram_with`) partition output columns across a
+//!   `std::thread::scope` worker pool sized by the [`Threads`] budget.
+//!
+//! Because the partition is over *output* columns, every output element
+//! is produced by exactly one worker with a fixed sequential reduction
+//! order — results are bitwise identical across thread counts, which is
+//! what keeps `GRest` deterministic under `--threads N`.
+//!
+//! Panels in this codebase are tall-skinny (N×K, K ≤ a few hundred), so
+//! the kernels are tuned for that regime.
 
 use crate::linalg::mat::Mat;
+pub use crate::linalg::threads::Threads;
+use crate::linalg::threads::balanced_col_chunks;
 
 /// Cache block along the shared (k) dimension.
 const BLOCK_K: usize = 64;
-/// Cache block along columns of B/C.
+/// Column tile of B/C per sweep (keeps the active C panel in cache).
 const BLOCK_J: usize = 64;
 
-/// C = A · B.
+/// C = A · B (auto thread budget).
 pub fn gemm(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.rows(), "gemm dims: {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    gemm_with(a, b, Threads::AUTO)
+}
+
+/// C = A · B with an explicit thread budget.
+pub fn gemm_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "gemm dims: {}x{} · {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
     let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_acc(&mut c, a, b, 1.0);
+    gemm_acc_with(&mut c, a, b, 1.0, threads);
     c
 }
 
-/// Row-count threshold above which the dense kernels fan out across
-/// threads (column-partitioned; each thread owns disjoint output
-/// columns, so no synchronization is needed).
-const PAR_MIN_WORK: usize = 1 << 23;
-
-fn n_threads_for(work: usize) -> usize {
-    if work < PAR_MIN_WORK {
-        return 1;
-    }
-    std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(8)
+/// C += alpha · A · B (auto thread budget).
+pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64) {
+    gemm_acc_with(c, a, b, alpha, Threads::AUTO);
 }
 
-/// C += alpha · A · B  (blocked, 4-column register kernel, thread-
-/// parallel over output column chunks for large problems).
-pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64) {
+/// C += alpha · A · B — blocked, thread-parallel over output columns.
+pub fn gemm_acc_with(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, threads: Threads) {
     let (m, kk) = (a.rows(), a.cols());
     let n = b.cols();
     assert_eq!(b.rows(), kk);
     assert_eq!((c.rows(), c.cols()), (m, n));
-    let threads = n_threads_for(2 * m * kk * n).min(n.max(1));
-    if threads <= 1 {
+    let workers = threads.for_flops(2 * m * kk * n).min(n.max(1));
+    if workers <= 1 {
         gemm_acc_cols(c.as_mut_slice(), m, 0..n, a, b, alpha);
         return;
     }
-    let chunk = n.div_ceil(threads);
-    let cols: Vec<(usize, &mut [f64])> = {
-        // split the column-major buffer into per-chunk slices
-        let mut out = Vec::new();
-        let mut buf = c.as_mut_slice();
-        let mut j = 0;
-        while j < n {
-            let take = chunk.min(n - j);
-            let (head, rest) = buf.split_at_mut(take * m);
-            out.push((j, head));
-            buf = rest;
-            j += take;
-        }
-        out
-    };
+    let chunks = balanced_col_chunks(n, workers, |_| 1);
     std::thread::scope(|s| {
-        for (j0, slice) in cols {
-            let j1 = (j0 + slice.len() / m).min(n);
-            s.spawn(move || gemm_acc_cols(slice, m, j0..j1, a, b, alpha));
+        let mut buf = c.as_mut_slice();
+        for &(lo, hi) in &chunks {
+            let (head, rest) = buf.split_at_mut((hi - lo) * m);
+            buf = rest;
+            s.spawn(move || gemm_acc_cols(head, m, lo..hi, a, b, alpha));
         }
     });
 }
@@ -85,79 +90,85 @@ fn gemm_acc_cols(
     let kk = a.cols();
     let j0 = jr.start;
     let n = jr.end;
-    for k0 in (0..kk).step_by(BLOCK_K) {
-        let k1 = (k0 + BLOCK_K).min(kk);
-        let mut j = j0;
-        // 4-column micro-kernel: each loaded a-column feeds 4 outputs.
-        while j + 4 <= n {
-            let (b0c, b1c, b2c, b3c) = (b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3));
-            let base = (j - j0) * m;
-            let (lo, rest) = c_cols[base..].split_at_mut(m);
-            let (c1, rest) = rest.split_at_mut(m);
-            let (c2, c3s) = rest.split_at_mut(m);
-            let c0 = lo;
-            let c3 = &mut c3s[..m];
-            for k in k0..k1 {
-                let ak = a.col(k);
-                let w0 = alpha * b0c[k];
-                let w1 = alpha * b1c[k];
-                let w2 = alpha * b2c[k];
-                let w3 = alpha * b3c[k];
-                if w0 == 0.0 && w1 == 0.0 && w2 == 0.0 && w3 == 0.0 {
-                    continue;
+    // Outer: BLOCK_J-wide tiles of C (stay hot across all k blocks).
+    let mut jt = j0;
+    while jt < n {
+        let jt_end = (jt + BLOCK_J).min(n);
+        for k0 in (0..kk).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(kk);
+            let mut j = jt;
+            // 4-column micro-kernel: each loaded A column feeds 4 outputs.
+            while j + 4 <= jt_end {
+                let (b0c, b1c, b2c, b3c) = (b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3));
+                let base = (j - j0) * m;
+                let (c0, rest) = c_cols[base..].split_at_mut(m);
+                let (c1, rest) = rest.split_at_mut(m);
+                let (c2, c3s) = rest.split_at_mut(m);
+                let c3 = &mut c3s[..m];
+                for k in k0..k1 {
+                    let ak = a.col(k);
+                    let w0 = alpha * b0c[k];
+                    let w1 = alpha * b1c[k];
+                    let w2 = alpha * b2c[k];
+                    let w3 = alpha * b3c[k];
+                    if w0 == 0.0 && w1 == 0.0 && w2 == 0.0 && w3 == 0.0 {
+                        continue;
+                    }
+                    for i in 0..m {
+                        let av = ak[i];
+                        c0[i] += w0 * av;
+                        c1[i] += w1 * av;
+                        c2[i] += w2 * av;
+                        c3[i] += w3 * av;
+                    }
                 }
-                for i in 0..m {
-                    let av = ak[i];
-                    c0[i] += w0 * av;
-                    c1[i] += w1 * av;
-                    c2[i] += w2 * av;
-                    c3[i] += w3 * av;
-                }
+                j += 4;
             }
-            j += 4;
-        }
-        while j < n {
-            let bj = b.col(j);
-            let cj = &mut c_cols[(j - j0) * m..(j - j0 + 1) * m];
-            for k in k0..k1 {
-                let w = alpha * bj[k];
-                if w == 0.0 {
-                    continue;
+            while j < jt_end {
+                let bj = b.col(j);
+                let cj = &mut c_cols[(j - j0) * m..(j - j0 + 1) * m];
+                for k in k0..k1 {
+                    let w = alpha * bj[k];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let ak = a.col(k);
+                    for i in 0..m {
+                        cj[i] += w * ak[i];
+                    }
                 }
-                let ak = a.col(k);
-                for i in 0..m {
-                    cj[i] += w * ak[i];
-                }
+                j += 1;
             }
-            j += 1;
         }
+        jt = jt_end;
     }
 }
 
-/// C = Aᵀ · B without materializing Aᵀ (the Gram kernel of the paper's
-/// projection step).  4×1 register blocking over A-columns (each read of
-/// B feeds four dots), thread-parallel over B-columns for large inputs.
+/// C = Aᵀ · B without materializing Aᵀ (auto thread budget).
 pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
+    gemm_tn_with(a, b, Threads::AUTO)
+}
+
+/// C = Aᵀ · B — the Gram kernel of the paper's projection step.  4×1
+/// register blocking over A columns (each read of B feeds four dots),
+/// thread-parallel over B columns.
+pub fn gemm_tn_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
     assert_eq!(a.rows(), b.rows(), "gemm_tn dims");
     let (k, n) = (a.cols(), b.cols());
     let m = a.rows();
     let mut c = Mat::zeros(k, n);
-    let threads = n_threads_for(2 * m * k * n).min(n.max(1));
-    if threads <= 1 {
+    let workers = threads.for_flops(2 * m * k * n).min(n.max(1));
+    if workers <= 1 {
         gemm_tn_cols(c.as_mut_slice(), 0..n, a, b);
         return c;
     }
-    let chunk = n.div_ceil(threads);
+    let chunks = balanced_col_chunks(n, workers, |_| 1);
     std::thread::scope(|s| {
         let mut buf = c.as_mut_slice();
-        let mut j = 0;
-        while j < n {
-            let take = chunk.min(n - j);
-            let (head, rest) = buf.split_at_mut(take * k);
-            let jr = j..j + take;
-            s.spawn(move || gemm_tn_cols(head, jr, a, b));
+        for &(lo, hi) in &chunks {
+            let (head, rest) = buf.split_at_mut((hi - lo) * k);
             buf = rest;
-            j += take;
+            s.spawn(move || gemm_tn_cols(head, lo..hi, a, b));
         }
     });
     c
@@ -190,6 +201,124 @@ fn gemm_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: &Mat, b: &Mat
         while p < k {
             cj[p] = dot(a.col(p), bj);
             p += 1;
+        }
+    }
+}
+
+/// Symmetric-result Gram product S = Aᵀ·B where AᵀB is *analytically*
+/// symmetric (B = M·A with M = Mᵀ, or B = A): only the upper triangle is
+/// computed (half the flops of `gemm_tn`) and mirrored.  This is the
+/// `form_t` specialization of Eq. (13) — T₁₁ and T₂₂ are symmetric
+/// because Δ is.
+pub fn syrk_tn(a: &Mat, b: &Mat) -> Mat {
+    syrk_tn_with(a, b, Threads::AUTO)
+}
+
+/// [`syrk_tn`] with an explicit thread budget.  Work is triangular, so
+/// column chunks are balanced by `j+1` weights.
+pub fn syrk_tn_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "syrk_tn dims (rows)");
+    assert_eq!(a.cols(), b.cols(), "syrk_tn needs square output");
+    let p = a.cols();
+    let n = a.rows();
+    let mut c = Mat::zeros(p, p);
+    let workers = threads.for_flops(n * p * (p + 1)).min(p.max(1));
+    if workers <= 1 {
+        syrk_tn_cols(c.as_mut_slice(), 0..p, a, b);
+    } else {
+        let chunks = balanced_col_chunks(p, workers, |j| j + 1);
+        std::thread::scope(|s| {
+            let mut buf = c.as_mut_slice();
+            for &(lo, hi) in &chunks {
+                let (head, rest) = buf.split_at_mut((hi - lo) * p);
+                buf = rest;
+                s.spawn(move || syrk_tn_cols(head, lo..hi, a, b));
+            }
+        });
+    }
+    mirror_upper(&mut c);
+    c
+}
+
+fn syrk_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: &Mat, b: &Mat) {
+    let p = a.cols();
+    let j0 = jr.start;
+    for j in jr {
+        let bj = b.col(j);
+        let cj = &mut c_cols[(j - j0) * p..(j - j0 + 1) * p];
+        for (i, out) in cj.iter_mut().enumerate().take(j + 1) {
+            *out = dot(a.col(i), bj);
+        }
+    }
+}
+
+/// Copy the strict upper triangle onto the lower one in place.
+fn mirror_upper(c: &mut Mat) {
+    let p = c.rows();
+    debug_assert_eq!(p, c.cols());
+    for j in 0..p {
+        for i in 0..j {
+            let v = c.get(i, j);
+            c.set(j, i, v);
+        }
+    }
+}
+
+/// Fused projection Gram: one sweep over the panel P computing both
+/// C = XᵀP and the symmetric G = PᵀP (upper triangle + mirror).
+///
+/// This is the fusion behind `qr::orthonormalize_against`: with X
+/// orthonormal, the Gram of the projected panel is
+/// `(P−XC)ᵀ(P−XC) = G − CᵀC`, so the explicit project-out pass before
+/// the Gram disappears — X̄ and P are each read once per CholeskyQR
+/// round instead of twice.
+pub fn proj_gram_with(x: &Mat, p: &Mat, threads: Threads) -> (Mat, Mat) {
+    assert_eq!(x.rows(), p.rows(), "proj_gram dims");
+    let n = p.rows();
+    let k = x.cols();
+    let m = p.cols();
+    let mut c = Mat::zeros(k, m);
+    let mut g = Mat::zeros(m, m);
+    let workers = threads.for_flops(n * m * (2 * k + m + 1)).min(m.max(1));
+    if workers <= 1 {
+        proj_gram_cols(c.as_mut_slice(), g.as_mut_slice(), 0..m, x, p);
+    } else {
+        let chunks = balanced_col_chunks(m, workers, |j| k + j + 1);
+        std::thread::scope(|s| {
+            let mut cbuf = c.as_mut_slice();
+            let mut gbuf = g.as_mut_slice();
+            for &(lo, hi) in &chunks {
+                let (chead, crest) = cbuf.split_at_mut((hi - lo) * k);
+                let (ghead, grest) = gbuf.split_at_mut((hi - lo) * m);
+                cbuf = crest;
+                gbuf = grest;
+                s.spawn(move || proj_gram_cols(chead, ghead, lo..hi, x, p));
+            }
+        });
+    }
+    mirror_upper(&mut g);
+    (c, g)
+}
+
+fn proj_gram_cols(
+    c_cols: &mut [f64],
+    g_cols: &mut [f64],
+    jr: std::ops::Range<usize>,
+    x: &Mat,
+    p: &Mat,
+) {
+    let k = x.cols();
+    let m = p.cols();
+    let j0 = jr.start;
+    for j in jr {
+        let pj = p.col(j);
+        let cj = &mut c_cols[(j - j0) * k..(j - j0 + 1) * k];
+        for (i, out) in cj.iter_mut().enumerate() {
+            *out = dot(x.col(i), pj);
+        }
+        let gj = &mut g_cols[(j - j0) * m..(j - j0 + 1) * m];
+        for (i, out) in gj.iter_mut().enumerate().take(j + 1) {
+            *out = dot(p.col(i), pj);
         }
     }
 }
@@ -251,16 +380,26 @@ pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
 /// P = B − X · C, the "apply" half of project-out (mirrors the Pallas
 /// kernel `apply_proj`).
 pub fn sub_matmul(b: &Mat, x: &Mat, c: &Mat) -> Mat {
+    sub_matmul_with(b, x, c, Threads::AUTO)
+}
+
+/// [`sub_matmul`] with an explicit thread budget.
+pub fn sub_matmul_with(b: &Mat, x: &Mat, c: &Mat, threads: Threads) -> Mat {
     let mut p = b.clone();
-    gemm_acc(&mut p, x, c, -1.0);
+    gemm_acc_with(&mut p, x, c, -1.0, threads);
     p
 }
 
 /// P = (I − X Xᵀ) B — project `b` against the orthonormal panel `x`
 /// (mirrors the Pallas `project_out` composition).
 pub fn project_out(x: &Mat, b: &Mat) -> Mat {
-    let c = gemm_tn(x, b);
-    sub_matmul(b, x, &c)
+    project_out_with(x, b, Threads::AUTO)
+}
+
+/// [`project_out`] with an explicit thread budget.
+pub fn project_out_with(x: &Mat, b: &Mat, threads: Threads) -> Mat {
+    let c = gemm_tn_with(x, b, threads);
+    sub_matmul_with(b, x, &c, threads)
 }
 
 #[cfg(test)]
@@ -298,6 +437,75 @@ mod tests {
         let mut diff = c.clone();
         diff.axpy(-1.0, &want);
         assert!(diff.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn threaded_gemm_is_bitwise_equal_to_sequential() {
+        // the determinism contract behind --threads N
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(300, 90, &mut rng);
+        let b = Mat::randn(90, 150, &mut rng);
+        let seq = gemm_with(&a, &b, Threads::SINGLE);
+        let par = gemm_with(&a, &b, Threads(4));
+        assert_eq!(seq.as_slice(), par.as_slice(), "gemm not bitwise stable");
+        let seq_tn = gemm_tn_with(&a, &a, Threads::SINGLE);
+        let par_tn = gemm_tn_with(&a, &a, Threads(3));
+        assert_eq!(seq_tn.as_slice(), par_tn.as_slice(), "gemm_tn not bitwise stable");
+    }
+
+    #[test]
+    fn syrk_matches_gemm_tn_for_symmetric_products() {
+        let mut rng = Rng::new(3);
+        // large enough that the triangular kernel actually fans out
+        let a = Mat::randn(320, 120, &mut rng);
+        // B = A gives the exactly-symmetric Gram.  gemm_tn accumulates in
+        // a different lane order than the dot-based triangular kernel, so
+        // compare with a tolerance, not bitwise.
+        let s = syrk_tn_with(&a, &a, Threads::SINGLE);
+        let full = gemm_tn(&a, &a);
+        for i in 0..120 {
+            for j in 0..120 {
+                let want = if i <= j { full.get(i, j) } else { full.get(j, i) };
+                assert!(
+                    (s.get(i, j) - want).abs() < 1e-10 * (1.0 + want.abs()),
+                    "({i},{j}): {} vs {}",
+                    s.get(i, j),
+                    want
+                );
+            }
+        }
+        // the mirrored halves are exactly equal by construction
+        for i in 0..120 {
+            for j in 0..120 {
+                assert_eq!(s.get(i, j), s.get(j, i), "symmetry ({i},{j})");
+            }
+        }
+        // threaded triangular kernel agrees bitwise
+        let s4 = syrk_tn_with(&a, &a, Threads(4));
+        assert_eq!(s.as_slice(), s4.as_slice());
+    }
+
+    #[test]
+    fn proj_gram_matches_separate_kernels() {
+        let mut rng = Rng::new(4);
+        // sized past the parallel threshold so the fused kernel fans out
+        let x = Mat::randn(320, 60, &mut rng);
+        let p = Mat::randn(320, 100, &mut rng);
+        let (c, g) = proj_gram_with(&x, &p, Threads::SINGLE);
+        // C vs gemm_tn: different lane order, tolerance compare
+        let c_want = gemm_tn(&x, &p);
+        let mut cd = c.clone();
+        cd.axpy(-1.0, &c_want);
+        assert!(cd.max_abs() < 1e-10, "C mismatch {}", cd.max_abs());
+        // G vs syrk_tn: both dot-based, exactly equal
+        let g_want = syrk_tn(&p, &p);
+        let mut gd = g.clone();
+        gd.axpy(-1.0, &g_want);
+        assert_eq!(gd.max_abs(), 0.0);
+        // threaded path bitwise identical
+        let (c4, g4) = proj_gram_with(&x, &p, Threads(4));
+        assert_eq!(c.as_slice(), c4.as_slice());
+        assert_eq!(g.as_slice(), g4.as_slice());
     }
 
     #[test]

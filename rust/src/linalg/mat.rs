@@ -228,9 +228,31 @@ impl Mat {
         crate::linalg::blas::gemm(self, other)
     }
 
+    /// [`Mat::matmul`] with an explicit thread budget.
+    pub fn matmul_with(&self, other: &Mat, threads: crate::linalg::threads::Threads) -> Mat {
+        crate::linalg::blas::gemm_with(self, other, threads)
+    }
+
     /// selfᵀ · other without materializing the transpose.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
         crate::linalg::blas::gemm_tn(self, other)
+    }
+
+    /// [`Mat::t_matmul`] with an explicit thread budget.
+    pub fn t_matmul_with(&self, other: &Mat, threads: crate::linalg::threads::Threads) -> Mat {
+        crate::linalg::blas::gemm_tn_with(self, other, threads)
+    }
+
+    /// selfᵀ · other when the product is *analytically symmetric*
+    /// (other = M·self with M = Mᵀ, or other = self): computes only the
+    /// upper triangle and mirrors it — half the flops of [`Mat::t_matmul`].
+    pub fn sym_t_matmul(&self, other: &Mat) -> Mat {
+        crate::linalg::blas::syrk_tn(self, other)
+    }
+
+    /// [`Mat::sym_t_matmul`] with an explicit thread budget.
+    pub fn sym_t_matmul_with(&self, other: &Mat, threads: crate::linalg::threads::Threads) -> Mat {
+        crate::linalg::blas::syrk_tn_with(self, other, threads)
     }
 }
 

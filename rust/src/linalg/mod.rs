@@ -17,3 +17,6 @@ pub mod qr;
 pub mod rng;
 pub mod rsvd;
 pub mod svd;
+pub mod threads;
+
+pub use threads::Threads;

@@ -3,6 +3,7 @@
 
 use crate::linalg::blas;
 use crate::linalg::mat::Mat;
+use crate::linalg::threads::Threads;
 
 /// Thin QR factorization A = Q R with Q (m×n, orthonormal columns) and R
 /// (n×n upper-triangular), m >= n, via Householder reflectors.
@@ -98,6 +99,24 @@ pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
 /// maps them back to panel column indices.  This is the construction of
 /// the paper's Eq. (11).
 pub fn orthonormalize_against(x: &Mat, panel: &Mat, tol: f64) -> (Mat, Vec<usize>) {
+    orthonormalize_against_with(x, panel, tol, Threads::AUTO)
+}
+
+/// [`orthonormalize_against`] with an explicit thread budget.
+///
+/// The project-out pass is *fused* into the CholeskyQR round: one sweep
+/// (`blas::proj_gram_with`) yields both C = XᵀP and G = PᵀP, the
+/// projected Gram is formed algebraically as G − CᵀC (exact for
+/// orthonormal X), and the panel update applies projection and
+/// triangular solve together as P·R⁻¹ − X·(C·R⁻¹).  Per round, X̄ and P
+/// are each read once in the Gram sweep and once in the update — the
+/// separate (I−XXᵀ)P materialization of the unfused pipeline is gone.
+pub fn orthonormalize_against_with(
+    x: &Mat,
+    panel: &Mat,
+    tol: f64,
+    threads: Threads,
+) -> (Mat, Vec<usize>) {
     assert_eq!(x.rows(), panel.rows());
     let m = panel.cols();
     if m == 0 {
@@ -106,14 +125,20 @@ pub fn orthonormalize_against(x: &Mat, panel: &Mat, tol: f64) -> (Mat, Vec<usize
     let mut p = panel.clone();
     let mut alive = vec![true; m];
     for _pass in 0..2 {
-        p = blas::project_out(x, &p);
-        let g = p.t_matmul(&p);
+        let (c, mut g) = blas::proj_gram_with(x, &p, threads);
+        // Gram of the projected panel: (P−XC)ᵀ(P−XC) = G − CᵀC
+        let ctc = blas::syrk_tn_with(&c, &c, threads);
+        g.axpy(-1.0, &ctc);
         let (l, keep) = crate::linalg::chol::cholesky_guarded(&g, tol.max(1e-14));
         for (a, k) in alive.iter_mut().zip(keep.iter()) {
             *a &= k;
         }
         let rinv = crate::linalg::chol::tri_inv_upper(&l.t());
-        p = p.matmul(&rinv);
+        // P ← (P − X·C)·R⁻¹, applied as P·R⁻¹ − X·(C·R⁻¹)
+        let cr = c.matmul(&rinv);
+        let mut pnew = blas::gemm_with(&p, &rinv, threads);
+        blas::gemm_acc_with(&mut pnew, x, &cr, -1.0, threads);
+        p = pnew;
     }
     // survivors have unit norm; dependent columns collapsed to ~0
     let mut kept: Vec<usize> = Vec::new();

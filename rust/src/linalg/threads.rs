@@ -1,0 +1,135 @@
+//! The `Threads` knob: one explicit worker-thread budget threaded through
+//! the dense kernel layer, `DensePhases`, the experiment harness, and the
+//! CLI (`--threads`).
+//!
+//! Every parallel kernel partitions *output columns* across workers, so
+//! each output element is produced by exactly one thread with the same
+//! sequential reduction order regardless of the worker count — results
+//! are bitwise identical for `Threads(1)` and `Threads(n)`.
+
+/// Worker-thread budget for the dense kernels.
+///
+/// * `Threads(0)` (= [`Threads::AUTO`]) resolves to the machine's
+///   available parallelism, capped at [`MAX_AUTO_THREADS`].
+/// * `Threads(1)` forces the sequential path.
+/// * `Threads(n)` uses at most `n` workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Threads(pub usize);
+
+/// Cap on auto-detected parallelism (the kernels are memory-bound well
+/// before this point on typical hardware).
+pub const MAX_AUTO_THREADS: usize = 16;
+
+/// Minimum flop count of a kernel invocation before it fans out across
+/// threads; below this the spawn overhead dominates.
+pub const PAR_MIN_FLOPS: usize = 1 << 22;
+
+impl Threads {
+    /// Resolve the worker count from the machine.
+    pub const AUTO: Threads = Threads(0);
+    /// Always sequential.
+    pub const SINGLE: Threads = Threads(1);
+
+    /// Concrete worker count this budget resolves to.
+    pub fn resolve(self) -> usize {
+        if self.0 != 0 {
+            return self.0;
+        }
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(MAX_AUTO_THREADS)
+    }
+
+    /// Worker count for a kernel performing `flops` floating-point ops:
+    /// 1 below the parallel threshold, the resolved budget above it.
+    pub fn for_flops(self, flops: usize) -> usize {
+        if flops < PAR_MIN_FLOPS {
+            1
+        } else {
+            self.resolve()
+        }
+    }
+}
+
+impl Default for Threads {
+    fn default() -> Threads {
+        Threads::AUTO
+    }
+}
+
+/// Split `cols` output columns into at most `workers` contiguous chunks
+/// whose *work* (given by `weight(j)` per column) is roughly balanced.
+/// Used by the triangular (syrk-style) kernels where column `j` costs
+/// `O(j)`.
+pub fn balanced_col_chunks(
+    cols: usize,
+    workers: usize,
+    weight: impl Fn(usize) -> usize,
+) -> Vec<(usize, usize)> {
+    let workers = workers.max(1).min(cols.max(1));
+    if cols == 0 {
+        return vec![];
+    }
+    if workers == 1 {
+        return vec![(0, cols)];
+    }
+    let total: usize = (0..cols).map(&weight).sum::<usize>().max(1);
+    let per = total.div_ceil(workers);
+    let mut chunks = Vec::with_capacity(workers);
+    let mut start = 0;
+    let mut acc = 0;
+    for j in 0..cols {
+        acc += weight(j);
+        if acc >= per && j + 1 < cols {
+            chunks.push((start, j + 1));
+            start = j + 1;
+            acc = 0;
+        }
+    }
+    chunks.push((start, cols));
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_explicit_and_auto() {
+        assert_eq!(Threads(3).resolve(), 3);
+        assert!(Threads::AUTO.resolve() >= 1);
+        assert!(Threads::AUTO.resolve() <= MAX_AUTO_THREADS);
+        assert_eq!(Threads::SINGLE.resolve(), 1);
+    }
+
+    #[test]
+    fn for_flops_thresholds() {
+        assert_eq!(Threads(8).for_flops(16), 1);
+        assert_eq!(Threads(8).for_flops(PAR_MIN_FLOPS), 8);
+    }
+
+    #[test]
+    fn chunks_cover_everything_in_order() {
+        for &(cols, workers) in &[(0usize, 4usize), (1, 4), (7, 3), (100, 8), (5, 9)] {
+            let chunks = balanced_col_chunks(cols, workers, |j| j + 1);
+            let mut expect = 0;
+            for &(lo, hi) in &chunks {
+                assert_eq!(lo, expect);
+                assert!(hi > lo);
+                expect = hi;
+            }
+            assert_eq!(expect, cols);
+            assert!(chunks.len() <= workers.max(1));
+        }
+    }
+
+    #[test]
+    fn triangular_weights_balance() {
+        // with weight j+1 the last chunk must not hold most columns
+        let chunks = balanced_col_chunks(64, 4, |j| j + 1);
+        assert!(chunks.len() >= 2);
+        let (lo, hi) = chunks[chunks.len() - 1];
+        assert!(hi - lo < 40, "last chunk too wide: {lo}..{hi}");
+    }
+}

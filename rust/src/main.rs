@@ -9,12 +9,17 @@
 //!   serve-demo [--events N]        run the streaming coordinator demo
 //!   generate --dataset D --out F   write a synthetic dataset edge list
 //!
+//! Global flags:
+//!   --threads N                    dense-kernel worker budget for the
+//!                                  G-REST family (0 = auto, 1 = serial)
+//!
 //! Argument parsing is hand-rolled (offline build: no clap).
 
 use grest::eval::experiments::{self, ExpConfig};
 use grest::eval::table::fmt_secs;
 use grest::graph::datasets::{self, Kind};
 use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
 use grest::tracking::{self, EigTracker, GRest, SubspaceMode};
 use std::collections::HashMap;
 
@@ -25,7 +30,11 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            if let Some((key, value)) = name.split_once('=') {
+                // --name=value form
+                flags.insert(key.to_string(), value.to_string());
+                i += 1;
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
@@ -44,7 +53,14 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, flags) = parse_flags(&args);
     let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
-    let cfg = if flags.contains_key("quick") { ExpConfig::quick() } else { ExpConfig::paper() };
+    let threads = match flags.get("threads") {
+        None => Threads::AUTO,
+        Some(s) => Threads(s.parse().map_err(|_| {
+            anyhow::anyhow!("--threads expects a number (0 = auto, 1 = serial), got {s:?}")
+        })?),
+    };
+    let mut cfg = if flags.contains_key("quick") { ExpConfig::quick() } else { ExpConfig::paper() };
+    cfg.threads = threads;
 
     match cmd {
         "table2" => {
@@ -55,10 +71,10 @@ fn main() -> anyhow::Result<()> {
             run_experiment(id, &cfg)?;
         }
         "track" => {
-            cmd_track(&flags)?;
+            cmd_track(&flags, threads)?;
         }
         "serve-demo" => {
-            cmd_serve_demo(&flags)?;
+            cmd_serve_demo(&flags, threads)?;
         }
         "generate" => {
             cmd_generate(&flags)?;
@@ -140,7 +156,7 @@ fn run_experiment(id: &str, cfg: &ExpConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_track(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_track(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Result<()> {
     let dataset = flags.get("dataset").map(|s| s.as_str()).unwrap_or("CM-Collab");
     let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(64);
     let t_steps: Option<usize> = flags.get("t").and_then(|s| s.parse().ok());
@@ -165,7 +181,7 @@ fn cmd_track(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "rm" => Box::new(tracking::residual_modes::ResidualModes::new(init)),
         "iasc" => Box::new(tracking::iasc::Iasc::new(init)),
         "timers" => Box::new(tracking::timers::Timers::new(&sc.initial, k, 7)),
-        "grest2" => Box::new(GRest::new(init, SubspaceMode::Rm)),
+        "grest2" => Box::new(GRest::with_threads(init, SubspaceMode::Rm, threads)),
         "grest3" if use_xla => {
             let manifest = grest::runtime::ArtifactManifest::load_default()?;
             // panel width: K cols of ΔX̄ plus per-step expansion
@@ -179,8 +195,10 @@ fn cmd_track(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             println!("XLA backend tier: {:?}", phases.tier());
             Box::new(GRest::with_phases(init, SubspaceMode::Full, phases, 7))
         }
-        "grest3" => Box::new(GRest::new(init, SubspaceMode::Full)),
-        "grest-rsvd" => Box::new(GRest::new(init, SubspaceMode::Rsvd { l: 32, p: 32 })),
+        "grest3" => Box::new(GRest::with_threads(init, SubspaceMode::Full, threads)),
+        "grest-rsvd" => {
+            Box::new(GRest::with_threads(init, SubspaceMode::Rsvd { l: 32, p: 32 }, threads))
+        }
         other => anyhow::bail!("unknown tracker {other}"),
     };
 
@@ -206,7 +224,7 @@ fn cmd_track(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Result<()> {
     use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
     use grest::graph::stream::GraphEvent;
     let n_events: usize = flags.get("events").and_then(|s| s.parse().ok()).unwrap_or(2000);
@@ -219,7 +237,9 @@ fn cmd_serve_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             policy: BatchPolicy::Either { events: 64, new_nodes: 16 },
             seed: 5,
         },
-        Box::new(|_a0, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
+        Box::new(move |_a0, init| {
+            Box::new(GRest::with_threads(init.clone(), SubspaceMode::Full, threads))
+        }),
     )?;
     let h = svc.handle.clone();
     let t0 = std::time::Instant::now();

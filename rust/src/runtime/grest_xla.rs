@@ -164,7 +164,7 @@ mod tests {
         let (x, _) = thin_qr(&Mat::randn(200, 16, &mut rng));
         let panel = Mat::randn(200, 20, &mut rng);
         let q_xla = xp.build_basis(&x, &panel);
-        let q_nat = NativePhases.build_basis(&x, &panel);
+        let q_nat = NativePhases::default().build_basis(&x, &panel);
         assert_eq!(q_xla.cols(), q_nat.cols());
         // bases may differ by rotation; compare projectors P = QQᵀ on a
         // probe block
@@ -189,12 +189,12 @@ mod tests {
         let (x, _) = thin_qr(&Mat::randn(150, 16, &mut rng));
         let (qfull, _) = thin_qr(&Mat::randn(150, 36, &mut rng));
         // q must be orthogonal to x for the contract; project and renorm
-        let q = NativePhases.build_basis(&x, &qfull.top_left(150, 12));
+        let q = NativePhases::default().build_basis(&x, &qfull.top_left(150, 12));
         let lam: Vec<f64> = (0..16).map(|i| 8.0 - i as f64).collect();
         let dxk = Mat::randn(150, 16, &mut rng);
         let dq = Mat::randn(150, q.cols(), &mut rng);
         let t_xla = xp.form_t(&x, &q, &lam, &dxk, &dq);
-        let t_nat = NativePhases.form_t(&x, &q, &lam, &dxk, &dq);
+        let t_nat = NativePhases::default().form_t(&x, &q, &lam, &dxk, &dq);
         let mut diff = t_xla.clone();
         diff.axpy(-1.0, &t_nat);
         assert!(diff.max_abs() < 1e-3, "form_t mismatch {}", diff.max_abs());
@@ -202,7 +202,7 @@ mod tests {
         let f1 = Mat::randn(16, 16, &mut rng);
         let f2 = Mat::randn(q.cols(), 16, &mut rng);
         let r_xla = xp.rotate(&x, &q, &f1, &f2);
-        let r_nat = NativePhases.rotate(&x, &q, &f1, &f2);
+        let r_nat = NativePhases::default().rotate(&x, &q, &f1, &f2);
         let mut rdiff = r_xla.clone();
         rdiff.axpy(-1.0, &r_nat);
         assert!(rdiff.max_abs() < 1e-3, "rotate mismatch {}", rdiff.max_abs());

@@ -2,11 +2,25 @@
 //! (`artifacts/*.hlo.txt`) and executes the G-REST dense phases on the
 //! XLA CPU client.  Python never runs here — artifacts are produced once
 //! by `make artifacts` and this module is pure Rust + PJRT.
+//!
+//! The PJRT pieces need the external `xla` crate, which is not available
+//! in the offline build; they are gated behind the `xla` cargo feature.
+//! The default build ships [`stub::XlaPhases`] — same API, but
+//! construction always fails with a clear error, so every caller keeps
+//! compiling and degrades to the native backend at runtime.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod exec;
+#[cfg(feature = "xla")]
 pub mod grest_xla;
+#[cfg(not(feature = "xla"))]
+pub mod stub;
 
 pub use artifact::{ArtifactManifest, Tier};
+#[cfg(feature = "xla")]
 pub use grest_xla::XlaPhases;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaPhases;

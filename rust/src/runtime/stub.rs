@@ -1,0 +1,73 @@
+//! Stub [`XlaPhases`] for builds without the `xla` feature (the offline
+//! default: the external `xla` crate that wraps PJRT is unavailable).
+//!
+//! The API mirrors `grest_xla::XlaPhases` exactly so callers (the CLI's
+//! `--xla` path, benches, examples) compile unchanged; construction via
+//! [`XlaPhases::for_problem`] always fails with an explanatory error and
+//! callers fall back to the native backend.
+
+use crate::linalg::mat::Mat;
+use crate::runtime::artifact::{ArtifactManifest, Tier};
+use crate::tracking::grest::DensePhases;
+use anyhow::{bail, Result};
+
+/// Placeholder for the PJRT-backed dense phases.  Never constructed in
+/// this build; see [`XlaPhases::for_problem`].
+pub struct XlaPhases {
+    tier: Tier,
+    _private: (),
+}
+
+impl XlaPhases {
+    /// Always fails in a build without the `xla` feature.
+    pub fn for_problem(
+        _manifest: ArtifactManifest,
+        n: usize,
+        k: usize,
+        m: usize,
+    ) -> Result<XlaPhases> {
+        bail!(
+            "XLA backend unavailable: grest was built without the `xla` feature \
+             (requested tier n={n} k={k} m={m}); use the native backend instead"
+        )
+    }
+
+    pub fn tier(&self) -> &Tier {
+        &self.tier
+    }
+}
+
+impl DensePhases for XlaPhases {
+    fn build_basis(&self, _xbar: &Mat, _panel: &Mat) -> Mat {
+        unreachable!("stub XlaPhases cannot be constructed")
+    }
+
+    fn form_t(&self, _xbar: &Mat, _q: &Mat, _lam: &[f64], _dxk: &Mat, _dq: &Mat) -> Mat {
+        unreachable!("stub XlaPhases cannot be constructed")
+    }
+
+    fn rotate(&self, _xbar: &Mat, _q: &Mat, _f1: &Mat, _f2: &Mat) -> Mat {
+        unreachable!("stub XlaPhases cannot be constructed")
+    }
+
+    fn label(&self) -> &'static str {
+        "xla-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn construction_fails_with_clear_error() {
+        let manifest = ArtifactManifest::parse(
+            Path::new("/tmp"),
+            "build_basis t256 build_basis_t256.hlo.txt 256 16 32\n",
+        )
+        .unwrap();
+        let err = XlaPhases::for_problem(manifest, 200, 16, 20).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

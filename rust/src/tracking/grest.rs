@@ -22,8 +22,9 @@
 use crate::linalg::blas;
 use crate::linalg::eigh::eigh;
 use crate::linalg::mat::Mat;
-use crate::linalg::qr::orthonormalize_against;
+use crate::linalg::qr::orthonormalize_against_with;
 use crate::linalg::rng::Rng;
+use crate::linalg::threads::Threads;
 use crate::linalg::rsvd::rsvd_basis;
 use crate::sparse::delta::Delta;
 use crate::tracking::traits::{EigTracker, EigenPairs};
@@ -84,12 +85,22 @@ impl<P: DensePhases + ?Sized> DensePhases for std::rc::Rc<P> {
     }
 }
 
-/// Pure-Rust dense phases (mirrors python/compile/model.py).
-pub struct NativePhases;
+/// Pure-Rust dense phases (mirrors python/compile/model.py), carrying the
+/// worker-thread budget for the blocked kernel layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativePhases {
+    pub threads: Threads,
+}
+
+impl NativePhases {
+    pub fn new(threads: Threads) -> NativePhases {
+        NativePhases { threads }
+    }
+}
 
 impl DensePhases for NativePhases {
     fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
-        let (q, _) = orthonormalize_against(xbar, panel, 1e-8);
+        let (q, _) = orthonormalize_against_with(xbar, panel, 1e-8, self.threads);
         q
     }
 
@@ -98,35 +109,37 @@ impl DensePhases for NativePhases {
         let m = q.cols();
         let dim = k + m;
         let mut t = Mat::zeros(dim, dim);
-        // T11 = Λ + X̄ᵀ(ΔX̄)
-        let t11 = xbar.t_matmul(dxk);
+        // T11 = Λ + X̄ᵀ(ΔX̄).  X̄ᵀΔX̄ is analytically symmetric (Δᵀ = Δ),
+        // so only the upper triangle is computed — half the flops of the
+        // full K×K product the unspecialized pipeline paid.
+        let t11 = xbar.sym_t_matmul_with(dxk, self.threads);
         for i in 0..k {
             for j in 0..k {
                 let lamij = if i == j { lam[i] } else { 0.0 };
-                t.set(i, j, lamij + 0.5 * (t11.get(i, j) + t11.get(j, i)));
+                t.set(i, j, lamij + t11.get(i, j));
             }
         }
-        // T12 = X̄ᵀ(ΔQ)
-        let t12 = xbar.t_matmul(dq);
+        // T12 = X̄ᵀ(ΔQ) — genuinely rectangular, full product.
+        let t12 = xbar.t_matmul_with(dq, self.threads);
         for i in 0..k {
             for j in 0..m {
                 t.set(i, k + j, t12.get(i, j));
                 t.set(k + j, i, t12.get(i, j));
             }
         }
-        // T22 = Qᵀ(ΔQ)
-        let t22 = q.t_matmul(dq);
+        // T22 = Qᵀ(ΔQ) — symmetric for the same reason as T11.
+        let t22 = q.sym_t_matmul_with(dq, self.threads);
         for i in 0..m {
             for j in 0..m {
-                t.set(k + i, k + j, 0.5 * (t22.get(i, j) + t22.get(j, i)));
+                t.set(k + i, k + j, t22.get(i, j));
             }
         }
         t
     }
 
     fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
-        let mut out = xbar.matmul(f1);
-        blas::gemm_acc(&mut out, q, f2, 1.0);
+        let mut out = xbar.matmul_with(f1, self.threads);
+        blas::gemm_acc_with(&mut out, q, f2, 1.0, self.threads);
         out
     }
 }
@@ -143,9 +156,15 @@ pub struct GRest<P: DensePhases = NativePhases> {
 }
 
 impl GRest<NativePhases> {
-    /// Native-backend tracker.
+    /// Native-backend tracker (auto thread budget).
     pub fn new(initial: EigenPairs, mode: SubspaceMode) -> Self {
-        GRest::with_phases(initial, mode, NativePhases, 0x9E57)
+        GRest::with_threads(initial, mode, Threads::AUTO)
+    }
+
+    /// Native-backend tracker with an explicit worker-thread budget for
+    /// the dense phases.
+    pub fn with_threads(initial: EigenPairs, mode: SubspaceMode, threads: Threads) -> Self {
+        GRest::with_phases(initial, mode, NativePhases::new(threads), 0x9E57)
     }
 }
 
@@ -244,7 +263,7 @@ impl<P: DensePhases> EigTracker for GRest<P> {
         let m = panel.cols();
         self.flops = (2 * n * k * m          // project-out gram
             + 2 * n * m * m                   // orthonormalization
-            + 2 * n * (k + m) * (k + m)       // form_t grams
+            + n * (k + m) * (k + m)           // form_t grams (symmetric: half)
             + (k + m) * (k + m) * (k + m)     // eigh
             + 2 * n * (k + m) * k) as u64 // rotate
             + 2 * delta.nnz() as u64 * (k + m) as u64;
@@ -419,6 +438,27 @@ mod tests {
         let mut eye = Mat::eye(4);
         eye.axpy(-1.0, &g);
         assert!(eye.max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn results_bitwise_stable_across_thread_counts() {
+        // the determinism contract of --threads: column-partitioned
+        // parallelism never changes any reduction order, so single- and
+        // multi-threaded runs agree to the last bit.  Sized so the dense
+        // kernels actually cross the parallel threshold.
+        let a = ring_plus_chords(2000);
+        let init = init_eigenpairs(&a, 32, 11);
+        let d = expansion_delta(2000, 8, 12);
+        let mut t1 = GRest::with_threads(init.clone(), SubspaceMode::Full, Threads(1));
+        let mut tn = GRest::with_threads(init, SubspaceMode::Full, Threads(4));
+        t1.update(&d).unwrap();
+        tn.update(&d).unwrap();
+        assert_eq!(t1.current().values, tn.current().values);
+        assert_eq!(
+            t1.current().vectors.as_slice(),
+            tn.current().vectors.as_slice(),
+            "eigenvectors drifted across thread counts"
+        );
     }
 
     #[test]

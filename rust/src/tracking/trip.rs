@@ -48,31 +48,22 @@ impl EigTracker for Trip {
             let rhs: Vec<f64> = (0..k).map(|i| b.get(i, j)).collect();
             let coeffs = match lu::solve(&lhs, &rhs) {
                 Some(c) => c,
-                None => {
-                    // singular system (e.g. Δ=0): fall back to b_j = e_j,
-                    // i.e. keep the old eigenvector.
-                    let mut e = vec![0.0; k];
-                    e[j] = 1.0;
-                    e
-                }
+                // singular system (e.g. Δ=0): fall back to b_j = 0, i.e.
+                // keep the old eigenvector x̃_j = X̄ e_j.
+                None => vec![0.0; k],
             };
-            // x̃_j = X̄ b_j; write b_j = e_j + correction so a zero solve
-            // reproduces x̄_j exactly.
+            // x̃_j = X̄ (e_j + b_j)   (Eq. 7): seed with x̄_j, then add every
+            // solved coefficient — including b_j's own j-th component,
+            // which shifts x̃_j along x̄_j and is NOT a pure scaling once
+            // the other components are present.
             {
                 let col = new_vecs.col_mut(j);
                 col[..x.rows()].copy_from_slice(x.col(j));
             }
-            for i in 0..k {
-                let c = if i == j { coeffs[i] } else { coeffs[i] };
-                if i == j {
-                    continue; // e_j already placed; coeffs[j] folds into scaling
-                }
+            for (i, &c) in coeffs.iter().enumerate() {
                 if c != 0.0 {
-                    let xi = x.col(i).to_vec();
                     let col = new_vecs.col_mut(j);
-                    for (r, &v) in xi.iter().enumerate() {
-                        col[r] += c * v;
-                    }
+                    crate::linalg::blas::axpy(c, x.col(i), &mut col[..x.rows()]);
                 }
             }
             let nrm = crate::linalg::blas::nrm2(new_vecs.col(j)).max(1e-300);
@@ -148,6 +139,62 @@ mod tests {
             )
             .abs();
             assert!(overlap > 0.995, "vector {j} overlap {overlap}");
+        }
+    }
+
+    #[test]
+    fn eq7_reconstruction_matches_dense_solve() {
+        // regression for the dropped-coefficient bug: one TRIP step must
+        // equal the dense solve of the K×K system of Eq. (7) followed by
+        // x̃_j = X̄(e_j + b_j), including b_j's own j-th component.
+        let a = diag_dominant(10);
+        let k = 4;
+        let init = init_eigenpairs(&a, k, 5);
+        let x0 = init.vectors.clone();
+        let vals0 = init.values.clone();
+        let mut t = Trip::new(init);
+        let mut kcoo = Coo::new(10, 10);
+        kcoo.push_sym(0, 1, 0.2);
+        kcoo.push_sym(2, 5, -0.15);
+        kcoo.push_sym(3, 4, 0.1);
+        let d = Delta::from_blocks(10, 0, &kcoo, &Coo::new(10, 0), &Coo::new(0, 0));
+        t.update(&d).unwrap();
+
+        let dxk = d.mul_padded(&x0);
+        let b = interaction_matrix(&x0, &dxk);
+        for j in 0..k {
+            let lam_new = vals0[j] + b.get(j, j);
+            let mut lhs = Mat::zeros(k, k);
+            for i in 0..k {
+                for p in 0..k {
+                    let w = if i == p { lam_new - vals0[i] } else { 0.0 };
+                    lhs.set(i, p, w - b.get(i, p));
+                }
+            }
+            let rhs: Vec<f64> = (0..k).map(|i| b.get(i, j)).collect();
+            let coeffs = lu::solve(&lhs, &rhs).expect("Eq. 7 system solvable");
+            assert!(
+                coeffs[j].abs() > 1e-12,
+                "test delta must exercise a nonzero j-th coefficient"
+            );
+            // dense reconstruction, normalized
+            let mut want: Vec<f64> = x0.col(j).to_vec();
+            for (i, &c) in coeffs.iter().enumerate() {
+                for (r, w) in want.iter_mut().enumerate() {
+                    *w += c * x0.get(r, i);
+                }
+            }
+            let nrm = crate::linalg::blas::nrm2(&want);
+            let got = t.current().vectors.col(j);
+            let sign = crate::linalg::blas::dot(got, &want).signum();
+            for (r, w) in want.iter().enumerate() {
+                assert!(
+                    (got[r] - sign * w / nrm).abs() < 1e-12,
+                    "x̃_{j}[{r}]: {} vs {}",
+                    got[r],
+                    sign * w / nrm
+                );
+            }
         }
     }
 

@@ -43,7 +43,8 @@ fn accuracy_ordering_matches_paper() {
         let sc = scenario1_from_static("t", &g, 4);
         let k = 12;
         let reference = grest::eval::harness::reference_run(&sc, k, 5 + seed);
-        let roster = grest::eval::harness::paper_trackers(false, 8);
+        let roster =
+            grest::eval::harness::paper_trackers(false, 8, grest::linalg::threads::Threads::AUTO);
         let results =
             grest::eval::harness::run_trackers(&sc, &reference, k, 4, &roster, 5 + seed);
         let get = |n: &str| {
@@ -191,7 +192,70 @@ fn coordinator_survives_burst_and_preserves_order() {
 }
 
 #[test]
+fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
+    // Satellite coverage: (a) batches that only add *isolated* new nodes
+    // (s_new > 0, nnz == 0 — self-loop events intern the id but create no
+    // edge) and (b) RemoveEdge-heavy batches, streamed through the
+    // service; snapshot n_nodes/version must track the builder's
+    // committed state at every flush.
+    use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
+    use grest::graph::stream::GraphEvent;
+    let mut rng = Rng::new(13);
+    let g = generators::erdos_renyi(50, 0.15, &mut rng);
+    let initial_edges: Vec<(usize, usize)> = g.edges();
+    let svc = TrackingService::spawn(
+        ServiceConfig { initial: g, k: 5, policy: BatchPolicy::ByCount(1_000_000), seed: 4 },
+        Box::new(|_a0, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
+    )
+    .unwrap();
+    let h = &svc.handle;
+
+    // (a) isolated-new-node batch: self loops on unseen ids
+    h.ingest(vec![
+        GraphEvent::AddEdge(900, 900),
+        GraphEvent::AddEdge(901, 901),
+        GraphEvent::AddEdge(902, 902),
+    ])
+    .unwrap();
+    let v = h.flush().unwrap();
+    assert_eq!(v, 1, "pure-expansion batch must publish");
+    let snap = h.snapshot();
+    assert_eq!(snap.n_nodes, 53, "three isolated nodes committed");
+    assert_eq!(snap.pairs.k(), 5);
+    assert_eq!(snap.pairs.n(), 53, "eigenvectors padded to the new space");
+
+    // (b) RemoveEdge-heavy batch: delete a third of the original edges
+    let removals: Vec<GraphEvent> = initial_edges
+        .iter()
+        .take(initial_edges.len() / 3)
+        .map(|&(u, v)| GraphEvent::RemoveEdge(u as u64, v as u64))
+        .collect();
+    assert!(removals.len() > 10, "need a genuinely removal-heavy batch");
+    h.ingest(removals).unwrap();
+    let v = h.flush().unwrap();
+    assert_eq!(v, 2);
+    let snap = h.snapshot();
+    assert_eq!(snap.n_nodes, 53, "removals never change the node count");
+
+    // (c) a no-op batch (remove unknown edges) must not bump the version
+    h.ingest(vec![GraphEvent::RemoveEdge(7000, 7001)]).unwrap();
+    let v = h.flush().unwrap();
+    assert_eq!(v, 2, "no-op batch must not publish a new version");
+
+    let m = h.metrics();
+    use std::sync::atomic::Ordering;
+    assert_eq!(m.batches_applied.load(Ordering::Relaxed), 2);
+    assert_eq!(m.update_failures.load(Ordering::Relaxed), 0);
+    assert_eq!(m.nodes_added.load(Ordering::Relaxed), 3);
+    svc.join();
+}
+
+#[test]
 fn xla_and_native_agree_on_dataset_run() {
+    if !cfg!(feature = "xla") {
+        eprintln!("built without the `xla` feature (stub backend); skipping");
+        return;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.txt").exists() {
         eprintln!("artifacts not built; skipping");
