@@ -11,7 +11,7 @@ use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
 use grest::graph::generators;
 use grest::graph::stream::GraphEvent;
 use grest::linalg::rng::Rng;
-use grest::tracking::{GRest, SubspaceMode};
+use grest::tracking::TrackerSpec;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -20,19 +20,15 @@ fn main() -> anyhow::Result<()> {
     let g = generators::barabasi_albert(1000, 3, &mut rng);
     println!("seed graph: {} nodes, {} edges", g.n_nodes(), g.n_edges());
 
-    let svc = TrackingService::spawn(
-        ServiceConfig {
-            initial: g,
-            k: 32,
-            policy: BatchPolicy::Either { events: 128, new_nodes: 32 },
-            seed: 2,
-        },
+    let svc = TrackingService::spawn(ServiceConfig {
+        initial: g,
+        k: 32,
+        policy: BatchPolicy::Either { events: 128, new_nodes: 32 },
+        seed: 2,
         // the tracker is built on the worker thread — swap in
-        // XlaPhases-backed G-REST here to serve from the PJRT artifacts
-        Box::new(|_a0, init| {
-            Box::new(GRest::new(init.clone(), SubspaceMode::Rsvd { l: 16, p: 16 }))
-        }),
-    )?;
+        // `grest3@xla` here to serve from the PJRT artifacts
+        tracker: TrackerSpec::parse("grest-rsvd:l=16,p=16")?,
+    })?;
 
     let stop = Arc::new(AtomicBool::new(false));
     // concurrent readers: snapshot pollers + analytics queries

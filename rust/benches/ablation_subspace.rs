@@ -29,8 +29,8 @@ struct ExactAGrest {
 }
 
 impl EigTracker for ExactAGrest {
-    fn name(&self) -> String {
-        "G-REST3-exactA".into()
+    fn descriptor(&self) -> grest::tracking::TrackerSpec {
+        grest::tracking::TrackerSpec::custom("G-REST3-exactA")
     }
     fn update(&mut self, delta: &grest::Delta) -> anyhow::Result<()> {
         let phases = NativePhases::default();

@@ -14,6 +14,7 @@ use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
 use crate::graph::graph::Graph;
 use crate::graph::stream::{DeltaBuilder, GraphEvent};
 use crate::sparse::csr::Csr;
+use crate::tracking::spec::TrackerSpec;
 use crate::tracking::traits::{EigTracker, EigenPairs};
 use anyhow::Result;
 use std::sync::atomic::Ordering;
@@ -23,8 +24,13 @@ use std::time::Instant;
 
 /// Builds the tracker inside the worker thread (lets callers choose the
 /// native or XLA backend without `Send` bounds on the tracker itself).
+/// A build error is reported back through [`TrackingService::spawn`] /
+/// [`TrackingService::spawn_with_factory`], which then fail instead of
+/// leaving a dead worker behind.  Derived from [`ServiceConfig::tracker`]
+/// by [`TrackingService::spawn`]; hand-written closures remain available
+/// through [`TrackingService::spawn_with_factory`].
 pub type TrackerFactory =
-    Box<dyn FnOnce(&Csr, &EigenPairs) -> Box<dyn EigTracker> + Send>;
+    Box<dyn FnOnce(&Csr, &EigenPairs) -> Result<Box<dyn EigTracker>> + Send>;
 
 /// Service configuration.
 pub struct ServiceConfig {
@@ -34,8 +40,10 @@ pub struct ServiceConfig {
     pub k: usize,
     /// Batch-closing policy.
     pub policy: BatchPolicy,
-    /// Lanczos seed for initialization.
+    /// Lanczos seed for initialization (also the tracker fallback seed).
     pub seed: u64,
+    /// Declarative tracker to serve (built on the worker thread).
+    pub tracker: TrackerSpec,
 }
 
 enum Command {
@@ -113,9 +121,29 @@ pub struct TrackingService {
 }
 
 impl TrackingService {
-    /// Spawn the worker.  `factory` runs on the worker thread with the
-    /// initial adjacency and the Lanczos-computed initial pairs.
-    pub fn spawn(config: ServiceConfig, factory: TrackerFactory) -> Result<TrackingService> {
+    /// Spawn the worker serving the tracker described by
+    /// `config.tracker` (the declarative path every production caller
+    /// uses).  The tracker itself is built on the worker thread — the
+    /// XLA backend's PJRT state is thread-bound.
+    pub fn spawn(config: ServiceConfig) -> Result<TrackingService> {
+        config.tracker.validate_buildable()?;
+        let spec = config.tracker.clone();
+        let seed = config.seed;
+        Self::spawn_with_factory(
+            config,
+            Box::new(move |a0, init| spec.build_seeded(a0, init, seed)),
+        )
+    }
+
+    /// Escape hatch: spawn with a hand-written factory (ad-hoc or
+    /// experimental trackers the registry doesn't know).
+    /// `config.tracker` is ignored; the factory runs on the worker
+    /// thread with the initial adjacency and the Lanczos-computed
+    /// initial pairs.
+    pub fn spawn_with_factory(
+        config: ServiceConfig,
+        factory: TrackerFactory,
+    ) -> Result<TrackingService> {
         let a0 = config.initial.adjacency();
         let init = crate::tracking::traits::init_eigenpairs(&a0, config.k, config.seed);
         let store = SnapshotStore::new(EmbeddingSnapshot {
@@ -129,12 +157,36 @@ impl TrackingService {
         let handle = ServiceHandle { tx, snapshots: store.clone(), metrics: metrics.clone() };
         let cfg_policy = config.policy;
         let initial_graph = config.initial;
+        // the worker reports whether the factory succeeded, so a broken
+        // tracker spec (e.g. missing XLA artifacts) surfaces here as an
+        // error instead of a dead worker behind a healthy-looking handle
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let worker = std::thread::Builder::new()
             .name("grest-tracker".into())
             .spawn(move || {
-                worker_loop(rx, initial_graph, a0, init, factory, cfg_policy, store, metrics)
+                worker_loop(
+                    rx,
+                    initial_graph,
+                    a0,
+                    init,
+                    factory,
+                    cfg_policy,
+                    store,
+                    metrics,
+                    ready_tx,
+                )
             })?;
-        Ok(TrackingService { handle: handle.clone(), worker: Some(worker) })
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(TrackingService { handle: handle.clone(), worker: Some(worker) }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = worker.join();
+                Err(anyhow::anyhow!("tracker worker died during startup"))
+            }
+        }
     }
 
     /// Shut down and join.
@@ -165,8 +217,18 @@ fn worker_loop(
     policy: BatchPolicy,
     store: SnapshotStore,
     metrics: Arc<Metrics>,
+    ready: Sender<Result<()>>,
 ) {
-    let mut tracker = factory(&a0, &init);
+    let mut tracker = match factory(&a0, &init) {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
     let mut builder = DeltaBuilder::from_graph(initial_graph);
     let mut adjacency = a0;
     let mut version = 0u64;
@@ -250,17 +312,16 @@ mod tests {
         crate::graph::generators::erdos_renyi(n, 0.08, &mut rng)
     }
 
-    fn grest_factory() -> TrackerFactory {
-        Box::new(|_a0, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full)))
-    }
-
     #[test]
     fn service_tracks_streamed_updates() {
         let g = base_graph(60, 1);
-        let svc = TrackingService::spawn(
-            ServiceConfig { initial: g, k: 4, policy: BatchPolicy::ByCount(8), seed: 2 },
-            grest_factory(),
-        )
+        let svc = TrackingService::spawn(ServiceConfig {
+            initial: g,
+            k: 4,
+            policy: BatchPolicy::ByCount(8),
+            seed: 2,
+            tracker: TrackerSpec::default(),
+        })
         .unwrap();
         let h = &svc.handle;
         assert_eq!(h.snapshot().version, 0);
@@ -292,8 +353,8 @@ mod tests {
             failures_left: usize,
         }
         impl crate::tracking::traits::EigTracker for Flaky {
-            fn name(&self) -> String {
-                "flaky".into()
+            fn descriptor(&self) -> TrackerSpec {
+                TrackerSpec::custom("flaky")
             }
             fn update(&mut self, delta: &crate::sparse::delta::Delta) -> anyhow::Result<()> {
                 if self.failures_left > 0 {
@@ -308,13 +369,20 @@ mod tests {
         }
 
         let g = base_graph(30, 7);
-        let svc = TrackingService::spawn(
-            ServiceConfig { initial: g, k: 3, policy: BatchPolicy::ByCount(1000), seed: 8 },
+        // closure escape hatch: an ad-hoc tracker the registry can't build
+        let svc = TrackingService::spawn_with_factory(
+            ServiceConfig {
+                initial: g,
+                k: 3,
+                policy: BatchPolicy::ByCount(1000),
+                seed: 8,
+                tracker: TrackerSpec::default(),
+            },
             Box::new(|_a0, init| {
-                Box::new(Flaky {
+                Ok(Box::new(Flaky {
                     inner: GRest::new(init.clone(), SubspaceMode::Full),
                     failures_left: 1,
-                })
+                }))
             }),
         )
         .unwrap();
@@ -337,10 +405,13 @@ mod tests {
     #[test]
     fn snapshot_versions_monotone_under_stream() {
         let g = base_graph(40, 3);
-        let svc = TrackingService::spawn(
-            ServiceConfig { initial: g, k: 3, policy: BatchPolicy::ByCount(4), seed: 4 },
-            grest_factory(),
-        )
+        let svc = TrackingService::spawn(ServiceConfig {
+            initial: g,
+            k: 3,
+            policy: BatchPolicy::ByCount(4),
+            seed: 4,
+            tracker: TrackerSpec::default(),
+        })
         .unwrap();
         let h = svc.handle.clone();
         let reader = {
@@ -367,10 +438,13 @@ mod tests {
     #[test]
     fn queries_work_mid_stream() {
         let g = base_graph(50, 5);
-        let svc = TrackingService::spawn(
-            ServiceConfig { initial: g, k: 4, policy: BatchPolicy::ByNewNodes(3), seed: 6 },
-            grest_factory(),
-        )
+        let svc = TrackingService::spawn(ServiceConfig {
+            initial: g,
+            k: 4,
+            policy: BatchPolicy::ByNewNodes(3),
+            seed: 6,
+            tracker: TrackerSpec::parse("grest2").unwrap(),
+        })
         .unwrap();
         let h = &svc.handle;
         h.ingest(vec![
@@ -384,5 +458,42 @@ mod tests {
         let snap = h.snapshot();
         assert!(snap.pairs.k() > 0);
         svc.join();
+    }
+
+    #[test]
+    fn spawn_surfaces_factory_build_errors() {
+        // a factory that fails at runtime (e.g. missing XLA artifacts)
+        // must fail spawn itself, not leave a dead worker behind
+        let g = base_graph(20, 11);
+        let res = TrackingService::spawn_with_factory(
+            ServiceConfig {
+                initial: g,
+                k: 3,
+                policy: BatchPolicy::ByCount(4),
+                seed: 1,
+                tracker: TrackerSpec::default(),
+            },
+            Box::new(|_a0, _init| anyhow::bail!("artifacts missing")),
+        );
+        match res {
+            Ok(_) => panic!("spawn must propagate the factory error"),
+            Err(e) => assert!(e.to_string().contains("artifacts missing"), "{e}"),
+        }
+    }
+
+    #[test]
+    fn spawn_rejects_unbuildable_spec() {
+        let g = base_graph(20, 9);
+        let res = TrackingService::spawn(ServiceConfig {
+            initial: g,
+            k: 3,
+            policy: BatchPolicy::ByCount(4),
+            seed: 1,
+            tracker: TrackerSpec::parse("trip@xla").unwrap(),
+        });
+        match res {
+            Ok(_) => panic!("trip@xla must be rejected before the worker spawns"),
+            Err(e) => assert!(e.to_string().contains("G-REST"), "{e}"),
+        }
     }
 }

@@ -11,8 +11,9 @@ use crate::linalg::rng::Rng;
 use crate::linalg::threads::Threads;
 use crate::tasks::{ari::adjusted_rand_index, centrality, clustering};
 use crate::tracking::laplacian::{shifted_normalized_laplacian, shifted_scenario};
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::init_eigenpairs;
-use crate::tracking::{EigTracker, GRest, SubspaceMode};
+use crate::tracking::EigTracker;
 use std::time::{Duration, Instant};
 
 /// Scaled-down knobs for smoke runs (CI / quick bench).
@@ -66,7 +67,8 @@ impl ExpConfig {
     }
 }
 
-fn scale_spec(spec: &DatasetSpec, extra: usize) -> DatasetSpec {
+/// Scale a dataset spec down by an extra divisor (quick/smoke runs).
+pub fn scale_spec(spec: &DatasetSpec, extra: usize) -> DatasetSpec {
     let mut s = spec.clone();
     if extra > 1 {
         s.nodes = (s.nodes / extra).max(64);
@@ -85,6 +87,8 @@ pub struct DatasetResult {
     pub series: Vec<(String, Vec<f64>)>,
     /// tracker name → total tracking time (Fig. 4)
     pub times: Vec<(String, Duration)>,
+    /// tracker name → mean reported flops per step (complexity column)
+    pub flops: Vec<(String, f64)>,
     /// reference (`eigs`) total time
     pub eigs_time: Duration,
 }
@@ -98,8 +102,9 @@ pub fn run_dataset(spec: &DatasetSpec, cfg: &ExpConfig) -> DatasetResult {
         let sc = datasets::scenario_for(&spec, cfg.t_override, &mut rng);
         let reference = reference_run(&sc, cfg.k, 7 + mc as u64);
         let mut roster = paper_trackers(false, cfg.rsvd_lp, cfg.threads);
-        roster.push(timers_spec(cfg.k));
-        let results = run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 7 + mc as u64);
+        roster.push(timers_spec());
+        let results = run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 7 + mc as u64)
+            .expect("paper roster must build");
         let cur = summarize(&spec.name, &results, reference.total_time, cfg.angles_k);
         agg = Some(match agg {
             None => cur,
@@ -138,6 +143,10 @@ fn summarize(
             .map(|r| (r.name.clone(), r.mean_angle_series(angles_k)))
             .collect(),
         times: results.iter().map(|r| (r.name.clone(), r.total_time)).collect(),
+        flops: results
+            .iter()
+            .map(|r| (r.name.clone(), r.mean_flops_per_step()))
+            .collect(),
         eigs_time,
     }
 }
@@ -157,6 +166,9 @@ fn merge_into(prev: &mut DatasetResult, cur: &DatasetResult, runs_so_far: usize)
     }
     for (p, c) in prev.times.iter_mut().zip(cur.times.iter()) {
         p.1 = p.1.mul_f64(1.0 - w) + c.1.mul_f64(w);
+    }
+    for (p, c) in prev.flops.iter_mut().zip(cur.flops.iter()) {
+        p.1 += (c.1 - p.1) * w;
     }
     prev.eigs_time = prev.eigs_time.mul_f64(1.0 - w) + cur.eigs_time.mul_f64(w);
 }
@@ -219,15 +231,16 @@ pub fn figure_accuracy_runtime(kind: Kind, cfg: &ExpConfig) -> (Vec<DatasetResul
             }
         }
     }
-    // Fig. 4: total runtimes incl. eigs
-    let mut tt = Table::new(&["Dataset", "Tracker", "total_time", "seconds"]);
+    // Fig. 4: total runtimes incl. eigs, plus the complexity column
+    let mut tt = Table::new(&["Dataset", "Tracker", "total_time", "seconds", "Mflop_per_step"]);
     for r in &results {
-        for (name, d) in &r.times {
+        for ((name, d), (_, fl)) in r.times.iter().zip(r.flops.iter()) {
             tt.row(vec![
                 r.dataset.clone(),
                 name.clone(),
                 fmt_secs(*d),
                 format!("{:.4}", d.as_secs_f64()),
+                format!("{:.2}", fl / 1e6),
             ]);
         }
         tt.row(vec![
@@ -235,6 +248,7 @@ pub fn figure_accuracy_runtime(kind: Kind, cfg: &ExpConfig) -> (Vec<DatasetResul
             "eigs".into(),
             fmt_secs(r.eigs_time),
             format!("{:.4}", r.eigs_time.as_secs_f64()),
+            "-".into(),
         ]);
     }
     (results, ta, tb, tt)
@@ -249,13 +263,10 @@ pub fn fig5_rsvd_tradeoff(cfg: &ExpConfig, grid: &[usize]) -> Table {
 
     // G-REST3 baseline
     let threads = cfg.threads;
-    let roster3 = vec![crate::eval::harness::TrackerSpec::new(
-        "G-REST3",
-        Box::new(move |_, p, _| {
-            Box::new(GRest::with_threads(p.clone(), SubspaceMode::Full, threads))
-        }),
-    )];
-    let base = &run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster3, 9)[0];
+    let roster3 = vec![TrackerSpec::new(Algo::Grest3).with_threads(threads)];
+    let base_runs =
+        run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster3, 9).expect("grest3 builds");
+    let base = &base_runs[0];
     let base_psi = base.grand_mean_angle(cfg.angles_k);
     let base_time = base.total_time;
 
@@ -269,17 +280,10 @@ pub fn fig5_rsvd_tradeoff(cfg: &ExpConfig, grid: &[usize]) -> Table {
     ]);
     for &l in grid {
         for &p in grid {
-            let roster = vec![crate::eval::harness::TrackerSpec::new(
-                "rsvd",
-                Box::new(move |_, pairs, _| {
-                    Box::new(GRest::with_threads(
-                        pairs.clone(),
-                        SubspaceMode::Rsvd { l, p },
-                        threads,
-                    ))
-                }),
-            )];
-            let r = &run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 9)[0];
+            let roster = vec![TrackerSpec::new(Algo::GrestRsvd { l, p }).with_threads(threads)];
+            let runs = run_trackers(&sc, &reference, cfg.k, cfg.angles_k, &roster, 9)
+                .expect("rsvd roster builds");
+            let r = &runs[0];
             let psi = r.grand_mean_angle(cfg.angles_k);
             t.row(vec![
                 l.to_string(),
@@ -306,11 +310,13 @@ pub fn table3_centrality(cfg: &ExpConfig, js: &[usize]) -> Table {
         let sc = datasets::scenario_for(&spec, cfg.t_override, &mut rng);
         let reference = reference_run(&sc, cfg.k, 3);
         let mut roster = paper_trackers(false, cfg.rsvd_lp, cfg.threads);
-        roster.push(timers_spec(cfg.k));
+        roster.push(timers_spec());
         // rerun trackers capturing eigenpairs per step for centrality
         let init = init_eigenpairs(&sc.initial, cfg.k, 3);
         for specr in &roster {
-            let mut tracker = (specr.build)(&sc.initial, &init, 3);
+            let mut tracker = specr
+                .build_seeded(&sc.initial, &init, 3)
+                .unwrap_or_else(|e| panic!("cannot build tracker `{specr}`: {e}"));
             let mut overlaps: Vec<Vec<f64>> = vec![vec![]; js.len()];
             for (step_idx, step) in sc.steps.iter().enumerate() {
                 tracker.update(&step.delta).unwrap();
@@ -332,7 +338,7 @@ pub fn table3_centrality(cfg: &ExpConfig, js: &[usize]) -> Table {
             for (ji, &j) in js.iter().enumerate() {
                 let mean = overlaps[ji].iter().sum::<f64>() / overlaps[ji].len().max(1) as f64;
                 t.row(vec![
-                    specr.name.clone(),
+                    specr.display_name(),
                     j.to_string(),
                     spec.name.into(),
                     format!("{:.1}", 100.0 * mean),
@@ -364,37 +370,27 @@ pub fn fig6_clustering(cfg: &ExpConfig, n: usize, p_outs: &[f64], ks: &[usize]) 
             let (t0, steps) = shifted_scenario(&sc, shifted_normalized_laplacian, 0.0);
             let init = init_eigenpairs(&t0, k_clusters, 21 + mc as u64);
             let lp = cfg.rsvd_lp.min(20).max(4);
-            let mut trackers: Vec<(String, Box<dyn EigTracker>)> = vec![
-                ("TRIP".into(), Box::new(crate::tracking::trip::Trip::new(init.clone()))),
-                ("RM".into(), Box::new(crate::tracking::residual_modes::ResidualModes::new(init.clone()))),
-                ("IASC".into(), Box::new(crate::tracking::iasc::Iasc::new(init.clone()))),
-                (
-                    "G-REST2".into(),
-                    Box::new(GRest::with_threads(init.clone(), SubspaceMode::Rm, cfg.threads)),
-                ),
-                (
-                    "G-REST3".into(),
-                    Box::new(GRest::with_threads(init.clone(), SubspaceMode::Full, cfg.threads)),
-                ),
-                (
-                    "G-REST-RSVD".into(),
-                    Box::new(GRest::with_threads(
-                        init.clone(),
-                        SubspaceMode::Rsvd { l: lp, p: lp },
-                        cfg.threads,
-                    )),
-                ),
-                ("TIMERS".into(), Box::new(crate::tracking::timers::Timers::new(&t0, k_clusters, 33))),
-            ];
+            let specs = {
+                let mut v = paper_trackers(false, lp, cfg.threads);
+                v.push(timers_spec());
+                v
+            };
+            let mut trackers: Vec<Box<dyn EigTracker>> = specs
+                .iter()
+                .map(|s| {
+                    s.build_seeded(&t0, &init, 33)
+                        .unwrap_or_else(|e| panic!("cannot build tracker `{s}`: {e}"))
+                })
+                .collect();
             let mut ratios: Vec<(String, Vec<f64>)> =
-                trackers.iter().map(|(n, _)| (n.clone(), vec![])).collect();
+                trackers.iter().map(|t| (t.name(), vec![])).collect();
             for (step_idx, (delta, t_now)) in steps.iter().enumerate() {
                 let truth = &labels[step_idx + 1];
                 // reference clustering from exact trailing eigenvectors
                 let refp = init_eigenpairs(t_now, k_clusters, 99 + step_idx as u64);
                 let ref_labels = clustering::spectral_cluster(&refp.vectors, k_clusters, 1);
                 let ref_ari = adjusted_rand_index(&ref_labels, truth).max(1e-6);
-                for (ti, (_, tracker)) in trackers.iter_mut().enumerate() {
+                for (ti, tracker) in trackers.iter_mut().enumerate() {
                     tracker.update(delta).unwrap();
                     let est_labels =
                         clustering::spectral_cluster(&tracker.current().vectors, k_clusters, 1);

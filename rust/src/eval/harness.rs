@@ -1,97 +1,64 @@
 //! Experiment harness: runs a set of trackers over a dynamic-graph
 //! scenario, recording per-step eigenvector angles against a shared
-//! Lanczos reference and per-step wall-clock — the raw material of every
-//! figure and table in the paper's Sec. 5.
+//! Lanczos reference, per-step wall-clock, and per-step reported flops —
+//! the raw material of every figure and table in the paper's Sec. 5.
+//!
+//! Trackers are described declaratively: the roster helpers return
+//! [`TrackerSpec`] lists and [`run_trackers`] instantiates each through
+//! [`TrackerSpec::build_seeded`], so a new tracker (or parameter sweep)
+//! is one more spec in a `Vec`, not another constructor closure.
 
 use crate::graph::scenario::DynamicScenario;
 use crate::linalg::threads::Threads;
-use crate::sparse::csr::Csr;
 use crate::tracking::reference::Reference;
-use crate::tracking::residual_modes::ResidualModes;
-use crate::tracking::timers::Timers;
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{init_eigenpairs, EigTracker, EigenPairs};
-use crate::tracking::trip::Trip;
-use crate::tracking::trip_basic::TripBasic;
-use crate::tracking::{iasc::Iasc, GRest, SubspaceMode};
 use std::time::{Duration, Instant};
 
-/// Builder for a tracker given (A⁽⁰⁾, precomputed initial pairs, seed).
-pub type TrackerBuilder = Box<dyn Fn(&Csr, &EigenPairs, u64) -> Box<dyn EigTracker>>;
-
-/// Named tracker constructor.
-pub struct TrackerSpec {
-    pub name: String,
-    pub build: TrackerBuilder,
-}
-
-impl TrackerSpec {
-    pub fn new(name: &str, build: TrackerBuilder) -> TrackerSpec {
-        TrackerSpec { name: name.into(), build }
-    }
-}
-
-/// The paper's evaluation roster minus TIMERS (add [`timers_spec`], which
-/// needs K up front): TRIP, RM, IASC, G-REST₂, G-REST₃, G-REST_RSVD.
-/// `rsvd_lp` scales with graph expansion (paper: 100 for the SNAP runs,
-/// 20 for the SBM runs).  `threads` is the dense-kernel worker budget for
-/// the G-REST family.
+/// The paper's evaluation roster minus TIMERS (add [`timers_spec`]):
+/// TRIP, RM, IASC, G-REST₂, G-REST₃, G-REST_RSVD.  `rsvd_lp` scales with
+/// graph expansion (paper: 100 for the SNAP runs, 20 for the SBM runs).
+/// `threads` is the dense-kernel worker budget for the G-REST family.
 pub fn paper_trackers(
     include_trip_basic: bool,
     rsvd_lp: usize,
     threads: Threads,
 ) -> Vec<TrackerSpec> {
-    let mut v: Vec<TrackerSpec> = vec![
-        TrackerSpec::new("TRIP", Box::new(|_, p, _| Box::new(Trip::new(p.clone())))),
-        TrackerSpec::new("RM", Box::new(|_, p, _| Box::new(ResidualModes::new(p.clone())))),
-        TrackerSpec::new("IASC", Box::new(|_, p, _| Box::new(Iasc::new(p.clone())))),
-        TrackerSpec::new(
-            "G-REST2",
-            Box::new(move |_, p, _| {
-                Box::new(GRest::with_threads(p.clone(), SubspaceMode::Rm, threads))
-            }),
-        ),
-        TrackerSpec::new(
-            "G-REST3",
-            Box::new(move |_, p, _| {
-                Box::new(GRest::with_threads(p.clone(), SubspaceMode::Full, threads))
-            }),
-        ),
-        TrackerSpec::new(
-            "G-REST-RSVD",
-            Box::new(move |_, p, _| {
-                Box::new(GRest::with_threads(
-                    p.clone(),
-                    SubspaceMode::Rsvd { l: rsvd_lp, p: rsvd_lp },
-                    threads,
-                ))
-            }),
-        ),
+    let mut v = vec![
+        TrackerSpec::new(Algo::Trip),
+        TrackerSpec::new(Algo::Rm { mu: 0.0 }),
+        TrackerSpec::new(Algo::Iasc),
+        TrackerSpec::new(Algo::Grest2).with_threads(threads),
+        TrackerSpec::new(Algo::Grest3).with_threads(threads),
+        TrackerSpec::new(Algo::GrestRsvd { l: rsvd_lp, p: rsvd_lp }).with_threads(threads),
     ];
     if include_trip_basic {
-        v.insert(
-            0,
-            TrackerSpec::new("TRIP-Basic", Box::new(|_, p, _| Box::new(TripBasic::new(p.clone())))),
-        );
+        v.insert(0, TrackerSpec::new(Algo::TripBasic));
     }
     v
 }
 
-/// Build TIMERS with explicit k (used instead of the roster helper when
-/// the K is known up front).
-pub fn timers_spec(k: usize) -> TrackerSpec {
-    TrackerSpec::new(
-        "TIMERS",
-        Box::new(move |a0, _, seed| Box::new(Timers::new(a0, k, seed))),
-    )
+/// TIMERS with the paper's default θ and restart gap.
+pub fn timers_spec() -> TrackerSpec {
+    TrackerSpec::new(Algo::Timers {
+        theta: crate::tracking::spec::DEFAULT_TIMERS_THETA,
+        min_gap: crate::tracking::spec::DEFAULT_TIMERS_GAP,
+    })
 }
 
 /// Result of one tracker over one scenario.
 pub struct RunResult {
+    /// Spec-derived display name (one source of truth for tables/CSV).
     pub name: String,
+    /// Canonical spec string (disambiguates sweeps whose display names
+    /// coincide, e.g. seed or thread sweeps).
+    pub spec: String,
     /// per-step ψ_i for i < angles_k, vs the Lanczos reference
     pub per_step_angles: Vec<Vec<f64>>,
     /// per-step tracker update time
     pub per_step_time: Vec<Duration>,
+    /// per-step reported flop counts (0 when a tracker doesn't report)
+    pub per_step_flops: Vec<u64>,
     pub total_time: Duration,
 }
 
@@ -122,6 +89,12 @@ impl RunResult {
         let s = self.mean_angle_series(k);
         s.iter().sum::<f64>() / s.len().max(1) as f64
     }
+
+    /// Mean reported flops per update step (the complexity column).
+    pub fn mean_flops_per_step(&self) -> f64 {
+        self.per_step_flops.iter().map(|&f| f as f64).sum::<f64>()
+            / self.per_step_flops.len().max(1) as f64
+    }
 }
 
 /// Per-step reference eigenpairs (shared across trackers) plus the time
@@ -145,9 +118,13 @@ pub fn reference_run(sc: &DynamicScenario, k: usize, seed: u64) -> ReferenceRun 
     ReferenceRun { per_step, per_step_time, total_time: t0.elapsed() }
 }
 
-/// Run every tracker over the scenario against a precomputed reference.
+/// Run every spec over the scenario against a precomputed reference.
 ///
 /// `angles_k` — how many leading eigenvector angles to record per step.
+/// `seed` is the shared initialization seed and the fallback tracker
+/// seed (an explicit `seed=` in a spec wins).  A spec that fails to
+/// build (e.g. `@xla` without artifacts) is a clean error; a tracker
+/// failing mid-run still panics (the run is unsalvageable).
 pub fn run_trackers(
     sc: &DynamicScenario,
     reference: &ReferenceRun,
@@ -155,33 +132,41 @@ pub fn run_trackers(
     angles_k: usize,
     trackers: &[TrackerSpec],
     seed: u64,
-) -> Vec<RunResult> {
+) -> anyhow::Result<Vec<RunResult>> {
     let init = init_eigenpairs(&sc.initial, k, seed);
     trackers
         .iter()
         .map(|spec| {
-            let mut tracker = (spec.build)(&sc.initial, &init, seed);
+            let mut tracker = spec
+                .build_seeded(&sc.initial, &init, seed)
+                .map_err(|e| anyhow::anyhow!("cannot build tracker `{spec}`: {e}"))?;
+            let name = tracker.name();
+            let spec_text = spec.to_string();
             let mut per_step_angles = Vec::with_capacity(sc.steps.len());
             let mut per_step_time = Vec::with_capacity(sc.steps.len());
+            let mut per_step_flops = Vec::with_capacity(sc.steps.len());
             let t0 = Instant::now();
             for (t, step) in sc.steps.iter().enumerate() {
                 let s0 = Instant::now();
                 tracker
                     .update(&step.delta)
-                    .unwrap_or_else(|e| panic!("{} failed at step {t}: {e}", spec.name));
+                    .unwrap_or_else(|e| panic!("{name} failed at step {t}: {e}"));
                 per_step_time.push(s0.elapsed());
+                per_step_flops.push(tracker.last_step_flops());
                 per_step_angles.push(crate::eval::angle::angles(
                     tracker.current(),
                     &reference.per_step[t],
                     angles_k,
                 ));
             }
-            RunResult {
-                name: spec.name.clone(),
+            Ok(RunResult {
+                name,
+                spec: spec_text,
                 per_step_angles,
                 per_step_time,
+                per_step_flops,
                 total_time: t0.elapsed(),
-            }
+            })
         })
         .collect()
 }
@@ -205,12 +190,31 @@ mod tests {
         let k = 8;
         let reference = reference_run(&sc, k, 7);
         let mut roster = paper_trackers(false, 8, Threads::AUTO);
-        roster.push(timers_spec(k));
-        let results = run_trackers(&sc, &reference, k, 3, &roster, 7);
+        roster.push(timers_spec());
+        let results = run_trackers(&sc, &reference, k, 3, &roster, 7).unwrap();
         assert_eq!(results.len(), 7);
         for r in &results {
             assert_eq!(r.per_step_angles.len(), 4);
             assert!(r.grand_mean_angle(3).is_finite());
+        }
+    }
+
+    #[test]
+    fn baseline_trackers_report_flops() {
+        // TRIP / RM / IASC / TIMERS must all report nonzero per-step
+        // flops, not just the G-REST family (complexity columns)
+        let sc = small_scenario(3);
+        let k = 6;
+        let reference = reference_run(&sc, k, 5);
+        let mut roster = paper_trackers(true, 6, Threads::AUTO);
+        roster.push(timers_spec());
+        let results = run_trackers(&sc, &reference, k, 3, &roster, 5).unwrap();
+        for r in &results {
+            assert!(
+                r.mean_flops_per_step() > 0.0,
+                "{} reports zero flops",
+                r.name
+            );
         }
     }
 
@@ -221,7 +225,7 @@ mod tests {
         let k = 8;
         let reference = reference_run(&sc, k, 11);
         let roster = paper_trackers(false, 8, Threads::AUTO);
-        let results = run_trackers(&sc, &reference, k, 3, &roster, 11);
+        let results = run_trackers(&sc, &reference, k, 3, &roster, 11).unwrap();
         let get = |n: &str| {
             results
                 .iter()

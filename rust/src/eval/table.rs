@@ -44,14 +44,26 @@ impl Table {
         out
     }
 
-    /// CSV rendering (no quoting — numeric tables only).
+    /// CSV rendering.  Fields containing a comma, quote, or newline are
+    /// quoted RFC-4180 style (tracker names like `G-REST-RSVD(L=32,P=32)`
+    /// carry commas).
     pub fn to_csv(&self) -> String {
+        fn field(cell: &str) -> String {
+            if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        }
         let mut out = String::new();
-        out.push_str(&self.headers.join(","));
-        out.push('\n');
-        for r in &self.rows {
-            out.push_str(&r.join(","));
+        let mut line = |cells: &[String]| {
+            let quoted: Vec<String> = cells.iter().map(|c| field(c)).collect();
+            out.push_str(&quoted.join(","));
             out.push('\n');
+        };
+        line(&self.headers);
+        for r in &self.rows {
+            line(r);
         }
         out
     }
@@ -99,6 +111,16 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn csv_quotes_fields_with_commas() {
+        let mut t = Table::new(&["Tracker", "psi"]);
+        t.row(vec!["G-REST-RSVD(L=32,P=32)".into(), "0.1".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "Tracker,psi\n\"G-REST-RSVD(L=32,P=32)\",0.1\n");
+        // still one comma-separated record per row
+        assert_eq!(csv.lines().count(), 2);
     }
 
     #[test]

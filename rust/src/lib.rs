@@ -21,7 +21,10 @@
 //!   evaluation scenarios, and the (substituted) dataset registry.
 //! * [`tracking`] — the trackers: TRIP-Basic, TRIP, Residual Modes, IASC,
 //!   TIMERS, and the proposed G-REST₂ / G-REST₃ / G-REST_RSVD (Alg. 2),
-//!   plus Laplacian and matrix-function tracking (paper Sec. 4).
+//!   plus Laplacian and matrix-function tracking (paper Sec. 4).  Every
+//!   tracker is addressed declaratively through
+//!   [`tracking::spec::TrackerSpec`] (`grest-rsvd:l=32,p=16`,
+//!   `grest3@xla`, …) and built by its registry-backed factory.
 //! * [`runtime`]  — PJRT execution of the AOT-compiled JAX/Pallas dense
 //!   pipeline (`artifacts/*.hlo.txt`); Python is never on the request path.
 //! * [`coordinator`] — the L3 streaming service: event ingestion, update
@@ -42,3 +45,4 @@ pub mod tracking;
 pub use linalg::mat::Mat;
 pub use sparse::csr::Csr;
 pub use sparse::delta::Delta;
+pub use tracking::TrackerSpec;

@@ -4,70 +4,163 @@
 //!   table2                         print the dataset registry (Table 2)
 //!   experiment <id> [--quick]      regenerate a paper table/figure
 //!                                  (ids: fig2 fig3 fig4 fig5 table3 fig6 all)
-//!   track [--dataset D] [--k K] [--tracker T] [--xla] [--t T]
-//!                                  run one tracker over one dataset
-//!   serve-demo [--events N]        run the streaming coordinator demo
+//!   track [--dataset D] [--k K] [--tracker SPEC] [--trackers A,B,C]
+//!         [--t T] [--seed S] [--eval-every N] [--quick] [--xla]
+//!                                  run one tracker over one dataset, or a
+//!                                  side-by-side comparison of several
+//!   serve-demo [--events N] [--tracker SPEC]
+//!                                  run the streaming coordinator demo
 //!   generate --dataset D --out F   write a synthetic dataset edge list
 //!
 //! Global flags:
 //!   --threads N                    dense-kernel worker budget for the
 //!                                  G-REST family (0 = auto, 1 = serial)
 //!
-//! Argument parsing is hand-rolled (offline build: no clap).
+//! Trackers are addressed by the declarative spec grammar
+//! `name[:key=value,...][@backend]` — e.g. `grest3`, `grest-rsvd:l=32,p=16`,
+//! `timers:theta=0.01`, `grest3@xla`.  `--tracker list` prints the full
+//! registry; every legacy tracker name keeps working as an alias.
+//!
+//! Argument parsing is hand-rolled (offline build: no clap); unknown
+//! flags are errors, and each subcommand declares which flags it takes.
 
 use grest::eval::experiments::{self, ExpConfig};
-use grest::eval::table::fmt_secs;
+use grest::eval::harness::{reference_run, run_trackers};
+use grest::eval::table::{fmt_secs, Table};
 use grest::graph::datasets::{self, Kind};
+use grest::graph::scenario::DynamicScenario;
 use grest::linalg::rng::Rng;
 use grest::linalg::threads::Threads;
-use grest::tracking::{self, EigTracker, GRest, SubspaceMode};
+use grest::tracking::{self, Backend, EigTracker, TrackerSpec};
 use std::collections::HashMap;
 
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+/// One CLI flag: its name and whether it consumes a value.
+#[derive(Clone, Copy)]
+struct Flag {
+    name: &'static str,
+    takes_value: bool,
+}
+
+const fn vflag(name: &'static str) -> Flag {
+    Flag { name, takes_value: true }
+}
+
+const fn bflag(name: &'static str) -> Flag {
+    Flag { name, takes_value: false }
+}
+
+/// Flags accepted by each subcommand (plus the global `--threads`).
+fn known_flags(cmd: &str) -> Vec<Flag> {
+    let mut flags = vec![vflag("threads")];
+    match cmd {
+        "experiment" | "table2" => flags.push(bflag("quick")),
+        "track" => flags.extend([
+            vflag("dataset"),
+            vflag("k"),
+            vflag("t"),
+            vflag("tracker"),
+            vflag("trackers"),
+            vflag("seed"),
+            vflag("eval-every"),
+            bflag("quick"),
+            bflag("xla"),
+        ]),
+        "serve-demo" => flags.extend([vflag("events"), vflag("tracker"), vflag("seed")]),
+        "generate" => flags.extend([vflag("dataset"), vflag("out")]),
+        _ => {}
+    }
+    flags
+}
+
+/// Split `args` into positionals and `--flag` values against a table of
+/// known flags.  Value-taking flags always consume the next argument
+/// (so negative numbers and other `-`-leading values are never
+/// mis-parsed as booleans), boolean flags never do, and unknown flags
+/// are an error rather than silently ignored.
+fn parse_flags(
+    args: &[String],
+    known: &[Flag],
+) -> anyhow::Result<(Vec<String>, HashMap<String, String>)> {
     let mut positional = vec![];
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        if let Some(name) = a.strip_prefix("--") {
-            if let Some((key, value)) = name.split_once('=') {
-                // --name=value form
-                flags.insert(key.to_string(), value.to_string());
-                i += 1;
-            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(name.to_string(), "true".to_string());
-                i += 1;
-            }
-        } else {
+        i += 1;
+        let Some(name) = a.strip_prefix("--") else {
             positional.push(a.clone());
-            i += 1;
-        }
+            continue;
+        };
+        let (key, inline) = match name.split_once('=') {
+            Some((k, v)) => (k, Some(v.to_string())),
+            None => (name, None),
+        };
+        let Some(flag) = known.iter().find(|f| f.name == key) else {
+            let names: Vec<String> = known.iter().map(|f| format!("--{}", f.name)).collect();
+            anyhow::bail!("unknown flag --{key}; expected one of: {}", names.join(", "));
+        };
+        let value = match (flag.takes_value, inline) {
+            (true, Some(v)) => v,
+            (false, Some(_)) => anyhow::bail!("flag --{key} does not take a value"),
+            (true, None) => {
+                let Some(v) = args.get(i) else {
+                    anyhow::bail!("flag --{key} expects a value");
+                };
+                i += 1;
+                v.clone()
+            }
+            (false, None) => "true".to_string(),
+        };
+        flags.insert(key.to_string(), value);
     }
-    (positional, flags)
+    Ok((positional, flags))
 }
+
+fn flag_num<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> anyhow::Result<T> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {s:?}")),
+    }
+}
+
+const COMMANDS: &[&str] = &["table2", "experiment", "track", "serve-demo", "generate"];
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (pos, flags) = parse_flags(&args);
-    let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
-    let threads = match flags.get("threads") {
-        None => Threads::AUTO,
-        Some(s) => Threads(s.parse().map_err(|_| {
-            anyhow::anyhow!("--threads expects a number (0 = auto, 1 = serial), got {s:?}")
-        })?),
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        print_usage();
+        return Ok(());
+    }
+    // the subcommand is located by name, so flags may precede it
+    // (`grest --threads 8 track ...`, `grest --quick experiment fig2`)
+    let Some(cmd_idx) = args.iter().position(|a| COMMANDS.contains(&a.as_str())) else {
+        print_usage();
+        return Ok(());
     };
+    let cmd = args[cmd_idx].clone();
+    let rest: Vec<String> = args
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != cmd_idx)
+        .map(|(_, a)| a.clone())
+        .collect();
+    let (pos, flags) = parse_flags(&rest, &known_flags(&cmd))?;
+    let threads = Threads(flag_num(&flags, "threads", 0usize)?);
     let mut cfg = if flags.contains_key("quick") { ExpConfig::quick() } else { ExpConfig::paper() };
     cfg.threads = threads;
 
-    match cmd {
+    match cmd.as_str() {
         "table2" => {
             println!("{}", experiments::table2().render());
         }
         "experiment" => {
-            let id = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let id = pos.first().map(|s| s.as_str()).unwrap_or("all");
             run_experiment(id, &cfg)?;
         }
         "track" => {
@@ -80,14 +173,20 @@ fn main() -> anyhow::Result<()> {
             cmd_generate(&flags)?;
         }
         _ => {
-            println!(
-                "grest — Graph Rayleigh-Ritz Eigenspace Tracking\n\
-                 usage: grest <table2|experiment|track|serve-demo|generate> [flags]\n\
-                 see rust/src/main.rs header for details"
-            );
+            print_usage();
         }
     }
     Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "grest — Graph Rayleigh-Ritz Eigenspace Tracking\n\
+         usage: grest <table2|experiment|track|serve-demo|generate> [flags]\n\
+         trackers are declarative specs: name[:key=value,...][@backend]\n\
+         (`grest track --tracker list` prints the registry)\n\
+         see rust/src/main.rs header for details"
+    );
 }
 
 fn run_experiment(id: &str, cfg: &ExpConfig) -> anyhow::Result<()> {
@@ -156,16 +255,126 @@ fn run_experiment(id: &str, cfg: &ExpConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Splice a `key=value` continuation into a spec string: before any
+/// trailing `@backend` suffix, opening the `:` param section if the
+/// spec has none yet.
+fn append_spec_param(prev: &mut String, param: &str) {
+    let (body_end, suffix) = match prev.rfind('@') {
+        Some(at) => (at, prev[at..].to_string()),
+        None => (prev.len(), String::new()),
+    };
+    let mut body = prev[..body_end].to_string();
+    body.push(if body.contains(':') { ',' } else { ':' });
+    body.push_str(param);
+    body.push_str(&suffix);
+    *prev = body;
+}
+
+/// Split a `--trackers` list on commas, except that a `key=value`
+/// fragment continues the *previous* spec's parameter list (the spec
+/// grammar itself uses commas between params, so
+/// `grest-rsvd:l=16,p=8,trip` is two specs, not three).
+fn split_tracker_list(list: &str) -> Vec<String> {
+    let mut out: Vec<String> = vec![];
+    for part in list.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let continues_params = match part.split_once('=') {
+            // `l=16` continues params; `grest3:n=200` starts a new spec
+            Some((key, _)) => !key.contains(':') && !key.contains('@'),
+            None => false,
+        };
+        match out.last_mut() {
+            Some(prev) if continues_params => append_spec_param(prev, part),
+            _ => out.push(part.to_string()),
+        }
+    }
+    out
+}
+
+/// Parse one tracker spec from the CLI, applying the `--threads`
+/// fallback, the `--xla` backend override, and — for XLA specs — tier
+/// capacities sized from the scenario.
+fn cli_spec(
+    text: &str,
+    threads: Threads,
+    use_xla: bool,
+    sc: &DynamicScenario,
+    k: usize,
+) -> anyhow::Result<TrackerSpec> {
+    // --xla is an alias for appending `@xla`; apply it before parsing so
+    // backend-gated params (n=, m=) validate against the real backend.
+    // An explicit `@backend` in the spec wins over the flag.
+    let text = text.trim();
+    let mut spec = if use_xla && !text.contains('@') {
+        TrackerSpec::parse(&format!("{text}@xla"))?
+    } else {
+        TrackerSpec::parse(text)?
+    };
+    apply_cli_defaults(&mut spec, threads, sc.max_nodes());
+    if spec.backend == Backend::Xla && spec.panel_cap == 0 {
+        // panel width: K cols of ΔX̄ plus per-step expansion
+        let max_s = sc.steps.iter().map(|s| s.delta.s_new).max().unwrap_or(0);
+        spec.panel_cap = k + max_s.min(128);
+    }
+    Ok(spec)
+}
+
+/// Scenario-independent CLI defaulting, shared by `track` and
+/// `serve-demo`: the `--threads` fallback for native G-REST specs and
+/// the XLA tier row capacity when the spec leaves it unsized.
+fn apply_cli_defaults(spec: &mut TrackerSpec, threads: Threads, xla_n_cap: usize) {
+    // --threads drives the native dense kernels only
+    if spec.algo.is_grest()
+        && spec.backend == Backend::Native
+        && spec.threads == Threads::AUTO
+    {
+        spec.threads = threads;
+    }
+    if spec.backend == Backend::Xla && spec.n_cap == 0 {
+        spec.n_cap = xla_n_cap;
+    }
+}
+
 fn cmd_track(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Result<()> {
     let dataset = flags.get("dataset").map(|s| s.as_str()).unwrap_or("CM-Collab");
-    let k: usize = flags.get("k").and_then(|s| s.parse().ok()).unwrap_or(64);
-    let t_steps: Option<usize> = flags.get("t").and_then(|s| s.parse().ok());
-    let tracker_name = flags.get("tracker").map(|s| s.as_str()).unwrap_or("grest3");
+    let quick = flags.contains_key("quick");
+    let k: usize = flag_num(flags, "k", if quick { 16 } else { 64 })?;
+    let t_steps: Option<usize> = match flags.get("t") {
+        None => {
+            if quick {
+                Some(4)
+            } else {
+                None
+            }
+        }
+        Some(s) => Some(s.parse().map_err(|_| {
+            anyhow::anyhow!("--t expects a number of time steps, got {s:?}")
+        })?),
+    };
+    let seed: u64 = flag_num(flags, "seed", 1u64)?;
+    let eval_every: usize = flag_num(flags, "eval-every", 1usize)?;
+    let tracker_arg = flags.get("tracker").map(|s| s.as_str()).unwrap_or("grest3");
     let use_xla = flags.contains_key("xla");
+    if flags.contains_key("tracker") && flags.contains_key("trackers") {
+        anyhow::bail!(
+            "pass either --tracker (single run) or --trackers (comparison), not both"
+        );
+    }
 
-    let spec = datasets::by_name(dataset)
+    if tracker_arg == "list" {
+        println!("{}", tracking::spec::list_help());
+        return Ok(());
+    }
+
+    let mut spec = datasets::by_name(dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
-    let mut rng = Rng::new(1);
+    if quick {
+        spec = experiments::scale_spec(&spec, 4);
+    }
+    let mut rng = Rng::new(seed);
     let sc = datasets::scenario_for(&spec, t_steps, &mut rng);
     println!(
         "dataset {dataset}: N0={} -> N={} over {} steps, total delta nnz {}",
@@ -174,73 +383,142 @@ fn cmd_track(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Resul
         sc.t_steps(),
         sc.total_delta_nnz()
     );
+
+    if let Some(list) = flags.get("trackers") {
+        if flags.contains_key("eval-every") {
+            eprintln!(
+                "warning: --eval-every only thins the single-tracker loop; \
+                 comparison mode needs the per-step reference for psi and ignores it"
+            );
+        }
+        let specs = split_tracker_list(list)
+            .iter()
+            .map(|s| cli_spec(s, threads, use_xla, &sc, k))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        if specs.is_empty() {
+            anyhow::bail!("--trackers expects a comma-separated list of tracker specs");
+        }
+        return cmd_track_compare(&specs, &sc, k);
+    }
+
+    let tspec = cli_spec(tracker_arg, threads, use_xla, &sc, k)?;
+    println!("tracker: {tspec} ({})", tspec.display_name());
     let init = tracking::init_eigenpairs(&sc.initial, k, 7);
-    let mut tracker: Box<dyn EigTracker> = match tracker_name {
-        "trip-basic" => Box::new(tracking::trip_basic::TripBasic::new(init)),
-        "trip" => Box::new(tracking::trip::Trip::new(init)),
-        "rm" => Box::new(tracking::residual_modes::ResidualModes::new(init)),
-        "iasc" => Box::new(tracking::iasc::Iasc::new(init)),
-        "timers" => Box::new(tracking::timers::Timers::new(&sc.initial, k, 7)),
-        "grest2" => Box::new(GRest::with_threads(init, SubspaceMode::Rm, threads)),
-        "grest3" if use_xla => {
-            let manifest = grest::runtime::ArtifactManifest::load_default()?;
-            // panel width: K cols of ΔX̄ plus per-step expansion
-            let max_s = sc.steps.iter().map(|s| s.delta.s_new).max().unwrap_or(0);
-            let phases = grest::runtime::XlaPhases::for_problem(
-                manifest,
-                sc.max_nodes(),
-                k,
-                k + max_s.min(128),
-            )?;
-            println!("XLA backend tier: {:?}", phases.tier());
-            Box::new(GRest::with_phases(init, SubspaceMode::Full, phases, 7))
-        }
-        "grest3" => Box::new(GRest::with_threads(init, SubspaceMode::Full, threads)),
-        "grest-rsvd" => {
-            Box::new(GRest::with_threads(init, SubspaceMode::Rsvd { l: 32, p: 32 }, threads))
-        }
-        other => anyhow::bail!("unknown tracker {other}"),
-    };
+    let mut tracker = tspec.build_seeded(&sc.initial, &init, 7)?;
 
     let t0 = std::time::Instant::now();
+    let n_steps = sc.steps.len();
     for (i, step) in sc.steps.iter().enumerate() {
         let s0 = std::time::Instant::now();
         tracker.update(&step.delta)?;
         let update_t = s0.elapsed();
-        let reference =
-            tracking::traits::init_eigenpairs(&step.adjacency, k, 100 + i as u64);
-        let psi = grest::eval::angle::mean_angle(tracker.current(), &reference, 3.min(k));
+        // the per-step Lanczos reference dominates runtime on large
+        // datasets; --eval-every N thins it (0 disables entirely)
+        let do_eval = eval_every != 0 && ((i + 1) % eval_every == 0 || i + 1 == n_steps);
+        let psi_col = if do_eval {
+            let reference =
+                tracking::traits::init_eigenpairs(&step.adjacency, k, 100 + i as u64);
+            let psi = grest::eval::angle::mean_angle(tracker.current(), &reference, 3.min(k));
+            format!(" mean_psi(top3)={psi:.4}")
+        } else {
+            String::new()
+        };
         println!(
-            "step {:>3}: N={:>6} S={:>4} nnz(d)={:>6} update={} mean_psi(top3)={:.4}",
+            "step {:>3}: N={:>6} S={:>4} nnz(d)={:>6} update={}{}",
             i + 1,
             step.adjacency.n_rows,
             step.delta.s_new,
             step.delta.nnz(),
             fmt_secs(update_t),
-            psi
+            psi_col
         );
     }
     println!("total tracking time {}", fmt_secs(t0.elapsed()));
     Ok(())
 }
 
+/// `--trackers a,b,c`: run the harness over an arbitrary spec list and
+/// emit one side-by-side table/CSV keyed by spec-derived names.
+fn cmd_track_compare(
+    specs: &[TrackerSpec],
+    sc: &DynamicScenario,
+    k: usize,
+) -> anyhow::Result<()> {
+    for s in specs {
+        s.validate_buildable()
+            .map_err(|e| anyhow::anyhow!("cannot run `{s}`: {e}"))?;
+    }
+    println!(
+        "comparing {} trackers: {}",
+        specs.len(),
+        specs.iter().map(|s| s.display_name()).collect::<Vec<_>>().join(", ")
+    );
+    let angles_k = 3.min(k);
+    let reference = reference_run(sc, k, 100);
+    let results = run_trackers(sc, &reference, k, angles_k, specs, 7)?;
+
+    let mut table = Table::new(&[
+        "Tracker",
+        "Spec",
+        "mean_psi_top3",
+        "psi_1",
+        "psi_2",
+        "psi_3",
+        "total_time",
+        "Mflop_per_step",
+    ]);
+    for r in &results {
+        table.row(vec![
+            r.name.clone(),
+            r.spec.clone(),
+            format!("{:.4}", r.grand_mean_angle(angles_k)),
+            format!("{:.4}", r.avg_angle_for_index(0)),
+            format!("{:.4}", r.avg_angle_for_index(1)),
+            format!("{:.4}", r.avg_angle_for_index(2)),
+            fmt_secs(r.total_time),
+            format!("{:.2}", r.mean_flops_per_step() / 1e6),
+        ]);
+    }
+    table.row(vec![
+        "eigs (reference)".into(),
+        "eigs".into(),
+        "0.0000".into(),
+        "0.0000".into(),
+        "0.0000".into(),
+        "0.0000".into(),
+        fmt_secs(reference.total_time),
+        "-".into(),
+    ]);
+    println!("{}", table.render());
+    match table.write_csv("track_compare") {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write CSV: {e}"),
+    }
+    Ok(())
+}
+
 fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Result<()> {
     use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
     use grest::graph::stream::GraphEvent;
-    let n_events: usize = flags.get("events").and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let n_events: usize = flag_num(flags, "events", 2000usize)?;
+    let seed: u64 = flag_num(flags, "seed", 5u64)?;
+    let mut tspec = TrackerSpec::parse(
+        flags.get("tracker").map(|s| s.as_str()).unwrap_or("grest3"),
+    )?;
+    // the event stream grows the graph past the 500-node seed (ids up
+    // to 700); size any XLA tier with headroom so check_fits doesn't
+    // trip mid-stream
+    apply_cli_defaults(&mut tspec, threads, 1024);
+    println!("serving tracker: {tspec} ({})", tspec.display_name());
     let mut rng = Rng::new(3);
     let g = grest::graph::generators::erdos_renyi(500, 0.02, &mut rng);
-    let svc = TrackingService::spawn(
-        ServiceConfig {
-            initial: g,
-            k: 16,
-            policy: BatchPolicy::Either { events: 64, new_nodes: 16 },
-            seed: 5,
-        },
-        Box::new(move |_a0, init| {
-            Box::new(GRest::with_threads(init.clone(), SubspaceMode::Full, threads))
-        }),
-    )?;
+    let svc = TrackingService::spawn(ServiceConfig {
+        initial: g,
+        k: 16,
+        policy: BatchPolicy::Either { events: 64, new_nodes: 16 },
+        seed,
+        tracker: tspec,
+    })?;
     let h = svc.handle.clone();
     let t0 = std::time::Instant::now();
     for i in 0..n_events as u64 {
@@ -300,4 +578,103 @@ fn cmd_generate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn value_flags_consume_negative_numbers() {
+        // regression: a value after a flag must be consumed even when it
+        // starts with `-`, never downgraded to a boolean
+        let (pos, flags) = parse_flags(&sv(&["--t", "-1"]), &known_flags("track")).unwrap();
+        assert!(pos.is_empty());
+        assert_eq!(flags.get("t").map(|s| s.as_str()), Some("-1"));
+        let (_, flags) = parse_flags(&sv(&["--t", "0"]), &known_flags("track")).unwrap();
+        assert_eq!(flags.get("t").map(|s| s.as_str()), Some("0"));
+    }
+
+    #[test]
+    fn unknown_flags_are_errors_not_ignored() {
+        let err = parse_flags(&sv(&["--bogus", "1"]), &known_flags("track")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--bogus"), "{msg}");
+        assert!(msg.contains("--tracker"), "should list known flags: {msg}");
+    }
+
+    #[test]
+    fn inline_and_separate_values_agree() {
+        let (_, a) = parse_flags(&sv(&["--k=5"]), &known_flags("track")).unwrap();
+        let (_, b) = parse_flags(&sv(&["--k", "5"]), &known_flags("track")).unwrap();
+        assert_eq!(a.get("k"), b.get("k"));
+    }
+
+    #[test]
+    fn boolean_flags_never_swallow_the_next_arg() {
+        let (pos, flags) =
+            parse_flags(&sv(&["--quick", "fig2", "--t", "3"]), &known_flags("track")).unwrap();
+        assert_eq!(pos, vec!["fig2".to_string()]);
+        assert_eq!(flags.get("quick").map(|s| s.as_str()), Some("true"));
+        assert_eq!(flags.get("t").map(|s| s.as_str()), Some("3"));
+    }
+
+    #[test]
+    fn boolean_flag_with_inline_value_errors() {
+        let err = parse_flags(&sv(&["--quick=yes"]), &known_flags("track")).unwrap_err();
+        assert!(err.to_string().contains("does not take a value"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let err = parse_flags(&sv(&["--t"]), &known_flags("track")).unwrap_err();
+        assert!(err.to_string().contains("expects a value"));
+    }
+
+    #[test]
+    fn tracker_list_split_respects_param_commas() {
+        assert_eq!(
+            split_tracker_list("grest-rsvd:l=16,p=8,trip"),
+            vec!["grest-rsvd:l=16,p=8".to_string(), "trip".to_string()]
+        );
+        assert_eq!(
+            split_tracker_list("grest3,trip,iasc"),
+            vec!["grest3".to_string(), "trip".to_string(), "iasc".to_string()]
+        );
+        assert_eq!(
+            split_tracker_list("timers:theta=0.02,gap=3,grest3:threads=2,seed=5"),
+            vec![
+                "timers:theta=0.02,gap=3".to_string(),
+                "grest3:threads=2,seed=5".to_string()
+            ]
+        );
+        assert_eq!(split_tracker_list(" ,grest3, "), vec!["grest3".to_string()]);
+        // a continuation after a param-less spec opens the ':' section
+        assert_eq!(
+            split_tracker_list("grest3,threads=2,trip"),
+            vec!["grest3:threads=2".to_string(), "trip".to_string()]
+        );
+        // and splices before an @backend suffix
+        assert_eq!(
+            split_tracker_list("grest3@xla,n=4096,trip"),
+            vec!["grest3:n=4096@xla".to_string(), "trip".to_string()]
+        );
+        assert_eq!(
+            split_tracker_list("grest3:n=200@xla,m=20"),
+            vec!["grest3:n=200,m=20@xla".to_string()]
+        );
+    }
+
+    #[test]
+    fn value_flag_may_consume_dash_dash_token() {
+        // `--tracker --weird` : the value slot belongs to --tracker; it
+        // must be taken verbatim, not re-parsed as a flag
+        let (_, flags) =
+            parse_flags(&sv(&["--tracker", "--weird"]), &known_flags("track")).unwrap();
+        assert_eq!(flags.get("tracker").map(|s| s.as_str()), Some("--weird"));
+    }
 }

@@ -13,6 +13,7 @@ use crate::linalg::mat::Mat;
 use crate::runtime::artifact::{ArtifactManifest, Tier};
 use crate::runtime::exec::{self, ExecCache};
 use crate::tracking::grest::DensePhases;
+use crate::tracking::spec::Backend;
 use anyhow::{anyhow, Result};
 
 /// PJRT-backed dense phases pinned to one artifact tier.
@@ -138,6 +139,14 @@ impl DensePhases for XlaPhases {
     fn label(&self) -> &'static str {
         "xla"
     }
+
+    fn backend(&self) -> Backend {
+        Backend::Xla
+    }
+
+    fn tier_caps(&self) -> (usize, usize) {
+        (self.tier.n, self.tier.m)
+    }
 }
 
 #[cfg(test)]
@@ -210,9 +219,16 @@ mod tests {
 
     #[test]
     fn xla_grest_end_to_end_matches_native() {
-        let Some(xp) = phases() else { return };
+        // build the XLA tracker the way every other construction site
+        // does: through the declarative TrackerSpec factory
+        let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !artifacts.join("manifest.txt").exists() {
+            eprintln!("skipping XLA tests: artifacts not built");
+            return;
+        }
         use crate::sparse::coo::Coo;
         use crate::sparse::delta::Delta;
+        use crate::tracking::spec::TrackerSpec;
         use crate::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
         let mut rng = Rng::new(3);
         let w = crate::graph::generators::power_law_weights(120, 2.2, 400);
@@ -252,7 +268,12 @@ mod tests {
         c.push_sym(0, 1, 1.0);
         let d = Delta::from_blocks(120, 2, &kb, &g, &c);
 
-        let mut t_xla = GRest::with_phases(init.clone(), SubspaceMode::Full, xp, 7);
+        let mut spec = TrackerSpec::parse("grest3:n=200,m=20,seed=7@xla").unwrap();
+        // explicit dir instead of $GREST_ARTIFACTS: no process-global
+        // env mutation in a multithreaded test binary
+        spec.artifacts_dir = Some(artifacts);
+        let mut t_xla = spec.build(&a, &init).expect("spec-built XLA tracker");
+        assert_eq!(t_xla.name(), "G-REST3@xla");
         let mut t_nat = GRest::new(init, SubspaceMode::Full);
         t_xla.update(&d).unwrap();
         t_nat.update(&d).unwrap();

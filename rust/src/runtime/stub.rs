@@ -9,6 +9,7 @@
 use crate::linalg::mat::Mat;
 use crate::runtime::artifact::{ArtifactManifest, Tier};
 use crate::tracking::grest::DensePhases;
+use crate::tracking::spec::Backend;
 use anyhow::{bail, Result};
 
 /// Placeholder for the PJRT-backed dense phases.  Never constructed in
@@ -52,6 +53,10 @@ impl DensePhases for XlaPhases {
 
     fn label(&self) -> &'static str {
         "xla-stub"
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::Xla
     }
 }
 

@@ -27,6 +27,7 @@ use crate::linalg::rng::Rng;
 use crate::linalg::threads::Threads;
 use crate::linalg::rsvd::rsvd_basis;
 use crate::sparse::delta::Delta;
+use crate::tracking::spec::{Algo, Backend, TrackerSpec};
 use crate::tracking::traits::{EigTracker, EigenPairs};
 
 /// Projection-subspace construction (Table 1 of the paper).
@@ -66,6 +67,22 @@ pub trait DensePhases {
     fn label(&self) -> &'static str {
         "native"
     }
+
+    /// Backend this implementation represents (for tracker descriptors).
+    fn backend(&self) -> Backend {
+        Backend::Native
+    }
+
+    /// Worker-thread budget used by the dense kernels, when meaningful.
+    fn threads(&self) -> Threads {
+        Threads::AUTO
+    }
+
+    /// XLA tier capacities (rows, panel cols) backing this
+    /// implementation; `(0, 0)` for backends without fixed tiers.
+    fn tier_caps(&self) -> (usize, usize) {
+        (0, 0)
+    }
 }
 
 /// Shared-ownership backends (lets many tracker instances reuse one
@@ -82,6 +99,15 @@ impl<P: DensePhases + ?Sized> DensePhases for std::rc::Rc<P> {
     }
     fn label(&self) -> &'static str {
         (**self).label()
+    }
+    fn backend(&self) -> Backend {
+        (**self).backend()
+    }
+    fn threads(&self) -> Threads {
+        (**self).threads()
+    }
+    fn tier_caps(&self) -> (usize, usize) {
+        (**self).tier_caps()
     }
 }
 
@@ -102,6 +128,10 @@ impl DensePhases for NativePhases {
     fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
         let (q, _) = orthonormalize_against_with(xbar, panel, 1e-8, self.threads);
         q
+    }
+
+    fn threads(&self) -> Threads {
+        self.threads
     }
 
     fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
@@ -150,6 +180,7 @@ pub struct GRest<P: DensePhases = NativePhases> {
     pub mode: SubspaceMode,
     phases: P,
     rng: Rng,
+    seed: u64,
     flops: u64,
     /// dimension of the last augmentation basis (diagnostics)
     pub last_basis_cols: usize,
@@ -175,6 +206,7 @@ impl<P: DensePhases> GRest<P> {
             mode,
             phases,
             rng: Rng::new(seed),
+            seed,
             flops: 0,
             last_basis_cols: 0,
         }
@@ -217,11 +249,18 @@ impl<P: DensePhases> GRest<P> {
 }
 
 impl<P: DensePhases> EigTracker for GRest<P> {
-    fn name(&self) -> String {
-        match self.mode {
-            SubspaceMode::Rsvd { l, p } => format!("G-REST-RSVD(L={l},P={p})"),
-            _ => self.mode.label(),
-        }
+    fn descriptor(&self) -> TrackerSpec {
+        let algo = match self.mode {
+            SubspaceMode::Rm => Algo::Grest2,
+            SubspaceMode::Full => Algo::Grest3,
+            SubspaceMode::Rsvd { l, p } => Algo::GrestRsvd { l, p },
+        };
+        let mut spec = TrackerSpec::new(algo)
+            .with_backend(self.phases.backend())
+            .with_threads(self.phases.threads())
+            .with_seed(self.seed);
+        (spec.n_cap, spec.panel_cap) = self.phases.tier_caps();
+        spec
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {

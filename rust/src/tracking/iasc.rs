@@ -6,6 +6,7 @@
 use crate::linalg::eigh::eigh;
 use crate::linalg::mat::Mat;
 use crate::sparse::delta::Delta;
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
 
 pub struct Iasc {
@@ -20,8 +21,8 @@ impl Iasc {
 }
 
 impl EigTracker for Iasc {
-    fn name(&self) -> String {
-        "IASC".into()
+    fn descriptor(&self) -> TrackerSpec {
+        TrackerSpec::new(Algo::Iasc)
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {

@@ -12,10 +12,12 @@ pub mod laplacian;
 pub mod matfun;
 pub mod reference;
 pub mod residual_modes;
+pub mod spec;
 pub mod timers;
 pub mod traits;
 pub mod trip;
 pub mod trip_basic;
 
 pub use grest::{GRest, SubspaceMode};
+pub use spec::{Algo, Backend, TrackerSpec};
 pub use traits::{init_eigenpairs, EigTracker, EigenPairs};

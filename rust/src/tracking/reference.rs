@@ -4,12 +4,16 @@
 
 use crate::sparse::csr::Csr;
 use crate::sparse::delta::Delta;
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{apply_delta, init_eigenpairs, EigTracker, EigenPairs};
 
 pub struct Reference {
     adjacency: Csr,
     k: usize,
+    /// per-step Lanczos seed; advances on every update
     seed: u64,
+    /// construction-time seed (reported by `descriptor`)
+    initial_seed: u64,
     state: EigenPairs,
     flops: u64,
 }
@@ -17,7 +21,7 @@ pub struct Reference {
 impl Reference {
     pub fn new(a0: &Csr, k: usize, seed: u64) -> Reference {
         let state = init_eigenpairs(a0, k, seed);
-        Reference { adjacency: a0.clone(), k, seed, state, flops: 0 }
+        Reference { adjacency: a0.clone(), k, seed, initial_seed: seed, state, flops: 0 }
     }
 
     /// Compute reference eigenpairs directly for a given matrix (used by
@@ -28,8 +32,8 @@ impl Reference {
 }
 
 impl EigTracker for Reference {
-    fn name(&self) -> String {
-        "eigs".into()
+    fn descriptor(&self) -> TrackerSpec {
+        TrackerSpec::new(Algo::Eigs).with_seed(self.initial_seed)
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {

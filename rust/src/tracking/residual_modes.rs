@@ -6,6 +6,7 @@
 use crate::linalg::blas;
 use crate::linalg::mat::Mat;
 use crate::sparse::delta::Delta;
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
 
 const GAP_EPS: f64 = 1e-10;
@@ -28,8 +29,8 @@ impl ResidualModes {
 }
 
 impl EigTracker for ResidualModes {
-    fn name(&self) -> String {
-        "RM".into()
+    fn descriptor(&self) -> TrackerSpec {
+        TrackerSpec::new(Algo::Rm { mu: self.mu })
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {

@@ -1,0 +1,873 @@
+//! Declarative tracker specification — the single description of every
+//! tracker the crate knows how to build.
+//!
+//! A [`TrackerSpec`] names an algorithm (with its per-algorithm knobs),
+//! an execution [`Backend`] for the dense phases, a worker-thread
+//! budget, and an optional seed.  It serializes to and from a compact
+//! string grammar:
+//!
+//! ```text
+//! spec     := name [":" params] ["@" backend]
+//! params   := key "=" value ("," key "=" value)*
+//! backend  := "native" | "xla"
+//! ```
+//!
+//! Examples: `grest3`, `grest-rsvd:l=32,p=16`, `timers:theta=0.01`,
+//! `grest3@xla`, `grest3:threads=4,seed=9`.
+//!
+//! Every construction site in the crate — the CLI, the experiment
+//! harness, the coordinator service, the per-figure drivers — goes
+//! through [`TrackerSpec::build`], and every tracker reports its own
+//! spec back via [`crate::tracking::traits::EigTracker::descriptor`],
+//! so table rows, CSV keys, and service metrics all derive names from
+//! one source.  The [`registry`] enumerates the known algorithms with
+//! their aliases (including every legacy `--tracker` name).
+
+use crate::linalg::threads::Threads;
+use crate::sparse::csr::Csr;
+use crate::tracking::grest::{GRest, NativePhases, SubspaceMode};
+use crate::tracking::iasc::Iasc;
+use crate::tracking::reference::Reference;
+use crate::tracking::residual_modes::ResidualModes;
+use crate::tracking::timers::Timers;
+use crate::tracking::traits::{EigTracker, EigenPairs};
+use crate::tracking::trip::Trip;
+use crate::tracking::trip_basic::TripBasic;
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+
+/// Seed used when neither the spec nor the caller supplies one (the
+/// historical default of the direct `GRest` constructors).
+pub const DEFAULT_SEED: u64 = 0x9E57;
+
+/// Dense-phase execution backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// In-crate blocked/threaded kernels.
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts on PJRT (G-REST family only;
+    /// requires the `xla` cargo feature and built artifacts).
+    Xla,
+}
+
+impl Backend {
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        }
+    }
+}
+
+/// Algorithm plus its per-algorithm parameters (paper Sec. 2.3 / Alg. 2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Algo {
+    /// First-order perturbation, Eqs. (5)-(6) (Chen & Tong 2015).
+    TripBasic,
+    /// TRIP: coefficients from the K×K system of Eq. (7).
+    Trip,
+    /// Residual Modes with untracked-spectrum stand-in `mu`.
+    Rm { mu: f64 },
+    /// IASC: Rayleigh-Ritz over [X̄, identity on new nodes].
+    Iasc,
+    /// TIMERS: IASC with error-bounded restarts.
+    Timers { theta: f64, min_gap: usize },
+    /// G-REST₂ — Residual-Modes subspace.
+    Grest2,
+    /// G-REST₃ — proposed subspace with the explicit Δ₂ block (Eq. 11).
+    Grest3,
+    /// G-REST_RSVD — Δ₂ compressed by the randomized range finder.
+    GrestRsvd { l: usize, p: usize },
+    /// Full Lanczos recompute at every step (the `eigs` baseline).
+    Eigs,
+    /// Escape hatch for ad-hoc trackers built outside the registry
+    /// (closure factories, test doubles).  Carries only a display name;
+    /// neither parseable nor buildable.
+    Custom(String),
+}
+
+impl Algo {
+    /// True for the G-REST family (the algorithms with dense phases, the
+    /// only consumers of the `threads` budget and the XLA backend).
+    pub fn is_grest(&self) -> bool {
+        matches!(self, Algo::Grest2 | Algo::Grest3 | Algo::GrestRsvd { .. })
+    }
+
+    /// Canonical grammar name (lower-case, parseable).
+    pub fn canonical_name(&self) -> &str {
+        match self {
+            Algo::TripBasic => "trip-basic",
+            Algo::Trip => "trip",
+            Algo::Rm { .. } => "rm",
+            Algo::Iasc => "iasc",
+            Algo::Timers { .. } => "timers",
+            Algo::Grest2 => "grest2",
+            Algo::Grest3 => "grest3",
+            Algo::GrestRsvd { .. } => "grest-rsvd",
+            Algo::Eigs => "eigs",
+            Algo::Custom(name) => name,
+        }
+    }
+}
+
+/// Declarative, serializable description of one tracker instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrackerSpec {
+    pub algo: Algo,
+    pub backend: Backend,
+    /// Dense-kernel worker budget (G-REST family; ignored elsewhere).
+    pub threads: Threads,
+    /// Tracker seed; `None` defers to the build-site fallback.
+    pub seed: Option<u64>,
+    /// XLA tier row capacity (0 = size from the initial adjacency).
+    pub n_cap: usize,
+    /// XLA tier panel-column capacity (0 = K + 128).
+    pub panel_cap: usize,
+    /// XLA artifact directory override (builder-only — paths don't fit
+    /// the string grammar; `None` resolves `$GREST_ARTIFACTS` /
+    /// `./artifacts` via `ArtifactManifest::load_default`).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl TrackerSpec {
+    pub fn new(algo: Algo) -> TrackerSpec {
+        TrackerSpec {
+            algo,
+            backend: Backend::Native,
+            threads: Threads::AUTO,
+            seed: None,
+            n_cap: 0,
+            panel_cap: 0,
+            artifacts_dir: None,
+        }
+    }
+
+    /// Spec for an ad-hoc tracker: display name only, not buildable.
+    pub fn custom(name: &str) -> TrackerSpec {
+        TrackerSpec::new(Algo::Custom(name.to_string()))
+    }
+
+    pub fn with_threads(mut self, threads: Threads) -> TrackerSpec {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> TrackerSpec {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> TrackerSpec {
+        self.backend = backend;
+        self
+    }
+
+    /// Display name used by harness tables, CSV keys, and metrics.
+    /// Algorithm-distinguishing parameters appear when they differ from
+    /// the paper defaults, so parameter sweeps stay distinguishable
+    /// (`TIMERS(theta=0.05)` vs `TIMERS`); the paper labels themselves
+    /// are unchanged at the defaults.
+    pub fn display_name(&self) -> String {
+        let base = match &self.algo {
+            Algo::TripBasic => "TRIP-Basic".to_string(),
+            Algo::Trip => "TRIP".to_string(),
+            Algo::Rm { mu } => {
+                if *mu != 0.0 {
+                    format!("RM(mu={mu})")
+                } else {
+                    "RM".to_string()
+                }
+            }
+            Algo::Iasc => "IASC".to_string(),
+            Algo::Timers { theta, min_gap } => {
+                let mut ps: Vec<String> = Vec::new();
+                if *theta != DEFAULT_TIMERS_THETA {
+                    ps.push(format!("theta={theta}"));
+                }
+                if *min_gap != DEFAULT_TIMERS_GAP {
+                    ps.push(format!("gap={min_gap}"));
+                }
+                if ps.is_empty() {
+                    "TIMERS".to_string()
+                } else {
+                    format!("TIMERS({})", ps.join(","))
+                }
+            }
+            Algo::Grest2 => "G-REST2".to_string(),
+            Algo::Grest3 => "G-REST3".to_string(),
+            Algo::GrestRsvd { l, p } => format!("G-REST-RSVD(L={l},P={p})"),
+            Algo::Eigs => "eigs".to_string(),
+            Algo::Custom(name) => name.clone(),
+        };
+        match self.backend {
+            Backend::Native => base,
+            Backend::Xla => format!("{base}@xla"),
+        }
+    }
+
+    /// Parse the spec grammar (see the module docs).  Accepts every
+    /// legacy `--tracker` name as an alias, case-insensitively.
+    pub fn parse(text: &str) -> Result<TrackerSpec> {
+        let trimmed = text.trim();
+        if trimmed.is_empty() {
+            bail!("empty tracker spec; expected name[:key=value,...][@backend]");
+        }
+        let (body, backend) = match trimmed.rsplit_once('@') {
+            None => (trimmed, Backend::Native),
+            Some((body, b)) => match b.to_ascii_lowercase().as_str() {
+                "native" => (body, Backend::Native),
+                "xla" => (body, Backend::Xla),
+                other => bail!(
+                    "unknown backend `{other}` in tracker spec `{trimmed}`; \
+                     expected `native` or `xla`"
+                ),
+            },
+        };
+        let (name, params) = match body.split_once(':') {
+            None => (body, None),
+            Some((name, params)) => (name, Some(params)),
+        };
+        let mut spec = TrackerSpec::new(resolve_algo(name)?).with_backend(backend);
+        if let Some(params) = params {
+            for part in params.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let Some((key, value)) = part.split_once('=') else {
+                    bail!(
+                        "malformed parameter `{part}` in tracker spec `{trimmed}`: \
+                         expected key=value"
+                    );
+                };
+                apply_param(&mut spec, key.trim(), value.trim())
+                    .map_err(|e| anyhow!("in tracker spec `{trimmed}`: {e}"))?;
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Check that [`build`](Self::build) can succeed in principle
+    /// (cheap; does not touch artifacts or the graph).  Catches specs
+    /// that can never work — custom specs, `@xla` outside the G-REST
+    /// family, `@xla` in a binary built without the `xla` feature — so
+    /// callers that defer building to another thread (the coordinator
+    /// worker) fail fast instead of panicking there.
+    pub fn validate_buildable(&self) -> Result<()> {
+        match (&self.algo, self.backend) {
+            (Algo::Custom(name), _) => bail!(
+                "custom tracker `{name}` has no registered constructor; \
+                 build it directly and use the closure escape hatch"
+            ),
+            (Algo::Grest2 | Algo::Grest3 | Algo::GrestRsvd { .. }, Backend::Xla) => {
+                if cfg!(feature = "xla") {
+                    Ok(())
+                } else {
+                    bail!(
+                        "spec `{self}` requests the @xla backend, but this binary was \
+                         built without the `xla` cargo feature; rebuild with \
+                         `--features xla` or drop `@xla` for the native backend"
+                    )
+                }
+            }
+            (Algo::Grest2 | Algo::Grest3 | Algo::GrestRsvd { .. }, Backend::Native) => Ok(()),
+            (_, Backend::Xla) => bail!(
+                "the @xla backend only serves the G-REST family, not `{self}`"
+            ),
+            _ => Ok(()),
+        }
+    }
+
+    /// Build the tracker for an initial adjacency and its precomputed
+    /// leading eigenpairs, seeding from the spec or [`DEFAULT_SEED`].
+    pub fn build(&self, a0: &Csr, init: &EigenPairs) -> Result<Box<dyn EigTracker>> {
+        self.build_seeded(a0, init, DEFAULT_SEED)
+    }
+
+    /// [`build`](Self::build) with a caller-supplied fallback seed (an
+    /// explicit `seed=` in the spec still wins).
+    pub fn build_seeded(
+        &self,
+        a0: &Csr,
+        init: &EigenPairs,
+        fallback_seed: u64,
+    ) -> Result<Box<dyn EigTracker>> {
+        self.validate_buildable()?;
+        let seed = self.seed.unwrap_or(fallback_seed);
+        let grest_mode = match &self.algo {
+            Algo::Grest2 => Some(SubspaceMode::Rm),
+            Algo::Grest3 => Some(SubspaceMode::Full),
+            Algo::GrestRsvd { l, p } => Some(SubspaceMode::Rsvd { l: *l, p: *p }),
+            _ => None,
+        };
+        if let Some(mode) = grest_mode {
+            return match self.backend {
+                Backend::Native => Ok(Box::new(GRest::with_phases(
+                    init.clone(),
+                    mode,
+                    NativePhases::new(self.threads),
+                    seed,
+                ))),
+                Backend::Xla => {
+                    let manifest = match &self.artifacts_dir {
+                        Some(dir) => crate::runtime::ArtifactManifest::load(dir)?,
+                        None => crate::runtime::ArtifactManifest::load_default()?,
+                    };
+                    let k = init.k();
+                    let n = if self.n_cap > 0 { self.n_cap } else { a0.n_rows };
+                    let m = if self.panel_cap > 0 { self.panel_cap } else { k + 128 };
+                    let phases = crate::runtime::XlaPhases::for_problem(manifest, n, k, m)?;
+                    Ok(Box::new(GRest::with_phases(init.clone(), mode, phases, seed)))
+                }
+            };
+        }
+        Ok(match &self.algo {
+            Algo::TripBasic => Box::new(TripBasic::new(init.clone())),
+            Algo::Trip => Box::new(Trip::new(init.clone())),
+            Algo::Rm { mu } => Box::new(ResidualModes::with_mu(init.clone(), *mu)),
+            Algo::Iasc => Box::new(Iasc::new(init.clone())),
+            Algo::Timers { theta, min_gap } => Box::new(
+                Timers::with_initial(a0, init.clone(), seed)
+                    .with_theta(*theta)
+                    .with_min_gap(*min_gap),
+            ),
+            Algo::Eigs => Box::new(Reference::new(a0, init.k(), seed)),
+            // both handled above
+            Algo::Custom(_) | Algo::Grest2 | Algo::Grest3 | Algo::GrestRsvd { .. } => {
+                unreachable!()
+            }
+        })
+    }
+}
+
+impl Default for TrackerSpec {
+    /// The paper's flagship: G-REST₃ on the native backend.
+    fn default() -> TrackerSpec {
+        TrackerSpec::new(Algo::Grest3)
+    }
+}
+
+impl fmt::Display for TrackerSpec {
+    /// Canonical grammar form; `parse(format(s)) == s` for every
+    /// non-custom spec (property-tested below).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.algo.canonical_name())?;
+        let mut params: Vec<String> = Vec::new();
+        match &self.algo {
+            Algo::GrestRsvd { l, p } => {
+                params.push(format!("l={l}"));
+                params.push(format!("p={p}"));
+            }
+            Algo::Timers { theta, min_gap } => {
+                if *theta != DEFAULT_TIMERS_THETA {
+                    params.push(format!("theta={theta}"));
+                }
+                if *min_gap != DEFAULT_TIMERS_GAP {
+                    params.push(format!("gap={min_gap}"));
+                }
+            }
+            Algo::Rm { mu } => {
+                if *mu != 0.0 {
+                    params.push(format!("mu={mu}"));
+                }
+            }
+            _ => {}
+        }
+        // emit only what parse() accepts back for this algo/backend, so
+        // Display stays a strict inverse of the grammar
+        if self.backend == Backend::Xla {
+            if self.n_cap != 0 {
+                params.push(format!("n={}", self.n_cap));
+            }
+            if self.panel_cap != 0 {
+                params.push(format!("m={}", self.panel_cap));
+            }
+        }
+        if self.algo.is_grest()
+            && self.backend == Backend::Native
+            && self.threads != Threads::AUTO
+        {
+            params.push(format!("threads={}", self.threads.0));
+        }
+        if self.algo.is_grest() || matches!(self.algo, Algo::Timers { .. } | Algo::Eigs) {
+            if let Some(seed) = self.seed {
+                params.push(format!("seed={seed}"));
+            }
+        }
+        if !params.is_empty() {
+            write!(f, ":{}", params.join(","))?;
+        }
+        if self.backend == Backend::Xla {
+            write!(f, "@xla")?;
+        }
+        Ok(())
+    }
+}
+
+/// TIMERS restart threshold θ (paper: 0.01).
+pub const DEFAULT_TIMERS_THETA: f64 = 0.01;
+/// TIMERS minimum steps between restarts (paper modification: 5).
+pub const DEFAULT_TIMERS_GAP: usize = 5;
+/// RSVD default sketch size L = P (matches the old `--tracker grest-rsvd`).
+pub const DEFAULT_RSVD_LP: usize = 32;
+
+/// One registry row: canonical name, aliases (legacy `--tracker` names
+/// and paper labels), accepted parameters, and the default spec.
+pub struct RegistryEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub params: &'static str,
+    pub description: &'static str,
+    pub algo: Algo,
+}
+
+/// Every algorithm the factory can build, with its aliases.
+pub fn registry() -> Vec<RegistryEntry> {
+    vec![
+        RegistryEntry {
+            name: "trip-basic",
+            aliases: &["tripbasic"],
+            params: "",
+            description: "first-order perturbation, Eqs. (5)-(6) (Chen & Tong 2015)",
+            algo: Algo::TripBasic,
+        },
+        RegistryEntry {
+            name: "trip",
+            aliases: &[],
+            params: "",
+            description: "TRIP: coefficients from the K x K system of Eq. (7)",
+            algo: Algo::Trip,
+        },
+        RegistryEntry {
+            name: "rm",
+            aliases: &["residual-modes"],
+            params: "mu=<f64>",
+            description: "Residual Modes with untracked-spectrum stand-in mu",
+            algo: Algo::Rm { mu: 0.0 },
+        },
+        RegistryEntry {
+            name: "iasc",
+            aliases: &[],
+            params: "",
+            description: "IASC: Rayleigh-Ritz over [X, identity on new nodes]",
+            algo: Algo::Iasc,
+        },
+        RegistryEntry {
+            name: "timers",
+            aliases: &[],
+            params: "theta=<f64>,gap=<usize>",
+            description: "TIMERS: IASC with error-bounded full restarts",
+            algo: Algo::Timers { theta: DEFAULT_TIMERS_THETA, min_gap: DEFAULT_TIMERS_GAP },
+        },
+        RegistryEntry {
+            name: "grest2",
+            aliases: &["g-rest2"],
+            params: "threads=<usize>",
+            description: "G-REST2: Rayleigh-Ritz over the Residual-Modes subspace",
+            algo: Algo::Grest2,
+        },
+        RegistryEntry {
+            name: "grest3",
+            aliases: &["g-rest3"],
+            params: "threads=<usize>",
+            description: "G-REST3: proposed subspace with the explicit Delta_2 block (Eq. 11)",
+            algo: Algo::Grest3,
+        },
+        RegistryEntry {
+            name: "grest-rsvd",
+            aliases: &["rsvd", "grestrsvd", "g-rest-rsvd"],
+            params: "l=<usize>,p=<usize>,threads=<usize>",
+            description: "G-REST_RSVD: Delta_2 compressed by the randomized range finder",
+            algo: Algo::GrestRsvd { l: DEFAULT_RSVD_LP, p: DEFAULT_RSVD_LP },
+        },
+        RegistryEntry {
+            name: "eigs",
+            aliases: &["reference", "exact"],
+            params: "",
+            description: "full Lanczos recompute every step (accuracy/runtime baseline)",
+            algo: Algo::Eigs,
+        },
+    ]
+}
+
+/// Resolve an algorithm name (canonical, alias, or paper display label
+/// such as `TRIP-Basic` / `G-REST3`), case-insensitively.
+fn resolve_algo(name: &str) -> Result<Algo> {
+    let lower = name.trim().to_ascii_lowercase();
+    for entry in registry() {
+        if entry.name == lower || entry.aliases.contains(&lower.as_str()) {
+            return Ok(entry.algo);
+        }
+    }
+    let known: Vec<&str> = registry().iter().map(|e| e.name).collect();
+    bail!(
+        "unknown tracker `{name}`; known trackers: {} \
+         (run `grest track --tracker list` for the full registry)",
+        known.join(", ")
+    )
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+    value
+        .parse()
+        .map_err(|_| anyhow!("parameter `{key}` has invalid value `{value}`"))
+}
+
+fn apply_param(spec: &mut TrackerSpec, key: &str, value: &str) -> Result<()> {
+    let algo_name = spec.algo.canonical_name().to_string();
+    // cross-algorithm knobs, rejected where they could not take effect
+    // (a silently ignored sweep knob is worse than an error)
+    match key {
+        "threads" => {
+            if !spec.algo.is_grest() {
+                bail!(
+                    "parameter `threads` only applies to the G-REST family \
+                     (`{algo_name}` has no dense-kernel phases)"
+                );
+            }
+            if spec.backend == Backend::Xla {
+                bail!(
+                    "parameter `threads` drives the native dense kernels; \
+                     the @xla backend schedules internally"
+                );
+            }
+            spec.threads = Threads(parse_num(key, value)?);
+            return Ok(());
+        }
+        "seed" => {
+            if !(spec.algo.is_grest()
+                || matches!(spec.algo, Algo::Timers { .. } | Algo::Eigs))
+            {
+                bail!(
+                    "parameter `seed` only applies to trackers with randomized \
+                     or restart state (G-REST family, timers, eigs), not `{algo_name}`"
+                );
+            }
+            spec.seed = Some(parse_num(key, value)?);
+            return Ok(());
+        }
+        "n" | "m" => {
+            if spec.backend != Backend::Xla {
+                bail!(
+                    "parameter `{key}` sizes the XLA artifact tier and only \
+                     applies with the `@xla` backend"
+                );
+            }
+            if key == "n" {
+                spec.n_cap = parse_num(key, value)?;
+            } else {
+                spec.panel_cap = parse_num(key, value)?;
+            }
+            return Ok(());
+        }
+        _ => {}
+    }
+    match &mut spec.algo {
+        Algo::GrestRsvd { l, p } => match key {
+            "l" => *l = parse_num(key, value)?,
+            "p" => *p = parse_num(key, value)?,
+            _ => bail!("tracker `{algo_name}` has no parameter `{key}` (accepted: l, p)"),
+        },
+        Algo::Timers { theta, min_gap } => match key {
+            "theta" => *theta = parse_num(key, value)?,
+            "gap" => *min_gap = parse_num(key, value)?,
+            _ => bail!("tracker `{algo_name}` has no parameter `{key}` (accepted: theta, gap)"),
+        },
+        Algo::Rm { mu } => match key {
+            "mu" => *mu = parse_num(key, value)?,
+            _ => bail!("tracker `{algo_name}` has no parameter `{key}` (accepted: mu)"),
+        },
+        _ => bail!(
+            "tracker `{algo_name}` has no parameter `{key}` \
+             (common parameters: threads, seed, n, m)"
+        ),
+    }
+    Ok(())
+}
+
+/// Human-readable registry listing (`grest track --tracker list`).
+pub fn list_help() -> String {
+    let mut out = String::new();
+    out.push_str("Tracker spec grammar: name[:key=value,...][@backend]\n");
+    out.push_str("  backends: native (default), xla (G-REST family; needs artifacts)\n");
+    out.push_str(
+        "  cross-algorithm params: threads=<usize> (G-REST family), \
+         seed=<u64> (G-REST/timers/eigs),\n  n=<rows>, m=<panel cols> \
+         (@xla tier capacities)\n\n",
+    );
+    out.push_str(&format!(
+        "{:<12} {:<24} {:<28} {}\n",
+        "SPEC", "ALIASES", "PARAMS", "DESCRIPTION"
+    ));
+    for e in registry() {
+        out.push_str(&format!(
+            "{:<12} {:<24} {:<28} {}\n",
+            e.name,
+            e.aliases.join(", "),
+            e.params,
+            e.description
+        ));
+    }
+    out.push_str("\nExamples: grest3   grest-rsvd:l=32,p=16   timers:theta=0.01   grest3@xla\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+    use crate::sparse::coo::Coo;
+    use crate::tracking::traits::init_eigenpairs;
+
+    fn small_problem() -> (Csr, EigenPairs) {
+        let mut coo = Coo::new(12, 12);
+        for i in 0..12 {
+            coo.push(i, i, (12 - i) as f64 * 2.0);
+        }
+        for i in 0..11 {
+            coo.push_sym(i, i + 1, 0.4);
+        }
+        let a = coo.to_csr();
+        let init = init_eigenpairs(&a, 3, 1);
+        (a, init)
+    }
+
+    #[test]
+    fn parses_issue_examples() {
+        let s = TrackerSpec::parse("grest-rsvd:l=32,p=16").unwrap();
+        assert_eq!(s.algo, Algo::GrestRsvd { l: 32, p: 16 });
+        assert_eq!(s.backend, Backend::Native);
+
+        let s = TrackerSpec::parse("timers:theta=0.01").unwrap();
+        assert_eq!(s.algo, Algo::Timers { theta: 0.01, min_gap: DEFAULT_TIMERS_GAP });
+
+        let s = TrackerSpec::parse("grest3@xla").unwrap();
+        assert_eq!(s.algo, Algo::Grest3);
+        assert_eq!(s.backend, Backend::Xla);
+        assert_eq!(s.display_name(), "G-REST3@xla");
+    }
+
+    #[test]
+    fn every_legacy_tracker_name_still_resolves() {
+        // the old `--tracker` vocabulary of cmd_track plus the paper
+        // display labels used by tables — all must keep working
+        let legacy = [
+            ("trip-basic", "TRIP-Basic"),
+            ("trip", "TRIP"),
+            ("rm", "RM"),
+            ("iasc", "IASC"),
+            ("timers", "TIMERS"),
+            ("grest2", "G-REST2"),
+            ("grest3", "G-REST3"),
+            ("grest-rsvd", "G-REST-RSVD(L=32,P=32)"),
+            ("TRIP-Basic", "TRIP-Basic"),
+            ("TRIP", "TRIP"),
+            ("RM", "RM"),
+            ("IASC", "IASC"),
+            ("TIMERS", "TIMERS"),
+            ("G-REST2", "G-REST2"),
+            ("G-REST3", "G-REST3"),
+            ("G-REST-RSVD", "G-REST-RSVD(L=32,P=32)"),
+            ("eigs", "eigs"),
+            ("reference", "eigs"),
+        ];
+        for (name, display) in legacy {
+            let spec = TrackerSpec::parse(name)
+                .unwrap_or_else(|e| panic!("legacy name `{name}` must parse: {e}"));
+            assert_eq!(spec.display_name(), display, "for `{name}`");
+        }
+    }
+
+    #[test]
+    fn roundtrip_parse_format_parse_across_registry() {
+        // property test: for every registry algorithm and randomized
+        // knobs, parse(format(spec)) == spec and format is a fixpoint
+        let mut rng = Rng::new(42);
+        for entry in registry() {
+            for _ in 0..40 {
+                let mut spec = TrackerSpec::new(entry.algo.clone());
+                // respect the grammar's applicability matrix: threads is
+                // G-REST-native-only, seed needs randomized/restart
+                // state, and n/m tier caps need the @xla backend
+                if rng.flip(0.3) {
+                    spec.backend = Backend::Xla;
+                }
+                if spec.algo.is_grest() && spec.backend == Backend::Native && rng.flip(0.5) {
+                    spec.threads = Threads(rng.below(8));
+                }
+                let seed_ok = spec.algo.is_grest()
+                    || matches!(spec.algo, Algo::Timers { .. } | Algo::Eigs);
+                if seed_ok && rng.flip(0.5) {
+                    spec.seed = Some(rng.below(100_000) as u64);
+                }
+                if spec.backend == Backend::Xla {
+                    if rng.flip(0.3) {
+                        spec.n_cap = 1 + rng.below(4096);
+                    }
+                    if rng.flip(0.3) {
+                        spec.panel_cap = 1 + rng.below(512);
+                    }
+                }
+                match &mut spec.algo {
+                    Algo::GrestRsvd { l, p } => {
+                        *l = 1 + rng.below(200);
+                        *p = rng.below(200);
+                    }
+                    Algo::Timers { theta, min_gap } => {
+                        *theta = (1 + rng.below(500)) as f64 / 1000.0;
+                        *min_gap = 1 + rng.below(12);
+                    }
+                    Algo::Rm { mu } => {
+                        *mu = (rng.below(200) as f64 - 100.0) / 8.0;
+                    }
+                    _ => {}
+                }
+                let text = spec.to_string();
+                let parsed = TrackerSpec::parse(&text)
+                    .unwrap_or_else(|e| panic!("`{text}` must re-parse: {e}"));
+                assert_eq!(parsed, spec, "round-trip mismatch for `{text}`");
+                assert_eq!(parsed.to_string(), text, "format not a fixpoint for `{text}`");
+            }
+        }
+    }
+
+    #[test]
+    fn display_names_distinguish_param_sweeps() {
+        let cases = [
+            ("timers", "TIMERS"),
+            ("timers:theta=0.05", "TIMERS(theta=0.05)"),
+            ("timers:theta=0.05,gap=3", "TIMERS(theta=0.05,gap=3)"),
+            ("rm", "RM"),
+            ("rm:mu=0.5", "RM(mu=0.5)"),
+            ("grest-rsvd:l=16,p=8", "G-REST-RSVD(L=16,P=8)"),
+        ];
+        for (text, display) in cases {
+            assert_eq!(
+                TrackerSpec::parse(text).unwrap().display_name(),
+                display,
+                "for `{text}`"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_specs_error_clearly() {
+        let cases = [
+            ("", "empty tracker spec"),
+            ("   ", "empty tracker spec"),
+            ("warp-drive", "unknown tracker"),
+            ("grest3@gpu", "unknown backend"),
+            ("trip:bogus=1", "no parameter `bogus`"),
+            ("grest-rsvd:l", "expected key=value"),
+            ("grest-rsvd:l=abc", "invalid value"),
+            ("timers:theta=fast", "invalid value"),
+            ("trip:l=4", "no parameter `l`"),
+            // silently-ignored knobs are rejected, not accepted
+            ("trip:threads=8", "only applies to the G-REST family"),
+            ("grest3:threads=8@xla", "schedules internally"),
+            ("iasc:seed=5", "only applies to trackers"),
+            ("grest3:n=5000", "@xla"),
+        ];
+        for (text, needle) in cases {
+            let err = TrackerSpec::parse(text)
+                .expect_err(&format!("`{text}` must fail to parse"))
+                .to_string();
+            assert!(
+                err.contains(needle),
+                "error for `{text}` should mention `{needle}`, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn xla_backend_restricted_to_grest_family() {
+        let spec = TrackerSpec::parse("trip@xla").unwrap();
+        let err = spec.validate_buildable().unwrap_err().to_string();
+        assert!(err.contains("G-REST"), "{err}");
+        let err = TrackerSpec::custom("whatever").validate_buildable().unwrap_err();
+        assert!(err.to_string().contains("escape hatch"), "{err}");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_spec_rejected_upfront_without_feature() {
+        // spawn-style callers validate before handing the spec to a
+        // worker thread; without the feature this must fail fast, not
+        // panic later inside the worker
+        let err = TrackerSpec::parse("grest3@xla")
+            .unwrap()
+            .validate_buildable()
+            .unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn registry_defaults_build_and_names_match() {
+        let (a, init) = small_problem();
+        for entry in registry() {
+            let spec = TrackerSpec::new(entry.algo.clone());
+            let tracker = spec
+                .build_seeded(&a, &init, 3)
+                .unwrap_or_else(|e| panic!("`{}` must build: {e}", entry.name));
+            assert_eq!(
+                tracker.name(),
+                spec.display_name(),
+                "tracker name must derive from the spec for `{}`",
+                entry.name
+            );
+            assert_eq!(
+                tracker.descriptor().algo,
+                spec.algo,
+                "descriptor algo drifted for `{}`",
+                entry.name
+            );
+        }
+    }
+
+    #[test]
+    fn built_trackers_track_a_small_update() {
+        // one real update through every registry default, via the factory
+        let (a, init) = small_problem();
+        let mut k = Coo::new(12, 12);
+        k.push_sym(0, 4, 0.2);
+        k.push_sym(2, 6, -0.1);
+        let d = crate::sparse::delta::Delta::from_blocks(
+            12,
+            0,
+            &k,
+            &Coo::new(12, 0),
+            &Coo::new(0, 0),
+        );
+        for entry in registry() {
+            let spec = TrackerSpec::new(entry.algo.clone());
+            let mut tracker = spec.build_seeded(&a, &init, 3).unwrap();
+            tracker.update(&d).unwrap();
+            assert_eq!(tracker.current().k(), 3, "`{}` lost eigenpairs", entry.name);
+            assert!(
+                tracker.current().values.iter().all(|v| v.is_finite()),
+                "`{}` produced non-finite eigenvalues",
+                entry.name
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_seed_wins_over_fallback() {
+        let (a, init) = small_problem();
+        let spec = TrackerSpec::parse("eigs:seed=9").unwrap();
+        let t = spec.build_seeded(&a, &init, 1234).unwrap();
+        assert_eq!(t.descriptor().seed, Some(9));
+        // same contract for TIMERS (restart Lanczos seed)
+        let spec = TrackerSpec::parse("timers:seed=9").unwrap();
+        let t = spec.build_seeded(&a, &init, 1234).unwrap();
+        assert_eq!(t.descriptor().seed, Some(9));
+    }
+
+    #[test]
+    fn list_help_mentions_every_registry_entry() {
+        let help = list_help();
+        for e in registry() {
+            assert!(help.contains(e.name), "list is missing `{}`", e.name);
+        }
+    }
+}

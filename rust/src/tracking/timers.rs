@@ -12,6 +12,7 @@
 use crate::sparse::csr::Csr;
 use crate::sparse::delta::Delta;
 use crate::tracking::iasc::Iasc;
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{apply_delta, init_eigenpairs, EigTracker, EigenPairs};
 
 pub struct Timers {
@@ -24,16 +25,25 @@ pub struct Timers {
     pub min_gap: usize,
     accumulated_fro: f64,
     steps_since_restart: usize,
+    /// restart Lanczos seed; advances on every restart
     seed: u64,
+    /// construction-time seed (reported by `descriptor`)
+    initial_seed: u64,
     pub restarts: usize,
     flops: u64,
 }
 
 impl Timers {
     pub fn new(a0: &Csr, k: usize, seed: u64) -> Timers {
-        let init = init_eigenpairs(a0, k, seed);
+        Timers::with_initial(a0, init_eigenpairs(a0, k, seed), seed)
+    }
+
+    /// Construct from precomputed initial eigenpairs (skips the internal
+    /// Lanczos; used by [`crate::tracking::spec::TrackerSpec::build`]).
+    pub fn with_initial(a0: &Csr, initial: EigenPairs, seed: u64) -> Timers {
+        let k = initial.k();
         Timers {
-            inner: Iasc::new(init),
+            inner: Iasc::new(initial),
             adjacency: a0.clone(),
             k,
             theta: 0.01,
@@ -41,6 +51,7 @@ impl Timers {
             accumulated_fro: 0.0,
             steps_since_restart: 0,
             seed,
+            initial_seed: seed,
             restarts: 0,
             flops: 0,
         }
@@ -50,11 +61,17 @@ impl Timers {
         self.theta = theta;
         self
     }
+
+    pub fn with_min_gap(mut self, min_gap: usize) -> Timers {
+        self.min_gap = min_gap;
+        self
+    }
 }
 
 impl EigTracker for Timers {
-    fn name(&self) -> String {
-        "TIMERS".into()
+    fn descriptor(&self) -> TrackerSpec {
+        TrackerSpec::new(Algo::Timers { theta: self.theta, min_gap: self.min_gap })
+            .with_seed(self.initial_seed)
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {

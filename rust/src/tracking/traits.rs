@@ -6,6 +6,7 @@ use crate::linalg::mat::Mat;
 use crate::linalg::rng::Rng;
 use crate::sparse::csr::Csr;
 use crate::sparse::delta::Delta;
+use crate::tracking::spec::TrackerSpec;
 
 /// K tracked eigenpairs, ordered by |λ| descending (paper convention).
 #[derive(Clone)]
@@ -44,8 +45,17 @@ impl EigenPairs {
 /// A tracker consumes a stream of structured updates Δ⁽ᵗ⁾ and maintains
 /// an estimate of the K leading eigenpairs.
 pub trait EigTracker {
-    /// Display name (used by the experiment harness / tables).
-    fn name(&self) -> String;
+    /// Declarative identity of this tracker: the [`TrackerSpec`] that
+    /// describes (and could rebuild) it.  The single source for display
+    /// names, harness table rows, CSV keys, and service metrics.
+    /// Ad-hoc trackers return [`TrackerSpec::custom`].
+    fn descriptor(&self) -> TrackerSpec;
+
+    /// Display name (used by the experiment harness / tables); derived
+    /// from [`Self::descriptor`].
+    fn name(&self) -> String {
+        self.descriptor().display_name()
+    }
 
     /// Apply one graph update.
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()>;

@@ -5,6 +5,7 @@
 use crate::linalg::lu;
 use crate::linalg::mat::Mat;
 use crate::sparse::delta::Delta;
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
 
 pub struct Trip {
@@ -19,8 +20,8 @@ impl Trip {
 }
 
 impl EigTracker for Trip {
-    fn name(&self) -> String {
-        "TRIP".into()
+    fn descriptor(&self) -> TrackerSpec {
+        TrackerSpec::new(Algo::Trip)
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {

@@ -4,6 +4,7 @@
 
 use crate::linalg::mat::Mat;
 use crate::sparse::delta::Delta;
+use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
 
 /// Minimum eigenvalue gap before a correction term is skipped (the
@@ -22,8 +23,8 @@ impl TripBasic {
 }
 
 impl EigTracker for TripBasic {
-    fn name(&self) -> String {
-        "TRIP-Basic".into()
+    fn descriptor(&self) -> TrackerSpec {
+        TrackerSpec::new(Algo::TripBasic)
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {

@@ -45,8 +45,8 @@ fn accuracy_ordering_matches_paper() {
         let reference = grest::eval::harness::reference_run(&sc, k, 5 + seed);
         let roster =
             grest::eval::harness::paper_trackers(false, 8, grest::linalg::threads::Threads::AUTO);
-        let results =
-            grest::eval::harness::run_trackers(&sc, &reference, k, 4, &roster, 5 + seed);
+        let results = grest::eval::harness::run_trackers(&sc, &reference, k, 4, &roster, 5 + seed)
+            .unwrap();
         let get = |n: &str| {
             results
                 .iter()
@@ -171,10 +171,13 @@ fn coordinator_survives_burst_and_preserves_order() {
     use grest::graph::stream::GraphEvent;
     let mut rng = Rng::new(3);
     let g = generators::erdos_renyi(100, 0.08, &mut rng);
-    let svc = TrackingService::spawn(
-        ServiceConfig { initial: g, k: 6, policy: BatchPolicy::ByCount(16), seed: 2 },
-        Box::new(|_a, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
-    )
+    let svc = TrackingService::spawn(ServiceConfig {
+        initial: g,
+        k: 6,
+        policy: BatchPolicy::ByCount(16),
+        seed: 2,
+        tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
+    })
     .unwrap();
     // burst: add then remove the same edge repeatedly; final state must
     // reflect the LAST event (ordering preserved)
@@ -203,10 +206,13 @@ fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
     let mut rng = Rng::new(13);
     let g = generators::erdos_renyi(50, 0.15, &mut rng);
     let initial_edges: Vec<(usize, usize)> = g.edges();
-    let svc = TrackingService::spawn(
-        ServiceConfig { initial: g, k: 5, policy: BatchPolicy::ByCount(1_000_000), seed: 4 },
-        Box::new(|_a0, init| Box::new(GRest::new(init.clone(), SubspaceMode::Full))),
-    )
+    let svc = TrackingService::spawn(ServiceConfig {
+        initial: g,
+        k: 5,
+        policy: BatchPolicy::ByCount(1_000_000),
+        seed: 4,
+        tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
+    })
     .unwrap();
     let h = &svc.handle;
 
