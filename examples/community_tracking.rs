@@ -11,7 +11,7 @@
 use grest::graph::scenario::sbm_expansion;
 use grest::linalg::rng::Rng;
 use grest::tasks::{ari::adjusted_rand_index, clustering};
-use grest::tracking::laplacian::{shifted_normalized_laplacian, shifted_scenario};
+use grest::tracking::laplacian::{shifted_scenario, Shift};
 use grest::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
 
 fn main() -> anyhow::Result<()> {
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     // shifted normalized Laplacian stream (leading eigenpairs of Tn are
     // the trailing — cluster-revealing — eigenpairs of Ln)
-    let (t0, steps) = shifted_scenario(&sc, shifted_normalized_laplacian, 0.0);
+    let (t0, steps) = shifted_scenario(&sc, Shift::Normalized);
     let init = init_eigenpairs(&t0, clusters, 11);
     let mut tracker = GRest::new(init, SubspaceMode::Full);
 

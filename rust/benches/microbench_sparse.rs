@@ -1,0 +1,147 @@
+//! Sparse-path micro-benchmarks (the §Perf instrument for the
+//! incremental update engine):
+//!
+//! * event-sourced Δ assembly (`DeltaBuilder::prepare`, O(|batch|))
+//!   vs the old rebuild+diff path (`graph.adjacency()` +
+//!   `Delta::from_diff`, O(nnz(A)·log)) across batch AND graph sizes —
+//!   the incremental numbers should track the batch size, the rebuild
+//!   numbers the graph size;
+//! * incremental `Csr::apply_delta` row-merge vs a from-scratch
+//!   adjacency rebuild;
+//! * the row-partitioned SpMM thread ladder, with a bitwise-equality
+//!   spot check of the `--threads` determinism contract.
+//!
+//! Emits `BENCH_sparse.json` (name → {n, seconds}) next to
+//! `BENCH_linalg.json`.  `GREST_BENCH_QUICK=1` shrinks every size for
+//! CI smoke runs.
+
+mod common;
+
+use grest::graph::stream::{DeltaBuilder, GraphEvent};
+use grest::linalg::mat::Mat;
+use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
+use grest::sparse::delta::Delta;
+
+struct BenchRecord {
+    name: String,
+    n: usize,
+    seconds: f64,
+}
+
+fn record(records: &mut Vec<BenchRecord>, name: &str, n: usize, seconds: f64) {
+    records.push(BenchRecord { name: name.to_string(), n, seconds });
+}
+
+fn write_json(records: &[BenchRecord]) {
+    let mut out = String::from("{\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {{\"n\": {}, \"seconds\": {:.6e}}}{}\n",
+            r.name,
+            r.n,
+            r.seconds,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    let path = "BENCH_sparse.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("# wrote {path} ({} entries)", records.len()),
+        Err(e) => eprintln!("# failed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rng = Rng::new(1);
+
+    // ---- Δ-assembly ladder: event-sourced vs rebuild+diff
+    let graph_sizes: &[usize] = if quick { &[2_000, 8_000] } else { &[20_000, 80_000] };
+    let batch_sizes: &[usize] = &[16, 64, 256, 1024];
+    for &n in graph_sizes {
+        let w = grest::graph::generators::power_law_weights(n, 2.2, 5 * n);
+        let g = grest::graph::generators::chung_lu(&w, &mut rng);
+        let committed = g.adjacency();
+        let edges = g.edges();
+        println!("# graph n={} edges={}", g.n_nodes(), g.n_edges());
+        for &batch in batch_sizes {
+            let mut b = DeltaBuilder::from_graph(g.clone());
+            // mixed batch: ~3/5 adds among existing nodes, 1/5 removals
+            // of known edges, 1/5 expansion edges to unseen ids
+            for i in 0..batch {
+                if i % 5 == 3 {
+                    let (u, v) = edges[rng.below(edges.len())];
+                    b.push(GraphEvent::RemoveEdge(u as u64, v as u64));
+                } else if i % 5 == 4 {
+                    b.push(GraphEvent::AddEdge(rng.below(n) as u64, (n + i) as u64));
+                } else {
+                    b.push(GraphEvent::AddEdge(rng.below(n) as u64, rng.below(n) as u64));
+                }
+            }
+            let s = common::micro_secs(
+                &format!("prepare event-sourced   n={n} batch={batch}"),
+                300,
+                || {
+                    std::hint::black_box(b.prepare());
+                },
+            );
+            record(&mut records, &format!("prepare_incremental_n{n}_b{batch}"), batch, s);
+            let s = common::micro_secs(
+                &format!("prepare rebuild+diff   n={n} batch={batch}"),
+                300,
+                || {
+                    let adj = b.graph().adjacency();
+                    std::hint::black_box(Delta::from_diff(&committed, &adj));
+                },
+            );
+            record(&mut records, &format!("prepare_rebuild_n{n}_b{batch}"), batch, s);
+            if let Some(delta) = b.prepare() {
+                let s = common::micro_secs(
+                    &format!("apply_delta row-merge  n={n} batch={batch}"),
+                    300,
+                    || {
+                        std::hint::black_box(committed.apply_delta(&delta));
+                    },
+                );
+                record(&mut records, &format!("apply_delta_n{n}_b{batch}"), batch, s);
+            }
+        }
+        let s = common::micro_secs(&format!("adjacency full rebuild n={n}"), 300, || {
+            std::hint::black_box(g.adjacency());
+        });
+        record(&mut records, &format!("adjacency_rebuild_n{n}"), n, s);
+    }
+
+    // ---- SpMM thread ladder (row-partitioned single-pass kernel)
+    let n = if quick { 4096 } else { 16384 };
+    let k = 64;
+    let w = grest::graph::generators::power_law_weights(n, 2.2, 6 * n);
+    let g = grest::graph::generators::chung_lu(&w, &mut rng);
+    let a = g.adjacency();
+    let x = Mat::randn(n, k, &mut rng);
+    println!("# spmm graph: {} nodes {} edges, panel k={k}", g.n_nodes(), g.n_edges());
+    let mut base = f64::NAN;
+    for &t in &[1usize, 2, 4, 8] {
+        let s = common::micro_secs(&format!("spmm A·X threads={t}"), 500, || {
+            std::hint::black_box(a.matmul_dense_with(&x, Threads(t)));
+        });
+        if t == 1 {
+            base = s;
+        }
+        println!("# spmm speedup @ {t} threads: {:.2}x", base / s);
+        record(&mut records, &format!("spmm_ax_t{t}"), n, s);
+    }
+    // the determinism contract behind --threads N
+    let seq = a.matmul_dense_with(&x, Threads::SINGLE);
+    let par = a.matmul_dense_with(&x, Threads(4));
+    assert_eq!(
+        seq.as_slice(),
+        par.as_slice(),
+        "spmm must be bitwise stable across thread counts"
+    );
+    println!("# spmm bitwise-stable across thread counts: OK");
+
+    write_json(&records);
+}

@@ -49,6 +49,7 @@ pub struct ServiceConfig {
 enum Command {
     Events(Vec<GraphEvent>),
     Flush(Sender<u64>),
+    Adjacency(Sender<Csr>),
     CentralNodes(usize, Sender<Vec<usize>>),
     Clusters(usize, Sender<Vec<usize>>),
     Shutdown,
@@ -82,6 +83,15 @@ impl ServiceHandle {
     /// Latest embedding snapshot (never blocks the worker).
     pub fn snapshot(&self) -> Arc<EmbeddingSnapshot> {
         self.snapshots.latest()
+    }
+
+    /// The committed adjacency (a clone of the worker's incrementally
+    /// maintained CSR) — for debugging dumps and the soak tests that
+    /// cross-check it against a from-scratch rebuild.
+    pub fn adjacency(&self) -> Result<Csr> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Command::Adjacency(rtx))?;
+        Ok(rrx.recv()?)
     }
 
     /// Top-J central nodes by subgraph centrality on the current state.
@@ -235,11 +245,11 @@ fn worker_loop(
 
     let flush =
         |builder: &mut DeltaBuilder, adjacency: &mut Csr, tracker: &mut Box<dyn EigTracker>, version: &mut u64| {
-            match builder.prepare(adjacency) {
+            match builder.prepare() {
                 // batch netted out to no change: drop the pending events,
                 // committed state is already consistent
                 None => builder.commit(),
-                Some((delta, adj)) => {
+                Some(delta) => {
                     let t0 = Instant::now();
                     match tracker.update(&delta) {
                         Ok(()) => {
@@ -250,7 +260,9 @@ fn worker_loop(
                             metrics.nodes_added.fetch_add(delta.s_new as u64, Ordering::Relaxed);
                             metrics.update_latency.observe(t0.elapsed());
                             metrics.batches_applied.fetch_add(1, Ordering::Relaxed);
-                            *adjacency = adj;
+                            // incremental row-merge: only rows touched by
+                            // Δ are rewritten, never a full rebuild
+                            *adjacency = adjacency.apply_delta(&delta);
                             *version += 1;
                             store.publish(EmbeddingSnapshot {
                                 version: *version,
@@ -283,6 +295,9 @@ fn worker_loop(
             Command::Flush(reply) => {
                 flush(&mut builder, &mut adjacency, &mut tracker, &mut version);
                 let _ = reply.send(version);
+            }
+            Command::Adjacency(reply) => {
+                let _ = reply.send(adjacency.clone());
             }
             Command::CentralNodes(j, reply) => {
                 let out = crate::tasks::centrality::central_nodes(tracker.current(), j);
@@ -399,6 +414,56 @@ mod tests {
         let snap = h.snapshot();
         assert_eq!(snap.n_nodes, 32, "retried batch must include both new nodes");
         assert_eq!(h.metrics().batches_applied.load(Ordering::Relaxed), 1);
+        svc.join();
+    }
+
+    #[test]
+    fn soak_incremental_adjacency_matches_rebuild() {
+        // long mixed add/remove/expansion stream: at every flush the
+        // worker's incrementally maintained CSR (apply_delta chain) must
+        // equal a from-scratch Graph::adjacency() rebuild, and snapshot
+        // versions must stay monotone
+        let g = base_graph(50, 21);
+        let svc = TrackingService::spawn(ServiceConfig {
+            initial: g.clone(),
+            k: 4,
+            policy: BatchPolicy::ByCount(1_000_000),
+            seed: 3,
+            tracker: TrackerSpec::default(),
+        })
+        .unwrap();
+        let h = &svc.handle;
+        let mut mirror = DeltaBuilder::from_graph(g);
+        let mut rng = Rng::new(77);
+        let mut last_version = 0u64;
+        for batch in 0..25 {
+            let mut events = Vec::new();
+            for _ in 0..(1 + rng.below(12)) {
+                let a = rng.below(70) as u64; // ids 50.. arrive over time
+                let b = rng.below(70) as u64;
+                let ev = if rng.flip(0.7) {
+                    GraphEvent::AddEdge(a, b)
+                } else {
+                    GraphEvent::RemoveEdge(a, b)
+                };
+                events.push(ev);
+            }
+            for &ev in &events {
+                mirror.push(ev);
+            }
+            mirror.commit();
+            h.ingest(events).unwrap();
+            let v = h.flush().unwrap();
+            assert!(v >= last_version, "versions must be monotone");
+            last_version = v;
+            let inc = h.adjacency().unwrap();
+            let want = mirror.graph().adjacency(); // from-scratch rebuild
+            assert_eq!(inc.n_rows, want.n_rows, "batch {batch}");
+            assert_eq!(inc.indptr, want.indptr, "batch {batch}");
+            assert_eq!(inc.indices, want.indices, "batch {batch}");
+            assert_eq!(inc.data, want.data, "batch {batch}");
+        }
+        assert!(h.metrics().batches_applied.load(Ordering::Relaxed) >= 1);
         svc.join();
     }
 

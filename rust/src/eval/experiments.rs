@@ -10,7 +10,7 @@ use crate::graph::scenario::sbm_expansion;
 use crate::linalg::rng::Rng;
 use crate::linalg::threads::Threads;
 use crate::tasks::{ari::adjusted_rand_index, centrality, clustering};
-use crate::tracking::laplacian::{shifted_normalized_laplacian, shifted_scenario};
+use crate::tracking::laplacian::{shifted_scenario, Shift};
 use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::init_eigenpairs;
 use crate::tracking::EigTracker;
@@ -367,7 +367,7 @@ pub fn fig6_clustering(cfg: &ExpConfig, n: usize, p_outs: &[f64], ks: &[usize]) 
             let sc = sbm_expansion(n, k_clusters, 0.05, p_out, n0, s_per, 5, &mut rng);
             let labels = sc.labels_per_step.clone().unwrap();
             // shifted normalized Laplacian stream
-            let (t0, steps) = shifted_scenario(&sc, shifted_normalized_laplacian, 0.0);
+            let (t0, steps) = shifted_scenario(&sc, Shift::Normalized);
             let init = init_eigenpairs(&t0, k_clusters, 21 + mc as u64);
             let lp = cfg.rsvd_lp.min(20).max(4);
             let specs = {

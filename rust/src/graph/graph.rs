@@ -96,7 +96,9 @@ impl Graph {
             indices.extend(nbrs.iter().copied());
         }
         let data = vec![1.0; indices.len()];
-        Csr { n_rows: n, n_cols: n, indptr, indices, data }
+        // hand-assembled (BTreeSet iteration is sorted): assert the CSR
+        // invariants in debug builds like every other constructor
+        Csr { n_rows: n, n_cols: n, indptr, indices, data }.debug_validate()
     }
 
     /// Combinatorial Laplacian L = D − A as CSR.

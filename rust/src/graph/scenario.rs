@@ -7,7 +7,9 @@
 //! (`eigs`) computations and downstream-task ground truth.
 
 use crate::graph::graph::Graph;
+use crate::graph::stream::{DeltaBuilder, GraphEvent};
 use crate::linalg::rng::Rng;
+use crate::sparse::coo::Coo;
 use crate::sparse::csr::Csr;
 use crate::sparse::delta::Delta;
 
@@ -49,12 +51,47 @@ impl DynamicScenario {
     }
 }
 
+/// Expansion-only Δ for revealing `added` nodes of the full graph `g`
+/// into a scenario whose current node set has `n_old` members: G-block
+/// edges to already-present nodes and C-block edges among the
+/// newcomers, assembled in O(Σ deg(added)) — no induced-subgraph
+/// rebuild, no full-matrix diff.  `pos` maps original node ids to
+/// scenario indices (`usize::MAX` = not yet revealed) and is updated
+/// with the newcomers.
+fn expansion_delta(g: &Graph, pos: &mut [usize], n_old: usize, added: &[usize]) -> Delta {
+    let s_new = added.len();
+    for (off, &v) in added.iter().enumerate() {
+        pos[v] = n_old + off;
+    }
+    let mut gb = Coo::new(n_old, s_new);
+    let mut cb = Coo::new(s_new, s_new);
+    for (off, &v) in added.iter().enumerate() {
+        for u in g.neighbors(v) {
+            let pu = pos[u];
+            if pu == usize::MAX {
+                continue;
+            }
+            if pu < n_old {
+                gb.push(pu, off, 1.0);
+            } else {
+                let ou = pu - n_old;
+                if ou < off {
+                    cb.push_sym(ou, off, 1.0);
+                }
+            }
+        }
+    }
+    Delta::from_blocks(n_old, s_new, &Coo::new(n_old, n_old), &gb, &cb)
+}
+
 /// Scenario 1 (Sec. 5.1): a static graph is revealed by degree order.
 /// V⁽⁰⁾ = the ⌊N/2⌋ highest-degree nodes; each of the T steps adds the
-/// next ⌊(N−N⁽⁰⁾)/T⌋ highest-degree nodes, inducing subgraphs.
-/// Updates consist purely of graph expansion (S > 0, K = 0 up to the
-/// induced edges among previously present nodes... which by construction
-/// do not change).
+/// next ⌊(N−N⁽⁰⁾)/T⌋ highest-degree nodes (the last step takes the
+/// remainder, so every node is revealed even when `(n − n0) % t_steps
+/// != 0`), inducing subgraphs.  Updates consist purely of graph
+/// expansion (S > 0, K = 0 up to the induced edges among previously
+/// present nodes... which by construction do not change), built
+/// incrementally per step and applied with `Csr::apply_delta`.
 pub fn scenario1_from_static(name: &str, g: &Graph, t_steps: usize) -> DynamicScenario {
     let n = g.n_nodes();
     let mut order: Vec<usize> = (0..n).collect();
@@ -62,17 +99,18 @@ pub fn scenario1_from_static(name: &str, g: &Graph, t_steps: usize) -> DynamicSc
     let n0 = n / 2;
     let s_per = (n - n0) / t_steps;
     assert!(s_per > 0, "too many steps for graph size");
-    let mut current: Vec<usize> = order[..n0].to_vec();
-    let initial = g.induced_subgraph(&current).adjacency();
+    let initial = g.induced_subgraph(&order[..n0]).adjacency();
+    let mut pos = vec![usize::MAX; n];
+    for (p, &v) in order[..n0].iter().enumerate() {
+        pos[v] = p;
+    }
     let mut prev_adj = initial.clone();
     let mut steps = Vec::with_capacity(t_steps);
     for t in 0..t_steps {
         let lo = n0 + t * s_per;
-        let hi = if t + 1 == t_steps { n0 + (t + 1) * s_per } else { n0 + (t + 1) * s_per };
-        let hi = hi.min(n);
-        current.extend_from_slice(&order[lo..hi]);
-        let adj = g.induced_subgraph(&current).adjacency();
-        let delta = Delta::from_diff(&prev_adj, &adj);
+        let hi = if t + 1 == t_steps { n } else { n0 + (t + 1) * s_per };
+        let delta = expansion_delta(g, &mut pos, lo, &order[lo..hi]);
+        let adj = prev_adj.apply_delta(&delta);
         prev_adj = adj.clone();
         steps.push(TimeStep { delta, adjacency: adj });
     }
@@ -80,9 +118,12 @@ pub fn scenario1_from_static(name: &str, g: &Graph, t_steps: usize) -> DynamicSc
 }
 
 /// Scenario 2 (Sec. 5.1): timestamped edge stream.  E⁽⁰⁾ = the first
-/// ⌊M/2⌋ edges; each step appends the next ⌊(M−M⁽⁰⁾)/T⌋ edges.  Nodes are
-/// indexed by first appearance, so updates mix topological changes
-/// (K block) and expansion (G/C blocks).
+/// ⌊M/2⌋ edges; each step appends the next ⌊(M−M⁽⁰⁾)/T⌋ edges (the last
+/// step takes the remainder).  Nodes are indexed by first appearance —
+/// exactly [`DeltaBuilder`]'s interning order, so the stream is fed
+/// straight through the event-sourced ingestion path: each step's Δ is
+/// assembled in O(edges of the step) and the adjacency is maintained
+/// with `Csr::apply_delta` instead of per-step rebuilds.
 pub fn scenario2_from_stream(
     name: &str,
     stream: &[(usize, usize)],
@@ -92,35 +133,29 @@ pub fn scenario2_from_stream(
     let m0 = m / 2;
     let m_per = (m - m0) / t_steps;
     assert!(m_per > 0, "too many steps for stream length");
-    // Relabel nodes by first appearance.
-    let mut label = std::collections::HashMap::new();
-    let relabel = |x: usize, label: &mut std::collections::HashMap<usize, usize>| {
-        let next = label.len();
-        *label.entry(x).or_insert(next)
+    let mut b = DeltaBuilder::new();
+    for &(u, v) in &stream[..m0] {
+        b.push(GraphEvent::AddEdge(u as u64, v as u64));
+    }
+    let initial = match b.emit() {
+        Some(d) => Csr::empty(0, 0).apply_delta(&d),
+        None => Csr::empty(0, 0),
     };
-    let edges: Vec<(usize, usize)> = stream
-        .iter()
-        .map(|&(u, v)| (relabel(u, &mut label), relabel(v, &mut label)))
-        .collect();
-    let build = |upto: usize| -> Csr {
-        let n_nodes = edges[..upto]
-            .iter()
-            .map(|&(u, v)| u.max(v) + 1)
-            .max()
-            .unwrap_or(0);
-        let mut g = Graph::with_nodes(n_nodes);
-        for &(u, v) in &edges[..upto] {
-            g.add_edge(u, v);
-        }
-        g.adjacency()
-    };
-    let initial = build(m0);
     let mut prev = initial.clone();
     let mut steps = Vec::with_capacity(t_steps);
+    let mut done = m0;
     for t in 0..t_steps {
         let hi = if t + 1 == t_steps { m } else { m0 + (t + 1) * m_per };
-        let adj = build(hi);
-        let delta = Delta::from_diff(&prev, &adj);
+        for &(u, v) in &stream[done..hi] {
+            b.push(GraphEvent::AddEdge(u as u64, v as u64));
+        }
+        done = hi;
+        let delta = b.emit().unwrap_or_else(|| Delta {
+            n_old: prev.n_rows,
+            s_new: 0,
+            full: Csr::empty(prev.n_rows, prev.n_rows),
+        });
+        let adj = prev.apply_delta(&delta);
         prev = adj.clone();
         steps.push(TimeStep { delta, adjacency: adj });
     }
@@ -147,14 +182,18 @@ pub fn sbm_expansion(
     let mut current: Vec<usize> = order[..n0].to_vec();
     let lab_of = |nodes: &[usize]| nodes.iter().map(|&i| labels[i]).collect::<Vec<_>>();
     let initial = g.induced_subgraph(&current).adjacency();
+    let mut pos = vec![usize::MAX; n];
+    for (p, &v) in current.iter().enumerate() {
+        pos[v] = p;
+    }
     let mut labels_per_step = vec![lab_of(&current)];
     let mut prev = initial.clone();
     let mut steps = Vec::with_capacity(t_steps);
     for t in 0..t_steps {
         let lo = n0 + t * s_per;
+        let delta = expansion_delta(&g, &mut pos, current.len(), &order[lo..lo + s_per]);
         current.extend_from_slice(&order[lo..lo + s_per]);
-        let adj = g.induced_subgraph(&current).adjacency();
-        let delta = Delta::from_diff(&prev, &adj);
+        let adj = prev.apply_delta(&delta);
         prev = adj.clone();
         labels_per_step.push(lab_of(&current));
         steps.push(TimeStep { delta, adjacency: adj });
@@ -174,11 +213,13 @@ mod tests {
 
     #[test]
     fn scenario1_consistency() {
+        // 203 nodes over 5 steps: (203 − 101) % 5 != 0, so the last step
+        // must take the remainder (regression for the dead-branch bug)
         let mut rng = Rng::new(1);
-        let g = generators::erdos_renyi(200, 0.05, &mut rng);
+        let g = generators::erdos_renyi(203, 0.05, &mut rng);
         let sc = scenario1_from_static("er", &g, 5);
         assert_eq!(sc.t_steps(), 5);
-        assert_eq!(sc.initial.n_rows, 100);
+        assert_eq!(sc.initial.n_rows, 101);
         // each step: Ā + Δ == Â  (checked via from_diff reconstruction)
         let mut prev = sc.initial.clone();
         for step in &sc.steps {
@@ -201,19 +242,98 @@ mod tests {
             assert!(diff.max_abs() < 1e-12);
             prev = step.adjacency.clone();
         }
-        // final graph has all nodes
-        assert_eq!(sc.max_nodes(), 200);
+        // final graph has ALL nodes, including the remainder
+        assert_eq!(sc.max_nodes(), 203);
+    }
+
+    #[test]
+    fn scenario1_reveals_remainder_nodes() {
+        // regression: with (n − n0) % t_steps != 0 the old code's two
+        // identical branches silently dropped the trailing nodes, so
+        // every Scenario-1 figure ran on a truncated graph
+        let mut rng = Rng::new(7);
+        let g = generators::erdos_renyi(107, 0.1, &mut rng);
+        let sc = scenario1_from_static("er", &g, 4);
+        // n0 = 53, s_per = 13: steps reveal 13+13+13+15 nodes
+        assert_eq!(sc.initial.n_rows, 53);
+        assert_eq!(sc.max_nodes(), 107, "remainder nodes must be revealed");
+        assert_eq!(sc.steps[3].delta.s_new, 15);
+        for t in 0..3 {
+            assert_eq!(sc.steps[t].delta.s_new, 13);
+        }
+    }
+
+    #[test]
+    fn scenario1_matches_induced_subgraph_rebuild() {
+        // oracle: the incrementally maintained adjacency equals the
+        // induced-subgraph rebuild of the degree-order prefix
+        let mut rng = Rng::new(9);
+        let g = generators::erdos_renyi(83, 0.1, &mut rng);
+        let sc = scenario1_from_static("er", &g, 3);
+        let n = g.n_nodes();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| g.degree(b).cmp(&g.degree(a)).then(a.cmp(&b)));
+        for step in &sc.steps {
+            let upto = step.adjacency.n_rows;
+            let want = g.induced_subgraph(&order[..upto]).adjacency();
+            assert_eq!(step.adjacency.indptr, want.indptr);
+            assert_eq!(step.adjacency.indices, want.indices);
+            assert_eq!(step.adjacency.data, want.data);
+        }
+        assert_eq!(sc.max_nodes(), 83);
     }
 
     #[test]
     fn scenario1_pure_expansion_has_no_k_block() {
         // degree-ordered reveal never changes edges among existing nodes
+        // (non-divisible size: 100 − 50 = 50 over 4 steps)
         let mut rng = Rng::new(2);
         let g = generators::erdos_renyi(100, 0.08, &mut rng);
         let sc = scenario1_from_static("er", &g, 4);
         for step in &sc.steps {
             let kb = step.delta.k_block_dense();
             assert!(kb.max_abs() == 0.0, "K block must be empty in Scenario 1");
+        }
+        assert_eq!(sc.max_nodes(), 100, "remainder revealed");
+    }
+
+    #[test]
+    fn scenario2_matches_rebuild_oracle() {
+        // oracle: the event-sourced stream path equals the from-scratch
+        // prefix rebuild at every step (nodes labelled by first
+        // appearance either way)
+        let mut rng = Rng::new(11);
+        let (_, stream) = generators::ba_with_arrivals(90, 2, &mut rng);
+        let sc = scenario2_from_stream("ba", &stream, 5);
+        let m = stream.len();
+        let m0 = m / 2;
+        let m_per = (m - m0) / 5;
+        let mut label = std::collections::HashMap::new();
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for &(u, v) in &stream {
+            let next = label.len();
+            let lu = *label.entry(u).or_insert(next);
+            let next = label.len();
+            let lv = *label.entry(v).or_insert(next);
+            edges.push((lu, lv));
+        }
+        let build = |upto: usize| -> Csr {
+            let n_nodes = edges[..upto].iter().map(|&(u, v)| u.max(v) + 1).max().unwrap_or(0);
+            let mut g = Graph::with_nodes(n_nodes);
+            for &(u, v) in &edges[..upto] {
+                g.add_edge(u, v);
+            }
+            g.adjacency()
+        };
+        let want0 = build(m0);
+        assert_eq!(sc.initial.indptr, want0.indptr);
+        assert_eq!(sc.initial.indices, want0.indices);
+        for (t, step) in sc.steps.iter().enumerate() {
+            let hi = if t + 1 == 5 { m } else { m0 + (t + 1) * m_per };
+            let want = build(hi);
+            assert_eq!(step.adjacency.indptr, want.indptr, "step {t}");
+            assert_eq!(step.adjacency.indices, want.indices, "step {t}");
+            assert_eq!(step.adjacency.data, want.data, "step {t}");
         }
     }
 

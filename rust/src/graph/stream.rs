@@ -4,8 +4,17 @@
 //! never-seen node ids); [`DeltaBuilder`] accumulates them against the
 //! current graph state and emits the structured update matrix Δ when the
 //! coordinator decides to close a batch (paper's "time step").
+//!
+//! Δ assembly is *event-sourced*: alongside the working graph, the
+//! builder keeps the net weight change per edge relative to the last
+//! committed state, so [`DeltaBuilder::prepare`] writes the K/G/C blocks
+//! straight from that map in O(|batch|) — it never walks the full
+//! adjacency.  `Delta::from_diff` over a from-scratch rebuild remains
+//! the test oracle for this path, and callers maintain their committed
+//! CSR with [`crate::sparse::csr::Csr::apply_delta`].
 
 use crate::graph::graph::Graph;
+use crate::sparse::coo::Coo;
 use crate::sparse::delta::Delta;
 use std::collections::HashMap;
 
@@ -21,12 +30,24 @@ pub enum GraphEvent {
 /// Accumulates events into a pending batch on top of a committed graph,
 /// mapping external ids to dense internal indices (new ids allocate the
 /// next index, i.e. the expansion block of Eq. 2).
+///
+/// Self-loop events (`AddEdge(a, a)` / `RemoveEdge(a, a)`) are dropped
+/// before interning: the graph model is simple (`Graph::add_edge`
+/// rejects self loops), and interning the id would allocate a phantom
+/// isolated node that silently inflates S.
 pub struct DeltaBuilder {
     graph: Graph,
     ids: HashMap<u64, usize>,
     /// committed node count (N in Eq. 2) at the last emit
     committed_nodes: usize,
-    pending: Vec<GraphEvent>,
+    /// count of pending (non-self-loop) events, for the batch policy;
+    /// Δ assembly itself reads only `net`, so events are not retained
+    pending_events: usize,
+    /// Net weight change per undirected edge (canonical `u < v` keys)
+    /// of the working graph relative to the committed state; entries
+    /// netting to zero are removed, so at prepare time this *is* the
+    /// K/G/C content of Δ.
+    net: HashMap<(usize, usize), f64>,
 }
 
 impl Default for DeltaBuilder {
@@ -41,7 +62,8 @@ impl DeltaBuilder {
             graph: Graph::with_nodes(0),
             ids: HashMap::new(),
             committed_nodes: 0,
-            pending: Vec::new(),
+            pending_events: 0,
+            net: HashMap::new(),
         }
     }
 
@@ -49,7 +71,13 @@ impl DeltaBuilder {
     pub fn from_graph(g: Graph) -> DeltaBuilder {
         let n = g.n_nodes();
         let ids = (0..n as u64).map(|i| (i, i as usize)).collect();
-        DeltaBuilder { graph: g, ids, committed_nodes: n, pending: Vec::new() }
+        DeltaBuilder {
+            graph: g,
+            ids,
+            committed_nodes: n,
+            pending_events: 0,
+            net: HashMap::new(),
+        }
     }
 
     pub fn committed_nodes(&self) -> usize {
@@ -57,7 +85,7 @@ impl DeltaBuilder {
     }
 
     pub fn pending_events(&self) -> usize {
-        self.pending.len()
+        self.pending_events
     }
 
     /// Number of not-yet-committed new nodes referenced by pending events.
@@ -75,59 +103,90 @@ impl DeltaBuilder {
         }
     }
 
+    /// Record a net edge-weight change relative to the committed state.
+    fn record(&mut self, u: usize, v: usize, w: f64) {
+        let key = (u.min(v), u.max(v));
+        let e = self.net.entry(key).or_insert(0.0);
+        *e += w;
+        if *e == 0.0 {
+            self.net.remove(&key);
+        }
+    }
+
     /// Apply an event to the working graph and remember it in the batch.
     pub fn push(&mut self, ev: GraphEvent) {
         match ev {
             GraphEvent::AddEdge(a, b) => {
+                if a == b {
+                    return; // self loop: no-op, never interned
+                }
                 let (u, v) = (self.intern(a), self.intern(b));
-                self.graph.add_edge(u, v);
+                if self.graph.add_edge(u, v) {
+                    self.record(u, v, 1.0);
+                }
             }
             GraphEvent::RemoveEdge(a, b) => {
-                if let (Some(&u), Some(&v)) = (self.ids.get(&a), self.ids.get(&b)) {
-                    self.graph.remove_edge(u, v);
+                if a == b {
+                    return;
+                }
+                let uv = match (self.ids.get(&a).copied(), self.ids.get(&b).copied()) {
+                    (Some(u), Some(v)) => Some((u, v)),
+                    _ => None,
+                };
+                if let Some((u, v)) = uv {
+                    if self.graph.remove_edge(u, v) {
+                        self.record(u, v, -1.0);
+                    }
                 }
             }
         }
-        self.pending.push(ev);
+        self.pending_events += 1;
     }
 
-    /// Build (Δ, new adjacency) for the pending batch relative to the
-    /// last committed state, WITHOUT committing.  Returns `None` when the
-    /// batch is empty or nets out to no change.
+    /// Build Δ for the pending batch relative to the last committed
+    /// state, WITHOUT committing — O(|batch|): the K/G/C blocks are
+    /// written directly from the net edge-change map; the full
+    /// adjacency is never touched.  Returns `None` when the batch is
+    /// empty or nets out to no change (and no nodes arrived).
     ///
     /// Callers that can fail while applying the batch (the coordinator's
     /// `tracker.update`) must call [`DeltaBuilder::commit`] only after
     /// success; until then the batch stays pending and a later `prepare`
     /// re-emits the accumulated delta against the same committed state.
-    pub fn prepare(
-        &self,
-        prev_adjacency: &crate::sparse::csr::Csr,
-    ) -> Option<(Delta, crate::sparse::csr::Csr)> {
-        if self.pending.is_empty() && self.graph.n_nodes() == self.committed_nodes {
+    pub fn prepare(&self) -> Option<Delta> {
+        let n_old = self.committed_nodes;
+        let s_new = self.graph.n_nodes() - n_old;
+        if self.net.is_empty() && s_new == 0 {
             return None;
         }
-        let adj = self.graph.adjacency();
-        let delta = Delta::from_diff(prev_adjacency, &adj);
-        if delta.nnz() == 0 && delta.s_new == 0 {
-            return None;
+        let mut k = Coo::new(n_old, n_old);
+        let mut g = Coo::new(n_old, s_new);
+        let mut c = Coo::new(s_new, s_new);
+        for (&(u, v), &w) in &self.net {
+            // keys are canonical (u < v), so v < n_old means both old
+            if v < n_old {
+                k.push_sym(u, v, w);
+            } else if u < n_old {
+                g.push(u, v - n_old, w);
+            } else {
+                c.push_sym(u - n_old, v - n_old, w);
+            }
         }
-        Some((delta, adj))
+        Some(Delta::from_blocks(n_old, s_new, &k, &g, &c))
     }
 
     /// Mark the pending batch committed (the prepared delta was applied
     /// downstream, or netted out to nothing).
     pub fn commit(&mut self) {
         self.committed_nodes = self.graph.n_nodes();
-        self.pending.clear();
+        self.pending_events = 0;
+        self.net.clear();
     }
 
     /// Close the batch: [`DeltaBuilder::prepare`] + [`DeltaBuilder::commit`]
     /// in one step, for callers with no fallible work in between.
-    pub fn emit(
-        &mut self,
-        prev_adjacency: &crate::sparse::csr::Csr,
-    ) -> Option<(Delta, crate::sparse::csr::Csr)> {
-        let out = self.prepare(prev_adjacency);
+    pub fn emit(&mut self) -> Option<Delta> {
+        let out = self.prepare();
         self.commit();
         out
     }
@@ -141,48 +200,65 @@ impl DeltaBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::csr::Csr;
 
     #[test]
     fn events_accumulate_into_delta() {
         let mut b = DeltaBuilder::new();
         b.push(GraphEvent::AddEdge(10, 20));
         b.push(GraphEvent::AddEdge(20, 30));
-        let empty = crate::sparse::csr::Csr::empty(0, 0);
-        let (d, adj) = b.emit(&empty).unwrap();
+        let d = b.emit().unwrap();
         assert_eq!(d.n_old, 0);
         assert_eq!(d.s_new, 3);
+        let adj = Csr::empty(0, 0).apply_delta(&d);
         assert_eq!(adj.n_rows, 3);
         assert_eq!(adj.get(0, 1), 1.0);
 
         // second batch: remove one edge, add a node
         b.push(GraphEvent::RemoveEdge(10, 20));
         b.push(GraphEvent::AddEdge(30, 40));
-        let (d2, adj2) = b.emit(&adj).unwrap();
+        let d2 = b.emit().unwrap();
         assert_eq!(d2.n_old, 3);
         assert_eq!(d2.s_new, 1);
         assert_eq!(d2.full.get(0, 1), -1.0); // removal in K block
+        let adj2 = adj.apply_delta(&d2);
         assert_eq!(adj2.get(2, 3), 1.0);
+        assert_eq!(adj2.get(0, 1), 0.0);
     }
 
     #[test]
     fn emit_none_when_no_change() {
         let mut b = DeltaBuilder::new();
-        let empty = crate::sparse::csr::Csr::empty(0, 0);
-        assert!(b.emit(&empty).is_none());
+        assert!(b.emit().is_none());
         b.push(GraphEvent::AddEdge(1, 2));
-        let (_, adj) = b.emit(&empty).unwrap();
-        // add+remove cancels, but the events still touched the graph:
+        assert!(b.emit().is_some());
+        // add-existing and remove-unknown are both graph no-ops
         b.push(GraphEvent::AddEdge(1, 2)); // already exists -> no-op
         b.push(GraphEvent::RemoveEdge(5, 6)); // unknown ids -> no-op
-        assert!(b.emit(&adj).is_none());
+        assert!(b.emit().is_none());
     }
 
     #[test]
     fn remove_unknown_edge_is_noop() {
         let mut b = DeltaBuilder::new();
         b.push(GraphEvent::RemoveEdge(1, 2));
-        let empty = crate::sparse::csr::Csr::empty(0, 0);
-        assert!(b.emit(&empty).is_none());
+        assert!(b.emit().is_none());
+    }
+
+    #[test]
+    fn self_loop_events_are_noops_and_never_intern() {
+        // regression: AddEdge(a, a) used to intern `a` and allocate a
+        // phantom isolated node, inflating s_new
+        let mut b = DeltaBuilder::new();
+        b.push(GraphEvent::AddEdge(7, 7));
+        b.push(GraphEvent::RemoveEdge(7, 7));
+        assert_eq!(b.pending_events(), 0);
+        assert_eq!(b.pending_new_nodes(), 0);
+        assert!(b.emit().is_none());
+        // a real edge afterwards sees only its own two nodes
+        b.push(GraphEvent::AddEdge(7, 8));
+        let d = b.emit().unwrap();
+        assert_eq!(d.s_new, 2);
     }
 
     #[test]
@@ -192,10 +268,55 @@ mod tests {
         b.push(GraphEvent::AddEdge(1, 2));
         b.push(GraphEvent::AddEdge(2, 3));
         b.push(GraphEvent::RemoveEdge(1, 2));
-        let empty = crate::sparse::csr::Csr::empty(0, 0);
-        let (d, adj) = b.emit(&empty).unwrap();
+        let d = b.emit().unwrap();
+        let adj = Csr::empty(0, 0).apply_delta(&d);
         assert_eq!(adj.get(0, 1), 0.0);
         assert_eq!(adj.get(1, 2), 1.0);
         assert_eq!(d.s_new, 3);
+    }
+
+    #[test]
+    fn event_sourced_prepare_matches_from_diff_oracle() {
+        // property: over random add/remove/expansion streams, the
+        // O(|batch|) event-sourced Δ equals the from-scratch
+        // rebuild-and-diff oracle, and apply_delta tracks the rebuild
+        use crate::linalg::rng::Rng;
+        for seed in 0..15u64 {
+            let mut rng = Rng::new(1000 + seed);
+            let mut b = DeltaBuilder::new();
+            let mut committed = Csr::empty(0, 0);
+            for _batch in 0..8 {
+                for _ in 0..(1 + rng.below(15)) {
+                    let x = rng.below(25) as u64;
+                    let y = rng.below(35) as u64; // ids ≥ 25 arrive over time
+                    if rng.flip(0.7) {
+                        b.push(GraphEvent::AddEdge(x, y));
+                    } else {
+                        b.push(GraphEvent::RemoveEdge(x, y));
+                    }
+                }
+                let oracle = Delta::from_diff(&committed, &b.graph().adjacency());
+                match b.prepare() {
+                    None => {
+                        assert_eq!(oracle.nnz(), 0, "seed {seed}");
+                        assert_eq!(oracle.s_new, 0, "seed {seed}");
+                        b.commit();
+                    }
+                    Some(d) => {
+                        assert_eq!(d.n_old, oracle.n_old, "seed {seed}");
+                        assert_eq!(d.s_new, oracle.s_new, "seed {seed}");
+                        assert_eq!(d.full.indptr, oracle.full.indptr, "seed {seed}");
+                        assert_eq!(d.full.indices, oracle.full.indices, "seed {seed}");
+                        assert_eq!(d.full.data, oracle.full.data, "seed {seed}");
+                        b.commit();
+                        committed = committed.apply_delta(&d);
+                        let rebuild = b.graph().adjacency();
+                        assert_eq!(committed.indptr, rebuild.indptr, "seed {seed}");
+                        assert_eq!(committed.indices, rebuild.indices, "seed {seed}");
+                        assert_eq!(committed.data, rebuild.data, "seed {seed}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -62,7 +62,7 @@ impl Coo {
         for r in 0..self.rows {
             indptr[r + 1] += indptr[r];
         }
-        Csr { n_rows: self.rows, n_cols: self.cols, indptr, indices, data }
+        Csr { n_rows: self.rows, n_cols: self.cols, indptr, indices, data }.debug_validate()
     }
 
     /// y += alpha * (self · x) without converting to CSR.

@@ -1,9 +1,13 @@
 //! Compressed sparse row matrix with the operations the trackers need:
-//! SpMV, SpMM against dense panels, transpose products, and sparse
-//! difference (for Laplacian deltas).
+//! SpMV, SpMM against dense panels, transpose products, sparse
+//! difference (for Laplacian deltas), and the incremental row-merge
+//! `apply_delta` that the streaming ingestion path maintains committed
+//! state with.
 
 use crate::linalg::lanczos::LinOp;
 use crate::linalg::mat::Mat;
+use crate::linalg::threads::{balanced_col_chunks, Threads};
+use crate::sparse::delta::Delta;
 
 /// CSR sparse matrix.
 #[derive(Clone, Debug, Default)]
@@ -23,6 +27,165 @@ impl Csr {
 
     pub fn nnz(&self) -> usize {
         self.data.len()
+    }
+
+    /// Structural invariants every `Csr` in the system relies on:
+    /// `indptr` of length `n_rows + 1`, starting at 0, monotone, and
+    /// covering `indices`/`data` exactly; column indices strictly
+    /// increasing and in-bounds within each row.  `get`/`is_symmetric`
+    /// (binary search) and the row-merge kernels silently misbehave on
+    /// unsorted rows, so constructors and `apply_delta` assert this in
+    /// debug builds via [`Csr::debug_validate`].
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.indptr.len() != self.n_rows + 1 {
+            return Err(format!(
+                "indptr len {} != n_rows + 1 = {}",
+                self.indptr.len(),
+                self.n_rows + 1
+            ));
+        }
+        if self.indptr[0] != 0 {
+            return Err(format!("indptr[0] = {} != 0", self.indptr[0]));
+        }
+        if self.indices.len() != self.data.len() {
+            return Err(format!(
+                "indices len {} != data len {}",
+                self.indices.len(),
+                self.data.len()
+            ));
+        }
+        if self.indptr[self.n_rows] != self.indices.len() {
+            return Err(format!(
+                "indptr[n_rows] = {} != nnz = {}",
+                self.indptr[self.n_rows],
+                self.indices.len()
+            ));
+        }
+        for i in 0..self.n_rows {
+            if self.indptr[i] > self.indptr[i + 1] {
+                return Err(format!(
+                    "indptr not monotone at row {i}: {} > {}",
+                    self.indptr[i],
+                    self.indptr[i + 1]
+                ));
+            }
+        }
+        for i in 0..self.n_rows {
+            let row = &self.indices[self.indptr[i]..self.indptr[i + 1]];
+            for (p, &j) in row.iter().enumerate() {
+                if j >= self.n_cols {
+                    return Err(format!(
+                        "row {i}: column {j} out of bounds ({} cols)",
+                        self.n_cols
+                    ));
+                }
+                if p > 0 && row[p - 1] >= j {
+                    return Err(format!(
+                        "row {i}: indices not strictly increasing ({} then {j})",
+                        row[p - 1]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Debug-build invariant check (free in release); consumes and
+    /// returns `self` so constructors can validate in one expression.
+    pub fn debug_validate(self) -> Csr {
+        #[cfg(debug_assertions)]
+        if let Err(e) = self.check_invariants() {
+            panic!("Csr invariant violation: {e}");
+        }
+        self
+    }
+
+    /// Â = Ā + Δ by sorted row-merge: runs of rows untouched by Δ are
+    /// copied wholesale (one memcpy per run), touched rows are merged
+    /// entry-by-entry with exact-zero results dropped, and the S new
+    /// rows are appended from Δ directly.  This is how committed state
+    /// (coordinator adjacency, scenario adjacencies, shifted Laplacians)
+    /// is maintained incrementally — cost O(nnz(Ā) memcpy + nnz(Δ))
+    /// instead of the O(nnz(Â) log) rebuild+sort of the `from_diff`
+    /// path, with no per-entry re-sorting.
+    pub fn apply_delta(&self, delta: &Delta) -> Csr {
+        assert_eq!(self.n_rows, delta.n_old, "apply_delta: Ā rows vs Δ n_old");
+        assert_eq!(self.n_cols, delta.n_old, "apply_delta: Ā must be square");
+        let n = delta.n_new();
+        let cap = self.nnz() + delta.nnz();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let mut indices: Vec<usize> = Vec::with_capacity(cap);
+        let mut data: Vec<f64> = Vec::with_capacity(cap);
+        let dptr = &delta.full.indptr;
+        let mut i = 0;
+        while i < self.n_rows {
+            if dptr[i] == dptr[i + 1] {
+                // bulk-copy the whole contiguous run of untouched rows
+                let start = i;
+                while i < self.n_rows && dptr[i] == dptr[i + 1] {
+                    i += 1;
+                }
+                let (alo, ahi) = (self.indptr[start], self.indptr[i]);
+                let base = indices.len();
+                indices.extend_from_slice(&self.indices[alo..ahi]);
+                data.extend_from_slice(&self.data[alo..ahi]);
+                for r in start..i {
+                    indptr.push(base + (self.indptr[r + 1] - alo));
+                }
+            } else {
+                let (ac, av) = self.row(i);
+                let (dc, dv) = delta.full.row(i);
+                let (mut p, mut q) = (0usize, 0usize);
+                while p < ac.len() && q < dc.len() {
+                    match ac[p].cmp(&dc[q]) {
+                        std::cmp::Ordering::Less => {
+                            indices.push(ac[p]);
+                            data.push(av[p]);
+                            p += 1;
+                        }
+                        std::cmp::Ordering::Greater => {
+                            if dv[q] != 0.0 {
+                                indices.push(dc[q]);
+                                data.push(dv[q]);
+                            }
+                            q += 1;
+                        }
+                        std::cmp::Ordering::Equal => {
+                            let v = av[p] + dv[q];
+                            if v != 0.0 {
+                                indices.push(ac[p]);
+                                data.push(v);
+                            }
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                indices.extend_from_slice(&ac[p..]);
+                data.extend_from_slice(&av[p..]);
+                while q < dc.len() {
+                    if dv[q] != 0.0 {
+                        indices.push(dc[q]);
+                        data.push(dv[q]);
+                    }
+                    q += 1;
+                }
+                indptr.push(indices.len());
+                i += 1;
+            }
+        }
+        for r in self.n_rows..n {
+            let (dc, dv) = delta.full.row(r);
+            for (&j, &v) in dc.iter().zip(dv.iter()) {
+                if v != 0.0 {
+                    indices.push(j);
+                    data.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { n_rows: n, n_cols: n, indptr, indices, data }.debug_validate()
     }
 
     /// Entry lookup (binary search within the row).
@@ -63,24 +226,39 @@ impl Csr {
         y
     }
 
-    /// A · B for a dense panel B (n_cols × m) → (n_rows × m).
+    /// A · B for a dense panel B (n_cols × m) → (n_rows × m), auto
+    /// thread budget.
     pub fn matmul_dense(&self, b: &Mat) -> Mat {
+        self.matmul_dense_with(b, Threads::AUTO)
+    }
+
+    /// [`Csr::matmul_dense`] with an explicit worker-thread budget.
+    ///
+    /// Single pass over the sparse rows (rows outer, panel columns
+    /// inner): each row walks its `indptr` range once and streams the
+    /// matching rows of B from a row-major copy, instead of re-walking
+    /// the whole matrix once per panel column.  Output rows are
+    /// partitioned across workers weighted by row nnz; the per-element
+    /// reduction order (ascending nonzero position) never changes, so
+    /// results are bitwise identical across thread counts — the sparse
+    /// analogue of the dense layer's column-partition contract.
+    pub fn matmul_dense_with(&self, b: &Mat, threads: Threads) -> Mat {
         assert_eq!(self.n_cols, b.rows());
-        let mut out = Mat::zeros(self.n_rows, b.cols());
-        for j in 0..b.cols() {
-            let bj = b.col(j);
-            let oj = out.col_mut(j);
-            for i in 0..self.n_rows {
-                let lo = self.indptr[i];
-                let hi = self.indptr[i + 1];
-                let mut s = 0.0;
-                for p in lo..hi {
-                    s += self.data[p] * bj[self.indices[p]];
+        let k = b.cols();
+        let bt = dense_row_major(b);
+        rowwise_spmm(
+            self.n_rows,
+            k,
+            |i| self.indptr[i + 1] - self.indptr[i] + 1,
+            2 * self.nnz() * k,
+            threads,
+            |i, acc| {
+                let (cols, vals) = self.row(i);
+                for (&j, &v) in cols.iter().zip(vals.iter()) {
+                    crate::linalg::blas::axpy(v, &bt[j * k..(j + 1) * k], acc);
                 }
-                oj[i] = s;
-            }
-        }
-        out
+            },
+        )
     }
 
     /// Aᵀ · B for a dense panel B (n_rows × m) → (n_cols × m),
@@ -174,6 +352,85 @@ impl Csr {
     }
 }
 
+/// Row-major copy of a column-major dense panel (one pass); the sparse
+/// kernels stream whole B rows contiguously from this buffer, one
+/// `axpy` per nonzero.
+pub(crate) fn dense_row_major(b: &Mat) -> Vec<f64> {
+    let (n, k) = (b.rows(), b.cols());
+    let mut out = vec![0.0; n * k];
+    for c in 0..k {
+        let col = b.col(c);
+        for i in 0..n {
+            out[i * k + c] = col[i];
+        }
+    }
+    out
+}
+
+/// Row-partitioned driver shared by the sparse panel products
+/// ([`Csr::matmul_dense_with`] and the `Delta` kernels): `kernel`
+/// accumulates output row `i` into a k-length buffer with a fixed
+/// sequential order, rows are chunked across `threads` workers by
+/// `weight` (typically row nnz), and each worker writes a private
+/// column-major block that is copied into place afterwards.  Every
+/// output element is produced by exactly one worker with the same
+/// reduction order as the sequential path, so results are bitwise
+/// identical for any worker count.
+pub(crate) fn rowwise_spmm<F>(
+    rows: usize,
+    k: usize,
+    weight: impl Fn(usize) -> usize,
+    flops: usize,
+    threads: Threads,
+    kernel: F,
+) -> Mat
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    let mut out = Mat::zeros(rows, k);
+    if rows == 0 || k == 0 {
+        return out;
+    }
+    let run = |lo: usize, hi: usize, buf: &mut [f64]| {
+        let chunk = hi - lo;
+        let mut acc = vec![0.0; k];
+        for i in lo..hi {
+            acc.fill(0.0);
+            kernel(i, &mut acc);
+            for (c, &v) in acc.iter().enumerate() {
+                buf[(i - lo) + c * chunk] = v;
+            }
+        }
+    };
+    let workers = threads.for_flops(flops).min(rows);
+    if workers <= 1 {
+        run(0, rows, out.as_mut_slice());
+        return out;
+    }
+    let chunks = balanced_col_chunks(rows, workers, weight);
+    let locals: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let run = &run;
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|&(lo, hi)| {
+                s.spawn(move || {
+                    let mut buf = vec![0.0; (hi - lo) * k];
+                    run(lo, hi, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (&(lo, hi), local) in chunks.iter().zip(locals.iter()) {
+        let rows_c = hi - lo;
+        for c in 0..k {
+            out.col_mut(c)[lo..hi].copy_from_slice(&local[c * rows_c..(c + 1) * rows_c]);
+        }
+    }
+    out
+}
+
 impl LinOp for Csr {
     fn dim(&self) -> usize {
         assert_eq!(self.n_rows, self.n_cols);
@@ -263,5 +520,126 @@ mod tests {
         c.push_sym(0, 2, 1.0);
         let a = c.to_csr();
         assert_eq!(a.row_sums(), vec![2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn apply_delta_matches_from_diff_oracle() {
+        // random Ā/Â pairs: Ā.apply_delta(from_diff(Ā, Â)) reconstructs Â
+        use crate::sparse::delta::Delta;
+        let mut rng = Rng::new(9);
+        for trial in 0..20u64 {
+            let n_old = 5 + rng.below(20);
+            let s_new = rng.below(4);
+            let n = n_old + s_new;
+            let a_old = random_csr(n_old, n_old, 3 * n_old, &mut rng);
+            let a_new = random_csr(n, n, 3 * n, &mut rng);
+            let delta = Delta::from_diff(&a_old, &a_new);
+            let rebuilt = a_old.apply_delta(&delta);
+            assert!(rebuilt.check_invariants().is_ok(), "trial {trial}");
+            let mut diff = rebuilt.to_dense();
+            diff.axpy(-1.0, &a_new.to_dense());
+            assert!(diff.max_abs() < 1e-12, "trial {trial}: {}", diff.max_abs());
+        }
+    }
+
+    #[test]
+    fn apply_delta_bulk_copies_untouched_rows_exactly() {
+        // integer-valued matrix + delta touching 2 of 50 rows: untouched
+        // rows must be bit-identical and touched rows exactly merged
+        let mut a = Coo::new(50, 50);
+        for i in 0..49 {
+            a.push_sym(i, i + 1, 1.0);
+        }
+        let a = a.to_csr();
+        let mut k = Coo::new(50, 50);
+        k.push_sym(10, 30, 1.0); // add
+        k.push_sym(10, 11, -1.0); // remove existing
+        let d = crate::sparse::delta::Delta::from_blocks(
+            50,
+            0,
+            &k,
+            &Coo::new(50, 0),
+            &Coo::new(0, 0),
+        );
+        let got = a.apply_delta(&d);
+        assert_eq!(got.get(10, 30), 1.0);
+        assert_eq!(got.get(30, 10), 1.0);
+        assert_eq!(got.get(10, 11), 0.0);
+        assert_eq!(got.get(5, 6), 1.0);
+        assert_eq!(got.nnz(), a.nnz() + 2 - 2);
+        assert!(got.is_symmetric(0.0));
+        assert!(got.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn apply_delta_appends_new_rows() {
+        use crate::sparse::delta::Delta;
+        let mut a = Coo::new(3, 3);
+        a.push_sym(0, 1, 1.0);
+        let a = a.to_csr();
+        let mut g = Coo::new(3, 2);
+        g.push(2, 0, 1.0);
+        let mut c = Coo::new(2, 2);
+        c.push_sym(0, 1, 1.0);
+        let d = Delta::from_blocks(3, 2, &Coo::new(3, 3), &g, &c);
+        let got = a.apply_delta(&d);
+        assert_eq!(got.n_rows, 5);
+        assert_eq!(got.get(2, 3), 1.0);
+        assert_eq!(got.get(3, 2), 1.0);
+        assert_eq!(got.get(3, 4), 1.0);
+        assert_eq!(got.get(0, 1), 1.0);
+        assert!(got.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn check_invariants_catches_corruption() {
+        let mut rng = Rng::new(11);
+        let good = random_csr(10, 10, 30, &mut rng);
+        assert!(good.check_invariants().is_ok());
+
+        let mut bad = good.clone();
+        bad.indptr[0] = 1;
+        assert!(bad.check_invariants().is_err(), "nonzero indptr[0]");
+
+        let mut bad = good.clone();
+        let last = bad.indptr.len() - 1;
+        bad.indptr[last] += 1;
+        assert!(bad.check_invariants().is_err(), "indptr/nnz mismatch");
+
+        let mut bad = good.clone();
+        if bad.nnz() >= 2 {
+            bad.indices.swap(0, 1);
+        }
+        // swapping within a row breaks sortedness (rows with ≥ 2 entries)
+        if bad.indptr[1] >= 2 {
+            assert!(bad.check_invariants().is_err(), "unsorted row");
+        }
+
+        let mut bad = good.clone();
+        if bad.nnz() > 0 {
+            bad.indices[0] = bad.n_cols;
+            assert!(bad.check_invariants().is_err(), "out-of-bounds column");
+        }
+
+        let mut bad = good;
+        bad.data.pop();
+        assert!(bad.check_invariants().is_err(), "data/indices length");
+    }
+
+    #[test]
+    fn threaded_matmul_dense_bitwise_equals_sequential() {
+        // sized past the parallel threshold (2·nnz·k > 2^22) so the
+        // row-partitioned path actually fans out
+        let mut rng = Rng::new(12);
+        let a = random_csr(2000, 2000, 40_000, &mut rng);
+        let b = Mat::randn(2000, 64, &mut rng);
+        let seq = a.matmul_dense_with(&b, crate::linalg::threads::Threads::SINGLE);
+        let par = a.matmul_dense_with(&b, crate::linalg::threads::Threads(4));
+        assert_eq!(seq.as_slice(), par.as_slice(), "spmm not bitwise stable");
+        // and both match the dense product
+        let want = a.to_dense().matmul(&b);
+        let mut diff = seq.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-10);
     }
 }

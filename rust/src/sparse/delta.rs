@@ -9,8 +9,9 @@
 //! products the trackers need: Δ·B, Δ₂·Ω, Δ₂ᵀ·M, dense Δ₂.
 
 use crate::linalg::mat::Mat;
+use crate::linalg::threads::Threads;
 use crate::sparse::coo::Coo;
-use crate::sparse::csr::Csr;
+use crate::sparse::csr::{dense_row_major, rowwise_spmm, Csr};
 
 /// Structured graph update (one time step).
 #[derive(Clone, Debug)]
@@ -67,81 +68,122 @@ impl Delta {
         Delta { n_old, s_new, full: a_new.sub_padded(a_old) }
     }
 
-    /// Δ · B for a dense (N+S)×m panel.
+    /// Δ · B for a dense (N+S)×m panel (auto thread budget).
     pub fn matmul_dense(&self, b: &Mat) -> Mat {
         self.full.matmul_dense(b)
     }
 
+    /// [`Delta::matmul_dense`] with an explicit worker-thread budget.
+    pub fn matmul_dense_with(&self, b: &Mat, threads: Threads) -> Mat {
+        self.full.matmul_dense_with(b, threads)
+    }
+
     /// Δ · X̄ where X̄ is the zero-padded eigenvector panel: accepts the
     /// *unpadded* N×K matrix and returns (N+S)×K (uses that the padded
-    /// rows of X̄ are zero, Prop. 4).
+    /// rows of X̄ are zero, Prop. 4).  Auto thread budget.
     pub fn mul_padded(&self, x: &Mat) -> Mat {
+        self.mul_padded_with(x, Threads::AUTO)
+    }
+
+    /// [`Delta::mul_padded`] with an explicit worker-thread budget:
+    /// row-partitioned single pass with the same bitwise-stability
+    /// contract as [`Csr::matmul_dense_with`].  Row indices are sorted,
+    /// so each row stops at the first expansion column.
+    pub fn mul_padded_with(&self, x: &Mat, threads: Threads) -> Mat {
         assert_eq!(x.rows(), self.n_old);
-        let n = self.n_new();
-        let mut out = Mat::zeros(n, x.cols());
-        for j in 0..x.cols() {
-            let xj = x.col(j);
-            let oj = out.col_mut(j);
-            for i in 0..n {
-                let lo = self.full.indptr[i];
-                let hi = self.full.indptr[i + 1];
-                let mut s = 0.0;
-                for p in lo..hi {
-                    let c = self.full.indices[p];
-                    if c < self.n_old {
-                        s += self.full.data[p] * xj[c];
+        let k = x.cols();
+        let xt = dense_row_major(x);
+        rowwise_spmm(
+            self.n_new(),
+            k,
+            |i| self.full.indptr[i + 1] - self.full.indptr[i] + 1,
+            2 * self.nnz() * k,
+            threads,
+            |i, acc| {
+                let (cols, vals) = self.full.row(i);
+                for (&c, &v) in cols.iter().zip(vals.iter()) {
+                    if c >= self.n_old {
+                        break;
                     }
+                    crate::linalg::blas::axpy(v, &xt[c * k..(c + 1) * k], acc);
                 }
-                oj[i] = s;
-            }
-        }
-        out
+            },
+        )
     }
 
     /// Δ₂ · Ω  (Ω: S×j) — product with the trailing S columns of Δ.
+    /// Auto thread budget.
     pub fn d2_mult(&self, omega: &Mat) -> Mat {
+        self.d2_mult_with(omega, Threads::AUTO)
+    }
+
+    /// Number of entries in the Δ₂ panel (trailing S columns): by
+    /// symmetry of Δ this equals the entry count of the bottom S rows.
+    fn nnz_d2(&self) -> usize {
+        self.full.indptr[self.n_new()] - self.full.indptr[self.n_old]
+    }
+
+    /// [`Delta::d2_mult`] with an explicit worker-thread budget.  Each
+    /// row starts at its first expansion column (binary partition point
+    /// in the sorted index run); the parallel threshold counts only the
+    /// Δ₂ entries this kernel actually touches.
+    pub fn d2_mult_with(&self, omega: &Mat, threads: Threads) -> Mat {
         assert_eq!(omega.rows(), self.s_new);
-        let n = self.n_new();
-        let mut out = Mat::zeros(n, omega.cols());
-        for j in 0..omega.cols() {
-            let oj = out.col_mut(j);
-            let wj = omega.col(j);
-            for i in 0..n {
-                let lo = self.full.indptr[i];
-                let hi = self.full.indptr[i + 1];
-                let mut s = 0.0;
-                for p in lo..hi {
-                    let c = self.full.indices[p];
-                    if c >= self.n_old {
-                        s += self.full.data[p] * wj[c - self.n_old];
-                    }
+        let k = omega.cols();
+        let wt = dense_row_major(omega);
+        rowwise_spmm(
+            self.n_new(),
+            k,
+            |i| self.full.indptr[i + 1] - self.full.indptr[i] + 1,
+            2 * self.nnz_d2() * k,
+            threads,
+            |i, acc| {
+                let (cols, vals) = self.full.row(i);
+                let start = cols.partition_point(|&c| c < self.n_old);
+                for (&c, &v) in cols[start..].iter().zip(vals[start..].iter()) {
+                    let r = c - self.n_old;
+                    crate::linalg::blas::axpy(v, &wt[r * k..(r + 1) * k], acc);
                 }
-                oj[i] = s;
-            }
-        }
-        out
+            },
+        )
     }
 
     /// Δ₂ᵀ · M (M: (N+S)×j) — by symmetry of Δ this is the bottom S rows
-    /// of Δ·M, so it costs one sparse pass over those rows only.
+    /// of Δ·M, so it costs one sparse pass over those rows only.  Auto
+    /// thread budget.
     pub fn d2_t_mult(&self, m: &Mat) -> Mat {
+        self.d2_t_mult_with(m, Threads::AUTO)
+    }
+
+    /// [`Delta::d2_t_mult`] with an explicit worker-thread budget.
+    /// Reads M in place (strided) rather than through a row-major copy:
+    /// only O(nnz(Δ₂)·j) of M is touched, so materializing the whole
+    /// (N+S)×j panel would reintroduce the very O(N) per-step cost this
+    /// kernel exists to avoid.  The parallel threshold likewise counts
+    /// only the Δ₂ entries.
+    pub fn d2_t_mult_with(&self, m: &Mat, threads: Threads) -> Mat {
         assert_eq!(m.rows(), self.n_new());
-        let mut out = Mat::zeros(self.s_new, m.cols());
-        for j in 0..m.cols() {
-            let mj = m.col(j);
-            let oj = out.col_mut(j);
-            for (r, orow) in oj.iter_mut().enumerate() {
+        let k = m.cols();
+        let ms = m.as_slice();
+        let n_rows_m = m.rows();
+        rowwise_spmm(
+            self.s_new,
+            k,
+            |r| {
                 let i = self.n_old + r;
-                let lo = self.full.indptr[i];
-                let hi = self.full.indptr[i + 1];
-                let mut s = 0.0;
-                for p in lo..hi {
-                    s += self.full.data[p] * mj[self.full.indices[p]];
+                self.full.indptr[i + 1] - self.full.indptr[i] + 1
+            },
+            2 * self.nnz_d2() * k,
+            threads,
+            |r, acc| {
+                let (cols, vals) = self.full.row(self.n_old + r);
+                for (&c, &v) in cols.iter().zip(vals.iter()) {
+                    for (j, a) in acc.iter_mut().enumerate() {
+                        *a += v * ms[c + j * n_rows_m];
+                    }
                 }
-                *orow = s;
-            }
-        }
-        out
+            },
+        )
     }
 
     /// Dense Δ₂ ((N+S)×S) — only for small S (G-REST₃'s exact panel).
@@ -273,6 +315,47 @@ mod tests {
         let mut diff = dense_sum;
         diff.axpy(-1.0, &a_new.to_dense());
         assert!(diff.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn threaded_delta_products_bitwise_stable() {
+        // sized past the parallel threshold so the row-partitioned
+        // kernels actually fan out; the contract is bitwise equality
+        use crate::linalg::threads::Threads;
+        let mut rng = Rng::new(7);
+        let n_old = 2000;
+        let s = 64;
+        let mut k = Coo::new(n_old, n_old);
+        for _ in 0..20_000 {
+            let (u, v) = (rng.below(n_old), rng.below(n_old));
+            if u != v {
+                k.push_sym(u, v, 1.0);
+            }
+        }
+        let mut g = Coo::new(n_old, s);
+        for j in 0..s {
+            for _ in 0..40 {
+                g.push(rng.below(n_old), j, 1.0);
+            }
+        }
+        let mut c = Coo::new(s, s);
+        c.push_sym(0, 1, 1.0);
+        let d = Delta::from_blocks(n_old, s, &k, &g, &c);
+        let x = Mat::randn(n_old, 64, &mut rng);
+        let seq = d.mul_padded_with(&x, Threads::SINGLE);
+        let par = d.mul_padded_with(&x, Threads(4));
+        assert_eq!(seq.as_slice(), par.as_slice(), "mul_padded");
+        let b = Mat::randn(d.n_new(), 64, &mut rng);
+        let seq = d.matmul_dense_with(&b, Threads::SINGLE);
+        let par = d.matmul_dense_with(&b, Threads(4));
+        assert_eq!(seq.as_slice(), par.as_slice(), "matmul_dense");
+        let om = Mat::randn(s, 64, &mut rng);
+        let seq = d.d2_mult_with(&om, Threads::SINGLE);
+        let par = d.d2_mult_with(&om, Threads(4));
+        assert_eq!(seq.as_slice(), par.as_slice(), "d2_mult");
+        let seq = d.d2_t_mult_with(&b, Threads::SINGLE);
+        let par = d.d2_t_mult_with(&b, Threads(4));
+        assert_eq!(seq.as_slice(), par.as_slice(), "d2_t_mult");
     }
 
     #[test]

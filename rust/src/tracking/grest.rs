@@ -214,6 +214,7 @@ impl<P: DensePhases> GRest<P> {
 
     /// Assemble the update panel for the configured subspace mode.
     fn panel(&mut self, delta: &Delta, dxk: &Mat) -> Mat {
+        let threads = self.phases.threads();
         match self.mode {
             SubspaceMode::Rm => dxk.clone(),
             SubspaceMode::Full => {
@@ -230,8 +231,8 @@ impl<P: DensePhases> GRest<P> {
                     let xbar = self.state.vectors.pad_rows(delta.s_new);
                     let r = rsvd_basis(
                         delta.s_new,
-                        &|om| delta.d2_mult(om),
-                        &|m| delta.d2_t_mult(m),
+                        &|om| delta.d2_mult_with(om, threads),
+                        &|m| delta.d2_t_mult_with(m, threads),
                         Some(&xbar),
                         l,
                         p,
@@ -265,8 +266,9 @@ impl<P: DensePhases> EigTracker for GRest<P> {
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {
         let k = self.state.k();
+        let threads = self.phases.threads();
         let xbar = self.state.vectors.pad_rows(delta.s_new); // X̄_K
-        let dxk = delta.mul_padded(&self.state.vectors); // ΔX̄_K
+        let dxk = delta.mul_padded_with(&self.state.vectors, threads); // ΔX̄_K
         let panel = self.panel(delta, &dxk);
         let n = xbar.rows();
 
@@ -274,8 +276,8 @@ impl<P: DensePhases> EigTracker for GRest<P> {
         let q = self.phases.build_basis(&xbar, &panel);
         self.last_basis_cols = q.cols();
 
-        // sparse interlude: ΔQ
-        let dq = delta.matmul_dense(&q);
+        // sparse interlude: ΔQ — row-partitioned under the same budget
+        let dq = delta.matmul_dense_with(&q, threads);
 
         // dense phase 2a: projected matrix (Eq. 13)
         let t = self.phases.form_t(&xbar, &q, &self.state.values, &dxk, &dq);

@@ -11,6 +11,7 @@ use crate::graph::scenario::DynamicScenario;
 use crate::sparse::coo::Coo;
 use crate::sparse::csr::Csr;
 use crate::sparse::delta::Delta;
+use std::collections::HashMap;
 
 /// T = αI − (D − A) for an adjacency matrix.
 pub fn shifted_laplacian(adj: &Csr, alpha: f64) -> Csr {
@@ -66,23 +67,145 @@ pub fn pick_alpha(sc: &DynamicScenario) -> f64 {
     2.0 * dmax
 }
 
+/// Which shifted operator a scenario is converted to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Shift {
+    /// T = αI − L (combinatorial Laplacian under the Gershgorin shift).
+    Combinatorial { alpha: f64 },
+    /// Tₙ = 2I − Lₙ = I + D^{-1/2} A D^{-1/2}.
+    Normalized,
+}
+
+/// Δ_T for T = αI − L, assembled directly from the adjacency update in
+/// O(nnz(Δ)): off-diagonal entries are the adjacency delta itself and
+/// the diagonal absorbs the incremental degree changes — −Δdᵢ for
+/// existing nodes, α − dᵢ for new ones (their whole adjacency row is in
+/// Δ, so Δ's row sum *is* their degree).
+pub fn shifted_laplacian_delta(adj_delta: &Delta, alpha: f64) -> Delta {
+    let n_old = adj_delta.n_old;
+    let n = adj_delta.n_new();
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let (cols, vals) = adj_delta.full.row(i);
+        let mut rs = 0.0;
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            coo.push(i, j, v);
+            rs += v;
+        }
+        let diag = if i < n_old { -rs } else { alpha - rs };
+        coo.push(i, i, diag);
+    }
+    Delta { n_old, s_new: adj_delta.s_new, full: coo.to_csr() }
+}
+
+/// Δ_Tₙ for the shifted normalized Laplacian, assembled incrementally:
+/// a degree change at node i rescales *all* of i's incident entries, so
+/// only the rows of nodes incident to the update are recomputed — each
+/// as a sorted merge of its old and new adjacency rows under the old
+/// and new D^{-1/2} — for O(Σ_{i touched} deg(i)) total instead of a
+/// full rebuild.  Untouched neighbors receive the mirrored entry.
+///
+/// Caveat for operators maintained with `Csr::apply_delta`: entry
+/// values drift from the freshly computed products by ≲ a few ulp per
+/// rescale, so an edge *removal* after earlier rescales can leave a
+/// ~1e-16 structural residue instead of an exact zero.  Numerically
+/// harmless (values match the full rebuild to ~1e-15 per step), but
+/// under heavy removal churn the maintained operator's nnz can carry
+/// such ghost entries; the in-repo streams are add/expansion-only.
+pub fn shifted_normalized_delta(a_old: &Csr, a_new: &Csr, adj_delta: &Delta) -> Delta {
+    let n_old = adj_delta.n_old;
+    let n = adj_delta.n_new();
+    assert_eq!(a_old.n_rows, n_old);
+    assert_eq!(a_new.n_rows, n);
+    let dptr = &adj_delta.full.indptr;
+    let touched: Vec<bool> = (0..n).map(|i| dptr[i + 1] > dptr[i]).collect();
+    // memoized D^{-1/2} per node (old and new), computed from the
+    // incident adjacency rows only when first needed
+    let mut dinv_new: HashMap<usize, f64> = HashMap::new();
+    let mut dinv_old: HashMap<usize, f64> = HashMap::new();
+    let dinv_of = |a: &Csr, i: usize| -> f64 {
+        if i >= a.n_rows {
+            return 0.0;
+        }
+        let d: f64 = a.row(i).1.iter().sum();
+        if d > 0.0 {
+            1.0 / d.sqrt()
+        } else {
+            0.0
+        }
+    };
+    let mut coo = Coo::new(n, n);
+    let empty_c: &[usize] = &[];
+    let empty_v: &[f64] = &[];
+    for i in 0..n {
+        if i >= n_old {
+            // every node carries a unit diagonal; for new nodes it is
+            // itself part of Δ_Tₙ
+            coo.push(i, i, 1.0);
+        }
+        if !touched[i] {
+            continue;
+        }
+        let di_new = *dinv_new.entry(i).or_insert_with(|| dinv_of(a_new, i));
+        let di_old = *dinv_old.entry(i).or_insert_with(|| dinv_of(a_old, i));
+        let (oc, ov) = if i < n_old { a_old.row(i) } else { (empty_c, empty_v) };
+        let (nc, nv) = a_new.row(i);
+        let (mut p, mut q) = (0usize, 0usize);
+        while p < oc.len() || q < nc.len() {
+            let (j, vo, vn) = if q >= nc.len() || (p < oc.len() && oc[p] < nc[q]) {
+                let r = (oc[p], ov[p], 0.0);
+                p += 1;
+                r
+            } else if p >= oc.len() || nc[q] < oc[p] {
+                let r = (nc[q], 0.0, nv[q]);
+                q += 1;
+                r
+            } else {
+                let r = (oc[p], ov[p], nv[q]);
+                p += 1;
+                q += 1;
+                r
+            };
+            let dj_new = *dinv_new.entry(j).or_insert_with(|| dinv_of(a_new, j));
+            let dj_old = *dinv_old.entry(j).or_insert_with(|| dinv_of(a_old, j));
+            let dv = vn * di_new * dj_new - vo * di_old * dj_old;
+            if dv != 0.0 {
+                coo.push(i, j, dv);
+                if !touched[j] {
+                    // j's own row is never visited: mirror the change
+                    coo.push(j, i, dv);
+                }
+            }
+        }
+    }
+    Delta { n_old, s_new: adj_delta.s_new, full: coo.to_csr() }
+}
+
 /// Convert an adjacency scenario into a shifted-operator scenario:
-/// returns (T⁽⁰⁾, per-step (Δ_T, T⁽ᵗ⁾)).  `shift` is either
-/// [`shifted_laplacian`] (with `alpha`) or
-/// [`shifted_normalized_laplacian`] (alpha ignored).
-pub fn shifted_scenario(
-    sc: &DynamicScenario,
-    shift: fn(&Csr, f64) -> Csr,
-    alpha: f64,
-) -> (Csr, Vec<(Delta, Csr)>) {
-    let t0 = shift(&sc.initial, alpha);
-    let mut prev = t0.clone();
+/// returns (T⁽⁰⁾, per-step (Δ_T, T⁽ᵗ⁾)).  The per-step Δ_T is assembled
+/// incrementally from the adjacency delta ([`shifted_laplacian_delta`]
+/// / [`shifted_normalized_delta`]) and T⁽ᵗ⁾ is maintained with the
+/// `Csr::apply_delta` row-merge — the full operator is built from
+/// scratch only once, at t = 0.  [`shifted_laplacian`] and
+/// [`shifted_normalized_laplacian`] remain the full-rebuild test
+/// oracles.
+pub fn shifted_scenario(sc: &DynamicScenario, shift: Shift) -> (Csr, Vec<(Delta, Csr)>) {
+    let t0 = match shift {
+        Shift::Combinatorial { alpha } => shifted_laplacian(&sc.initial, alpha),
+        Shift::Normalized => shifted_normalized_laplacian(&sc.initial, 0.0),
+    };
+    let mut prev_t = t0.clone();
+    let mut prev_adj = &sc.initial;
     let mut steps = Vec::with_capacity(sc.steps.len());
     for s in &sc.steps {
-        let t = shift(&s.adjacency, alpha);
-        let d = Delta::from_diff(&prev, &t);
-        prev = t.clone();
-        steps.push((d, t));
+        let dt = match shift {
+            Shift::Combinatorial { alpha } => shifted_laplacian_delta(&s.delta, alpha),
+            Shift::Normalized => shifted_normalized_delta(prev_adj, &s.adjacency, &s.delta),
+        };
+        let t = prev_t.apply_delta(&dt);
+        prev_t = t.clone();
+        prev_adj = &s.adjacency;
+        steps.push((dt, t));
     }
     (t0, steps)
 }
@@ -139,7 +262,7 @@ mod tests {
         let g = crate::graph::generators::erdos_renyi(40, 0.15, &mut rng);
         let sc = crate::graph::scenario::scenario1_from_static("er", &g, 3);
         let alpha = pick_alpha(&sc);
-        let (t0, steps) = shifted_scenario(&sc, shifted_laplacian, alpha);
+        let (t0, steps) = shifted_scenario(&sc, Shift::Combinatorial { alpha });
         assert_eq!(t0.n_rows, sc.initial.n_rows);
         let mut prev = t0;
         for (d, t) in &steps {
@@ -152,6 +275,79 @@ mod tests {
     }
 
     #[test]
+    fn incremental_shifted_deltas_match_full_rebuild_oracle() {
+        // Scenario-2-style stream (K-block churn + expansion): the
+        // incremental Δ_T and maintained T⁽ᵗ⁾ must match the
+        // shift-everything-and-diff oracle for both operators
+        let mut rng = Rng::new(6);
+        let (_, stream) = crate::graph::generators::ba_with_arrivals(60, 2, &mut rng);
+        let sc = crate::graph::scenario::scenario2_from_stream("ba", &stream, 4);
+        let alpha = pick_alpha(&sc);
+        for shift in [Shift::Combinatorial { alpha }, Shift::Normalized] {
+            let full = |adj: &Csr| match shift {
+                Shift::Combinatorial { alpha } => shifted_laplacian(adj, alpha),
+                Shift::Normalized => shifted_normalized_laplacian(adj, 0.0),
+            };
+            let (t0, steps) = shifted_scenario(&sc, shift);
+            let mut prev_oracle = full(&sc.initial);
+            {
+                let mut d0 = t0.to_dense();
+                d0.axpy(-1.0, &prev_oracle.to_dense());
+                assert!(d0.max_abs() == 0.0, "t0 must be the full shift");
+            }
+            for (step, (dt, t)) in sc.steps.iter().zip(steps.iter()) {
+                let t_oracle = full(&step.adjacency);
+                let d_oracle = Delta::from_diff(&prev_oracle, &t_oracle);
+                assert_eq!(dt.n_old, d_oracle.n_old);
+                assert_eq!(dt.s_new, d_oracle.s_new);
+                let mut dd = dt.full.to_dense();
+                dd.axpy(-1.0, &d_oracle.full.to_dense());
+                assert!(dd.max_abs() < 1e-12, "{shift:?}: Δ_T mismatch {}", dd.max_abs());
+                let mut td = t.to_dense();
+                td.axpy(-1.0, &t_oracle.to_dense());
+                assert!(td.max_abs() < 1e-12, "{shift:?}: T mismatch {}", td.max_abs());
+                prev_oracle = t_oracle;
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_laplacian_delta_handles_isolated_new_nodes() {
+        // an expansion delta with an edgeless new node: its diagonal
+        // must still carry α (combinatorial) / 1 (normalized)
+        use crate::sparse::coo::Coo;
+        let mut a_old = Coo::new(3, 3);
+        a_old.push_sym(0, 1, 1.0);
+        a_old.push_sym(1, 2, 1.0);
+        let a_old = a_old.to_csr();
+        // new node 3 connects to 0; new node 4 is isolated
+        let mut g = Coo::new(3, 2);
+        g.push(0, 0, 1.0);
+        let d = Delta::from_blocks(3, 2, &Coo::new(3, 3), &g, &Coo::new(2, 2));
+        let a_new = a_old.apply_delta(&d);
+        let alpha = 6.0;
+        let dt = shifted_laplacian_delta(&d, alpha);
+        let want = Delta::from_diff(
+            &shifted_laplacian(&a_old, alpha),
+            &shifted_laplacian(&a_new, alpha),
+        );
+        let mut diff = dt.full.to_dense();
+        diff.axpy(-1.0, &want.full.to_dense());
+        assert!(diff.max_abs() < 1e-12);
+        assert_eq!(dt.full.get(4, 4), alpha);
+
+        let dtn = shifted_normalized_delta(&a_old, &a_new, &d);
+        let wantn = Delta::from_diff(
+            &shifted_normalized_laplacian(&a_old, 0.0),
+            &shifted_normalized_laplacian(&a_new, 0.0),
+        );
+        let mut diffn = dtn.full.to_dense();
+        diffn.axpy(-1.0, &wantn.full.to_dense());
+        assert!(diffn.max_abs() < 1e-12);
+        assert_eq!(dtn.full.get(4, 4), 1.0);
+    }
+
+    #[test]
     fn tracking_smallest_laplacian_eigenpairs_via_grest() {
         // end-to-end: track trailing eigenpairs of L via T = αI − L
         use crate::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
@@ -159,7 +355,7 @@ mod tests {
         let g = crate::graph::generators::erdos_renyi(60, 0.12, &mut rng);
         let sc = crate::graph::scenario::scenario1_from_static("er", &g, 3);
         let alpha = pick_alpha(&sc);
-        let (t0, steps) = shifted_scenario(&sc, shifted_laplacian, alpha);
+        let (t0, steps) = shifted_scenario(&sc, Shift::Combinatorial { alpha });
         let init = init_eigenpairs(&t0, 4, 5);
         let mut tracker = GRest::new(init, SubspaceMode::Full);
         for (d, _) in &steps {

@@ -82,15 +82,64 @@ fn randomized_stream_delta_consistency() {
                     builder.push(GraphEvent::RemoveEdge(a, b));
                 }
             }
-            if let Some((delta, adj)) = builder.emit(&adjacency) {
+            if let Some(delta) = builder.emit() {
+                // incremental row-merge vs the COO-based padding oracle
+                let adj = adjacency.apply_delta(&delta);
                 let rebuilt = apply_delta(&adjacency, &delta);
                 let mut diff = rebuilt.to_dense();
                 diff.axpy(-1.0, &adj.to_dense());
                 assert!(diff.max_abs() < 1e-12, "seed {seed}");
+                // and vs the from-scratch graph rebuild (exact equality)
+                let want = builder.graph().adjacency();
+                assert_eq!(adj.indptr, want.indptr, "seed {seed}");
+                assert_eq!(adj.indices, want.indices, "seed {seed}");
+                assert_eq!(adj.data, want.data, "seed {seed}");
                 assert!(adj.is_symmetric(0.0));
                 adjacency = adj;
             }
         }
+    }
+}
+
+#[test]
+fn event_sourced_delta_equals_from_diff_oracle_at_scale() {
+    // tentpole property: mixed add/remove/expansion batches prepared in
+    // O(|batch|) from the event list must equal the full
+    // rebuild-and-diff oracle exactly, and the apply_delta chain must
+    // track the from-scratch adjacency
+    use grest::graph::stream::{DeltaBuilder, GraphEvent};
+    use grest::sparse::delta::Delta;
+    let mut rng = Rng::new(99);
+    let g = generators::erdos_renyi(150, 0.04, &mut rng);
+    let mut builder = DeltaBuilder::from_graph(g);
+    let mut committed = builder.graph().adjacency();
+    for batch in 0..12 {
+        for _ in 0..(5 + rng.below(40)) {
+            let a = rng.below(200) as u64; // ids ≥ 150 are expansions
+            let b = rng.below(200) as u64;
+            if rng.flip(0.65) {
+                builder.push(GraphEvent::AddEdge(a, b));
+            } else {
+                builder.push(GraphEvent::RemoveEdge(a, b));
+            }
+        }
+        let oracle = Delta::from_diff(&committed, &builder.graph().adjacency());
+        match builder.prepare() {
+            None => assert!(oracle.nnz() == 0 && oracle.s_new == 0, "batch {batch}"),
+            Some(d) => {
+                assert_eq!(d.n_old, oracle.n_old, "batch {batch}");
+                assert_eq!(d.s_new, oracle.s_new, "batch {batch}");
+                assert_eq!(d.full.indptr, oracle.full.indptr, "batch {batch}");
+                assert_eq!(d.full.indices, oracle.full.indices, "batch {batch}");
+                assert_eq!(d.full.data, oracle.full.data, "batch {batch}");
+                committed = committed.apply_delta(&d);
+                let want = builder.graph().adjacency();
+                assert_eq!(committed.indptr, want.indptr, "batch {batch}");
+                assert_eq!(committed.indices, want.indices, "batch {batch}");
+                assert_eq!(committed.data, want.data, "batch {batch}");
+            }
+        }
+        builder.commit();
     }
 }
 
@@ -150,8 +199,7 @@ fn laplacian_clustering_end_to_end() {
     let sc = grest::graph::scenario::sbm_expansion(300, 3, 0.1, 0.005, 260, 10, 4, &mut rng);
     let (t0, steps) = grest::tracking::laplacian::shifted_scenario(
         &sc,
-        grest::tracking::laplacian::shifted_normalized_laplacian,
-        0.0,
+        grest::tracking::laplacian::Shift::Normalized,
     );
     let init = init_eigenpairs(&t0, 3, 8);
     let mut tracker = GRest::new(init, SubspaceMode::Full);
@@ -197,10 +245,12 @@ fn coordinator_survives_burst_and_preserves_order() {
 #[test]
 fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
     // Satellite coverage: (a) batches that only add *isolated* new nodes
-    // (s_new > 0, nnz == 0 — self-loop events intern the id but create no
-    // edge) and (b) RemoveEdge-heavy batches, streamed through the
-    // service; snapshot n_nodes/version must track the builder's
-    // committed state at every flush.
+    // (s_new > 0, nnz == 0 — an edge to an unseen id added then removed
+    // within the batch interns the id but nets out the edge; self-loop
+    // events are dropped before interning and must NOT inflate s_new)
+    // and (b) RemoveEdge-heavy batches, streamed through the service;
+    // snapshot n_nodes/version must track the builder's committed state
+    // at every flush.
     use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
     use grest::graph::stream::GraphEvent;
     let mut rng = Rng::new(13);
@@ -216,17 +266,22 @@ fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
     .unwrap();
     let h = &svc.handle;
 
-    // (a) isolated-new-node batch: self loops on unseen ids
+    // (a) isolated-new-node batch: add-then-remove edges to unseen ids
+    // (id interned, edge netted out) plus a self loop that must vanish
     h.ingest(vec![
-        GraphEvent::AddEdge(900, 900),
-        GraphEvent::AddEdge(901, 901),
-        GraphEvent::AddEdge(902, 902),
+        GraphEvent::AddEdge(900, 0),
+        GraphEvent::RemoveEdge(900, 0),
+        GraphEvent::AddEdge(901, 1),
+        GraphEvent::RemoveEdge(901, 1),
+        GraphEvent::AddEdge(902, 2),
+        GraphEvent::RemoveEdge(902, 2),
+        GraphEvent::AddEdge(903, 903), // self loop: dropped, never interned
     ])
     .unwrap();
     let v = h.flush().unwrap();
     assert_eq!(v, 1, "pure-expansion batch must publish");
     let snap = h.snapshot();
-    assert_eq!(snap.n_nodes, 53, "three isolated nodes committed");
+    assert_eq!(snap.n_nodes, 53, "three isolated nodes; self-loop id not interned");
     assert_eq!(snap.pairs.k(), 5);
     assert_eq!(snap.pairs.n(), 53, "eigenvectors padded to the new space");
 
