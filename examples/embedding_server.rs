@@ -11,6 +11,7 @@ use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
 use grest::graph::generators;
 use grest::graph::stream::GraphEvent;
 use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
 use grest::tracking::TrackerSpec;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -28,12 +29,16 @@ fn main() -> anyhow::Result<()> {
         // the tracker is built on the worker thread — swap in
         // `grest3@xla` here to serve from the PJRT artifacts
         tracker: TrackerSpec::parse("grest-rsvd:l=16,p=16")?,
+        // reader-side query kernels (k-means assignment) fan out over
+        // this budget; results are identical for any thread count
+        threads: Threads::AUTO,
     })?;
 
     let stop = Arc::new(AtomicBool::new(false));
-    // concurrent readers: snapshot pollers + analytics queries
+    // concurrent readers: snapshot pollers + analytics queries — all
+    // served lock-free from snapshots, never queued behind ingest
     let mut readers = vec![];
-    for r in 0..3 {
+    for r in 0..3u64 {
         let h = svc.handle.clone();
         let stop = stop.clone();
         readers.push(std::thread::spawn(move || {
@@ -42,8 +47,20 @@ fn main() -> anyhow::Result<()> {
                 let snap = h.snapshot();
                 assert!(snap.pairs.k() > 0);
                 reads += 1;
-                if reads % 50 == 0 && r == 0 {
-                    let _ = h.central_nodes(10);
+                if reads % 50 == 0 {
+                    match r {
+                        0 => {
+                            // central nodes arrive as external ids
+                            let top = h.central_nodes(10);
+                            assert!(top.iter().all(|&id| h.embedding(id).is_some()));
+                        }
+                        1 => {
+                            let _ = h.clusters(4);
+                        }
+                        _ => {
+                            let _ = h.similar_to(reads % 1000, 5);
+                        }
+                    }
                 }
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
@@ -90,7 +107,15 @@ fn main() -> anyhow::Result<()> {
         snap.pairs.values[0]
     );
     println!("snapshot reads served concurrently: {total_reads}");
-    println!("metrics: {}", svc.handle.metrics().report());
+    let m = svc.handle.metrics();
+    println!(
+        "query cache: {} computed / {} cached (hit-rate {:.0}%), snapshot age {:?}",
+        m.queries_computed.load(Ordering::Relaxed),
+        m.queries_cached.load(Ordering::Relaxed),
+        100.0 * m.query_cache_hit_rate(),
+        svc.handle.snapshot_age()
+    );
+    println!("metrics: {}", m.report());
     svc.join();
     Ok(())
 }

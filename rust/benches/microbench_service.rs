@@ -1,0 +1,166 @@
+//! Serving-path micro-benchmarks (the §Perf instrument for the
+//! lock-free query engine):
+//!
+//! * cached vs uncached derived-query latency at one pinned snapshot —
+//!   the version-keyed memo cache should put repeated queries orders of
+//!   magnitude below the first compute;
+//! * ingest throughput with 0/4/16 concurrent reader threads hammering
+//!   snapshot + derived queries — readers never enqueue worker
+//!   commands, so throughput must not collapse with reader count.
+//!
+//! Emits `BENCH_service.json` (name → {n, seconds}) next to
+//! `BENCH_linalg.json` / `BENCH_sparse.json`.  `GREST_BENCH_QUICK=1`
+//! shrinks every size for CI smoke runs.
+
+mod common;
+
+use grest::coordinator::metrics::Metrics;
+use grest::coordinator::{BatchPolicy, QueryEngine, ServiceConfig, TrackingService};
+use grest::graph::stream::GraphEvent;
+use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
+use grest::tracking::TrackerSpec;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+struct BenchRecord {
+    name: String,
+    n: usize,
+    seconds: f64,
+}
+
+fn record(records: &mut Vec<BenchRecord>, name: &str, n: usize, seconds: f64) {
+    records.push(BenchRecord { name: name.to_string(), n, seconds });
+}
+
+fn write_json(records: &[BenchRecord]) {
+    let mut out = String::from("{\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {{\"n\": {}, \"seconds\": {:.6e}}}{}\n",
+            r.name,
+            r.n,
+            r.seconds,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    let path = "BENCH_service.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("# wrote {path} ({} entries)", records.len()),
+        Err(e) => eprintln!("# failed to write {path}: {e}"),
+    }
+}
+
+fn spawn_service(n: usize, k: usize, batch: usize, seed: u64) -> TrackingService {
+    let mut rng = Rng::new(seed);
+    let g = grest::graph::generators::erdos_renyi(n, 8.0 / n as f64, &mut rng);
+    TrackingService::spawn(ServiceConfig {
+        initial: g,
+        k,
+        policy: BatchPolicy::ByCount(batch),
+        seed,
+        tracker: TrackerSpec::parse("grest3").unwrap(),
+        threads: Threads::SINGLE,
+    })
+    .unwrap()
+}
+
+/// Deterministic mixed event stream over a growing id space.
+fn event(n: usize, i: u64) -> GraphEvent {
+    let a = (i * 7919) % n as u64;
+    if i % 10 == 9 {
+        GraphEvent::RemoveEdge(a, (i * 104_729 + 1) % n as u64)
+    } else {
+        // ~1 in 8 events touches a not-yet-seen id (expansion)
+        let b = (i * 104_729 + 1) % (n as u64 + n as u64 / 8);
+        GraphEvent::AddEdge(a, b)
+    }
+}
+
+fn main() {
+    let quick = std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let (n, k, n_events) = if quick { (400, 8, 1_500) } else { (2_000, 16, 8_000) };
+
+    // ---- cached vs uncached derived-query latency at one snapshot
+    let svc = spawn_service(n, k, 64, 1);
+    let h = svc.handle.clone();
+    for i in 0..(n_events as u64 / 4) {
+        h.ingest(vec![event(n, i)]).unwrap();
+    }
+    h.flush().unwrap();
+    let snap = h.snapshot();
+    println!("# service graph: {} nodes, snapshot v{}", snap.n_nodes, snap.version);
+    let eng = h.query_engine();
+    let _ = eng.central_nodes(&snap, 20); // warm the slots under test
+    let _ = eng.clusters(&snap, 4);
+    let s = common::micro_secs("central-nodes cached   ", 300, || {
+        std::hint::black_box(eng.central_nodes(&snap, 20));
+    });
+    record(&mut records, "query_central_cached", n, s);
+    let s = common::micro_secs("central-nodes uncached ", 300, || {
+        // a fresh engine per call: every query recomputes from the snapshot
+        let cold = QueryEngine::new(1, Threads::SINGLE, Metrics::new());
+        std::hint::black_box(cold.central_nodes(&snap, 20));
+    });
+    record(&mut records, "query_central_uncached", n, s);
+    let s = common::micro_secs("clusters k=4 cached    ", 300, || {
+        std::hint::black_box(eng.clusters(&snap, 4));
+    });
+    record(&mut records, "query_clusters_cached", n, s);
+    let s = common::micro_secs("clusters k=4 uncached  ", 1000, || {
+        let cold = QueryEngine::new(1, Threads::SINGLE, Metrics::new());
+        std::hint::black_box(cold.clusters(&snap, 4));
+    });
+    record(&mut records, "query_clusters_uncached", n, s);
+    let cached = records.iter().find(|r| r.name == "query_clusters_cached").unwrap().seconds;
+    let uncached =
+        records.iter().find(|r| r.name == "query_clusters_uncached").unwrap().seconds;
+    println!("# memo-cache speedup on clusters: {:.0}x", uncached / cached);
+    svc.join();
+
+    // ---- ingest throughput with 0/4/16 concurrent readers
+    for &n_readers in &[0usize, 4, 16] {
+        let svc = spawn_service(n, k, 32, 2);
+        let h = svc.handle.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut readers = vec![];
+        for r in 0..n_readers as u64 {
+            let h = h.clone();
+            let stop = stop.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut polls = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = h.snapshot();
+                    let _ = h.central_nodes(10 + (r as usize % 3));
+                    let _ = h.clusters(3 + (r as usize % 2));
+                    polls += 3;
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
+                polls
+            }));
+        }
+        let t0 = std::time::Instant::now();
+        let mut batch = Vec::with_capacity(32);
+        for i in 0..n_events as u64 {
+            batch.push(event(n, i));
+            if batch.len() == 32 {
+                h.ingest(std::mem::take(&mut batch)).unwrap();
+            }
+        }
+        h.ingest(batch).unwrap();
+        h.flush().unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Relaxed);
+        let served: u64 = readers.into_iter().map(|t| t.join().unwrap()).sum();
+        println!(
+            "# ingest {n_events} events with {n_readers:>2} readers: {:>8.0} events/s ({served} reads served)",
+            n_events as f64 / secs
+        );
+        record(&mut records, &format!("ingest_{n_events}ev_r{n_readers}"), n_events, secs);
+        svc.join();
+    }
+
+    write_json(&records);
+}

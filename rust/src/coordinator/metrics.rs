@@ -70,8 +70,19 @@ pub struct Metrics {
     /// and is retried at the next flush (never silently dropped).
     pub update_failures: AtomicU64,
     pub nodes_added: AtomicU64,
+    /// Queries answered from the version-keyed memo cache (including
+    /// readers that waited on another reader's in-flight computation).
+    pub queries_cached: AtomicU64,
+    /// Queries that actually computed their derived result.
+    pub queries_computed: AtomicU64,
     pub update_latency: Histogram,
-    pub query_latency: Histogram,
+    /// Latency of *pure* cache hits (should sit orders of magnitude
+    /// below `query_latency_computed` — the read-storm contract).
+    pub query_latency_cached: Histogram,
+    /// Latency of queries that computed their result from the snapshot,
+    /// plus readers that blocked on such an in-flight compute (their
+    /// wait is compute-shaped even though they count as cached).
+    pub query_latency_computed: Histogram,
 }
 
 impl Metrics {
@@ -79,9 +90,21 @@ impl Metrics {
         Arc::new(Metrics::default())
     }
 
+    /// Fraction of queries served from the memo cache (0 when no
+    /// queries ran yet).
+    pub fn query_cache_hit_rate(&self) -> f64 {
+        let cached = self.queries_cached.load(Ordering::Relaxed) as f64;
+        let total = cached + self.queries_computed.load(Ordering::Relaxed) as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            cached / total
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "events={} batches={} update_failures={} nodes_added={} update_mean={:?} update_p99={:?} update_max={:?} queries={} query_mean={:?}",
+            "events={} batches={} update_failures={} nodes_added={} update_mean={:?} update_p99={:?} update_max={:?} queries_computed={} queries_cached={} hit_rate={:.1}% q_computed_mean={:?} q_cached_mean={:?}",
             self.events_ingested.load(Ordering::Relaxed),
             self.batches_applied.load(Ordering::Relaxed),
             self.update_failures.load(Ordering::Relaxed),
@@ -89,8 +112,11 @@ impl Metrics {
             self.update_latency.mean(),
             self.update_latency.quantile(0.99),
             self.update_latency.max(),
-            self.query_latency.count(),
-            self.query_latency.mean(),
+            self.queries_computed.load(Ordering::Relaxed),
+            self.queries_cached.load(Ordering::Relaxed),
+            100.0 * self.query_cache_hit_rate(),
+            self.query_latency_computed.mean(),
+            self.query_latency_cached.mean(),
         )
     }
 }
@@ -121,6 +147,16 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p50 <= p99);
         assert!(p99.as_micros() >= 512);
+    }
+
+    #[test]
+    fn query_cache_hit_rate_counters() {
+        let m = Metrics::default();
+        assert_eq!(m.query_cache_hit_rate(), 0.0);
+        m.queries_computed.fetch_add(1, Ordering::Relaxed);
+        m.queries_cached.fetch_add(3, Ordering::Relaxed);
+        assert!((m.query_cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(m.report().contains("hit_rate=75.0%"), "{}", m.report());
     }
 
     #[test]

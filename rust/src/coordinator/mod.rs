@@ -4,14 +4,20 @@
 //! dedicated worker thread applies each batch to the configured tracker
 //! (native or PJRT-backed — the PJRT client is thread-bound, which is
 //! exactly why the tracker lives on one worker thread); versioned
-//! snapshots of the embedding are published for lock-cheap concurrent
-//! reads; metrics record ingest/update latencies.
+//! snapshots of the embedding — eigenpairs plus the frozen
+//! internal↔external id map — are published for lock-cheap concurrent
+//! reads; every derived query (centrality, clustering, embeddings,
+//! similarity) is answered off-worker by the [`query::QueryEngine`]
+//! with a version-keyed memo cache; metrics record ingest/update
+//! latencies and cached/computed query counts.
 
 pub mod batcher;
 pub mod metrics;
+pub mod query;
 pub mod service;
 pub mod snapshot;
 
 pub use batcher::BatchPolicy;
+pub use query::{ClusterAssignment, QueryEngine};
 pub use service::{ServiceConfig, ServiceHandle, TrackingService};
 pub use snapshot::EmbeddingSnapshot;

@@ -1,0 +1,381 @@
+//! Lock-free query engine: every downstream task (central nodes,
+//! cluster assignments, per-node embedding lookup, embedding-cosine
+//! similarity) is answered purely from an immutable
+//! `Arc<EmbeddingSnapshot>` — queries never send a worker `Command`, so
+//! a read storm cannot serialize behind pending batch updates.
+//!
+//! Derived results are memoized in a version-keyed cache: the first
+//! reader at a given `(version, query)` computes, concurrent readers of
+//! the same key block on that one in-flight computation (a shared
+//! `OnceLock`, never a second compute), and every later reader answers
+//! with a short mutex hold plus an `Arc` clone.  The cache holds a small
+//! LRU-bounded set of slots, so stale versions age out as the stream
+//! advances.  All results are reported in **external** node ids via the
+//! snapshot's [`IdMap`](crate::graph::stream::IdMap).
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::snapshot::EmbeddingSnapshot;
+use crate::linalg::threads::Threads;
+use crate::tasks::{centrality, clustering};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+// The assignment type lives in the task layer (which stays free of
+// coordinator dependencies); the coordinator re-exports it as part of
+// the query API.
+pub use crate::tasks::clustering::ClusterAssignment;
+
+/// Identity of a derived query at one snapshot version.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum QueryKey {
+    Central(usize),
+    Clusters(usize),
+    Similar(u64, usize),
+}
+
+/// One memoized result (clones are `Arc` clones).
+#[derive(Clone)]
+enum QueryValue {
+    Central(Arc<Vec<u64>>),
+    Clusters(Arc<ClusterAssignment>),
+    Similar(Arc<Vec<(u64, f64)>>),
+}
+
+/// A cache slot: concurrent first readers share one in-flight
+/// computation through the `OnceLock` instead of recomputing.
+type Slot = Arc<OnceLock<QueryValue>>;
+
+/// Version-keyed memo cache with a small LRU bound.
+struct MemoCache {
+    map: HashMap<(u64, QueryKey), (u64, Slot)>,
+    tick: u64,
+    cap: usize,
+}
+
+impl MemoCache {
+    /// Fetch the slot for `(version, key)`, creating it if absent and
+    /// evicting the least-recently-used slot beyond capacity.  The map
+    /// lock is held only for this bookkeeping, never during a compute.
+    fn slot(&mut self, version: u64, key: QueryKey) -> Slot {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((t, slot)) = self.map.get_mut(&(version, key.clone())) {
+            *t = tick;
+            return slot.clone();
+        }
+        if self.map.len() >= self.cap {
+            // bind first: an if-let scrutinee would hold the iter borrow
+            // across the remove
+            let oldest = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone());
+            if let Some(oldest) = oldest {
+                self.map.remove(&oldest);
+            }
+        }
+        let slot: Slot = Arc::new(OnceLock::new());
+        self.map.insert((version, key), (tick, slot.clone()));
+        slot
+    }
+}
+
+/// Default LRU bound: a handful of versions × a handful of distinct
+/// queries per version.
+const DEFAULT_CACHE_CAP: usize = 128;
+
+/// Snapshot-only query engine owned by the `ServiceHandle`.
+pub struct QueryEngine {
+    seed: u64,
+    threads: Threads,
+    metrics: Arc<Metrics>,
+    cache: Mutex<MemoCache>,
+}
+
+impl QueryEngine {
+    pub fn new(seed: u64, threads: Threads, metrics: Arc<Metrics>) -> QueryEngine {
+        QueryEngine::with_capacity(seed, threads, metrics, DEFAULT_CACHE_CAP)
+    }
+
+    pub fn with_capacity(
+        seed: u64,
+        threads: Threads,
+        metrics: Arc<Metrics>,
+        cap: usize,
+    ) -> QueryEngine {
+        QueryEngine {
+            seed,
+            threads,
+            metrics,
+            cache: Mutex::new(MemoCache { map: HashMap::new(), tick: 0, cap: cap.max(1) }),
+        }
+    }
+
+    /// Memoize `compute` under `(snap.version, key)`: exactly one caller
+    /// computes per live cache slot, everyone else gets the shared Arc.
+    fn memoize(
+        &self,
+        version: u64,
+        key: QueryKey,
+        compute: impl FnOnce() -> QueryValue,
+    ) -> QueryValue {
+        let t0 = Instant::now();
+        let slot = self.cache.lock().unwrap().slot(version, key);
+        if let Some(v) = slot.get() {
+            // pure hit: the only latencies the cached histogram records
+            self.metrics.queries_cached.fetch_add(1, Ordering::Relaxed);
+            self.metrics.query_latency_cached.observe(t0.elapsed());
+            return v.clone();
+        }
+        let mut computed_here = false;
+        let value = slot
+            .get_or_init(|| {
+                computed_here = true;
+                compute()
+            })
+            .clone();
+        self.metrics
+            .queries_computed
+            .fetch_add(u64::from(computed_here), Ordering::Relaxed);
+        self.metrics
+            .queries_cached
+            .fetch_add(u64::from(!computed_here), Ordering::Relaxed);
+        // a reader that lost the race waited for the in-flight compute:
+        // it counts as cached (nothing was recomputed) but its latency
+        // is compute-shaped, so it must not pollute the cached histogram
+        self.metrics.query_latency_computed.observe(t0.elapsed());
+        value
+    }
+
+    /// Top-J central nodes of `snap` by subgraph centrality, as
+    /// external ids.
+    pub fn central_nodes(&self, snap: &EmbeddingSnapshot, j: usize) -> Arc<Vec<u64>> {
+        match self.memoize(snap.version, QueryKey::Central(j), || {
+            QueryValue::Central(Arc::new(centrality::central_nodes_external(
+                &snap.pairs,
+                &snap.ids,
+                j,
+            )))
+        }) {
+            QueryValue::Central(v) => v,
+            _ => unreachable!("slot keyed Central holds Central"),
+        }
+    }
+
+    /// Spectral k-clustering of `snap`, seeded from the service seed
+    /// (deterministic per `(version, k)`), keyed by external ids.
+    pub fn clusters(&self, snap: &EmbeddingSnapshot, k: usize) -> Arc<ClusterAssignment> {
+        match self.memoize(snap.version, QueryKey::Clusters(k), || {
+            QueryValue::Clusters(Arc::new(clustering::cluster_assignment(
+                &snap.pairs,
+                &snap.ids,
+                snap.version,
+                k,
+                self.seed,
+                self.threads,
+            )))
+        }) {
+            QueryValue::Clusters(v) => v,
+            _ => unreachable!("slot keyed Clusters holds Clusters"),
+        }
+    }
+
+    /// K-dimensional embedding row of one external node id.  O(K) from
+    /// the snapshot — cheap enough that it bypasses the memo cache.
+    pub fn embedding(&self, snap: &EmbeddingSnapshot, external: u64) -> Option<Vec<f64>> {
+        snap.embedding(external)
+    }
+
+    /// Top-`top` nodes most similar to `external` by embedding-row
+    /// cosine, as `(external id, similarity)` descending; `None` when
+    /// the id is not in the snapshot.  Excludes the query node itself.
+    pub fn similar_to(
+        &self,
+        snap: &EmbeddingSnapshot,
+        external: u64,
+        top: usize,
+    ) -> Option<Arc<Vec<(u64, f64)>>> {
+        let q = snap.ids.internal(external)?;
+        if q >= snap.pairs.n() {
+            return None;
+        }
+        match self.memoize(snap.version, QueryKey::Similar(external, top), || {
+            QueryValue::Similar(Arc::new(cosine_similar(snap, q, top)))
+        }) {
+            QueryValue::Similar(v) => Some(v),
+            _ => unreachable!("slot keyed Similar holds Similar"),
+        }
+    }
+
+    /// Number of live cache slots (tests/diagnostics).
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().map.len()
+    }
+}
+
+/// Cosine similarity of every other row against row `q`, top-`top` by
+/// similarity (ties by internal index); zero-norm rows score 0.
+fn cosine_similar(snap: &EmbeddingSnapshot, q: usize, top: usize) -> Vec<(u64, f64)> {
+    let x = &snap.pairs.vectors;
+    let (n, k) = (snap.pairs.n(), snap.pairs.k());
+    let qrow: Vec<f64> = (0..k).map(|j| x.get(q, j)).collect();
+    let qn = qrow.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let mut scored: Vec<(usize, f64)> = (0..n)
+        .filter(|&i| i != q)
+        .map(|i| {
+            let mut dot = 0.0;
+            let mut nn = 0.0;
+            for (j, &qj) in qrow.iter().enumerate() {
+                let v = x.get(i, j);
+                dot += qj * v;
+                nn += v * v;
+            }
+            let denom = qn * nn.sqrt();
+            (i, if denom > 0.0 { dot / denom } else { 0.0 })
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    scored.truncate(top);
+    scored
+        .into_iter()
+        .map(|(i, s)| (snap.ids.external(i).expect("snapshot ids cover every row"), s))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stream::IdMap;
+    use crate::linalg::mat::Mat;
+    use crate::tracking::traits::EigenPairs;
+
+    fn snap_with_vectors(version: u64, vectors: Mat, externals: Vec<u64>) -> EmbeddingSnapshot {
+        let k = vectors.cols();
+        EmbeddingSnapshot {
+            version,
+            n_nodes: vectors.rows(),
+            pairs: EigenPairs { values: (0..k).map(|j| (k - j) as f64).collect(), vectors },
+            ids: Arc::new(IdMap::from_externals(externals)),
+            published_at: Instant::now(),
+        }
+    }
+
+    fn engine() -> (QueryEngine, Arc<Metrics>) {
+        let m = Metrics::new();
+        (QueryEngine::new(7, Threads::SINGLE, m.clone()), m)
+    }
+
+    #[test]
+    fn memoizes_per_version_and_key() {
+        let (eng, m) = engine();
+        let mut rng = crate::linalg::rng::Rng::new(1);
+        let s1 = snap_with_vectors(1, Mat::randn(20, 3, &mut rng), (0..20).collect());
+        let a = eng.central_nodes(&s1, 5);
+        let b = eng.central_nodes(&s1, 5);
+        assert!(Arc::ptr_eq(&a, &b), "same version+key must share one result");
+        assert_eq!(m.queries_computed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queries_cached.load(Ordering::Relaxed), 1);
+        // a different J, and a new version, each compute once
+        let _ = eng.central_nodes(&s1, 3);
+        let s2 = snap_with_vectors(2, Mat::randn(20, 3, &mut rng), (0..20).collect());
+        let c = eng.central_nodes(&s2, 5);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(m.queries_computed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn lru_bound_evicts_oldest_key() {
+        let m = Metrics::new();
+        let eng = QueryEngine::with_capacity(7, Threads::SINGLE, m.clone(), 2);
+        let mut rng = crate::linalg::rng::Rng::new(2);
+        let s = snap_with_vectors(1, Mat::randn(10, 2, &mut rng), (0..10).collect());
+        let _ = eng.central_nodes(&s, 1);
+        let _ = eng.central_nodes(&s, 2);
+        assert_eq!(eng.cache_len(), 2);
+        let _ = eng.central_nodes(&s, 1); // touch: j=1 becomes most recent
+        let _ = eng.central_nodes(&s, 3); // evicts j=2
+        assert_eq!(eng.cache_len(), 2);
+        let computed = m.queries_computed.load(Ordering::Relaxed);
+        let _ = eng.central_nodes(&s, 1); // still cached
+        assert_eq!(m.queries_computed.load(Ordering::Relaxed), computed);
+        let _ = eng.central_nodes(&s, 2); // was evicted: recomputes
+        assert_eq!(m.queries_computed.load(Ordering::Relaxed), computed + 1);
+    }
+
+    #[test]
+    fn similar_to_returns_external_ids_and_excludes_self() {
+        let (eng, _) = engine();
+        // three collinear rows + one orthogonal
+        let mut v = Mat::zeros(4, 2);
+        v.set(0, 0, 1.0);
+        v.set(1, 0, 2.0); // same direction as row 0
+        v.set(2, 1, 1.0); // orthogonal
+        v.set(3, 0, -1.0); // opposite
+        let s = snap_with_vectors(1, v, vec![100, 200, 300, 400]);
+        let sim = eng.similar_to(&s, 100, 3).unwrap();
+        assert_eq!(sim.len(), 3);
+        assert_eq!(sim[0].0, 200);
+        assert!((sim[0].1 - 1.0).abs() < 1e-12);
+        assert_eq!(sim[2].0, 400, "anti-parallel row ranks last");
+        assert!((sim[2].1 + 1.0).abs() < 1e-12);
+        assert!(sim.iter().all(|&(e, _)| e != 100), "query node excluded");
+        assert!(eng.similar_to(&s, 9999, 3).is_none(), "unknown id");
+    }
+
+    #[test]
+    fn clusters_deterministic_per_seed_and_uses_external_ids() {
+        let mut rng = crate::linalg::rng::Rng::new(3);
+        // two well-separated blobs in embedding space
+        let mut v = Mat::zeros(40, 2);
+        for i in 0..40 {
+            let c = i / 20;
+            v.set(i, 0, c as f64 * 10.0 + 0.1 * rng.normal());
+            v.set(i, 1, 0.1 * rng.normal());
+        }
+        let ext: Vec<u64> = (0..40u64).map(|i| 5000 + i).collect();
+        let s = snap_with_vectors(4, v.clone(), ext.clone());
+        let (eng, _) = engine();
+        let got = eng.clusters(&s, 2);
+        assert_eq!(got.version, 4);
+        assert_eq!(got.nodes, ext);
+        // matches the pure task entry point with the engine's seed
+        let want =
+            clustering::cluster_assignment(&s.pairs, &s.ids, s.version, 2, 7, Threads::SINGLE);
+        assert_eq!(*got, want);
+        assert_eq!(got.label_of(5000), Some(got.labels[0]));
+        assert_eq!(got.label_of(1), None);
+        // blob membership is coherent
+        assert!(got.labels[..20].iter().all(|&l| l == got.labels[0]));
+        assert!(got.labels[20..].iter().all(|&l| l == got.labels[20]));
+        assert_ne!(got.labels[0], got.labels[20]);
+    }
+
+    #[test]
+    fn concurrent_readers_compute_once_and_agree() {
+        let m = Metrics::new();
+        let eng = Arc::new(QueryEngine::new(1, Threads::SINGLE, m.clone()));
+        let mut rng = crate::linalg::rng::Rng::new(5);
+        let s = Arc::new(snap_with_vectors(1, Mat::randn(300, 6, &mut rng), (0..300).collect()));
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let eng = eng.clone();
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut out = vec![];
+                for _ in 0..50 {
+                    out.push(eng.central_nodes(&s, 10));
+                }
+                out
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        for r in &results {
+            assert_eq!(**r, *results[0], "all readers at one version must agree");
+        }
+        assert_eq!(
+            m.queries_computed.load(Ordering::Relaxed),
+            1,
+            "read storm at one version computes exactly once"
+        );
+        assert_eq!(m.queries_cached.load(Ordering::Relaxed), 8 * 50 - 1);
+    }
+}

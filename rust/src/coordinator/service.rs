@@ -3,16 +3,21 @@
 //!
 //! Why a dedicated thread: the PJRT client and compiled executables are
 //! thread-bound (`Rc` internals), so the XLA-backed tracker must be
-//! constructed *and* driven on one thread.  The handle is `Clone + Send`,
-//! queries are answered over per-call reply channels, and embedding reads
-//! go through the lock-cheap [`SnapshotStore`] without touching the
-//! worker at all.
+//! constructed *and* driven on one thread.  The handle is `Clone + Send`.
+//!
+//! The worker's only job is ingest: apply batches, publish snapshots.
+//! Every read — raw snapshots and all derived queries (central nodes,
+//! clusters, embeddings, similarity) — is served off-worker from the
+//! lock-cheap [`SnapshotStore`] through the [`QueryEngine`], so query
+//! traffic never serializes behind pending batch updates.
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::query::{ClusterAssignment, QueryEngine};
 use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
 use crate::graph::graph::Graph;
-use crate::graph::stream::{DeltaBuilder, GraphEvent};
+use crate::graph::stream::{DeltaBuilder, GraphEvent, IdMap};
+use crate::linalg::threads::Threads;
 use crate::sparse::csr::Csr;
 use crate::tracking::spec::TrackerSpec;
 use crate::tracking::traits::{EigTracker, EigenPairs};
@@ -20,7 +25,7 @@ use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Builds the tracker inside the worker thread (lets callers choose the
 /// native or XLA backend without `Send` bounds on the tracker itself).
@@ -40,18 +45,21 @@ pub struct ServiceConfig {
     pub k: usize,
     /// Batch-closing policy.
     pub policy: BatchPolicy,
-    /// Lanczos seed for initialization (also the tracker fallback seed).
+    /// Lanczos seed for initialization, the tracker fallback seed, and
+    /// the reader-side clustering seed (two services with different
+    /// seeds never share k-means randomness).
     pub seed: u64,
     /// Declarative tracker to serve (built on the worker thread).
     pub tracker: TrackerSpec,
+    /// Worker budget for reader-side query kernels (k-means assignment);
+    /// results are bitwise identical for every thread count.
+    pub threads: Threads,
 }
 
 enum Command {
     Events(Vec<GraphEvent>),
     Flush(Sender<u64>),
     Adjacency(Sender<Csr>),
-    CentralNodes(usize, Sender<Vec<usize>>),
-    Clusters(usize, Sender<Vec<usize>>),
     Shutdown,
 }
 
@@ -61,6 +69,7 @@ pub struct ServiceHandle {
     tx: Sender<Command>,
     snapshots: SnapshotStore,
     metrics: Arc<Metrics>,
+    query: Arc<QueryEngine>,
 }
 
 impl ServiceHandle {
@@ -94,24 +103,42 @@ impl ServiceHandle {
         Ok(rrx.recv()?)
     }
 
-    /// Top-J central nodes by subgraph centrality on the current state.
-    pub fn central_nodes(&self, j: usize) -> Result<Vec<usize>> {
-        let t0 = Instant::now();
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Command::CentralNodes(j, rtx))?;
-        let out = rrx.recv()?;
-        self.metrics.query_latency.observe(t0.elapsed());
-        Ok(out)
+    /// Top-J central nodes by subgraph centrality on the latest
+    /// snapshot, as **external** node ids.  Never touches the worker;
+    /// memoized per snapshot version.
+    pub fn central_nodes(&self, j: usize) -> Arc<Vec<u64>> {
+        self.query.central_nodes(&self.snapshot(), j)
     }
 
-    /// Cluster assignment from the current embedding.
-    pub fn clusters(&self, k: usize) -> Result<Vec<usize>> {
-        let t0 = Instant::now();
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Command::Clusters(k, rtx))?;
-        let out = rrx.recv()?;
-        self.metrics.query_latency.observe(t0.elapsed());
-        Ok(out)
+    /// Cluster assignment of the latest snapshot, keyed by **external**
+    /// node ids and seeded from [`ServiceConfig::seed`].  Never touches
+    /// the worker; memoized per snapshot version.
+    pub fn clusters(&self, k: usize) -> Arc<ClusterAssignment> {
+        self.query.clusters(&self.snapshot(), k)
+    }
+
+    /// Embedding row of one external node id in the latest snapshot.
+    pub fn embedding(&self, external: u64) -> Option<Vec<f64>> {
+        self.query.embedding(&self.snapshot(), external)
+    }
+
+    /// Top-`top` most embedding-cosine-similar nodes to `external` in
+    /// the latest snapshot, `(external id, similarity)` descending.
+    pub fn similar_to(&self, external: u64, top: usize) -> Option<Arc<Vec<(u64, f64)>>> {
+        self.query.similar_to(&self.snapshot(), external, top)
+    }
+
+    /// Wall-clock age of the latest published snapshot — how stale the
+    /// read path currently is.
+    pub fn snapshot_age(&self) -> Duration {
+        self.snapshot().age()
+    }
+
+    /// The snapshot-only query engine, for pinned-version queries
+    /// (`h.query_engine().central_nodes(&snap, j)` answers at `snap`
+    /// even after newer versions publish).
+    pub fn query_engine(&self) -> &QueryEngine {
+        &self.query
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -160,11 +187,16 @@ impl TrackingService {
             version: 0,
             n_nodes: a0.n_rows,
             pairs: init.clone(),
+            // the seed graph's external ids are 0..n by the
+            // DeltaBuilder::from_graph contract
+            ids: Arc::new(IdMap::identity(a0.n_rows)),
             published_at: Instant::now(),
         });
         let metrics = Metrics::new();
+        let query = Arc::new(QueryEngine::new(config.seed, config.threads, metrics.clone()));
         let (tx, rx) = mpsc::channel();
-        let handle = ServiceHandle { tx, snapshots: store.clone(), metrics: metrics.clone() };
+        let handle =
+            ServiceHandle { tx, snapshots: store.clone(), metrics: metrics.clone(), query };
         let cfg_policy = config.policy;
         let initial_graph = config.initial;
         // the worker reports whether the factory succeeded, so a broken
@@ -268,6 +300,8 @@ fn worker_loop(
                                 version: *version,
                                 n_nodes: adjacency.n_rows,
                                 pairs: tracker.current().clone(),
+                                // O(1): Arc clone, copy-on-write at commit
+                                ids: builder.committed_ids(),
                                 published_at: Instant::now(),
                             });
                         }
@@ -299,18 +333,6 @@ fn worker_loop(
             Command::Adjacency(reply) => {
                 let _ = reply.send(adjacency.clone());
             }
-            Command::CentralNodes(j, reply) => {
-                let out = crate::tasks::centrality::central_nodes(tracker.current(), j);
-                let _ = reply.send(out);
-            }
-            Command::Clusters(kc, reply) => {
-                let out = crate::tasks::clustering::spectral_cluster(
-                    &tracker.current().vectors,
-                    kc,
-                    42,
-                );
-                let _ = reply.send(out);
-            }
             Command::Shutdown => break,
         }
     }
@@ -336,6 +358,7 @@ mod tests {
             policy: BatchPolicy::ByCount(8),
             seed: 2,
             tracker: TrackerSpec::default(),
+            threads: Threads::SINGLE,
         })
         .unwrap();
         let h = &svc.handle;
@@ -351,11 +374,99 @@ mod tests {
         let snap = h.snapshot();
         assert!(snap.n_nodes > 60, "new nodes tracked");
         assert_eq!(snap.pairs.k(), 4);
-        let central = h.central_nodes(5).unwrap();
+        let central = h.central_nodes(5);
         assert_eq!(central.len(), 5);
+        // results are *external* ids: every id is one the stream ingested
+        for &id in central.iter() {
+            assert!(
+                id < 60 || (1000..1007).contains(&id),
+                "central node {id} is not an ingested external id"
+            );
+        }
         let m = h.metrics();
         assert!(m.batches_applied.load(Ordering::Relaxed) >= 1);
         svc.join();
+    }
+
+    #[test]
+    fn snapshot_ids_and_query_cache_serve_external_id_space() {
+        let g = base_graph(40, 2);
+        let svc = TrackingService::spawn(ServiceConfig {
+            initial: g,
+            k: 4,
+            policy: BatchPolicy::ByCount(1_000_000),
+            seed: 5,
+            tracker: TrackerSpec::default(),
+            threads: Threads::SINGLE,
+        })
+        .unwrap();
+        let h = &svc.handle;
+        h.ingest(vec![
+            GraphEvent::AddEdge(0, 9000),
+            GraphEvent::AddEdge(9000, 9001),
+            GraphEvent::AddEdge(1, 9001),
+        ])
+        .unwrap();
+        h.flush().unwrap();
+        let snap = h.snapshot();
+        assert_eq!(snap.n_nodes, 42);
+        assert_eq!(snap.ids.internal(9000), Some(40));
+        assert_eq!(snap.ids.internal(9001), Some(41));
+        // embedding lookup by external id == the raw row at the
+        // interned internal index
+        let emb = h.embedding(9001).unwrap();
+        assert_eq!(emb.len(), 4);
+        for (j, &e) in emb.iter().enumerate() {
+            assert_eq!(e, snap.pairs.vectors.get(41, j));
+        }
+        assert!(h.embedding(123_456).is_none());
+        // similarity answers in external ids and excludes the query node
+        let sim = h.similar_to(9000, 5).unwrap();
+        assert_eq!(sim.len(), 5);
+        assert!(sim.iter().all(|&(e, _)| e != 9000));
+        assert!(sim.iter().all(|&(e, _)| e < 40 || e == 9001));
+        // repeated queries at one version hit the memo cache
+        let m = h.metrics();
+        let a = h.central_nodes(6);
+        let computed = m.queries_computed.load(Ordering::Relaxed);
+        let b = h.central_nodes(6);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(m.queries_computed.load(Ordering::Relaxed), computed);
+        assert!(m.queries_cached.load(Ordering::Relaxed) >= 1);
+        svc.join();
+    }
+
+    #[test]
+    fn cluster_seed_derives_from_service_config() {
+        // regression: the old worker command hard-coded
+        // spectral_cluster(..., 42); two services with different seeds
+        // silently shared clustering randomness.  Each service must
+        // cluster with ITS OWN seed.
+        let run = |seed: u64| {
+            let svc = TrackingService::spawn(ServiceConfig {
+                initial: base_graph(50, 4),
+                k: 4,
+                policy: BatchPolicy::ByCount(1_000_000),
+                seed,
+                tracker: TrackerSpec::default(),
+                threads: Threads::SINGLE,
+            })
+            .unwrap();
+            let got = svc.handle.clusters(3);
+            let snap = svc.handle.snapshot();
+            let want = crate::tasks::clustering::spectral_cluster_with(
+                &snap.pairs.vectors,
+                3,
+                seed,
+                Threads::SINGLE,
+            );
+            svc.join();
+            (got.labels.clone(), want)
+        };
+        let (got_a, want_a) = run(3);
+        let (got_b, want_b) = run(1234);
+        assert_eq!(got_a, want_a, "service must cluster with its own seed");
+        assert_eq!(got_b, want_b, "service must cluster with its own seed");
     }
 
     #[test]
@@ -392,6 +503,7 @@ mod tests {
                 policy: BatchPolicy::ByCount(1000),
                 seed: 8,
                 tracker: TrackerSpec::default(),
+                threads: Threads::SINGLE,
             },
             Box::new(|_a0, init| {
                 Ok(Box::new(Flaky {
@@ -430,6 +542,7 @@ mod tests {
             policy: BatchPolicy::ByCount(1_000_000),
             seed: 3,
             tracker: TrackerSpec::default(),
+            threads: Threads::SINGLE,
         })
         .unwrap();
         let h = &svc.handle;
@@ -476,6 +589,7 @@ mod tests {
             policy: BatchPolicy::ByCount(4),
             seed: 4,
             tracker: TrackerSpec::default(),
+            threads: Threads::SINGLE,
         })
         .unwrap();
         let h = svc.handle.clone();
@@ -509,6 +623,7 @@ mod tests {
             policy: BatchPolicy::ByNewNodes(3),
             seed: 6,
             tracker: TrackerSpec::parse("grest2").unwrap(),
+            threads: Threads::SINGLE,
         })
         .unwrap();
         let h = &svc.handle;
@@ -518,8 +633,9 @@ mod tests {
             GraphEvent::AddEdge(2, 902),
         ])
         .unwrap();
-        let clusters = h.clusters(2).unwrap();
+        let clusters = h.clusters(2);
         assert!(!clusters.is_empty());
+        assert_eq!(clusters.nodes.len(), clusters.labels.len());
         let snap = h.snapshot();
         assert!(snap.pairs.k() > 0);
         svc.join();
@@ -537,6 +653,7 @@ mod tests {
                 policy: BatchPolicy::ByCount(4),
                 seed: 1,
                 tracker: TrackerSpec::default(),
+                threads: Threads::SINGLE,
             },
             Box::new(|_a0, _init| anyhow::bail!("artifacts missing")),
         );
@@ -555,6 +672,7 @@ mod tests {
             policy: BatchPolicy::ByCount(4),
             seed: 1,
             tracker: TrackerSpec::parse("trip@xla").unwrap(),
+            threads: Threads::SINGLE,
         });
         match res {
             Ok(_) => panic!("trip@xla must be rejected before the worker spawns"),

@@ -1,7 +1,14 @@
 //! Versioned embedding snapshots with lock-cheap concurrent reads:
 //! the worker publishes `Arc<EmbeddingSnapshot>` swaps; readers clone the
 //! Arc under a short read lock and never block the tracker.
+//!
+//! A snapshot is *self-sufficient*: eigenpairs, version, and the frozen
+//! internal→external node-id mapping travel together, so every
+//! downstream query (centrality, clustering, per-node embedding lookup,
+//! similarity) can be answered from the snapshot alone — in the
+//! caller's id space — without ever sending a worker command.
 
+use crate::graph::stream::IdMap;
 use crate::tracking::traits::EigenPairs;
 use std::sync::{Arc, RwLock};
 
@@ -13,8 +20,28 @@ pub struct EmbeddingSnapshot {
     pub n_nodes: usize,
     /// The tracked eigenpairs.
     pub pairs: EigenPairs,
+    /// Internal-index ↔ external-id mapping frozen at the batch commit;
+    /// covers exactly the rows of `pairs.vectors`.
+    pub ids: Arc<IdMap>,
     /// Wall time of publication.
     pub published_at: std::time::Instant,
+}
+
+impl EmbeddingSnapshot {
+    /// The K-dimensional embedding row of an external node id, or `None`
+    /// when the id was never part of this snapshot's committed space.
+    pub fn embedding(&self, external: u64) -> Option<Vec<f64>> {
+        let i = self.ids.internal(external)?;
+        if i >= self.pairs.n() {
+            return None;
+        }
+        Some((0..self.pairs.k()).map(|j| self.pairs.vectors.get(i, j)).collect())
+    }
+
+    /// Wall-clock age of this snapshot (time since publication).
+    pub fn age(&self) -> std::time::Duration {
+        self.published_at.elapsed()
+    }
 }
 
 /// Single-writer multi-reader snapshot cell.
@@ -33,8 +60,14 @@ impl SnapshotStore {
         self.inner.read().unwrap().clone()
     }
 
-    /// Publish a new snapshot; enforces monotone versions.
+    /// Publish a new snapshot; enforces monotone versions and the
+    /// ids-cover-all-rows invariant.
     pub fn publish(&self, snap: EmbeddingSnapshot) {
+        debug_assert_eq!(
+            snap.ids.len(),
+            snap.n_nodes,
+            "snapshot id map must cover every node"
+        );
         let mut w = self.inner.write().unwrap();
         assert!(
             snap.version > w.version,
@@ -56,6 +89,7 @@ mod tests {
             version,
             n_nodes: n,
             pairs: EigenPairs { values: vec![1.0], vectors: Mat::zeros(n, 1) },
+            ids: Arc::new(IdMap::identity(n)),
             published_at: std::time::Instant::now(),
         }
     }
@@ -74,6 +108,26 @@ mod tests {
     fn non_monotone_rejected() {
         let store = SnapshotStore::new(snap(5, 3));
         store.publish(snap(5, 3));
+    }
+
+    #[test]
+    fn embedding_lookup_by_external_id() {
+        let mut vectors = Mat::zeros(3, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                vectors.set(i, j, (10 * i + j) as f64);
+            }
+        }
+        let s = EmbeddingSnapshot {
+            version: 1,
+            n_nodes: 3,
+            pairs: EigenPairs { values: vec![2.0, 1.0], vectors },
+            ids: Arc::new(IdMap::from_externals(vec![5, 900, 7])),
+            published_at: std::time::Instant::now(),
+        };
+        assert_eq!(s.embedding(900), Some(vec![10.0, 11.0]));
+        assert_eq!(s.embedding(7), Some(vec![20.0, 21.0]));
+        assert_eq!(s.embedding(1234), None);
     }
 
     #[test]

@@ -17,6 +17,59 @@ use crate::graph::graph::Graph;
 use crate::sparse::coo::Coo;
 use crate::sparse::delta::Delta;
 use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Frozen bidirectional mapping between the dense internal indices the
+/// trackers operate on (rows of the eigenvector matrix) and the external
+/// node ids the caller ingested.  Published inside every
+/// [`crate::coordinator::EmbeddingSnapshot`] so downstream queries can
+/// answer in the caller's id space without touching the worker.
+#[derive(Clone, Debug, Default)]
+pub struct IdMap {
+    /// `to_external[i]` is the external id of internal index `i`.
+    to_external: Vec<u64>,
+    to_internal: HashMap<u64, usize>,
+}
+
+impl IdMap {
+    /// The identity mapping `i -> i` over `0..n` (the contract of
+    /// [`DeltaBuilder::from_graph`] for seed graphs).
+    pub fn identity(n: usize) -> IdMap {
+        IdMap::from_externals((0..n as u64).collect())
+    }
+
+    /// Build from the internal-order list of external ids (must be
+    /// distinct — the interner guarantees this).
+    pub fn from_externals(to_external: Vec<u64>) -> IdMap {
+        let to_internal =
+            to_external.iter().enumerate().map(|(i, &e)| (e, i)).collect();
+        IdMap { to_external, to_internal }
+    }
+
+    /// Number of mapped nodes.
+    pub fn len(&self) -> usize {
+        self.to_external.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.to_external.is_empty()
+    }
+
+    /// External id of internal index `i`.
+    pub fn external(&self, i: usize) -> Option<u64> {
+        self.to_external.get(i).copied()
+    }
+
+    /// Internal index of external id `e`.
+    pub fn internal(&self, e: u64) -> Option<usize> {
+        self.to_internal.get(&e).copied()
+    }
+
+    /// All external ids in internal-index order.
+    pub fn externals(&self) -> &[u64] {
+        &self.to_external
+    }
+}
 
 /// A single graph mutation event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +91,12 @@ pub enum GraphEvent {
 pub struct DeltaBuilder {
     graph: Graph,
     ids: HashMap<u64, usize>,
+    /// external id of each interned internal index, in intern order
+    externals: Vec<u64>,
+    /// frozen map over `externals[..committed_nodes]`, rebuilt
+    /// copy-on-write only at commits that added nodes, so
+    /// [`DeltaBuilder::committed_ids`] is an O(1) Arc clone
+    committed_map: Arc<IdMap>,
     /// committed node count (N in Eq. 2) at the last emit
     committed_nodes: usize,
     /// count of pending (non-self-loop) events, for the batch policy;
@@ -61,6 +120,8 @@ impl DeltaBuilder {
         DeltaBuilder {
             graph: Graph::with_nodes(0),
             ids: HashMap::new(),
+            externals: Vec::new(),
+            committed_map: Arc::new(IdMap::default()),
             committed_nodes: 0,
             pending_events: 0,
             net: HashMap::new(),
@@ -74,6 +135,8 @@ impl DeltaBuilder {
         DeltaBuilder {
             graph: g,
             ids,
+            externals: (0..n as u64).collect(),
+            committed_map: Arc::new(IdMap::identity(n)),
             committed_nodes: n,
             pending_events: 0,
             net: HashMap::new(),
@@ -99,8 +162,20 @@ impl DeltaBuilder {
         } else {
             let idx = self.graph.add_nodes(1);
             self.ids.insert(id, idx);
+            self.externals.push(id);
             idx
         }
+    }
+
+    /// Id mapping of the *committed* node space (the first
+    /// `committed_nodes` interned ids).  This is what the coordinator
+    /// publishes alongside each snapshot: pending, not-yet-committed
+    /// arrivals are excluded, so the map always covers exactly the rows
+    /// of the published eigenvector matrix.  O(1): the map is rebuilt
+    /// copy-on-write at [`DeltaBuilder::commit`] only when the batch
+    /// added nodes; edge-only batches re-share the previous Arc.
+    pub fn committed_ids(&self) -> Arc<IdMap> {
+        self.committed_map.clone()
     }
 
     /// Record a net edge-weight change relative to the committed state.
@@ -178,6 +253,10 @@ impl DeltaBuilder {
     /// Mark the pending batch committed (the prepared delta was applied
     /// downstream, or netted out to nothing).
     pub fn commit(&mut self) {
+        if self.graph.n_nodes() != self.committed_nodes {
+            // nodes arrived: refresh the shared committed-id map
+            self.committed_map = Arc::new(IdMap::from_externals(self.externals.clone()));
+        }
         self.committed_nodes = self.graph.n_nodes();
         self.pending_events = 0;
         self.net.clear();
@@ -273,6 +352,43 @@ mod tests {
         assert_eq!(adj.get(0, 1), 0.0);
         assert_eq!(adj.get(1, 2), 1.0);
         assert_eq!(d.s_new, 3);
+    }
+
+    #[test]
+    fn committed_ids_track_intern_order_and_exclude_pending() {
+        let mut b = DeltaBuilder::from_graph(Graph::with_nodes(3));
+        // seed graph: identity map over 0..3
+        let ids = b.committed_ids();
+        assert_eq!(ids.externals(), &[0, 1, 2]);
+        assert_eq!(ids.internal(2), Some(2));
+        // pending arrivals are NOT in the committed map until commit
+        b.push(GraphEvent::AddEdge(0, 500));
+        b.push(GraphEvent::AddEdge(500, 42));
+        let ids = b.committed_ids();
+        assert_eq!(ids.len(), 3);
+        assert_eq!(ids.internal(500), None);
+        b.commit();
+        let ids = b.committed_ids();
+        assert_eq!(ids.externals(), &[0, 1, 2, 500, 42]);
+        assert_eq!(ids.internal(500), Some(3));
+        assert_eq!(ids.internal(42), Some(4));
+        assert_eq!(ids.external(4), Some(42));
+        assert_eq!(ids.external(9), None);
+        assert_eq!(ids.internal(7777), None);
+        // round trip over the whole map
+        for i in 0..ids.len() {
+            assert_eq!(ids.internal(ids.external(i).unwrap()), Some(i));
+        }
+        // edge-only batches re-share the same Arc (O(1) publish)
+        let before = b.committed_ids();
+        b.push(GraphEvent::AddEdge(0, 1));
+        b.commit();
+        assert!(Arc::ptr_eq(&before, &b.committed_ids()), "no new nodes: map Arc reused");
+        // a node-adding batch swaps in a fresh, extended map
+        b.push(GraphEvent::AddEdge(0, 600));
+        b.commit();
+        assert!(!Arc::ptr_eq(&before, &b.committed_ids()));
+        assert_eq!(b.committed_ids().internal(600), Some(5));
     }
 
     #[test]

@@ -518,6 +518,7 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
         policy: BatchPolicy::Either { events: 64, new_nodes: 16 },
         seed,
         tracker: tspec,
+        threads,
     })?;
     let h = svc.handle.clone();
     let t0 = std::time::Instant::now();
@@ -547,8 +548,44 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
         snap.n_nodes,
         fmt_secs(t0.elapsed())
     );
-    println!("top-5 central: {:?}", h.central_nodes(5)?);
-    println!("metrics: {}", h.metrics().report());
+    // the read path: every query below is served from the snapshot by
+    // the lock-free QueryEngine — the worker is never consulted
+    let timed_query = |f: &dyn Fn()| {
+        let t = std::time::Instant::now();
+        f();
+        t.elapsed()
+    };
+    let central = h.central_nodes(5);
+    let t_uncached = timed_query(&|| {
+        let _ = h.central_nodes(7);
+    });
+    let t_cached = timed_query(&|| {
+        let _ = h.central_nodes(7);
+    });
+    println!("top-5 central (external ids): {central:?}");
+    println!(
+        "central-nodes latency: {} uncached, {} cached (version-keyed memo)",
+        fmt_secs(t_uncached),
+        fmt_secs(t_cached)
+    );
+    let assignment = h.clusters(4);
+    let mut sizes = vec![0usize; 4];
+    for &l in &assignment.labels {
+        sizes[l.min(3)] += 1;
+    }
+    println!("clusters k=4 at v{}: sizes {:?}", assignment.version, sizes);
+    if let Some(sim) = h.similar_to(central[0], 3) {
+        println!("most similar to node {}: {:?}", central[0], sim);
+    }
+    let m = h.metrics();
+    println!(
+        "snapshot age {:?} | query cache: {} computed, {} cached (hit-rate {:.0}%)",
+        h.snapshot_age(),
+        m.queries_computed.load(std::sync::atomic::Ordering::Relaxed),
+        m.queries_cached.load(std::sync::atomic::Ordering::Relaxed),
+        100.0 * m.query_cache_hit_rate(),
+    );
+    println!("metrics: {}", m.report());
     svc.join();
     Ok(())
 }

@@ -3,26 +3,37 @@
 //! |Ĩ ∩ I| / J between the top-J sets under estimated vs reference
 //! eigenpairs.
 
+use crate::graph::stream::IdMap;
 use crate::tracking::matfun::subgraph_centrality_scores;
 use crate::tracking::traits::EigenPairs;
 
 /// Indices of the J largest entries of `scores` (ties by index).
+/// NaN scores (degenerate eigenpairs can produce them) rank below every
+/// real score instead of panicking the comparator.
 pub fn top_j(scores: &[f64], j: usize) -> Vec<usize> {
+    let key = |s: f64| if s.is_nan() { f64::NEG_INFINITY } else { s };
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap()
-            .then(a.cmp(&b))
-    });
+    idx.sort_by(|&a, &b| key(scores[b]).total_cmp(&key(scores[a])).then(a.cmp(&b)));
     idx.truncate(j);
     idx
 }
 
-/// Top-J central nodes from tracked eigenpairs.
+/// Top-J central nodes from tracked eigenpairs, as *internal* row
+/// indices (the harness/evaluation entry point, where internal and
+/// external ids coincide).
 pub fn central_nodes(pairs: &EigenPairs, j: usize) -> Vec<usize> {
     let scores = subgraph_centrality_scores(pairs);
     top_j(&scores, j)
+}
+
+/// Pure snapshot-facing entry point: top-J central nodes of a published
+/// embedding (eigenpairs + the id map frozen with them), reported as
+/// **external** node ids.
+pub fn central_nodes_external(pairs: &EigenPairs, ids: &IdMap, j: usize) -> Vec<u64> {
+    central_nodes(pairs, j)
+        .into_iter()
+        .map(|i| ids.external(i).expect("snapshot ids cover every row"))
+        .collect()
 }
 
 /// |a ∩ b| / |a| — the overlap accuracy of Table 3.
@@ -45,6 +56,38 @@ mod tests {
         let s = [0.1, 5.0, 3.0, 4.0];
         assert_eq!(top_j(&s, 2), vec![1, 3]);
         assert_eq!(top_j(&s, 10), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn top_j_nan_robust() {
+        // regression: partial_cmp().unwrap() used to panic here; NaN
+        // scores must rank last and never unseat real scores
+        let s = [1.0, f64::NAN, 2.0, f64::NAN, 0.5];
+        assert_eq!(top_j(&s, 2), vec![2, 0]);
+        assert_eq!(top_j(&s, 5), vec![2, 0, 4, 1, 3]);
+        let all_nan = [f64::NAN, f64::NAN];
+        assert_eq!(top_j(&all_nan, 1), vec![0], "ties among NaN break by index");
+        assert_eq!(top_j(&[f64::NEG_INFINITY, f64::NAN], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn central_nodes_external_maps_to_ingested_ids() {
+        // star + path as below, but published under shuffled external ids
+        let mut coo = crate::sparse::coo::Coo::new(12, 12);
+        for i in 1..9 {
+            coo.push_sym(0, i, 1.0);
+        }
+        coo.push_sym(9, 10, 1.0);
+        coo.push_sym(10, 11, 1.0);
+        let a = coo.to_csr();
+        let pairs = init_eigenpairs(&a, 4, 1);
+        let externals: Vec<u64> = (0..12u64).map(|i| 1000 + 7 * i).collect();
+        let ids = IdMap::from_externals(externals.clone());
+        let top = central_nodes_external(&pairs, &ids, 3);
+        assert_eq!(top[0], 1000, "hub (internal 0) must surface as its external id");
+        for t in &top {
+            assert!(externals.contains(t), "external id {t} unknown");
+        }
     }
 
     #[test]

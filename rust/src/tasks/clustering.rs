@@ -1,8 +1,45 @@
 //! Spectral clustering (paper Sec. 5.5): k-means++ on the rows of the
 //! tracked eigenvector matrix of the (shifted) normalized Laplacian.
+//!
+//! The per-point work (seeding distance updates and the Lloyd assign
+//! step) is row-partitioned across a [`Threads`] budget; every point's
+//! label/distance is produced by exactly one thread with a fixed
+//! reduction order, so results are **bitwise identical across thread
+//! counts** — the same determinism contract as the dense kernels.
 
+use crate::graph::stream::IdMap;
 use crate::linalg::mat::Mat;
 use crate::linalg::rng::Rng;
+use crate::linalg::threads::Threads;
+use crate::tracking::traits::EigenPairs;
+
+/// Cluster assignment computed from one published embedding, keyed by
+/// external node ids (re-exported as `coordinator::ClusterAssignment`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterAssignment {
+    /// Snapshot version the labels were computed at.
+    pub version: u64,
+    /// External node ids, in internal row order.
+    pub nodes: Vec<u64>,
+    /// `labels[i]` is the cluster of `nodes[i]`.
+    pub labels: Vec<usize>,
+}
+
+impl ClusterAssignment {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Cluster of one external node id (linear scan — iterate
+    /// `nodes`/`labels` directly for bulk access).
+    pub fn label_of(&self, external: u64) -> Option<usize> {
+        self.nodes.iter().position(|&e| e == external).map(|i| self.labels[i])
+    }
+}
 
 /// K-means result.
 pub struct KMeansResult {
@@ -14,11 +51,23 @@ pub struct KMeansResult {
 /// K-means++ with `n_init` restarts on the *rows* of `x` (n points of
 /// dimension d = x.cols()); returns the best run by inertia.
 pub fn kmeans(x: &Mat, k: usize, n_init: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    kmeans_with(x, k, n_init, max_iter, rng, Threads::SINGLE)
+}
+
+/// [`kmeans`] with an explicit worker budget for the per-point phases.
+pub fn kmeans_with(
+    x: &Mat,
+    k: usize,
+    n_init: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+    threads: Threads,
+) -> KMeansResult {
     assert!(k >= 1);
     let n = x.rows();
     let mut best: Option<KMeansResult> = None;
     for _ in 0..n_init.max(1) {
-        let r = kmeans_single(x, k, max_iter, rng);
+        let r = kmeans_single(x, k, max_iter, rng, threads);
         if best.as_ref().map(|b| r.inertia < b.inertia).unwrap_or(true) {
             best = Some(r);
         }
@@ -40,17 +89,60 @@ fn row_dist2(x: &Mat, i: usize, center: &[f64]) -> f64 {
     s
 }
 
-fn kmeans_single(x: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+/// Map `f` over row indices `0..n`, partitioned into contiguous chunks
+/// across `workers` threads.  Each output element is produced by exactly
+/// one thread and results are concatenated in chunk order, so the output
+/// is identical to the sequential `(0..n).map(f)` for any worker count.
+fn par_map_rows<T: Send>(
+    n: usize,
+    workers: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let workers = workers.max(1).min(n.max(1));
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let lo = (w * chunk).min(n);
+                let hi = ((w + 1) * chunk).min(n);
+                let f = &f;
+                s.spawn(move || (lo..hi).map(f).collect::<Vec<T>>())
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().unwrap());
+        }
+    });
+    out
+}
+
+fn kmeans_single(
+    x: &Mat,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+    threads: Threads,
+) -> KMeansResult {
     let n = x.rows();
     let d = x.cols();
     let k = k.min(n.max(1));
+    // worker budgets gated per phase: the assign step does ~3nkd flops,
+    // each k-means++ seeding scan only ~3nd (k-fold less — it must not
+    // inherit the assign step's fan-out decision)
+    let workers = threads.for_flops(3 * n * k * d.max(1));
+    let seed_workers = threads.for_flops(3 * n * d.max(1));
     // k-means++ seeding
     let mut centers = Mat::zeros(d, k); // column c = center c
     let first = rng.below(n.max(1));
     for c in 0..d {
         centers.set(c, 0, x.get(first, c));
     }
-    let mut min_d2: Vec<f64> = (0..n).map(|i| row_dist2(x, i, centers.col(0))).collect();
+    let mut min_d2: Vec<f64> =
+        par_map_rows(n, seed_workers, |i| row_dist2(x, i, centers.col(0)));
     for cidx in 1..k {
         let total: f64 = min_d2.iter().sum();
         let pick = if total <= 0.0 {
@@ -70,21 +162,23 @@ fn kmeans_single(x: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansRes
         for c in 0..d {
             centers.set(c, cidx, x.get(pick, c));
         }
-        for i in 0..n {
+        min_d2 = par_map_rows(n, seed_workers, |i| {
             let nd = row_dist2(x, i, centers.col(cidx));
             if nd < min_d2[i] {
-                min_d2[i] = nd;
+                nd
+            } else {
+                min_d2[i]
             }
-        }
+        });
     }
     // Lloyd iterations
     let mut labels = vec![0usize; n];
     let mut inertia = f64::INFINITY;
     for _ in 0..max_iter {
-        // assign
-        let mut changed = false;
-        let mut new_inertia = 0.0;
-        for i in 0..n {
+        // assign: per-point nearest center, row-partitioned; the inertia
+        // reduction stays sequential over per-point values so the sum
+        // order (and hence the restart selection) is thread-independent
+        let assign: Vec<(usize, f64)> = par_map_rows(n, workers, |i| {
             let mut bestc = 0;
             let mut bestd = f64::INFINITY;
             for c in 0..k {
@@ -94,6 +188,11 @@ fn kmeans_single(x: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansRes
                     bestc = c;
                 }
             }
+            (bestc, bestd)
+        });
+        let mut changed = false;
+        let mut new_inertia = 0.0;
+        for (i, &(bestc, bestd)) in assign.iter().enumerate() {
             if labels[i] != bestc {
                 labels[i] = bestc;
                 changed = true;
@@ -119,8 +218,7 @@ fn kmeans_single(x: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansRes
                 let far = (0..n)
                     .max_by(|&a, &b| {
                         row_dist2(x, a, centers.col(labels[a]))
-                            .partial_cmp(&row_dist2(x, b, centers.col(labels[b])))
-                            .unwrap()
+                            .total_cmp(&row_dist2(x, b, centers.col(labels[b])))
                     })
                     .unwrap_or(0);
                 for cc in 0..d {
@@ -157,9 +255,31 @@ pub fn normalize_rows(x: &Mat) -> Mat {
 
 /// Full spectral-clustering step from tracked eigenvectors.
 pub fn spectral_cluster(eigvecs: &Mat, k: usize, seed: u64) -> Vec<usize> {
+    spectral_cluster_with(eigvecs, k, seed, Threads::SINGLE)
+}
+
+/// [`spectral_cluster`] with an explicit worker budget; bitwise
+/// identical to the sequential path for every thread count.
+pub fn spectral_cluster_with(eigvecs: &Mat, k: usize, seed: u64, threads: Threads) -> Vec<usize> {
     let mut rng = Rng::new(seed);
     let xn = normalize_rows(eigvecs);
-    kmeans(&xn, k, 5, 100, &mut rng).labels
+    kmeans_with(&xn, k, 5, 100, &mut rng, threads).labels
+}
+
+/// Pure snapshot-facing entry point: cluster a published embedding
+/// (the eigenpairs + id map of one snapshot `version`), reporting
+/// assignments keyed by **external** node ids.  Deterministic in
+/// `(version, k, seed)` regardless of `threads`.
+pub fn cluster_assignment(
+    pairs: &EigenPairs,
+    ids: &IdMap,
+    version: u64,
+    k: usize,
+    seed: u64,
+    threads: Threads,
+) -> ClusterAssignment {
+    let labels = spectral_cluster_with(&pairs.vectors, k, seed, threads);
+    ClusterAssignment { version, nodes: ids.externals().to_vec(), labels }
 }
 
 #[cfg(test)]
@@ -195,6 +315,39 @@ mod tests {
         let rn = kmeans(&x, 10, 1, 50, &mut rng);
         let distinct: std::collections::HashSet<_> = rn.labels.iter().collect();
         assert!(distinct.len() >= 8); // nearly one point per cluster
+    }
+
+    #[test]
+    fn kmeans_bitwise_stable_across_thread_counts() {
+        // the determinism contract behind the reader-side Threads budget:
+        // same seed -> identical labels, centers, and inertia for any
+        // worker count (par_map_rows is a chunk-ordered identity)
+        // large enough that 3nkd crosses PAR_MIN_FLOPS and the assign
+        // step genuinely fans out under Threads(4)
+        let mut rng = Rng::new(9);
+        let x = Mat::randn(30_000, 8, &mut rng);
+        let k = 6;
+        assert!(3 * x.rows() * k * x.cols() >= crate::linalg::threads::PAR_MIN_FLOPS);
+        let mut r1 = Rng::new(42);
+        let mut r4 = Rng::new(42);
+        let seq = kmeans_with(&x, k, 2, 25, &mut r1, Threads::SINGLE);
+        let par = kmeans_with(&x, k, 2, 25, &mut r4, Threads(4));
+        assert_eq!(seq.labels, par.labels);
+        assert_eq!(seq.centers.as_slice(), par.centers.as_slice());
+        assert!(seq.inertia == par.inertia);
+        // and the raw mapper really is a chunk-ordered identity
+        let vals = par_map_rows(1003, 5, |i| (i * 31) % 17);
+        let want: Vec<usize> = (0..1003).map(|i| (i * 31) % 17).collect();
+        assert_eq!(vals, want);
+    }
+
+    #[test]
+    fn spectral_cluster_with_matches_sequential_entry_point() {
+        let mut rng = Rng::new(11);
+        let x = Mat::randn(200, 4, &mut rng);
+        let a = spectral_cluster(&x, 3, 5);
+        let b = spectral_cluster_with(&x, 3, 5, Threads(8));
+        assert_eq!(a, b);
     }
 
     #[test]

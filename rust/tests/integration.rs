@@ -225,6 +225,7 @@ fn coordinator_survives_burst_and_preserves_order() {
         policy: BatchPolicy::ByCount(16),
         seed: 2,
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
+        threads: grest::linalg::threads::Threads::SINGLE,
     })
     .unwrap();
     // burst: add then remove the same edge repeatedly; final state must
@@ -262,6 +263,7 @@ fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
         policy: BatchPolicy::ByCount(1_000_000),
         seed: 4,
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
+        threads: grest::linalg::threads::Threads::SINGLE,
     })
     .unwrap();
     let h = &svc.handle;
@@ -308,6 +310,123 @@ fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
     assert_eq!(m.batches_applied.load(Ordering::Relaxed), 2);
     assert_eq!(m.update_failures.load(Ordering::Relaxed), 0);
     assert_eq!(m.nodes_added.load(Ordering::Relaxed), 3);
+    svc.join();
+}
+
+#[test]
+fn read_storm_soak_queries_never_touch_the_worker() {
+    // Satellite coverage for the lock-free read path: reader threads
+    // hammering cached queries mid-ingest must not slow flushes (the
+    // `Command` enum no longer even has query variants, so a query
+    // *cannot* reach the worker — the latency comparison below guards
+    // the weaker property that reader CPU load doesn't serialize the
+    // write path), snapshot versions must stay monotone per reader, and
+    // queries pinned to one version must agree bitwise across threads.
+    use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
+    use grest::graph::stream::GraphEvent;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let mut rng = Rng::new(17);
+    let g = generators::erdos_renyi(120, 0.06, &mut rng);
+    let svc = TrackingService::spawn(ServiceConfig {
+        initial: g,
+        k: 5,
+        policy: BatchPolicy::ByCount(1_000_000),
+        seed: 9,
+        tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
+        threads: grest::linalg::threads::Threads::SINGLE,
+    })
+    .unwrap();
+    let h = svc.handle.clone();
+
+    // distinct edges per batch index so both phases do real tracker work
+    let run_phase = |offset: usize, batches: usize| -> Vec<std::time::Duration> {
+        let mut lat = Vec::with_capacity(batches);
+        for b in offset..offset + batches {
+            let ev: Vec<GraphEvent> = (0..10)
+                .map(|i| {
+                    let a = ((b * 10 + i) * 7 % 140) as u64; // ids 120.. arrive over time
+                    let c = ((b * 10 + i) * 13 + 1) as u64 % 140;
+                    GraphEvent::AddEdge(a, c)
+                })
+                .collect();
+            h.ingest(ev).unwrap();
+            let t0 = std::time::Instant::now();
+            h.flush().unwrap();
+            lat.push(t0.elapsed());
+        }
+        lat.sort();
+        lat
+    };
+
+    // phase A: quiet ingest, no readers
+    let quiet = run_phase(0, 10);
+
+    // phase B: 8 readers hammering derived queries + snapshot polls
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = vec![];
+    for r in 0..8u64 {
+        let h = h.clone();
+        let stop = stop.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut last = 0u64;
+            let mut reads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = h.snapshot();
+                assert!(snap.version >= last, "reader saw version go backwards");
+                last = snap.version;
+                let _ = h.central_nodes(5 + (r as usize % 3));
+                let _ = h.clusters(2 + (r as usize % 2));
+                let _ = h.similar_to(r % 120, 5);
+                reads += 3;
+            }
+            reads
+        }));
+    }
+    let storm = run_phase(10, 10);
+    stop.store(true, Ordering::Relaxed);
+    let total_reads: u64 = readers.into_iter().map(|t| t.join().unwrap()).sum();
+    assert!(total_reads > 0);
+
+    // generous bound: structurally queries can't block the worker, so a
+    // storm may only cost scheduler noise, never queue-serialization
+    // (pre-refactor, every reader query sat in the worker's mpsc queue
+    // ahead of the flush and this ratio blew up with reader count)
+    let median = |l: &[std::time::Duration]| l[l.len() / 2];
+    assert!(
+        median(&storm) < 30 * median(&quiet) + std::time::Duration::from_millis(100),
+        "flush under read storm {:?} vs quiet {:?}",
+        median(&storm),
+        median(&quiet)
+    );
+
+    // pinned-version cache coherence: many threads querying one
+    // snapshot get identical results (and the memo cache served them)
+    let snap = h.snapshot();
+    let mut pinned = vec![];
+    for _ in 0..6 {
+        let h = h.clone();
+        let snap = snap.clone();
+        pinned.push(std::thread::spawn(move || {
+            let central = h.query_engine().central_nodes(&snap, 10);
+            let clusters = h.query_engine().clusters(&snap, 3);
+            ((*central).clone(), (*clusters).clone())
+        }));
+    }
+    let results: Vec<_> = pinned.into_iter().map(|t| t.join().unwrap()).collect();
+    for r in &results[1..] {
+        assert_eq!(r.0, results[0].0, "pinned central-nodes must agree across threads");
+        assert_eq!(r.1, results[0].1, "pinned clusters must agree across threads");
+    }
+    assert_eq!(results[0].1.version, snap.version);
+
+    let m = h.metrics();
+    assert!(
+        m.queries_cached.load(Ordering::Relaxed) > 0,
+        "read storm must hit the memo cache"
+    );
+    assert!(m.queries_computed.load(Ordering::Relaxed) > 0);
     svc.join();
 }
 
