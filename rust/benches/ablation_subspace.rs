@@ -15,6 +15,8 @@ mod common;
 
 use grest::eval::angle::mean_angle;
 use grest::graph::{generators, scenario::scenario1_from_static};
+use grest::linalg::mat::Padded;
+use grest::linalg::workspace::StepWorkspace;
 use grest::linalg::{blas, mat::Mat, rng::Rng};
 use grest::sparse::csr::Csr;
 use grest::tracking::grest::{DensePhases, NativePhases};
@@ -26,6 +28,7 @@ use grest::tracking::{EigTracker, GRest, SubspaceMode};
 struct ExactAGrest {
     a: Csr,
     state: grest::tracking::EigenPairs,
+    ws: StepWorkspace,
 }
 
 impl EigTracker for ExactAGrest {
@@ -39,7 +42,7 @@ impl EigTracker for ExactAGrest {
         let xbar = self.state.vectors.pad_rows(delta.s_new);
         let dxk = delta.mul_padded(&self.state.vectors);
         let panel = if delta.s_new == 0 { dxk.clone() } else { dxk.hcat(&delta.d2_dense()) };
-        let q = phases.build_basis(&xbar, &panel);
+        let q = phases.build_basis(Padded::from(&xbar), panel, &mut self.ws);
         // exact T = Zᵀ Â Z with Z = [X̄ Q] (Â already includes Δ)
         let z = xbar.hcat(&q);
         let az = self.a.matmul_dense(&z);
@@ -67,9 +70,10 @@ impl EigTracker for ExactAGrest {
 struct SinglePassPhases;
 
 impl DensePhases for SinglePassPhases {
-    fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
+    fn build_basis(&self, xbar: Padded<'_>, panel: Mat, ws: &mut StepWorkspace) -> Mat {
         // one projection + one CholQR only
-        let p = blas::project_out(xbar, panel);
+        let p = blas::project_out(xbar, &panel);
+        ws.give_mat(panel);
         let g = p.t_matmul(&p);
         let (l, _keep) = grest::linalg::chol::cholesky_guarded(&g, 1e-8);
         let rinv = grest::linalg::chol::tri_inv_upper(&l.t());
@@ -86,11 +90,26 @@ impl DensePhases for SinglePassPhases {
         }
         q
     }
-    fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
-        NativePhases::default().form_t(xbar, q, lam, dxk, dq)
+    fn form_t(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        lam: &[f64],
+        dxk: &Mat,
+        dq: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
+        NativePhases::default().form_t(xbar, q, lam, dxk, dq, ws)
     }
-    fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
-        NativePhases::default().rotate(xbar, q, f1, f2)
+    fn rotate(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        f1: &Mat,
+        f2: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
+        NativePhases::default().rotate(xbar, q, f1, f2, ws)
     }
 }
 
@@ -119,7 +138,11 @@ fn main() {
         ),
         (
             "A2 exact-Abar (Remark 1)".into(),
-            Box::new(ExactAGrest { a: sc.initial.clone(), state: init.clone() }),
+            Box::new(ExactAGrest {
+                a: sc.initial.clone(),
+                state: init.clone(),
+                ws: StepWorkspace::new(),
+            }),
         ),
         (
             "A3 single-pass basis".into(),

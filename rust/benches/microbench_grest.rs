@@ -1,0 +1,232 @@
+//! Per-step G-REST micro-bench (the §Perf instrument for the hottest
+//! loop in the system): a latency ladder over n × k × batch shape,
+//! expansion-heavy vs edge-only, padded-view pipeline vs the
+//! materialized `pad_rows` oracle — plus a **counting global allocator**
+//! that proves a warmed tracker performs **zero heap allocations** per
+//! sequential update (the steady-state contract of `StepWorkspace`).
+//!
+//! Emits `BENCH_grest.json` (name → {n, k, s, seconds, allocs}) in the
+//! working directory (`rust/` under `cargo bench`).  `GREST_BENCH_QUICK=1`
+//! shrinks every size for CI smoke runs.
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
+use grest::sparse::coo::Coo;
+use grest::sparse::delta::Delta;
+use grest::tracking::grest::{MaterializedPhases, NativePhases};
+use grest::tracking::{init_eigenpairs, EigTracker, EigenPairs, GRest, SubspaceMode};
+
+/// Global allocator that counts every alloc/realloc — the instrument
+/// behind the zero-allocation steady-state assertion.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+struct BenchRecord {
+    name: String,
+    n: usize,
+    k: usize,
+    s: usize,
+    seconds: f64,
+    allocs: u64,
+}
+
+fn record(records: &mut Vec<BenchRecord>, name: &str, n: usize, k: usize, s: usize, seconds: f64) {
+    records.push(BenchRecord { name: name.into(), n, k, s, seconds, allocs: 0 });
+}
+
+fn write_json(records: &[BenchRecord]) {
+    let mut out = String::from("{\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {{\"n\": {}, \"k\": {}, \"s\": {}, \"seconds\": {:.6e}, \"allocs\": {}}}{}\n",
+            r.name,
+            r.n,
+            r.k,
+            r.s,
+            r.seconds,
+            r.allocs,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    let path = "BENCH_grest.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("# wrote {path} ({} entries)", records.len()),
+        Err(e) => eprintln!("# failed to write {path}: {e}"),
+    }
+}
+
+/// Expansion-heavy batch: `batch` topological edges plus `s` new nodes
+/// wired in with 3 edges each.
+fn make_delta(n: usize, s: usize, batch: usize, seed: u64) -> Delta {
+    let mut rng = Rng::new(seed);
+    let mut kb = Coo::new(n, n);
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..batch {
+        let (u, v) = (rng.below(n), rng.below(n));
+        if u != v && seen.insert((u.min(v), u.max(v))) {
+            kb.push_sym(u, v, 1.0);
+        }
+    }
+    let mut g = Coo::new(n, s);
+    for j in 0..s {
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..3 {
+            let u = rng.below(n);
+            if used.insert(u) {
+                g.push(u, j, 1.0);
+            }
+        }
+    }
+    let c = Coo::new(s, s);
+    Delta::from_blocks(n, s, &kb, &g, &c)
+}
+
+fn graph_and_init(n: usize, k: usize, rng: &mut Rng) -> EigenPairs {
+    let w = grest::graph::generators::power_law_weights(n, 2.2, 5 * n);
+    let a = grest::graph::generators::chung_lu(&w, rng).adjacency();
+    init_eigenpairs(&a, k, 5)
+}
+
+fn main() {
+    let quick = std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rng = Rng::new(1);
+
+    // ---- latency ladder: n × k × batch, padded vs materialized,
+    //      expansion-heavy vs edge-only
+    let sizes: &[usize] = if quick { &[1500] } else { &[2000, 8000] };
+    let ks: &[usize] = if quick { &[32] } else { &[32, 96] };
+    let budget = if quick { 400 } else { 1200 };
+    for &n in sizes {
+        for &k in ks {
+            let init = graph_and_init(n, k, &mut rng);
+            let s = (n / 40).max(8); // expansion-heavy: ~2.5% new nodes
+            let batch = n / 10;
+            for (tag, delta) in [
+                ("exp", make_delta(n, s, batch, 7)),
+                ("edge", make_delta(n, 0, batch, 8)),
+            ] {
+                let label = format!("n={n} k={k} {tag}");
+                // warmed steady-state timing: one long-lived tracker per
+                // arm, rewound to the same state before every step
+                // (reset_state reuses the buffers, so the measured body
+                // is one memcpy + one warmed update — no construction,
+                // no workspace growth in the timed region)
+                let mut tp = GRest::with_threads(init.clone(), SubspaceMode::Full, Threads::SINGLE);
+                let sp = common::micro_secs(&format!("padded      {label}"), budget, || {
+                    tp.reset_state(&init);
+                    tp.update(&delta).unwrap();
+                    std::hint::black_box(tp.current().values[0]);
+                });
+                record(
+                    &mut records,
+                    &format!("grest3_padded_n{n}_k{k}_{tag}"),
+                    n,
+                    k,
+                    delta.s_new,
+                    sp,
+                );
+                let mut tm = GRest::with_phases(
+                    init.clone(),
+                    SubspaceMode::Full,
+                    MaterializedPhases(NativePhases::new(Threads::SINGLE)),
+                    0x9E57,
+                );
+                let sm = common::micro_secs(&format!("materialized {label}"), budget, || {
+                    tm.reset_state(&init);
+                    tm.update(&delta).unwrap();
+                    std::hint::black_box(tm.current().values[0]);
+                });
+                record(&mut records, &format!("grest3_mat_n{n}_k{k}_{tag}"), n, k, delta.s_new, sm);
+                println!("# padded/materialized @ {label}: {:.2}x", sm / sp);
+            }
+        }
+    }
+
+    // ---- bitwise check: padded pipeline == materialized oracle
+    {
+        let n = if quick { 600 } else { 2000 };
+        let k = 32;
+        let init = graph_and_init(n, k, &mut rng);
+        let d = make_delta(n, n / 40, n / 10, 9);
+        let mut tp = GRest::with_threads(init.clone(), SubspaceMode::Full, Threads::SINGLE);
+        let mut tm = GRest::with_phases(
+            init,
+            SubspaceMode::Full,
+            MaterializedPhases(NativePhases::new(Threads::SINGLE)),
+            0x9E57,
+        );
+        tp.update(&d).unwrap();
+        tm.update(&d).unwrap();
+        assert_eq!(tp.current().values, tm.current().values, "padded values drifted");
+        assert_eq!(
+            tp.current().vectors.as_slice(),
+            tm.current().vectors.as_slice(),
+            "padded vectors drifted from the materialized oracle"
+        );
+        println!("# bitwise: padded pipeline == materialized oracle at n={n}");
+    }
+
+    // ---- steady-state allocation counter: a warmed tracker must not
+    //      touch the heap on the sequential path
+    {
+        let n = if quick { 800 } else { 3000 };
+        let k = if quick { 24 } else { 48 };
+        let init = graph_and_init(n, k, &mut rng);
+        let d_edge = make_delta(n, 0, n / 10, 10);
+        let mut t = GRest::with_threads(init, SubspaceMode::Full, Threads::SINGLE);
+        // warm: grow every pool buffer and settle the LIFO role mapping
+        for _ in 0..3 {
+            t.update(&d_edge).unwrap();
+        }
+        let steps = 10u64;
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..steps {
+            t.update(&d_edge).unwrap();
+        }
+        let total = ALLOCS.load(Ordering::Relaxed) - before;
+        println!("# steady-state allocations over {steps} warmed steps: {total}");
+        assert_eq!(
+            total, 0,
+            "warmed G-REST update must be allocation-free (got {total} allocs in {steps} steps)"
+        );
+        records.push(BenchRecord {
+            name: "steady_state_allocs_per_step".into(),
+            n,
+            k,
+            s: 0,
+            seconds: 0.0,
+            allocs: total / steps,
+        });
+    }
+
+    write_json(&records);
+}

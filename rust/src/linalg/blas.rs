@@ -9,18 +9,32 @@
 //!   register kernel amortizes each load of an A column across four
 //!   outputs.
 //! * **Drivers** (`gemm_with`, `gemm_tn_with`, `syrk_tn_with`,
-//!   `proj_gram_with`) partition output columns across a
-//!   `std::thread::scope` worker pool sized by the [`Threads`] budget.
+//!   `proj_gram_with` and their `_into` variants) partition output
+//!   columns across a `std::thread::scope` worker pool sized by the
+//!   [`Threads`] budget.
 //!
 //! Because the partition is over *output* columns, every output element
 //! is produced by exactly one worker with a fixed sequential reduction
 //! order — results are bitwise identical across thread counts, which is
 //! what keeps `GRest` deterministic under `--threads N`.
 //!
+//! Two refinements serve the G-REST hot loop:
+//!
+//! * every kernel whose left/projection operand is the padded panel
+//!   X̄_K = [X_K; 0] accepts a borrowed [`Padded`] view (`&Mat` still
+//!   works via `impl Into<Padded>`): the structurally-zero rows are
+//!   never stored, never copied, and never multiplied — and because a
+//!   0.0 contribution is exact in IEEE arithmetic with the reduction
+//!   orders unchanged, the result is bitwise identical to running on the
+//!   materialized `pad_rows` matrix (property-tested);
+//! * `_into` variants (`gemm_into`, `gemm_tn_into`, `syrk_tn_into`,
+//!   `proj_gram_into`) write into caller-owned buffers reshaped in
+//!   place, so a steady-state G-REST step performs no heap allocation.
+//!
 //! Panels in this codebase are tall-skinny (N×K, K ≤ a few hundred), so
 //! the kernels are tuned for that regime.
 
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
 pub use crate::linalg::threads::Threads;
 use crate::linalg::threads::balanced_col_chunks;
 
@@ -30,12 +44,21 @@ const BLOCK_K: usize = 64;
 const BLOCK_J: usize = 64;
 
 /// C = A · B (auto thread budget).
-pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+pub fn gemm<'a>(a: impl Into<Padded<'a>>, b: &Mat) -> Mat {
     gemm_with(a, b, Threads::AUTO)
 }
 
 /// C = A · B with an explicit thread budget.
-pub fn gemm_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
+pub fn gemm_with<'a>(a: impl Into<Padded<'a>>, b: &Mat, threads: Threads) -> Mat {
+    let mut c = Mat::zeros(0, 0);
+    gemm_into(&mut c, a, b, threads);
+    c
+}
+
+/// C = A · B written into a caller-owned buffer (reshaped in place; the
+/// padded rows of a [`Padded`] A yield exact zero output rows).
+pub fn gemm_into<'a>(c: &mut Mat, a: impl Into<Padded<'a>>, b: &Mat, threads: Threads) {
+    let a = a.into();
     assert_eq!(
         a.cols(),
         b.rows(),
@@ -45,23 +68,31 @@ pub fn gemm_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
         b.rows(),
         b.cols()
     );
-    let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_acc_with(&mut c, a, b, 1.0, threads);
-    c
+    c.reset(a.rows(), b.cols());
+    gemm_acc_with(c, a, b, 1.0, threads);
 }
 
 /// C += alpha · A · B (auto thread budget).
-pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64) {
+pub fn gemm_acc<'a>(c: &mut Mat, a: impl Into<Padded<'a>>, b: &Mat, alpha: f64) {
     gemm_acc_with(c, a, b, alpha, Threads::AUTO);
 }
 
 /// C += alpha · A · B — blocked, thread-parallel over output columns.
-pub fn gemm_acc_with(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, threads: Threads) {
+/// With a [`Padded`] A, rows of C beyond the filled block are untouched
+/// (their materialized-oracle contribution is an exact ±0.0 no-op).
+pub fn gemm_acc_with<'a>(
+    c: &mut Mat,
+    a: impl Into<Padded<'a>>,
+    b: &Mat,
+    alpha: f64,
+    threads: Threads,
+) {
+    let a = a.into();
     let (m, kk) = (a.rows(), a.cols());
     let n = b.cols();
     assert_eq!(b.rows(), kk);
     assert_eq!((c.rows(), c.cols()), (m, n));
-    let workers = threads.for_flops(2 * m * kk * n).min(n.max(1));
+    let workers = threads.for_flops(2 * a.filled() * kk * n).min(n.max(1));
     if workers <= 1 {
         gemm_acc_cols(c.as_mut_slice(), m, 0..n, a, b, alpha);
         return;
@@ -78,16 +109,18 @@ pub fn gemm_acc_with(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, threads: Threads
 }
 
 /// Compute columns `jr` of C += alpha·A·B into `c_cols` (the contiguous
-/// column-major storage of exactly those columns).
+/// column-major storage of exactly those columns, stride `m` = the full
+/// logical height); only the top `a.filled()` rows are written.
 fn gemm_acc_cols(
     c_cols: &mut [f64],
     m: usize,
     jr: std::ops::Range<usize>,
-    a: &Mat,
+    a: Padded<'_>,
     b: &Mat,
     alpha: f64,
 ) {
     let kk = a.cols();
+    let mt = a.filled();
     let j0 = jr.start;
     let n = jr.end;
     // Outer: BLOCK_J-wide tiles of C (stay hot across all k blocks).
@@ -106,7 +139,7 @@ fn gemm_acc_cols(
                 let (c2, c3s) = rest.split_at_mut(m);
                 let c3 = &mut c3s[..m];
                 for k in k0..k1 {
-                    let ak = a.col(k);
+                    let ak = a.col_top(k);
                     let w0 = alpha * b0c[k];
                     let w1 = alpha * b1c[k];
                     let w2 = alpha * b2c[k];
@@ -114,7 +147,7 @@ fn gemm_acc_cols(
                     if w0 == 0.0 && w1 == 0.0 && w2 == 0.0 && w3 == 0.0 {
                         continue;
                     }
-                    for i in 0..m {
+                    for i in 0..mt {
                         let av = ak[i];
                         c0[i] += w0 * av;
                         c1[i] += w1 * av;
@@ -132,8 +165,8 @@ fn gemm_acc_cols(
                     if w == 0.0 {
                         continue;
                     }
-                    let ak = a.col(k);
-                    for i in 0..m {
+                    let ak = a.col_top(k);
+                    for i in 0..mt {
                         cj[i] += w * ak[i];
                     }
                 }
@@ -145,22 +178,29 @@ fn gemm_acc_cols(
 }
 
 /// C = Aᵀ · B without materializing Aᵀ (auto thread budget).
-pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
+pub fn gemm_tn<'a>(a: impl Into<Padded<'a>>, b: &Mat) -> Mat {
     gemm_tn_with(a, b, Threads::AUTO)
 }
 
 /// C = Aᵀ · B — the Gram kernel of the paper's projection step.  4×1
 /// register blocking over A columns (each read of B feeds four dots),
 /// thread-parallel over B columns.
-pub fn gemm_tn_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
+pub fn gemm_tn_with<'a>(a: impl Into<Padded<'a>>, b: &Mat, threads: Threads) -> Mat {
+    let mut c = Mat::zeros(0, 0);
+    gemm_tn_into(&mut c, a, b, threads);
+    c
+}
+
+/// [`gemm_tn_with`] writing into a caller-owned buffer.
+pub fn gemm_tn_into<'a>(c: &mut Mat, a: impl Into<Padded<'a>>, b: &Mat, threads: Threads) {
+    let a = a.into();
     assert_eq!(a.rows(), b.rows(), "gemm_tn dims");
     let (k, n) = (a.cols(), b.cols());
-    let m = a.rows();
-    let mut c = Mat::zeros(k, n);
-    let workers = threads.for_flops(2 * m * k * n).min(n.max(1));
+    c.reset(k, n);
+    let workers = threads.for_flops(2 * a.filled() * k * n).min(n.max(1));
     if workers <= 1 {
         gemm_tn_cols(c.as_mut_slice(), 0..n, a, b);
-        return c;
+        return;
     }
     let chunks = balanced_col_chunks(n, workers, |_| 1);
     std::thread::scope(|s| {
@@ -171,21 +211,25 @@ pub fn gemm_tn_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
             s.spawn(move || gemm_tn_cols(head, lo..hi, a, b));
         }
     });
-    c
 }
 
-fn gemm_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: &Mat, b: &Mat) {
+fn gemm_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: Padded<'_>, b: &Mat) {
     let k = a.cols();
-    let m = a.rows();
+    let mt = a.filled();
     let j0 = jr.start;
     for j in jr {
         let bj = b.col(j);
         let cj = &mut c_cols[(j - j0) * k..(j - j0 + 1) * k];
         let mut p = 0;
         while p + 4 <= k {
-            let (a0, a1, a2, a3) = (a.col(p), a.col(p + 1), a.col(p + 2), a.col(p + 3));
+            let (a0, a1, a2, a3) = (
+                a.col_top(p),
+                a.col_top(p + 1),
+                a.col_top(p + 2),
+                a.col_top(p + 3),
+            );
             let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            for i in 0..m {
+            for i in 0..mt {
                 let bv = bj[i];
                 s0 += a0[i] * bv;
                 s1 += a1[i] * bv;
@@ -199,7 +243,7 @@ fn gemm_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: &Mat, b: &Mat
             p += 4;
         }
         while p < k {
-            cj[p] = dot(a.col(p), bj);
+            cj[p] = dot_padded(a.col_top(p), bj);
             p += 1;
         }
     }
@@ -210,19 +254,26 @@ fn gemm_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: &Mat, b: &Mat
 /// computed (half the flops of `gemm_tn`) and mirrored.  This is the
 /// `form_t` specialization of Eq. (13) — T₁₁ and T₂₂ are symmetric
 /// because Δ is.
-pub fn syrk_tn(a: &Mat, b: &Mat) -> Mat {
+pub fn syrk_tn<'a>(a: impl Into<Padded<'a>>, b: &Mat) -> Mat {
     syrk_tn_with(a, b, Threads::AUTO)
 }
 
 /// [`syrk_tn`] with an explicit thread budget.  Work is triangular, so
 /// column chunks are balanced by `j+1` weights.
-pub fn syrk_tn_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
+pub fn syrk_tn_with<'a>(a: impl Into<Padded<'a>>, b: &Mat, threads: Threads) -> Mat {
+    let mut c = Mat::zeros(0, 0);
+    syrk_tn_into(&mut c, a, b, threads);
+    c
+}
+
+/// [`syrk_tn_with`] writing into a caller-owned buffer.
+pub fn syrk_tn_into<'a>(c: &mut Mat, a: impl Into<Padded<'a>>, b: &Mat, threads: Threads) {
+    let a = a.into();
     assert_eq!(a.rows(), b.rows(), "syrk_tn dims (rows)");
     assert_eq!(a.cols(), b.cols(), "syrk_tn needs square output");
     let p = a.cols();
-    let n = a.rows();
-    let mut c = Mat::zeros(p, p);
-    let workers = threads.for_flops(n * p * (p + 1)).min(p.max(1));
+    c.reset(p, p);
+    let workers = threads.for_flops(a.filled() * p * (p + 1)).min(p.max(1));
     if workers <= 1 {
         syrk_tn_cols(c.as_mut_slice(), 0..p, a, b);
     } else {
@@ -236,18 +287,17 @@ pub fn syrk_tn_with(a: &Mat, b: &Mat, threads: Threads) -> Mat {
             }
         });
     }
-    mirror_upper(&mut c);
-    c
+    mirror_upper(c);
 }
 
-fn syrk_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: &Mat, b: &Mat) {
+fn syrk_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: Padded<'_>, b: &Mat) {
     let p = a.cols();
     let j0 = jr.start;
     for j in jr {
         let bj = b.col(j);
         let cj = &mut c_cols[(j - j0) * p..(j - j0 + 1) * p];
         for (i, out) in cj.iter_mut().enumerate().take(j + 1) {
-            *out = dot(a.col(i), bj);
+            *out = dot_padded(a.col_top(i), bj);
         }
     }
 }
@@ -271,15 +321,33 @@ fn mirror_upper(c: &mut Mat) {
 /// orthonormal, the Gram of the projected panel is
 /// `(P−XC)ᵀ(P−XC) = G − CᵀC`, so the explicit project-out pass before
 /// the Gram disappears — X̄ and P are each read once per CholeskyQR
-/// round instead of twice.
-pub fn proj_gram_with(x: &Mat, p: &Mat, threads: Threads) -> (Mat, Mat) {
+/// round instead of twice.  X accepts the [`Padded`] X̄ view: only the
+/// filled rows enter the C dots (P keeps its full height in G).
+pub fn proj_gram_with<'a>(x: impl Into<Padded<'a>>, p: &Mat, threads: Threads) -> (Mat, Mat) {
+    let mut c = Mat::zeros(0, 0);
+    let mut g = Mat::zeros(0, 0);
+    proj_gram_into(&mut c, &mut g, x, p, threads);
+    (c, g)
+}
+
+/// [`proj_gram_with`] writing C and G into caller-owned buffers.
+pub fn proj_gram_into<'a>(
+    c: &mut Mat,
+    g: &mut Mat,
+    x: impl Into<Padded<'a>>,
+    p: &Mat,
+    threads: Threads,
+) {
+    let x = x.into();
     assert_eq!(x.rows(), p.rows(), "proj_gram dims");
     let n = p.rows();
     let k = x.cols();
     let m = p.cols();
-    let mut c = Mat::zeros(k, m);
-    let mut g = Mat::zeros(m, m);
-    let workers = threads.for_flops(n * m * (2 * k + m + 1)).min(m.max(1));
+    c.reset(k, m);
+    g.reset(m, m);
+    let workers = threads
+        .for_flops(2 * x.filled() * k * m + n * m * (m + 1))
+        .min(m.max(1));
     if workers <= 1 {
         proj_gram_cols(c.as_mut_slice(), g.as_mut_slice(), 0..m, x, p);
     } else {
@@ -296,15 +364,14 @@ pub fn proj_gram_with(x: &Mat, p: &Mat, threads: Threads) -> (Mat, Mat) {
             }
         });
     }
-    mirror_upper(&mut g);
-    (c, g)
+    mirror_upper(g);
 }
 
 fn proj_gram_cols(
     c_cols: &mut [f64],
     g_cols: &mut [f64],
     jr: std::ops::Range<usize>,
-    x: &Mat,
+    x: Padded<'_>,
     p: &Mat,
 ) {
     let k = x.cols();
@@ -314,7 +381,7 @@ fn proj_gram_cols(
         let pj = p.col(j);
         let cj = &mut c_cols[(j - j0) * k..(j - j0 + 1) * k];
         for (i, out) in cj.iter_mut().enumerate() {
-            *out = dot(x.col(i), pj);
+            *out = dot_padded(x.col_top(i), pj);
         }
         let gj = &mut g_cols[(j - j0) * m..(j - j0 + 1) * m];
         for (i, out) in gj.iter_mut().enumerate().take(j + 1) {
@@ -340,6 +407,49 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     let mut s = s0 + s1 + s2 + s3;
     for i in chunks * 4..n {
         s += x[i] * y[i];
+    }
+    s
+}
+
+/// [`dot`] against a zero-padded vector whose stored part is `x_top`
+/// and whose logical length is `y.len()`.
+///
+/// Replicates the lane structure of the full-length [`dot`] exactly:
+/// fully-stored 4-chunks feed the same four lanes, the chunk straddling
+/// the padding boundary adds only its stored entries to their lanes,
+/// and the scalar tail adds stored entries after the lane reduction.
+/// The skipped terms are exact ±0.0 contributions, and a lane that
+/// starts at +0.0 can never become −0.0 under `+=`, so the result is
+/// bitwise identical to `dot(&padded_x, y)` for finite inputs.  With
+/// `x_top.len() == y.len()` this *is* [`dot`].
+#[inline]
+pub fn dot_padded(x_top: &[f64], y: &[f64]) -> f64 {
+    let n = y.len();
+    let nf = x_top.len();
+    debug_assert!(nf <= n);
+    let chunks = n / 4;
+    // stored entries the full-length dot would process inside 4-chunks
+    let in_chunks = (chunks * 4).min(nf);
+    let full = in_chunks / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..full {
+        let i = c * 4;
+        s0 += x_top[i] * y[i];
+        s1 += x_top[i + 1] * y[i + 1];
+        s2 += x_top[i + 2] * y[i + 2];
+        s3 += x_top[i + 3] * y[i + 3];
+    }
+    for i in full * 4..in_chunks {
+        match i % 4 {
+            0 => s0 += x_top[i] * y[i],
+            1 => s1 += x_top[i] * y[i],
+            2 => s2 += x_top[i] * y[i],
+            _ => s3 += x_top[i] * y[i],
+        }
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..nf {
+        s += x_top[i] * y[i];
     }
     s
 }
@@ -379,12 +489,12 @@ pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
 
 /// P = B − X · C, the "apply" half of project-out (mirrors the Pallas
 /// kernel `apply_proj`).
-pub fn sub_matmul(b: &Mat, x: &Mat, c: &Mat) -> Mat {
+pub fn sub_matmul<'a>(b: &Mat, x: impl Into<Padded<'a>>, c: &Mat) -> Mat {
     sub_matmul_with(b, x, c, Threads::AUTO)
 }
 
 /// [`sub_matmul`] with an explicit thread budget.
-pub fn sub_matmul_with(b: &Mat, x: &Mat, c: &Mat, threads: Threads) -> Mat {
+pub fn sub_matmul_with<'a>(b: &Mat, x: impl Into<Padded<'a>>, c: &Mat, threads: Threads) -> Mat {
     let mut p = b.clone();
     gemm_acc_with(&mut p, x, c, -1.0, threads);
     p
@@ -392,12 +502,13 @@ pub fn sub_matmul_with(b: &Mat, x: &Mat, c: &Mat, threads: Threads) -> Mat {
 
 /// P = (I − X Xᵀ) B — project `b` against the orthonormal panel `x`
 /// (mirrors the Pallas `project_out` composition).
-pub fn project_out(x: &Mat, b: &Mat) -> Mat {
+pub fn project_out<'a>(x: impl Into<Padded<'a>>, b: &Mat) -> Mat {
     project_out_with(x, b, Threads::AUTO)
 }
 
 /// [`project_out`] with an explicit thread budget.
-pub fn project_out_with(x: &Mat, b: &Mat, threads: Threads) -> Mat {
+pub fn project_out_with<'a>(x: impl Into<Padded<'a>>, b: &Mat, threads: Threads) -> Mat {
+    let x = x.into();
     let c = gemm_tn_with(x, b, threads);
     sub_matmul_with(b, x, &c, threads)
 }
@@ -506,6 +617,121 @@ mod tests {
         let (c4, g4) = proj_gram_with(&x, &p, Threads(4));
         assert_eq!(c.as_slice(), c4.as_slice());
         assert_eq!(g.as_slice(), g4.as_slice());
+    }
+
+    #[test]
+    fn dot_padded_is_bitwise_dot_of_materialized() {
+        let mut rng = Rng::new(12);
+        // lengths straddling every 4-lane alignment case
+        for &(nf, extra) in &[
+            (0usize, 5usize),
+            (1, 0),
+            (1, 6),
+            (3, 1),
+            (4, 0),
+            (4, 4),
+            (5, 3),
+            (6, 1),
+            (6, 6),
+            (31, 9),
+            (32, 0),
+            (33, 7),
+            (1000, 24),
+        ] {
+            let x: Vec<f64> = (0..nf).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..nf + extra).map(|_| rng.normal()).collect();
+            let mut xp = x.clone();
+            xp.resize(nf + extra, 0.0);
+            let want = dot(&xp, &y);
+            let got = dot_padded(&x, &y);
+            assert_eq!(got.to_bits(), want.to_bits(), "(nf={nf}, extra={extra})");
+        }
+    }
+
+    #[test]
+    fn padded_kernels_bitwise_match_materialized_oracle() {
+        // the tentpole contract: every X̄-consuming kernel over a Padded
+        // view equals the same kernel over the pad_rows matrix to the
+        // last bit, across shapes (incl. extra == 0 and odd row counts
+        // that straddle the dot lanes) and thread counts 1/4.
+        let mut rng = Rng::new(5);
+        for &(n_old, extra, k, m) in &[
+            (30usize, 0usize, 5usize, 7usize),
+            (31, 9, 6, 4),
+            (57, 3, 3, 9),
+            (257, 63, 16, 20),
+            (2000, 48, 32, 40),
+        ] {
+            let n = n_old + extra;
+            let x = Mat::randn(n_old, k, &mut rng);
+            let xm = x.pad_rows(extra);
+            let b = Mat::randn(n, m, &mut rng);
+            let bk = Mat::randn(n, k, &mut rng);
+            let f = Mat::randn(k, m, &mut rng);
+            for &tc in &[Threads(1), Threads(4)] {
+                let xp = Padded::new(&x, extra);
+                let tag = format!("n_old={n_old} extra={extra} k={k} m={m} t={}", tc.0);
+                // gemm_tn: X̄ᵀB
+                let tn_p = gemm_tn_with(xp, &b, tc);
+                let tn_m = gemm_tn_with(&xm, &b, tc);
+                assert_eq!(tn_p.as_slice(), tn_m.as_slice(), "gemm_tn {tag}");
+                // syrk_tn: sym(X̄ᵀB_k)
+                let sy_p = syrk_tn_with(xp, &bk, tc);
+                let sy_m = syrk_tn_with(&xm, &bk, tc);
+                assert_eq!(sy_p.as_slice(), sy_m.as_slice(), "syrk_tn {tag}");
+                // proj_gram: C = X̄ᵀP, G = PᵀP
+                let (c_p, g_p) = proj_gram_with(xp, &b, tc);
+                let (c_m, g_m) = proj_gram_with(&xm, &b, tc);
+                assert_eq!(c_p.as_slice(), c_m.as_slice(), "proj_gram C {tag}");
+                assert_eq!(g_p.as_slice(), g_m.as_slice(), "proj_gram G {tag}");
+                // gemm: X̄·F (padded rows must come out exactly zero)
+                let mm_p = gemm_with(xp, &f, tc);
+                let mm_m = gemm_with(&xm, &f, tc);
+                assert_eq!(mm_p.as_slice(), mm_m.as_slice(), "gemm {tag}");
+                for i in n_old..n {
+                    for j in 0..m {
+                        assert_eq!(mm_p.get(i, j), 0.0, "gemm pad row {tag}");
+                    }
+                }
+                // gemm_acc into a C with live data in the padded rows
+                let mut acc_p = b.clone();
+                let mut acc_m = b.clone();
+                gemm_acc_with(&mut acc_p, xp, &f, -1.0, tc);
+                gemm_acc_with(&mut acc_m, &xm, &f, -1.0, tc);
+                assert_eq!(acc_p.as_slice(), acc_m.as_slice(), "gemm_acc {tag}");
+                // project_out: the bottom rows of B pass through untouched
+                let po_p = project_out_with(xp, &b, tc);
+                let po_m = project_out_with(&xm, &b, tc);
+                assert_eq!(po_p.as_slice(), po_m.as_slice(), "project_out {tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers_across_shapes() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(40, 8, &mut rng);
+        let b = Mat::randn(8, 12, &mut rng);
+        let mut c = Mat::zeros(3, 3); // wrong shape on purpose
+        gemm_into(&mut c, &a, &b, Threads::SINGLE);
+        assert_eq!((c.rows(), c.cols()), (40, 12));
+        let want = gemm(&a, &b);
+        assert_eq!(c.as_slice(), want.as_slice());
+        // shrink back: reuse the same output buffer for a Gram
+        let p = Mat::randn(40, 6, &mut rng);
+        gemm_tn_into(&mut c, &a, &p, Threads::SINGLE);
+        assert_eq!((c.rows(), c.cols()), (8, 6));
+        let want_tn = gemm_tn(&a, &p);
+        assert_eq!(c.as_slice(), want_tn.as_slice());
+        let mut s = Mat::zeros(0, 0);
+        syrk_tn_into(&mut s, &p, &p, Threads::SINGLE);
+        let want_s = syrk_tn(&p, &p);
+        assert_eq!(s.as_slice(), want_s.as_slice());
+        let (mut cc, mut gg) = (Mat::zeros(1, 1), Mat::zeros(1, 1));
+        proj_gram_into(&mut cc, &mut gg, &a, &p, Threads::SINGLE);
+        let (wc, wg) = proj_gram_with(&a, &p, Threads::SINGLE);
+        assert_eq!(cc.as_slice(), wc.as_slice());
+        assert_eq!(gg.as_slice(), wg.as_slice());
     }
 
     #[test]

@@ -10,10 +10,20 @@ use crate::linalg::mat::Mat;
 /// dependent (so the inverse stays bounded and the dependent direction
 /// maps to its tiny residual).  Returns (L, keep-flags).
 pub fn cholesky_guarded(g: &Mat, pivot_tol: f64) -> (Mat, Vec<bool>) {
+    let mut l = Mat::zeros(0, 0);
+    let mut keep = Vec::new();
+    cholesky_guarded_into(g, pivot_tol, &mut l, &mut keep);
+    (l, keep)
+}
+
+/// [`cholesky_guarded`] writing L and the keep-flags into caller-owned
+/// buffers (reshaped in place).
+pub fn cholesky_guarded_into(g: &Mat, pivot_tol: f64, l: &mut Mat, keep: &mut Vec<bool>) {
     let m = g.rows();
     assert_eq!(m, g.cols());
-    let mut l = Mat::zeros(m, m);
-    let mut keep = vec![true; m];
+    l.reset(m, m);
+    keep.clear();
+    keep.resize(m, true);
     let scale = (0..m).fold(0.0f64, |a, i| a.max(g.get(i, i))).max(1e-300);
     for j in 0..m {
         // c = G[:, j] − L[:, :j] · L[j, :j]ᵀ  (only rows ≥ j needed)
@@ -36,7 +46,6 @@ pub fn cholesky_guarded(g: &Mat, pivot_tol: f64) -> (Mat, Vec<bool>) {
             l.set(i, j, v / d);
         }
     }
-    (l, keep)
 }
 
 /// Inverse of an upper-triangular matrix (back substitution, column by
@@ -57,6 +66,27 @@ pub fn tri_inv_upper(r: &Mat) -> Mat {
         }
     }
     x
+}
+
+/// Inverse of R = Lᵀ read directly off the *lower* factor `l` — the same
+/// arithmetic as `tri_inv_upper(&l.t())` in the same operation order
+/// (bitwise identical), minus the transpose copy.  Writes into a
+/// caller-owned buffer.
+pub fn tri_inv_upper_from_lower_into(l: &Mat, x: &mut Mat) {
+    let m = l.rows();
+    assert_eq!(m, l.cols());
+    x.reset(m, m);
+    for j in 0..m {
+        // R[i, p] = L[p, i]
+        x.set(j, j, 1.0 / l.get(j, j));
+        for i in (0..j).rev() {
+            let mut s = 0.0;
+            for p in i + 1..=j {
+                s += l.get(p, i) * x.get(p, j);
+            }
+            x.set(i, j, -s / l.get(i, i));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -95,6 +125,23 @@ mod tests {
         let g = panel.t_matmul(&panel);
         let (_, keep) = cholesky_guarded(&g, 1e-10);
         assert_eq!(keep, vec![true, true, true, false, false]);
+    }
+
+    #[test]
+    fn tri_inv_from_lower_matches_transposed_path_bitwise() {
+        let mut rng = Rng::new(4);
+        for &m in &[1usize, 5, 20] {
+            let a = Mat::randn(m, m + 3, &mut rng);
+            let mut g = a.matmul(&a.t());
+            for i in 0..m {
+                g.add_at(i, i, 1.0);
+            }
+            let (l, _) = cholesky_guarded(&g, 1e-14);
+            let want = tri_inv_upper(&l.t());
+            let mut got = Mat::zeros(0, 0);
+            tri_inv_upper_from_lower_into(&l, &mut got);
+            assert_eq!(got.as_slice(), want.as_slice(), "m={m}");
+        }
     }
 
     #[test]

@@ -16,48 +16,104 @@ pub struct EighResult {
 impl EighResult {
     /// Indices of the K leading eigenvalues by |λ| (paper's ordering),
     /// largest magnitude first; exact-|λ| ties break toward the positive
-    /// eigenvalue so that ± pairs order deterministically.
+    /// eigenvalue so that ± pairs order deterministically.  NaN
+    /// eigenvalues (a degenerate projected matrix T) rank last instead
+    /// of panicking the comparator — mirroring the `tasks::centrality`
+    /// NaN policy.
     pub fn leading_by_magnitude(&self, k: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..self.values.len()).collect();
-        idx.sort_by(|&a, &b| {
-            self.values[b]
-                .abs()
-                .partial_cmp(&self.values[a].abs())
-                .unwrap()
-                .then(self.values[b].partial_cmp(&self.values[a]).unwrap())
-        });
-        idx.truncate(k);
+        let mut idx = Vec::new();
+        order_by_magnitude_into(&self.values, k, &mut idx);
         idx
     }
 
-    /// Indices of the K algebraically largest eigenvalues, largest first.
+    /// Indices of the K algebraically largest eigenvalues, largest
+    /// first; NaN ranks last.
     pub fn leading_by_value(&self, k: usize) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..self.values.len()).collect();
-        idx.sort_by(|&a, &b| self.values[b].partial_cmp(&self.values[a]).unwrap());
+        let key = |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
+        idx.sort_unstable_by(|&a, &b| {
+            key(self.values[b])
+                .total_cmp(&key(self.values[a]))
+                .then(a.cmp(&b))
+        });
         idx.truncate(k);
         idx
     }
 }
 
+/// NaN-safe |λ|-descending ordering written into a caller-owned index
+/// buffer (the allocation-free core of
+/// [`EighResult::leading_by_magnitude`]): largest magnitude first,
+/// exact-|λ| ties toward the positive eigenvalue, then by index; NaN
+/// entries rank last.
+pub fn order_by_magnitude_into(values: &[f64], k: usize, idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..values.len());
+    let mag = |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v.abs() };
+    let val = |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
+    idx.sort_unstable_by(|&a, &b| {
+        mag(values[b])
+            .total_cmp(&mag(values[a]))
+            .then(val(values[b]).total_cmp(&val(values[a])))
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+}
+
+/// Reusable scratch of [`eigh_into`]: the accumulated transform /
+/// eigenvector matrix `v`, the eigenvalues `d` (ascending), and the
+/// off-diagonal workspace `e`.
+pub struct EighWork {
+    pub v: Mat,
+    pub d: Vec<f64>,
+    pub e: Vec<f64>,
+}
+
+impl EighWork {
+    pub fn new() -> EighWork {
+        EighWork { v: Mat::zeros(0, 0), d: Vec::new(), e: Vec::new() }
+    }
+}
+
 /// Full symmetric eigendecomposition of `a` (upper part referenced).
 pub fn eigh(a: &Mat) -> EighResult {
+    let mut w = EighWork::new();
+    eigh_into(a, &mut w);
+    EighResult { values: w.d, vectors: w.v }
+}
+
+/// [`eigh`] into reusable scratch: on return `w.v` holds the
+/// orthonormal eigenvectors as columns and `w.d` the matching
+/// eigenvalues in ascending order.  No allocation once `w` has seen the
+/// problem size.
+pub fn eigh_into(a: &Mat, w: &mut EighWork) {
     let n = a.rows();
     assert_eq!(n, a.cols(), "eigh requires a square matrix");
+    w.v.copy_from(a);
+    w.d.clear();
+    w.d.resize(n, 0.0);
+    w.e.clear();
+    w.e.resize(n, 0.0);
     if n == 0 {
-        return EighResult { values: vec![], vectors: Mat::zeros(0, 0) };
+        return;
     }
-    let mut v = a.clone();
-    let mut d = vec![0.0; n];
-    let mut e = vec![0.0; n];
-    tred2(&mut v, &mut d, &mut e);
-    tql2(&mut v, &mut d, &mut e);
-    // Sort ascending (tql2 output is already sorted, but keep the
-    // invariant explicit and robust).
-    let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&x, &y| d[x].partial_cmp(&d[y]).unwrap());
-    let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
-    let vectors = v.select_cols(&idx);
-    EighResult { values, vectors }
+    tred2(&mut w.v, &mut w.d, &mut w.e);
+    tql2(&mut w.v, &mut w.d, &mut w.e);
+    // Sort ascending in place (tql2 output is already sorted, but keep
+    // the invariant explicit and robust; `<` leaves NaNs in place
+    // instead of panicking a comparator).
+    for i in 0..n.saturating_sub(1) {
+        let mut kmin = i;
+        for j in i + 1..n {
+            if w.d[j] < w.d[kmin] {
+                kmin = j;
+            }
+        }
+        if kmin != i {
+            w.d.swap(i, kmin);
+            w.v.swap_cols(i, kmin);
+        }
+    }
 }
 
 /// Householder reduction to tridiagonal form (ports EISPACK/JAMA tred2).
@@ -345,6 +401,44 @@ mod tests {
         let idx = r.leading_by_magnitude(2);
         let vals: Vec<f64> = idx.iter().map(|&i| r.values[i]).collect();
         assert_eq!(vals, vec![-5.0, 3.0]);
+    }
+
+    #[test]
+    fn leading_orders_rank_nan_last_without_panicking() {
+        // regression: a degenerate projected T can hand the sorts NaN
+        // eigenvalues; partial_cmp().unwrap() used to panic here.
+        let r = EighResult {
+            values: vec![1.0, f64::NAN, -3.0, f64::NAN, 2.0],
+            vectors: Mat::eye(5),
+        };
+        assert_eq!(r.leading_by_magnitude(5), vec![2, 4, 0, 1, 3]);
+        assert_eq!(r.leading_by_magnitude(2), vec![2, 4]);
+        assert_eq!(r.leading_by_value(5), vec![4, 0, 2, 1, 3]);
+        // magnitude ties still break toward the positive eigenvalue
+        let pm = EighResult { values: vec![-2.0, 2.0], vectors: Mat::eye(2) };
+        assert_eq!(pm.leading_by_magnitude(2), vec![1, 0]);
+    }
+
+    #[test]
+    fn eigh_into_matches_eigh_and_reuses_scratch() {
+        let mut rng = Rng::new(21);
+        let mut w = EighWork::new();
+        for &n in &[7usize, 24, 3] {
+            let a = rand_sym(n, &mut rng);
+            let r = eigh(&a);
+            eigh_into(&a, &mut w);
+            assert_eq!(w.d, r.values);
+            assert_eq!(w.v.as_slice(), r.vectors.as_slice());
+        }
+    }
+
+    #[test]
+    fn order_by_magnitude_into_reuses_index_buffer() {
+        let mut idx = Vec::new();
+        order_by_magnitude_into(&[1.0, -4.0, 2.0], 2, &mut idx);
+        assert_eq!(idx, vec![1, 2]);
+        order_by_magnitude_into(&[0.5, -0.5], 2, &mut idx);
+        assert_eq!(idx, vec![0, 1]);
     }
 
     #[test]

@@ -14,6 +14,81 @@ pub struct Mat {
     data: Vec<f64>,
 }
 
+/// Borrowed view of a matrix with `extra_rows` structurally-zero rows
+/// appended — the padded eigenvector panel X̄_K = [X_K; 0] of paper
+/// Eq. (3), without the n×k heap copy `pad_rows` pays.
+///
+/// The padded rows are never stored: kernels that consume a `Padded`
+/// operand read only the top [`Padded::filled`] rows and treat the rest
+/// as exact 0.0.  Because a 0.0 contribution is exact in IEEE arithmetic
+/// and the kernels keep their reduction orders unchanged, results are
+/// bitwise identical to running the same kernel on
+/// `mat.pad_rows(extra_rows)` (the property-test oracle) — for finite
+/// data; the views skip the `0·∞ = NaN` poisoning a materialized zero
+/// row would propagate from non-finite inputs.
+///
+/// `Padded::from(&m)` (or passing `&Mat` to any kernel generic over
+/// `impl Into<Padded>`) is the degenerate `extra_rows == 0` view.
+#[derive(Clone, Copy)]
+pub struct Padded<'a> {
+    /// The stored top block (the filled rows).
+    pub mat: &'a Mat,
+    /// Number of structurally-zero rows appended below `mat`.
+    pub extra_rows: usize,
+}
+
+impl<'a> From<&'a Mat> for Padded<'a> {
+    fn from(mat: &'a Mat) -> Padded<'a> {
+        Padded { mat, extra_rows: 0 }
+    }
+}
+
+impl<'a> Padded<'a> {
+    pub fn new(mat: &'a Mat, extra_rows: usize) -> Padded<'a> {
+        Padded { mat, extra_rows }
+    }
+
+    /// Logical row count (stored + structural zeros).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.mat.rows() + self.extra_rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.mat.cols()
+    }
+
+    /// Number of rows actually stored (the top block).
+    #[inline]
+    pub fn filled(&self) -> usize {
+        self.mat.rows()
+    }
+
+    /// Stored part of column `j` (length [`Padded::filled`]); the
+    /// remaining [`Padded::rows`] − filled entries are exact zeros.
+    #[inline]
+    pub fn col_top(&self, j: usize) -> &[f64] {
+        self.mat.col(j)
+    }
+
+    /// Entry (i, j) of the logical padded matrix.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        if i < self.mat.rows() {
+            self.mat.get(i, j)
+        } else {
+            debug_assert!(i < self.rows());
+            0.0
+        }
+    }
+
+    /// Materialize the logical matrix (the `pad_rows` oracle).
+    pub fn materialize(&self) -> Mat {
+        self.mat.pad_rows(self.extra_rows)
+    }
+}
+
 impl std::fmt::Debug for Mat {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
@@ -149,6 +224,53 @@ impl Mat {
         &self.data
     }
 
+    /// Take the backing buffer (for workspace recycling).
+    #[inline]
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Reshape to rows×cols with every entry zero, reusing the backing
+    /// buffer — grow-only: allocates only when capacity is too small.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Become a copy of `other` (shape and contents), reusing the
+    /// backing buffer.
+    pub fn copy_from(&mut self, other: &Mat) {
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+        self.rows = other.rows;
+        self.cols = other.cols;
+    }
+
+    /// Swap columns `a` and `b` in place.
+    pub fn swap_cols(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let (ca, cb) = self.two_cols_mut(a, b);
+        ca.swap_with_slice(cb);
+    }
+
+    /// Keep only columns `idx` (strictly ascending), compacting them to
+    /// the left in place — the allocation-free [`Mat::select_cols`].
+    pub fn keep_cols(&mut self, idx: &[usize]) {
+        let r = self.rows;
+        for (dst, &src) in idx.iter().enumerate() {
+            debug_assert!(src >= dst && src < self.cols, "keep_cols needs ascending indices");
+            if dst != src {
+                self.data.copy_within(src * r..(src + 1) * r, dst * r);
+            }
+        }
+        self.cols = idx.len();
+        self.data.truncate(r * idx.len());
+    }
+
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data
@@ -233,26 +355,11 @@ impl Mat {
         crate::linalg::blas::gemm_with(self, other, threads)
     }
 
-    /// selfᵀ · other without materializing the transpose.
+    /// selfᵀ · other without materializing the transpose.  (The former
+    /// `t_matmul_with`/`sym_t_matmul{,_with}` conveniences are gone —
+    /// the dense phases call `blas::{gemm_tn,syrk_tn}_into` directly.)
     pub fn t_matmul(&self, other: &Mat) -> Mat {
         crate::linalg::blas::gemm_tn(self, other)
-    }
-
-    /// [`Mat::t_matmul`] with an explicit thread budget.
-    pub fn t_matmul_with(&self, other: &Mat, threads: crate::linalg::threads::Threads) -> Mat {
-        crate::linalg::blas::gemm_tn_with(self, other, threads)
-    }
-
-    /// selfᵀ · other when the product is *analytically symmetric*
-    /// (other = M·self with M = Mᵀ, or other = self): computes only the
-    /// upper triangle and mirrors it — half the flops of [`Mat::t_matmul`].
-    pub fn sym_t_matmul(&self, other: &Mat) -> Mat {
-        crate::linalg::blas::syrk_tn(self, other)
-    }
-
-    /// [`Mat::sym_t_matmul`] with an explicit thread budget.
-    pub fn sym_t_matmul_with(&self, other: &Mat, threads: crate::linalg::threads::Threads) -> Mat {
-        crate::linalg::blas::syrk_tn_with(self, other, threads)
     }
 }
 
@@ -321,5 +428,51 @@ mod tests {
     fn fro_norm() {
         let m = Mat::from_rows(2, 2, &[3., 0., 0., 4.]);
         assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padded_view_matches_materialized() {
+        let m = Mat::from_rows(2, 2, &[1., 2., 3., 4.]);
+        let v = Padded::new(&m, 3);
+        assert_eq!(v.rows(), 5);
+        assert_eq!(v.cols(), 2);
+        assert_eq!(v.filled(), 2);
+        assert_eq!(v.col_top(1), &[2.0, 4.0]);
+        let oracle = m.pad_rows(3);
+        for i in 0..5 {
+            for j in 0..2 {
+                assert_eq!(v.get(i, j), oracle.get(i, j));
+            }
+        }
+        assert_eq!(v.materialize().as_slice(), oracle.as_slice());
+        let zero_extra = Padded::from(&m);
+        assert_eq!(zero_extra.rows(), 2);
+        assert_eq!(zero_extra.materialize().as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn reset_and_copy_from_reuse_buffers() {
+        let mut m = Mat::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        m.reset(3, 2);
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
+        let src = Mat::from_rows(2, 2, &[7., 8., 9., 10.]);
+        m.copy_from(&src);
+        assert_eq!(m.as_slice(), src.as_slice());
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+    }
+
+    #[test]
+    fn keep_and_swap_cols_in_place() {
+        let mut m = Mat::from_rows(2, 4, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let want = m.select_cols(&[1, 3]);
+        m.keep_cols(&[1, 3]);
+        assert_eq!(m.as_slice(), want.as_slice());
+        let mut s = Mat::from_rows(2, 2, &[1., 2., 3., 4.]);
+        s.swap_cols(0, 1);
+        assert_eq!(s.get(0, 0), 2.0);
+        assert_eq!(s.get(1, 1), 3.0);
+        s.swap_cols(1, 1); // no-op
+        assert_eq!(s.get(0, 1), 1.0);
     }
 }

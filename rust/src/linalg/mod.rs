@@ -18,5 +18,7 @@ pub mod rng;
 pub mod rsvd;
 pub mod svd;
 pub mod threads;
+pub mod workspace;
 
 pub use threads::Threads;
+pub use workspace::StepWorkspace;

@@ -2,8 +2,9 @@
 //! orthonormalizer used on the G-REST hot path.
 
 use crate::linalg::blas;
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
 use crate::linalg::threads::Threads;
+use crate::linalg::workspace::StepWorkspace;
 
 /// Thin QR factorization A = Q R with Q (m×n, orthonormal columns) and R
 /// (n×n upper-triangular), m >= n, via Householder reflectors.
@@ -98,50 +99,91 @@ pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
 /// Returns (q, kept) where `q` has only the surviving columns and `kept`
 /// maps them back to panel column indices.  This is the construction of
 /// the paper's Eq. (11).
-pub fn orthonormalize_against(x: &Mat, panel: &Mat, tol: f64) -> (Mat, Vec<usize>) {
+pub fn orthonormalize_against<'a>(
+    x: impl Into<Padded<'a>>,
+    panel: &Mat,
+    tol: f64,
+) -> (Mat, Vec<usize>) {
     orthonormalize_against_with(x, panel, tol, Threads::AUTO)
 }
 
-/// [`orthonormalize_against`] with an explicit thread budget.
-///
-/// The project-out pass is *fused* into the CholeskyQR round: one sweep
-/// (`blas::proj_gram_with`) yields both C = XᵀP and G = PᵀP, the
-/// projected Gram is formed algebraically as G − CᵀC (exact for
-/// orthonormal X), and the panel update applies projection and
-/// triangular solve together as P·R⁻¹ − X·(C·R⁻¹).  Per round, X̄ and P
-/// are each read once in the Gram sweep and once in the update — the
-/// separate (I−XXᵀ)P materialization of the unfused pipeline is gone.
-pub fn orthonormalize_against_with(
-    x: &Mat,
+/// [`orthonormalize_against`] with an explicit thread budget.  Accepts
+/// the padded X̄ as a borrowed [`Padded`] view (`&Mat` works too); the
+/// structurally-zero rows never enter the Gram sweeps.
+pub fn orthonormalize_against_with<'a>(
+    x: impl Into<Padded<'a>>,
     panel: &Mat,
     tol: f64,
     threads: Threads,
 ) -> (Mat, Vec<usize>) {
-    assert_eq!(x.rows(), panel.rows());
-    let m = panel.cols();
-    if m == 0 {
-        return (Mat::zeros(panel.rows(), 0), vec![]);
-    }
+    let mut ws = StepWorkspace::new();
     let mut p = panel.clone();
-    let mut alive = vec![true; m];
+    let mut kept = Vec::new();
+    orthonormalize_against_into(x.into(), &mut p, tol, threads, &mut ws, &mut kept);
+    (p, kept)
+}
+
+/// The workspace-backed core of [`orthonormalize_against_with`]: the
+/// panel is consumed *in place* (on return `p` holds the surviving
+/// orthonormal columns, compacted left), every BCGS2 round buffer comes
+/// from `ws`, and the surviving panel-column indices land in `kept` —
+/// zero heap allocations once `ws` is warm.
+///
+/// The project-out pass is *fused* into the CholeskyQR round: one sweep
+/// (`blas::proj_gram_into`) yields both C = X̄ᵀP and G = PᵀP, the
+/// projected Gram is formed algebraically as G − CᵀC (exact for
+/// orthonormal X̄), and the panel update applies projection and
+/// triangular solve together as P·R⁻¹ − X̄·(C·R⁻¹).  Per round, X̄ and P
+/// are each read once in the Gram sweep and once in the update — the
+/// separate (I−X̄X̄ᵀ)P materialization of the unfused pipeline is gone.
+pub fn orthonormalize_against_into(
+    x: Padded<'_>,
+    p: &mut Mat,
+    tol: f64,
+    threads: Threads,
+    ws: &mut StepWorkspace,
+    kept: &mut Vec<usize>,
+) {
+    assert_eq!(x.rows(), p.rows());
+    kept.clear();
+    let m = p.cols();
+    if m == 0 {
+        return;
+    }
+    let mut alive = ws.take_flags(m, true);
+    let mut keep = ws.take_flags(0, true);
+    let mut c = ws.take_mat(0, 0);
+    let mut g = ws.take_mat(0, 0);
+    let mut ctc = ws.take_mat(0, 0);
+    let mut l = ws.take_mat(0, 0);
+    let mut rinv = ws.take_mat(0, 0);
+    let mut cr = ws.take_mat(0, 0);
+    let mut pnew = ws.take_mat(0, 0);
     for _pass in 0..2 {
-        let (c, mut g) = blas::proj_gram_with(x, &p, threads);
+        blas::proj_gram_into(&mut c, &mut g, x, p, threads);
         // Gram of the projected panel: (P−XC)ᵀ(P−XC) = G − CᵀC
-        let ctc = blas::syrk_tn_with(&c, &c, threads);
+        blas::syrk_tn_into(&mut ctc, &c, &c, threads);
         g.axpy(-1.0, &ctc);
-        let (l, keep) = crate::linalg::chol::cholesky_guarded(&g, tol.max(1e-14));
+        crate::linalg::chol::cholesky_guarded_into(&g, tol.max(1e-14), &mut l, &mut keep);
         for (a, k) in alive.iter_mut().zip(keep.iter()) {
             *a &= k;
         }
-        let rinv = crate::linalg::chol::tri_inv_upper(&l.t());
+        crate::linalg::chol::tri_inv_upper_from_lower_into(&l, &mut rinv);
         // P ← (P − X·C)·R⁻¹, applied as P·R⁻¹ − X·(C·R⁻¹)
-        let cr = c.matmul(&rinv);
-        let mut pnew = blas::gemm_with(&p, &rinv, threads);
+        blas::gemm_into(&mut cr, &c, &rinv, threads);
+        blas::gemm_into(&mut pnew, &*p, &rinv, threads);
         blas::gemm_acc_with(&mut pnew, x, &cr, -1.0, threads);
-        p = pnew;
+        std::mem::swap(p, &mut pnew);
     }
+    ws.give_mat(pnew);
+    ws.give_mat(cr);
+    ws.give_mat(rinv);
+    ws.give_mat(l);
+    ws.give_mat(ctc);
+    ws.give_mat(g);
+    ws.give_mat(c);
+    ws.give_flags(keep);
     // survivors have unit norm; dependent columns collapsed to ~0
-    let mut kept: Vec<usize> = Vec::new();
     for (j, a) in alive.iter().enumerate() {
         let nrm = blas::nrm2(p.col(j));
         if *a && nrm > 0.5 {
@@ -152,7 +194,8 @@ pub fn orthonormalize_against_with(
             }
         }
     }
-    (p.select_cols(&kept), kept)
+    ws.give_flags(alive);
+    p.keep_cols(kept);
 }
 
 #[cfg(test)]
@@ -234,6 +277,51 @@ mod tests {
         let (q, kept) = orthonormalize_against(&x, &panel, 1e-8);
         assert_eq!(kept, vec![0, 1, 2]);
         check_orthonormal(&q, 1e-9);
+    }
+
+    #[test]
+    fn orthonormalize_padded_bitwise_matches_materialized_oracle() {
+        // tentpole contract at the BCGS2 level: running over the Padded
+        // X̄ view equals running over the pad_rows matrix to the last
+        // bit, across shapes (incl. extra == 0 and lane-straddling row
+        // counts) and thread counts 1/4.
+        let mut rng = Rng::new(8);
+        for &(n_old, extra, k, m) in &[
+            (50usize, 0usize, 4usize, 6usize),
+            (61, 11, 5, 7),
+            (2000, 64, 24, 40),
+        ] {
+            let (x, _) = thin_qr(&Mat::randn(n_old, k, &mut rng));
+            let panel = Mat::randn(n_old + extra, m, &mut rng);
+            let xm = x.pad_rows(extra);
+            for &tc in &[Threads(1), Threads(4)] {
+                let (qp, kp) = orthonormalize_against_with(Padded::new(&x, extra), &panel, 1e-8, tc);
+                let (qm, km) = orthonormalize_against_with(&xm, &panel, 1e-8, tc);
+                assert_eq!(kp, km, "kept mismatch n_old={n_old} extra={extra} t={}", tc.0);
+                assert_eq!(
+                    qp.as_slice(),
+                    qm.as_slice(),
+                    "q drifted n_old={n_old} extra={extra} t={}",
+                    tc.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormalize_into_is_reusable_and_matches_wrapper() {
+        let mut rng = Rng::new(9);
+        let mut ws = StepWorkspace::new();
+        let mut kept = Vec::new();
+        for trial in 0..3 {
+            let (x, _) = thin_qr(&Mat::randn(40 + trial, 4, &mut rng));
+            let panel = Mat::randn(40 + trial, 6, &mut rng);
+            let (want_q, want_kept) = orthonormalize_against_with(&x, &panel, 1e-8, Threads(1));
+            let mut p = panel.clone();
+            orthonormalize_against_into(Padded::from(&x), &mut p, 1e-8, Threads(1), &mut ws, &mut kept);
+            assert_eq!(kept, want_kept);
+            assert_eq!(p.as_slice(), want_q.as_slice());
+        }
     }
 
     #[test]

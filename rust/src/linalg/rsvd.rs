@@ -6,7 +6,7 @@
 //! N×S matrix is never materialized.
 
 use crate::linalg::blas;
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
 use crate::linalg::rng::Rng;
 use crate::linalg::svd::thin_svd;
 
@@ -14,8 +14,12 @@ use crate::linalg::svd::thin_svd;
 ///
 /// * `s` — number of columns of Δ₂ (newly added nodes).
 /// * `d2_mult(Ω)`   — Δ₂ · Ω for Ω (S×j), returns (N×j).
-/// * `d2_t_mult(M)` — Δ₂ᵀ · M for M (N×j), returns (S×j).
-/// * `x` — orthonormal panel to project out (pass `None` to skip).
+/// * `d2_t_mult(M, extra)` — Δ₂ᵀ · [M; 0] where `extra` zero rows pad M
+///   to N rows, returns (S×j).  The split signature lets the caller pass
+///   the X̄ view without materializing its zero rows (and plain panels
+///   with `extra == 0`).
+/// * `x` — orthonormal panel to project out, as a [`Padded`] view so
+///   the G-REST caller never materializes X̄ (`None` to skip).
 /// * `l`, `p` — rank and oversampling (paper's L and P).
 ///
 /// Returns an N×L′ orthonormal matrix, L′ ≤ L (smaller if the sketch
@@ -24,8 +28,8 @@ use crate::linalg::svd::thin_svd;
 pub fn rsvd_basis(
     s: usize,
     d2_mult: &dyn Fn(&Mat) -> Mat,
-    d2_t_mult: &dyn Fn(&Mat) -> Mat,
-    x: Option<&Mat>,
+    d2_t_mult: &dyn Fn(&Mat, usize) -> Mat,
+    x: Option<Padded<'_>>,
     l: usize,
     p: usize,
     rng: &mut Rng,
@@ -38,23 +42,20 @@ pub fn rsvd_basis(
         y = blas::project_out(xm, &y);
     }
     // Orthonormal M = Ran(Y); deflate numerically-zero directions.
-    let (m_basis, kept) = crate::linalg::qr::orthonormalize_against(
-        &Mat::zeros(y.rows(), 0),
-        &y,
-        1e-10,
-    );
+    let empty = Mat::zeros(y.rows(), 0);
+    let (m_basis, kept) = crate::linalg::qr::orthonormalize_against(&empty, &y, 1e-10);
     if kept.is_empty() {
         return Mat::zeros(y.rows(), 0);
     }
     // S.2: small SVD of B = Mᵀ (I − XXᵀ) Δ₂  ((L+P)×S), computed as
     //      (Δ₂ᵀ M)ᵀ − (Mᵀ X)(Xᵀ Δ₂) without densifying Δ₂.
-    let d2t_m = d2_t_mult(&m_basis); // S×(L+P)
+    let d2t_m = d2_t_mult(&m_basis, 0); // S×(L+P)
     let mut b_t = d2t_m; // Bᵀ: S×(L+P)
     if let Some(xm) = x {
         // Bᵀ -= (Δ₂ᵀ X)(Xᵀ M)  — Xᵀ M is ~0 by construction of M, but we
         // keep the exact correction for robustness.
-        let d2t_x = d2_t_mult(xm); // S×K
-        let xt_m = xm.t_matmul(&m_basis); // K×(L+P)
+        let d2t_x = d2_t_mult(xm.mat, xm.extra_rows); // S×K
+        let xt_m = blas::gemm_tn(xm, &m_basis); // K×(L+P)
         blas::gemm_acc(&mut b_t, &d2t_x, &xt_m, -1.0);
     }
     // thin_svd wants rows >= cols; Bᵀ is S×(L+P).  If S < L+P (clamped
@@ -77,10 +78,10 @@ mod tests {
     use super::*;
     use crate::linalg::qr::thin_qr;
 
-    fn dense_ops(d2: &Mat) -> (impl Fn(&Mat) -> Mat + '_, impl Fn(&Mat) -> Mat + '_) {
+    fn dense_ops(d2: &Mat) -> (impl Fn(&Mat) -> Mat + '_, impl Fn(&Mat, usize) -> Mat + '_) {
         (
             move |om: &Mat| d2.matmul(om),
-            move |m: &Mat| d2.t_matmul(m),
+            move |m: &Mat, extra: usize| d2.t_matmul(&m.pad_rows(extra)),
         )
     }
 
@@ -106,7 +107,7 @@ mod tests {
         let (x, _) = thin_qr(&Mat::randn(60, 5, &mut rng));
         let d2 = Mat::randn(60, 30, &mut rng);
         let (mul, tmul) = dense_ops(&d2);
-        let r = rsvd_basis(30, &mul, &tmul, Some(&x), 8, 4, &mut rng);
+        let r = rsvd_basis(30, &mul, &tmul, Some(Padded::from(&x)), 8, 4, &mut rng);
         assert_eq!(r.cols(), 8);
         let g = r.t_matmul(&r);
         let mut eye = Mat::eye(8);

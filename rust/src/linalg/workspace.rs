@@ -1,0 +1,159 @@
+//! [`StepWorkspace`] — the grow-only scratch arena behind the
+//! allocation-free G-REST update step.
+//!
+//! Every per-step temporary of the dense pipeline (the assembled panel,
+//! the BCGS2 round buffers, ΔQ, T, F₁/F₂, the small-eigh scratch, and
+//! the double-buffered state vectors) is drawn from this pool and
+//! returned after use.  The pool is a LIFO stack of `f64` buffers: a
+//! step performs a fixed sequence of take/give calls, so after a warm-up
+//! step at a given problem shape every `take` pops a buffer whose
+//! capacity already fits and **no heap allocation happens** — the
+//! property `benches/microbench_grest.rs` asserts with a counting global
+//! allocator.
+//!
+//! Buffers hand out as [`Mat`]s via [`StepWorkspace::take_mat`]
+//! (zero-filled, reshaped in place) or as raw scratch vectors via
+//! [`StepWorkspace::take_buf`] (cleared, capacity kept).  Give every
+//! buffer back when done; leaking one is harmless (the pool regrows) but
+//! re-introduces steady-state allocations.
+
+use crate::linalg::eigh::EighWork;
+use crate::linalg::mat::Mat;
+
+/// Upper bound on pooled buffers.  The native G-REST step keeps ~20 in
+/// flight, comfortably under the cap, so it never drops (and stays
+/// allocation-free).  Backends that return *fresh* matrices instead of
+/// workspace-backed ones (the PJRT/XLA wrapper) give back more buffers
+/// than they take; without a cap the LIFO pool would grow by a few
+/// large buffers per step, a slow leak over long streams.  Excess
+/// buffers are simply dropped.
+const POOL_CAP: usize = 32;
+
+/// Grow-only buffer pool plus the named scratch of one tracker step.
+pub struct StepWorkspace {
+    pool: Vec<Vec<f64>>,
+    flag_pool: Vec<Vec<bool>>,
+    /// Surviving panel-column indices of the last `build_basis`.
+    pub kept: Vec<usize>,
+    /// Ritz-pair ordering scratch (`order_by_magnitude_into`).
+    pub order: Vec<usize>,
+    /// Small symmetric eigendecomposition scratch.
+    pub eig: EighWork,
+}
+
+impl Default for StepWorkspace {
+    fn default() -> StepWorkspace {
+        StepWorkspace::new()
+    }
+}
+
+impl StepWorkspace {
+    pub fn new() -> StepWorkspace {
+        StepWorkspace {
+            pool: Vec::new(),
+            flag_pool: Vec::new(),
+            kept: Vec::new(),
+            order: Vec::new(),
+            eig: EighWork::new(),
+        }
+    }
+
+    /// A zero-filled rows×cols matrix backed by a recycled buffer.
+    pub fn take_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(rows * cols, 0.0);
+        Mat::from_vec(rows, cols, buf)
+    }
+
+    /// Return a matrix's backing buffer to the pool (dropped if the
+    /// pool is at [`POOL_CAP`]).
+    pub fn give_mat(&mut self, m: Mat) {
+        self.give_buf(m.into_vec());
+    }
+
+    /// An empty `Vec<f64>` with recycled capacity (length 0).
+    pub fn take_buf(&mut self) -> Vec<f64> {
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    /// Return a scratch vector to the pool (dropped if the pool is at
+    /// [`POOL_CAP`]).
+    pub fn give_buf(&mut self, buf: Vec<f64>) {
+        if self.pool.len() < POOL_CAP {
+            self.pool.push(buf);
+        }
+    }
+
+    /// A `Vec<bool>` of `len` copies of `init`, capacity recycled.
+    pub fn take_flags(&mut self, len: usize, init: bool) -> Vec<bool> {
+        let mut f = self.flag_pool.pop().unwrap_or_default();
+        f.clear();
+        f.resize(len, init);
+        f
+    }
+
+    /// Return a flag vector to the pool (same [`POOL_CAP`] bound).
+    pub fn give_flags(&mut self, f: Vec<bool>) {
+        if self.flag_pool.len() < POOL_CAP {
+            self.flag_pool.push(f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_mat_is_zero_filled_even_after_reuse() {
+        let mut ws = StepWorkspace::new();
+        let mut m = ws.take_mat(3, 2);
+        m.set(2, 1, 7.0);
+        ws.give_mat(m);
+        let m2 = ws.take_mat(2, 2);
+        assert!(m2.as_slice().iter().all(|&v| v == 0.0));
+        assert_eq!((m2.rows(), m2.cols()), (2, 2));
+    }
+
+    #[test]
+    fn pool_recycles_capacity() {
+        let mut ws = StepWorkspace::new();
+        let m = ws.take_mat(100, 4);
+        let ptr = m.as_slice().as_ptr();
+        ws.give_mat(m);
+        // same-or-smaller request reuses the same backing buffer
+        let m2 = ws.take_mat(50, 8);
+        assert_eq!(m2.as_slice().as_ptr(), ptr);
+        ws.give_mat(m2);
+        let buf = ws.take_buf();
+        assert!(buf.capacity() >= 400);
+        assert_eq!(buf.len(), 0);
+        ws.give_buf(buf);
+    }
+
+    #[test]
+    fn pool_is_capped() {
+        // a backend that gives more than it takes (the XLA wrapper)
+        // must not grow the pool without bound
+        let mut ws = StepWorkspace::new();
+        for _ in 0..3 * POOL_CAP {
+            ws.give_buf(vec![0.0; 8]);
+            ws.give_flags(vec![true; 8]);
+        }
+        assert_eq!(ws.pool.len(), POOL_CAP);
+        assert_eq!(ws.flag_pool.len(), POOL_CAP);
+    }
+
+    #[test]
+    fn flags_reset_on_take() {
+        let mut ws = StepWorkspace::new();
+        let mut f = ws.take_flags(4, true);
+        f[2] = false;
+        ws.give_flags(f);
+        let f2 = ws.take_flags(6, true);
+        assert_eq!(f2, vec![true; 6]);
+    }
+}

@@ -9,7 +9,8 @@
 //! deflated by `build_basis`'s rank screening (invariants tested both in
 //! pytest and here).
 
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
+use crate::linalg::workspace::StepWorkspace;
 use crate::runtime::artifact::{ArtifactManifest, Tier};
 use crate::runtime::exec::{self, ExecCache};
 use crate::tracking::grest::DensePhases;
@@ -122,18 +123,42 @@ impl XlaPhases {
 }
 
 impl DensePhases for XlaPhases {
-    fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
-        self.run_build_basis(xbar, panel)
-            .expect("XLA build_basis failed")
+    // PJRT marshalling zero-pads every operand to the tier shape anyway,
+    // so this backend materializes the Padded X̄ view before the copy-in;
+    // its returned matrices are absorbed by the caller's workspace.
+    fn build_basis(&self, xbar: Padded<'_>, panel: Mat, ws: &mut StepWorkspace) -> Mat {
+        let xb = xbar.materialize();
+        let q = self
+            .run_build_basis(&xb, &panel)
+            .expect("XLA build_basis failed");
+        ws.give_mat(panel);
+        q
     }
 
-    fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
-        self.run_form_t(xbar, q, lam, dxk, dq)
+    fn form_t(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        lam: &[f64],
+        dxk: &Mat,
+        dq: &Mat,
+        _ws: &mut StepWorkspace,
+    ) -> Mat {
+        let xb = xbar.materialize();
+        self.run_form_t(&xb, q, lam, dxk, dq)
             .expect("XLA form_t failed")
     }
 
-    fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
-        self.run_rotate(xbar, q, f1, f2).expect("XLA rotate failed")
+    fn rotate(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        f1: &Mat,
+        f2: &Mat,
+        _ws: &mut StepWorkspace,
+    ) -> Mat {
+        let xb = xbar.materialize();
+        self.run_rotate(&xb, q, f1, f2).expect("XLA rotate failed")
     }
 
     fn label(&self) -> &'static str {
@@ -170,10 +195,11 @@ mod tests {
     fn xla_matches_native_build_basis() {
         let Some(xp) = phases() else { return };
         let mut rng = Rng::new(1);
+        let mut ws = StepWorkspace::new();
         let (x, _) = thin_qr(&Mat::randn(200, 16, &mut rng));
         let panel = Mat::randn(200, 20, &mut rng);
-        let q_xla = xp.build_basis(&x, &panel);
-        let q_nat = NativePhases::default().build_basis(&x, &panel);
+        let q_xla = xp.build_basis(Padded::from(&x), panel.clone(), &mut ws);
+        let q_nat = NativePhases::default().build_basis(Padded::from(&x), panel.clone(), &mut ws);
         assert_eq!(q_xla.cols(), q_nat.cols());
         // bases may differ by rotation; compare projectors P = QQᵀ on a
         // probe block
@@ -195,23 +221,25 @@ mod tests {
     fn xla_matches_native_form_t_and_rotate() {
         let Some(xp) = phases() else { return };
         let mut rng = Rng::new(2);
+        let mut ws = StepWorkspace::new();
         let (x, _) = thin_qr(&Mat::randn(150, 16, &mut rng));
         let (qfull, _) = thin_qr(&Mat::randn(150, 36, &mut rng));
         // q must be orthogonal to x for the contract; project and renorm
-        let q = NativePhases::default().build_basis(&x, &qfull.top_left(150, 12));
+        let q =
+            NativePhases::default().build_basis(Padded::from(&x), qfull.top_left(150, 12), &mut ws);
         let lam: Vec<f64> = (0..16).map(|i| 8.0 - i as f64).collect();
         let dxk = Mat::randn(150, 16, &mut rng);
         let dq = Mat::randn(150, q.cols(), &mut rng);
-        let t_xla = xp.form_t(&x, &q, &lam, &dxk, &dq);
-        let t_nat = NativePhases::default().form_t(&x, &q, &lam, &dxk, &dq);
+        let t_xla = xp.form_t(Padded::from(&x), &q, &lam, &dxk, &dq, &mut ws);
+        let t_nat = NativePhases::default().form_t(Padded::from(&x), &q, &lam, &dxk, &dq, &mut ws);
         let mut diff = t_xla.clone();
         diff.axpy(-1.0, &t_nat);
         assert!(diff.max_abs() < 1e-3, "form_t mismatch {}", diff.max_abs());
 
         let f1 = Mat::randn(16, 16, &mut rng);
         let f2 = Mat::randn(q.cols(), 16, &mut rng);
-        let r_xla = xp.rotate(&x, &q, &f1, &f2);
-        let r_nat = NativePhases::default().rotate(&x, &q, &f1, &f2);
+        let r_xla = xp.rotate(Padded::from(&x), &q, &f1, &f2, &mut ws);
+        let r_nat = NativePhases::default().rotate(Padded::from(&x), &q, &f1, &f2, &mut ws);
         let mut rdiff = r_xla.clone();
         rdiff.axpy(-1.0, &r_nat);
         assert!(rdiff.max_abs() < 1e-3, "rotate mismatch {}", rdiff.max_abs());

@@ -6,7 +6,8 @@
 //! [`XlaPhases::for_problem`] always fails with an explanatory error and
 //! callers fall back to the native backend.
 
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
+use crate::linalg::workspace::StepWorkspace;
 use crate::runtime::artifact::{ArtifactManifest, Tier};
 use crate::tracking::grest::DensePhases;
 use crate::tracking::spec::Backend;
@@ -39,15 +40,30 @@ impl XlaPhases {
 }
 
 impl DensePhases for XlaPhases {
-    fn build_basis(&self, _xbar: &Mat, _panel: &Mat) -> Mat {
+    fn build_basis(&self, _xbar: Padded<'_>, _panel: Mat, _ws: &mut StepWorkspace) -> Mat {
         unreachable!("stub XlaPhases cannot be constructed")
     }
 
-    fn form_t(&self, _xbar: &Mat, _q: &Mat, _lam: &[f64], _dxk: &Mat, _dq: &Mat) -> Mat {
+    fn form_t(
+        &self,
+        _xbar: Padded<'_>,
+        _q: &Mat,
+        _lam: &[f64],
+        _dxk: &Mat,
+        _dq: &Mat,
+        _ws: &mut StepWorkspace,
+    ) -> Mat {
         unreachable!("stub XlaPhases cannot be constructed")
     }
 
-    fn rotate(&self, _xbar: &Mat, _q: &Mat, _f1: &Mat, _f2: &Mat) -> Mat {
+    fn rotate(
+        &self,
+        _xbar: Padded<'_>,
+        _q: &Mat,
+        _f1: &Mat,
+        _f2: &Mat,
+        _ws: &mut StepWorkspace,
+    ) -> Mat {
         unreachable!("stub XlaPhases cannot be constructed")
     }
 

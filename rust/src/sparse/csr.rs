@@ -232,21 +232,25 @@ impl Csr {
         self.matmul_dense_with(b, Threads::AUTO)
     }
 
-    /// [`Csr::matmul_dense`] with an explicit worker-thread budget.
-    ///
-    /// Single pass over the sparse rows (rows outer, panel columns
-    /// inner): each row walks its `indptr` range once and streams the
-    /// matching rows of B from a row-major copy, instead of re-walking
-    /// the whole matrix once per panel column.  Output rows are
-    /// partitioned across workers weighted by row nnz; the per-element
-    /// reduction order (ascending nonzero position) never changes, so
-    /// results are bitwise identical across thread counts — the sparse
-    /// analogue of the dense layer's column-partition contract.
-    pub fn matmul_dense_with(&self, b: &Mat, threads: Threads) -> Mat {
+    /// [`Csr::matmul_dense_with`] writing into a caller-owned output,
+    /// with the row-major B copy and the per-row accumulator drawn from
+    /// `ws` — zero heap allocations on the sequential path once `ws` is
+    /// warm.
+    pub fn matmul_dense_into(
+        &self,
+        b: &Mat,
+        out: &mut Mat,
+        ws: &mut crate::linalg::workspace::StepWorkspace,
+        threads: Threads,
+    ) {
         assert_eq!(self.n_cols, b.rows());
         let k = b.cols();
-        let bt = dense_row_major(b);
-        rowwise_spmm(
+        let mut bt = ws.take_buf();
+        dense_row_major_into(b, &mut bt);
+        let mut acc = ws.take_buf();
+        rowwise_spmm_into(
+            out,
+            &mut acc,
             self.n_rows,
             k,
             |i| self.indptr[i + 1] - self.indptr[i] + 1,
@@ -258,7 +262,26 @@ impl Csr {
                     crate::linalg::blas::axpy(v, &bt[j * k..(j + 1) * k], acc);
                 }
             },
-        )
+        );
+        ws.give_buf(acc);
+        ws.give_buf(bt);
+    }
+
+    /// [`Csr::matmul_dense`] with an explicit worker-thread budget.
+    ///
+    /// Single pass over the sparse rows (rows outer, panel columns
+    /// inner): each row walks its `indptr` range once and streams the
+    /// matching rows of B from a row-major copy, instead of re-walking
+    /// the whole matrix once per panel column.  Output rows are
+    /// partitioned across workers weighted by row nnz; the per-element
+    /// reduction order (ascending nonzero position) never changes, so
+    /// results are bitwise identical across thread counts — the sparse
+    /// analogue of the dense layer's column-partition contract.
+    pub fn matmul_dense_with(&self, b: &Mat, threads: Threads) -> Mat {
+        let mut ws = crate::linalg::workspace::StepWorkspace::new();
+        let mut out = Mat::zeros(0, 0);
+        self.matmul_dense_into(b, &mut out, &mut ws, threads);
+        out
     }
 
     /// Aᵀ · B for a dense panel B (n_rows × m) → (n_cols × m),
@@ -356,15 +379,22 @@ impl Csr {
 /// kernels stream whole B rows contiguously from this buffer, one
 /// `axpy` per nonzero.
 pub(crate) fn dense_row_major(b: &Mat) -> Vec<f64> {
+    let mut out = Vec::new();
+    dense_row_major_into(b, &mut out);
+    out
+}
+
+/// [`dense_row_major`] into a caller-owned (grow-only) buffer.
+pub(crate) fn dense_row_major_into(b: &Mat, out: &mut Vec<f64>) {
     let (n, k) = (b.rows(), b.cols());
-    let mut out = vec![0.0; n * k];
+    out.clear();
+    out.resize(n * k, 0.0);
     for c in 0..k {
         let col = b.col(c);
         for i in 0..n {
             out[i * k + c] = col[i];
         }
     }
-    out
 }
 
 /// Row-partitioned driver shared by the sparse panel products
@@ -387,16 +417,42 @@ pub(crate) fn rowwise_spmm<F>(
 where
     F: Fn(usize, &mut [f64]) + Sync,
 {
-    let mut out = Mat::zeros(rows, k);
+    let mut out = Mat::zeros(0, 0);
+    let mut acc = Vec::new();
+    rowwise_spmm_into(&mut out, &mut acc, rows, k, weight, flops, threads, kernel);
+    out
+}
+
+/// [`rowwise_spmm`] writing into a caller-owned output (reshaped in
+/// place) with a caller-owned accumulator scratch: the sequential path
+/// performs no heap allocation.  The threaded path still allocates its
+/// per-worker blocks — spawning threads allocates regardless, and the
+/// allocation-free steady-state contract is a `Threads(1)` property.
+pub(crate) fn rowwise_spmm_into<F>(
+    out: &mut Mat,
+    acc_scratch: &mut Vec<f64>,
+    rows: usize,
+    k: usize,
+    weight: impl Fn(usize) -> usize,
+    flops: usize,
+    threads: Threads,
+    kernel: F,
+) where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    out.reset(rows, k);
     if rows == 0 || k == 0 {
-        return out;
+        return;
     }
-    let run = |lo: usize, hi: usize, buf: &mut [f64]| {
+    // one row loop shared by both paths; the accumulator comes in from
+    // the caller (sequential) or is worker-local (threaded)
+    let run = |lo: usize, hi: usize, buf: &mut [f64], acc: &mut Vec<f64>| {
         let chunk = hi - lo;
-        let mut acc = vec![0.0; k];
+        acc.clear();
+        acc.resize(k, 0.0);
         for i in lo..hi {
             acc.fill(0.0);
-            kernel(i, &mut acc);
+            kernel(i, acc);
             for (c, &v) in acc.iter().enumerate() {
                 buf[(i - lo) + c * chunk] = v;
             }
@@ -404,8 +460,8 @@ where
     };
     let workers = threads.for_flops(flops).min(rows);
     if workers <= 1 {
-        run(0, rows, out.as_mut_slice());
-        return out;
+        run(0, rows, out.as_mut_slice(), acc_scratch);
+        return;
     }
     let chunks = balanced_col_chunks(rows, workers, weight);
     let locals: Vec<Vec<f64>> = std::thread::scope(|s| {
@@ -415,7 +471,8 @@ where
             .map(|&(lo, hi)| {
                 s.spawn(move || {
                     let mut buf = vec![0.0; (hi - lo) * k];
-                    run(lo, hi, &mut buf);
+                    let mut acc = Vec::new();
+                    run(lo, hi, &mut buf, &mut acc);
                     buf
                 })
             })
@@ -428,7 +485,6 @@ where
             out.col_mut(c)[lo..hi].copy_from_slice(&local[c * rows_c..(c + 1) * rows_c]);
         }
     }
-    out
 }
 
 impl LinOp for Csr {

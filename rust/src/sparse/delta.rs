@@ -8,10 +8,13 @@
 //! Stored as one symmetric (N+S)×(N+S) CSR plus the block split, with the
 //! products the trackers need: Δ·B, Δ₂·Ω, Δ₂ᵀ·M, dense Δ₂.
 
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
 use crate::linalg::threads::Threads;
+use crate::linalg::workspace::StepWorkspace;
 use crate::sparse::coo::Coo;
-use crate::sparse::csr::{dense_row_major, rowwise_spmm, Csr};
+use crate::sparse::csr::{
+    dense_row_major, dense_row_major_into, rowwise_spmm, rowwise_spmm_into, Csr,
+};
 
 /// Structured graph update (one time step).
 #[derive(Clone, Debug)]
@@ -78,6 +81,18 @@ impl Delta {
         self.full.matmul_dense_with(b, threads)
     }
 
+    /// [`Delta::matmul_dense_with`] into caller-owned storage (scratch
+    /// from `ws`; allocation-free once warm on the sequential path).
+    pub fn matmul_dense_into(
+        &self,
+        b: &Mat,
+        out: &mut Mat,
+        ws: &mut StepWorkspace,
+        threads: Threads,
+    ) {
+        self.full.matmul_dense_into(b, out, ws, threads);
+    }
+
     /// Δ · X̄ where X̄ is the zero-padded eigenvector panel: accepts the
     /// *unpadded* N×K matrix and returns (N+S)×K (uses that the padded
     /// rows of X̄ are zero, Prop. 4).  Auto thread budget.
@@ -90,10 +105,25 @@ impl Delta {
     /// contract as [`Csr::matmul_dense_with`].  Row indices are sorted,
     /// so each row stops at the first expansion column.
     pub fn mul_padded_with(&self, x: &Mat, threads: Threads) -> Mat {
+        let mut ws = StepWorkspace::new();
+        let mut out = Mat::zeros(0, 0);
+        self.mul_padded_into(x, &mut out, &mut ws, threads);
+        out
+    }
+
+    /// [`Delta::mul_padded_with`] into caller-owned storage: the output,
+    /// the row-major X copy, and the per-row accumulator all come from
+    /// `out`/`ws` — the ΔX̄ product of a warmed tracker step allocates
+    /// nothing on the sequential path.
+    pub fn mul_padded_into(&self, x: &Mat, out: &mut Mat, ws: &mut StepWorkspace, threads: Threads) {
         assert_eq!(x.rows(), self.n_old);
         let k = x.cols();
-        let xt = dense_row_major(x);
-        rowwise_spmm(
+        let mut xt = ws.take_buf();
+        dense_row_major_into(x, &mut xt);
+        let mut acc = ws.take_buf();
+        rowwise_spmm_into(
+            out,
+            &mut acc,
             self.n_new(),
             k,
             |i| self.full.indptr[i + 1] - self.full.indptr[i] + 1,
@@ -108,7 +138,9 @@ impl Delta {
                     crate::linalg::blas::axpy(v, &xt[c * k..(c + 1) * k], acc);
                 }
             },
-        )
+        );
+        ws.give_buf(acc);
+        ws.give_buf(xt);
     }
 
     /// Δ₂ · Ω  (Ω: S×j) — product with the trailing S columns of Δ.
@@ -148,10 +180,10 @@ impl Delta {
         )
     }
 
-    /// Δ₂ᵀ · M (M: (N+S)×j) — by symmetry of Δ this is the bottom S rows
-    /// of Δ·M, so it costs one sparse pass over those rows only.  Auto
-    /// thread budget.
-    pub fn d2_t_mult(&self, m: &Mat) -> Mat {
+    /// Δ₂ᵀ · M (M: (N+S)×j, possibly a [`Padded`] view) — by symmetry of
+    /// Δ this is the bottom S rows of Δ·M, so it costs one sparse pass
+    /// over those rows only.  Auto thread budget.
+    pub fn d2_t_mult<'a>(&self, m: impl Into<Padded<'a>>) -> Mat {
         self.d2_t_mult_with(m, Threads::AUTO)
     }
 
@@ -161,11 +193,16 @@ impl Delta {
     /// (N+S)×j panel would reintroduce the very O(N) per-step cost this
     /// kernel exists to avoid.  The parallel threshold likewise counts
     /// only the Δ₂ entries.
-    pub fn d2_t_mult_with(&self, m: &Mat, threads: Threads) -> Mat {
+    ///
+    /// M accepts the [`Padded`] X̄ view: entries of Δ₂ᵀ hitting the
+    /// structurally-zero rows contribute an exact ±0.0 and are skipped —
+    /// bitwise identical to the materialized product, without the copy.
+    pub fn d2_t_mult_with<'a>(&self, m: impl Into<Padded<'a>>, threads: Threads) -> Mat {
+        let m = m.into();
         assert_eq!(m.rows(), self.n_new());
         let k = m.cols();
-        let ms = m.as_slice();
-        let n_rows_m = m.rows();
+        let filled = m.filled();
+        let ms = m.mat.as_slice();
         rowwise_spmm(
             self.s_new,
             k,
@@ -178,8 +215,11 @@ impl Delta {
             |r, acc| {
                 let (cols, vals) = self.full.row(self.n_old + r);
                 for (&c, &v) in cols.iter().zip(vals.iter()) {
+                    if c >= filled {
+                        continue;
+                    }
                     for (j, a) in acc.iter_mut().enumerate() {
-                        *a += v * ms[c + j * n_rows_m];
+                        *a += v * ms[c + j * filled];
                     }
                 }
             },
@@ -356,6 +396,42 @@ mod tests {
         let seq = d.d2_t_mult_with(&b, Threads::SINGLE);
         let par = d.d2_t_mult_with(&b, Threads(4));
         assert_eq!(seq.as_slice(), par.as_slice(), "d2_t_mult");
+    }
+
+    #[test]
+    fn d2_t_mult_padded_view_bitwise_matches_materialized() {
+        use crate::linalg::threads::Threads;
+        let d = example();
+        let mut rng = Rng::new(5);
+        let x = Mat::randn(4, 3, &mut rng);
+        let xbar = x.pad_rows(2);
+        for &tc in &[Threads(1), Threads(4)] {
+            let want = d.d2_t_mult_with(&xbar, tc);
+            let got = d.d2_t_mult_with(Padded::new(&x, 2), tc);
+            assert_eq!(got.as_slice(), want.as_slice());
+        }
+        // extra == 0 degenerates to the plain product
+        let m = Mat::randn(6, 3, &mut rng);
+        let plain = d.d2_t_mult(&m);
+        let viewed = d.d2_t_mult(Padded::from(&m));
+        assert_eq!(plain.as_slice(), viewed.as_slice());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_kernels() {
+        use crate::linalg::threads::Threads;
+        let d = example();
+        let mut rng = Rng::new(6);
+        let x = Mat::randn(4, 3, &mut rng);
+        let mut ws = StepWorkspace::new();
+        let mut out = Mat::zeros(0, 0);
+        d.mul_padded_into(&x, &mut out, &mut ws, Threads(1));
+        let want = d.mul_padded(&x);
+        assert_eq!(out.as_slice(), want.as_slice());
+        let b = Mat::randn(6, 4, &mut rng);
+        d.matmul_dense_into(&b, &mut out, &mut ws, Threads(1));
+        let want = d.matmul_dense(&b);
+        assert_eq!(out.as_slice(), want.as_slice());
     }
 
     #[test]

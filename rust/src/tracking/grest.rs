@@ -2,7 +2,7 @@
 //!
 //! One update step (time t → t+1):
 //!
-//! 1. Receive Δ; pad X_K with S zero rows → X̄_K.
+//! 1. Receive Δ; view X_K with S structural zero rows → X̄_K.
 //! 2. Assemble the update panel
 //!      * G-REST₂:     [ΔX̄_K]                      (Residual-Modes span)
 //!      * G-REST₃:     [ΔX̄_K, Δ₂]                  (proposed, Eq. 11)
@@ -18,14 +18,31 @@
 //! [`NativePhases`] runs them with the in-crate kernels; the `runtime`
 //! module provides an implementation that executes the AOT-compiled
 //! JAX/Pallas artifacts on PJRT instead (same contract, tested equal).
+//!
+//! Two structural properties make the step cheap in steady state:
+//!
+//! * **Padding-aware phases.** X̄_K = [X_K; 0] is passed as a borrowed
+//!   [`Padded`] view — the S structurally-zero rows are never copied
+//!   (the old per-step `pad_rows` heap clone is gone) and never
+//!   multiplied (every X̄-touching GEMM sheds the S/n fraction of its
+//!   flops).  Zero contributions are exact in IEEE arithmetic and the
+//!   kernels keep their reduction orders, so results are bitwise
+//!   identical to the materialized-pad oracle (property-tested below).
+//! * **Zero-allocation updates.** Every per-step temporary (the panel,
+//!   assembled in place instead of via `hcat`; Q; ΔQ; T; F₁/F₂; the
+//!   BCGS2 round buffers; the small-eigh scratch; and the
+//!   double-buffered state vectors, swapped after `rotate`) lives in a
+//!   grow-only [`StepWorkspace`] — a warmed tracker performs zero heap
+//!   allocations per sequential update, asserted with a counting global
+//!   allocator in `benches/microbench_grest.rs`.
 
-use crate::linalg::blas;
-use crate::linalg::eigh::eigh;
-use crate::linalg::mat::Mat;
-use crate::linalg::qr::orthonormalize_against_with;
+use crate::linalg::eigh::{eigh_into, order_by_magnitude_into};
+use crate::linalg::mat::{Mat, Padded};
+use crate::linalg::qr::orthonormalize_against_into;
 use crate::linalg::rng::Rng;
-use crate::linalg::threads::Threads;
 use crate::linalg::rsvd::rsvd_basis;
+use crate::linalg::threads::Threads;
+use crate::linalg::workspace::StepWorkspace;
 use crate::sparse::delta::Delta;
 use crate::tracking::spec::{Algo, Backend, TrackerSpec};
 use crate::tracking::traits::{EigTracker, EigenPairs};
@@ -53,16 +70,32 @@ impl SubspaceMode {
 
 /// The three dense phases of one G-REST step.  Implemented natively here
 /// and by `runtime::grest_xla::XlaPhases` over the PJRT artifacts.
+///
+/// Contract (since the padding-aware refactor): X̄ arrives as a borrowed
+/// [`Padded`] view; the panel transfers *ownership* into `build_basis`
+/// (the native backend orthonormalizes it in place and returns the same
+/// buffer as Q); every returned matrix may be backed by — and is given
+/// back to — the caller's [`StepWorkspace`].  Backends that cannot work
+/// in place (the PJRT wrapper) materialize what they need and return
+/// fresh matrices; the workspace absorbs them.
 pub trait DensePhases {
     /// Orthonormal basis of (I − X̄X̄ᵀ)·panel, rank-deficient columns
-    /// deflated.
-    fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat;
+    /// deflated.  Consumes the panel buffer.
+    fn build_basis(&self, xbar: Padded<'_>, panel: Mat, ws: &mut StepWorkspace) -> Mat;
 
     /// The projected matrix of Eq. (13) for Z = [X̄, Q].
-    fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat;
+    fn form_t(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        lam: &[f64],
+        dxk: &Mat,
+        dq: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat;
 
     /// Ritz rotation X_new = X̄ F₁ + Q F₂.
-    fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat;
+    fn rotate(&self, xbar: Padded<'_>, q: &Mat, f1: &Mat, f2: &Mat, ws: &mut StepWorkspace) -> Mat;
 
     fn label(&self) -> &'static str {
         "native"
@@ -88,14 +121,29 @@ pub trait DensePhases {
 /// Shared-ownership backends (lets many tracker instances reuse one
 /// compiled-artifact cache within a thread).
 impl<P: DensePhases + ?Sized> DensePhases for std::rc::Rc<P> {
-    fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
-        (**self).build_basis(xbar, panel)
+    fn build_basis(&self, xbar: Padded<'_>, panel: Mat, ws: &mut StepWorkspace) -> Mat {
+        (**self).build_basis(xbar, panel, ws)
     }
-    fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
-        (**self).form_t(xbar, q, lam, dxk, dq)
+    fn form_t(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        lam: &[f64],
+        dxk: &Mat,
+        dq: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
+        (**self).form_t(xbar, q, lam, dxk, dq, ws)
     }
-    fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
-        (**self).rotate(xbar, q, f1, f2)
+    fn rotate(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        f1: &Mat,
+        f2: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
+        (**self).rotate(xbar, q, f1, f2, ws)
     }
     fn label(&self) -> &'static str {
         (**self).label()
@@ -125,52 +173,121 @@ impl NativePhases {
 }
 
 impl DensePhases for NativePhases {
-    fn build_basis(&self, xbar: &Mat, panel: &Mat) -> Mat {
-        let (q, _) = orthonormalize_against_with(xbar, panel, 1e-8, self.threads);
-        q
+    fn build_basis(&self, xbar: Padded<'_>, mut panel: Mat, ws: &mut StepWorkspace) -> Mat {
+        let mut kept = std::mem::take(&mut ws.kept);
+        orthonormalize_against_into(xbar, &mut panel, 1e-8, self.threads, ws, &mut kept);
+        ws.kept = kept;
+        panel
     }
 
     fn threads(&self) -> Threads {
         self.threads
     }
 
-    fn form_t(&self, xbar: &Mat, q: &Mat, lam: &[f64], dxk: &Mat, dq: &Mat) -> Mat {
+    fn form_t(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        lam: &[f64],
+        dxk: &Mat,
+        dq: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
         let k = xbar.cols();
         let m = q.cols();
         let dim = k + m;
-        let mut t = Mat::zeros(dim, dim);
+        let mut t = ws.take_mat(dim, dim);
         // T11 = Λ + X̄ᵀ(ΔX̄).  X̄ᵀΔX̄ is analytically symmetric (Δᵀ = Δ),
         // so only the upper triangle is computed — half the flops of the
-        // full K×K product the unspecialized pipeline paid.
-        let t11 = xbar.sym_t_matmul_with(dxk, self.threads);
+        // full K×K product the unspecialized pipeline paid; the padded
+        // view drops the S zero rows from every dot.
+        let mut t11 = ws.take_mat(0, 0);
+        crate::linalg::blas::syrk_tn_into(&mut t11, xbar, dxk, self.threads);
         for i in 0..k {
             for j in 0..k {
                 let lamij = if i == j { lam[i] } else { 0.0 };
                 t.set(i, j, lamij + t11.get(i, j));
             }
         }
+        ws.give_mat(t11);
         // T12 = X̄ᵀ(ΔQ) — genuinely rectangular, full product.
-        let t12 = xbar.t_matmul_with(dq, self.threads);
+        let mut t12 = ws.take_mat(0, 0);
+        crate::linalg::blas::gemm_tn_into(&mut t12, xbar, dq, self.threads);
         for i in 0..k {
             for j in 0..m {
                 t.set(i, k + j, t12.get(i, j));
                 t.set(k + j, i, t12.get(i, j));
             }
         }
+        ws.give_mat(t12);
         // T22 = Qᵀ(ΔQ) — symmetric for the same reason as T11.
-        let t22 = q.sym_t_matmul_with(dq, self.threads);
+        let mut t22 = ws.take_mat(0, 0);
+        crate::linalg::blas::syrk_tn_into(&mut t22, q, dq, self.threads);
         for i in 0..m {
             for j in 0..m {
                 t.set(k + i, k + j, t22.get(i, j));
             }
         }
+        ws.give_mat(t22);
         t
     }
 
-    fn rotate(&self, xbar: &Mat, q: &Mat, f1: &Mat, f2: &Mat) -> Mat {
-        let mut out = xbar.matmul_with(f1, self.threads);
-        blas::gemm_acc_with(&mut out, q, f2, 1.0, self.threads);
+    fn rotate(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        f1: &Mat,
+        f2: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
+        let mut out = ws.take_mat(0, 0);
+        crate::linalg::blas::gemm_into(&mut out, xbar, f1, self.threads);
+        crate::linalg::blas::gemm_acc_with(&mut out, q, f2, 1.0, self.threads);
         out
+    }
+}
+
+/// The materialized-pad oracle backend: runs the same native phases on
+/// `xbar.materialize()` (a `pad_rows` copy) instead of the borrowed
+/// view.  This is the pipeline the padding-aware refactor replaced; it
+/// is kept — together with `Mat::pad_rows` itself — exactly as the
+/// property-test and bench oracle that the [`Padded`] pipeline must
+/// match bitwise.
+pub struct MaterializedPhases(pub NativePhases);
+
+impl DensePhases for MaterializedPhases {
+    fn build_basis(&self, xbar: Padded<'_>, panel: Mat, ws: &mut StepWorkspace) -> Mat {
+        let xm = xbar.materialize();
+        self.0.build_basis(Padded::from(&xm), panel, ws)
+    }
+    fn form_t(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        lam: &[f64],
+        dxk: &Mat,
+        dq: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
+        let xm = xbar.materialize();
+        self.0.form_t(Padded::from(&xm), q, lam, dxk, dq, ws)
+    }
+    fn rotate(
+        &self,
+        xbar: Padded<'_>,
+        q: &Mat,
+        f1: &Mat,
+        f2: &Mat,
+        ws: &mut StepWorkspace,
+    ) -> Mat {
+        let xm = xbar.materialize();
+        self.0.rotate(Padded::from(&xm), q, f1, f2, ws)
+    }
+    fn label(&self) -> &'static str {
+        "materialized-oracle"
+    }
+    fn threads(&self) -> Threads {
+        self.0.threads
     }
 }
 
@@ -182,6 +299,7 @@ pub struct GRest<P: DensePhases = NativePhases> {
     rng: Rng,
     seed: u64,
     flops: u64,
+    ws: StepWorkspace,
     /// dimension of the last augmentation basis (diagnostics)
     pub last_basis_cols: usize,
 }
@@ -208,44 +326,25 @@ impl<P: DensePhases> GRest<P> {
             rng: Rng::new(seed),
             seed,
             flops: 0,
+            ws: StepWorkspace::new(),
             last_basis_cols: 0,
         }
     }
 
-    /// Assemble the update panel for the configured subspace mode.
-    fn panel(&mut self, delta: &Delta, dxk: &Mat) -> Mat {
-        let threads = self.phases.threads();
-        match self.mode {
-            SubspaceMode::Rm => dxk.clone(),
-            SubspaceMode::Full => {
-                if delta.s_new == 0 {
-                    dxk.clone()
-                } else {
-                    dxk.hcat(&delta.d2_dense())
-                }
-            }
-            SubspaceMode::Rsvd { l, p } => {
-                if delta.s_new == 0 {
-                    dxk.clone()
-                } else {
-                    let xbar = self.state.vectors.pad_rows(delta.s_new);
-                    let r = rsvd_basis(
-                        delta.s_new,
-                        &|om| delta.d2_mult_with(om, threads),
-                        &|m| delta.d2_t_mult_with(m, threads),
-                        Some(&xbar),
-                        l,
-                        p,
-                        &mut self.rng,
-                    );
-                    if r.cols() == 0 {
-                        dxk.clone()
-                    } else {
-                        dxk.hcat(&r)
-                    }
-                }
-            }
-        }
+    /// Reset the tracker to `initial` **in place**, keeping the warmed
+    /// workspace: the state buffers are reused (no allocation once
+    /// their capacity fits), the RNG rewinds to the construction seed
+    /// (so an RSVD tracker replays the exact same sketches), and the
+    /// per-step diagnostics clear — a reset tracker reproduces its
+    /// original trajectory.  The per-step bench uses this to time
+    /// warmed updates from a fixed state.
+    pub fn reset_state(&mut self, initial: &EigenPairs) {
+        self.state.values.clear();
+        self.state.values.extend_from_slice(&initial.values);
+        self.state.vectors.copy_from(&initial.vectors);
+        self.rng = Rng::new(self.seed);
+        self.flops = 0;
+        self.last_basis_cols = 0;
     }
 }
 
@@ -265,50 +364,125 @@ impl<P: DensePhases> EigTracker for GRest<P> {
     }
 
     fn update(&mut self, delta: &Delta) -> anyhow::Result<()> {
-        let k = self.state.k();
-        let threads = self.phases.threads();
-        let xbar = self.state.vectors.pad_rows(delta.s_new); // X̄_K
-        let dxk = delta.mul_padded_with(&self.state.vectors, threads); // ΔX̄_K
-        let panel = self.panel(delta, &dxk);
-        let n = xbar.rows();
+        let GRest { state, mode, phases, rng, ws, flops, last_basis_cols, .. } = self;
+        let k = state.k();
+        let threads = phases.threads();
+        let s = delta.s_new;
+        let n_old = state.n();
+        let n = n_old + s;
+        let xbar = Padded::new(&state.vectors, s); // X̄_K, never materialized
 
-        // dense phase 1: orthonormal augmentation basis
-        let q = self.phases.build_basis(&xbar, &panel);
-        self.last_basis_cols = q.cols();
+        // sparse: ΔX̄_K into workspace storage
+        let mut dxk = ws.take_mat(0, 0);
+        delta.mul_padded_into(&state.vectors, &mut dxk, ws, threads);
 
-        // sparse interlude: ΔQ — row-partitioned under the same budget
-        let dq = delta.matmul_dense_with(&q, threads);
-
-        // dense phase 2a: projected matrix (Eq. 13)
-        let t = self.phases.form_t(&xbar, &q, &self.state.values, &dxk, &dq);
-
-        // small dense eigendecomposition (Alg. 2 line 9)
-        let e = eigh(&t);
-        let order = e.leading_by_magnitude(k);
-        let mut f1 = Mat::zeros(k, order.len());
-        let mut f2 = Mat::zeros(q.cols(), order.len());
-        let mut new_vals = Vec::with_capacity(order.len());
-        for (c, &idx) in order.iter().enumerate() {
-            new_vals.push(e.values[idx]);
-            for i in 0..k {
-                f1.set(i, c, e.vectors.get(i, idx));
+        // RSVD tail basis, if configured (the only allocating subspace
+        // mode — the randomized sketch is scratch-heavy by nature)
+        let rsvd_r = match *mode {
+            SubspaceMode::Rsvd { l, p } if s > 0 => {
+                let r = rsvd_basis(
+                    s,
+                    &|om| delta.d2_mult_with(om, threads),
+                    &|m, extra| delta.d2_t_mult_with(Padded::new(m, extra), threads),
+                    Some(xbar),
+                    l,
+                    p,
+                    rng,
+                );
+                if r.cols() > 0 {
+                    Some(r)
+                } else {
+                    None
+                }
             }
-            for i in 0..q.cols() {
-                f2.set(i, c, e.vectors.get(k + i, idx));
+            _ => None,
+        };
+        let tail_cols = match *mode {
+            SubspaceMode::Full if s > 0 => s,
+            SubspaceMode::Rsvd { .. } => rsvd_r.as_ref().map_or(0, Mat::cols),
+            _ => 0,
+        };
+
+        // assemble the update panel in place (no hcat copy chain)
+        let m = k + tail_cols;
+        let mut panel = ws.take_mat(n, m);
+        for j in 0..k {
+            panel.col_mut(j).copy_from_slice(dxk.col(j));
+        }
+        if let Some(r) = &rsvd_r {
+            for j in 0..r.cols() {
+                panel.col_mut(k + j).copy_from_slice(r.col(j));
+            }
+        } else if tail_cols > 0 {
+            // Δ₂ block written straight off the sparse rows — the dense
+            // (N+S)×S `d2_dense` materialization is gone
+            for i in 0..n {
+                let (cols, vals) = delta.full.row(i);
+                for (&c, &v) in cols.iter().zip(vals.iter()) {
+                    if c >= delta.n_old {
+                        panel.set(i, k + (c - delta.n_old), v);
+                    }
+                }
             }
         }
 
-        // dense phase 2b: Ritz rotation
-        let new_vecs = self.phases.rotate(&xbar, &q, &f1, &f2);
+        // dense phase 1: orthonormal augmentation basis (in place)
+        let q = phases.build_basis(xbar, panel, ws);
+        *last_basis_cols = q.cols();
+        let qc = q.cols();
 
-        let m = panel.cols();
-        self.flops = (2 * n * k * m          // project-out gram
-            + 2 * n * m * m                   // orthonormalization
-            + n * (k + m) * (k + m)           // form_t grams (symmetric: half)
-            + (k + m) * (k + m) * (k + m)     // eigh
-            + 2 * n * (k + m) * k) as u64 // rotate
-            + 2 * delta.nnz() as u64 * (k + m) as u64;
-        self.state = EigenPairs { values: new_vals, vectors: new_vecs };
+        // sparse interlude: ΔQ — row-partitioned under the same budget
+        let mut dq = ws.take_mat(0, 0);
+        delta.matmul_dense_into(&q, &mut dq, ws, threads);
+
+        // dense phase 2a: projected matrix (Eq. 13)
+        let t = phases.form_t(xbar, &q, &state.values, &dxk, &dq, ws);
+
+        // small dense eigendecomposition (Alg. 2 line 9), in workspace
+        eigh_into(&t, &mut ws.eig);
+        ws.give_mat(t);
+        let mut order = std::mem::take(&mut ws.order);
+        order_by_magnitude_into(&ws.eig.d, k, &mut order);
+        let mut f1 = ws.take_mat(k, order.len());
+        let mut f2 = ws.take_mat(qc, order.len());
+        let mut new_vals = ws.take_buf();
+        for (c, &idx) in order.iter().enumerate() {
+            new_vals.push(ws.eig.d[idx]);
+            for i in 0..k {
+                f1.set(i, c, ws.eig.v.get(i, idx));
+            }
+            for i in 0..qc {
+                f2.set(i, c, ws.eig.v.get(k + i, idx));
+            }
+        }
+        ws.order = order;
+
+        // dense phase 2b: Ritz rotation
+        let new_vecs = phases.rotate(xbar, &q, &f1, &f2, ws);
+
+        // padding-aware flop model: X̄-touching products run at the
+        // filled height n_old, not the padded n — this is the real cost
+        // the Mflop tables report
+        *flops = (2 * n_old * k * m          // BCGS2 projection gram X̄ᵀP
+            + 2 * n * m * m                   // panel gram + CholQR update
+            + n_old * k * k                   // T11 = sym(X̄ᵀΔX̄), half
+            + 2 * n_old * k * qc              // T12 = X̄ᵀΔQ
+            + n * qc * qc                     // T22 = sym(QᵀΔQ), half
+            + (k + qc) * (k + qc) * (k + qc)  // eigh
+            + 2 * n_old * k * k               // rotate: X̄F₁
+            + 2 * n * qc * k) as u64 // rotate: QF₂
+            + 2 * delta.nnz() as u64 * (k + qc) as u64;
+
+        // recycle the step temporaries and swap the double-buffered state
+        ws.give_mat(f1);
+        ws.give_mat(f2);
+        ws.give_mat(dq);
+        ws.give_mat(dxk);
+        ws.give_mat(q);
+        let old_vecs = std::mem::replace(&mut state.vectors, new_vecs);
+        ws.give_mat(old_vecs);
+        let old_vals = std::mem::replace(&mut state.values, new_vals);
+        ws.give_buf(old_vals);
         Ok(())
     }
 
@@ -324,6 +498,7 @@ impl<P: DensePhases> EigTracker for GRest<P> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::blas;
     use crate::sparse::coo::Coo;
     use crate::sparse::csr::Csr;
     use crate::tracking::traits::{apply_delta, init_eigenpairs};
@@ -358,6 +533,24 @@ mod tests {
         }
         // dedupe duplicates via csr round trip values>1 -> clamp to 1
         Delta::from_blocks(n, s, &kb.to_csr().to_coo_clamped(), &g.to_csr_clamped(), &c)
+    }
+
+    /// Pure-expansion delta: no topological (K-block) entries at all —
+    /// every edge touches a new node.
+    fn all_new_node_delta(n: usize, s: usize, seed: u64) -> Delta {
+        let mut rng = Rng::new(seed);
+        let kb = Coo::new(n, n);
+        let mut g = Coo::new(n, s);
+        for j in 0..s {
+            for _ in 0..4 {
+                g.push(rng.below(n), j, 1.0);
+            }
+        }
+        let mut c = Coo::new(s, s);
+        if s >= 2 {
+            c.push_sym(0, 1, 1.0);
+        }
+        Delta::from_blocks(n, s, &kb, &g.to_csr_clamped(), &c)
     }
 
     // small helpers for the test above
@@ -499,6 +692,143 @@ mod tests {
             t1.current().vectors.as_slice(),
             tn.current().vectors.as_slice(),
             "eigenvectors drifted across thread counts"
+        );
+    }
+
+    #[test]
+    fn rsvd_results_bitwise_stable_across_thread_counts() {
+        // same contract for the randomized pipeline: the sketch is
+        // seeded identically and every kernel it touches (sparse Δ₂
+        // products, project-out, CholQR, the small SVD) keeps its
+        // reduction orders under any worker count.
+        let a = ring_plus_chords(2000);
+        let init = init_eigenpairs(&a, 32, 11);
+        let d = expansion_delta(2000, 8, 12);
+        let mode = SubspaceMode::Rsvd { l: 6, p: 4 };
+        let mut t1 = GRest::with_threads(init.clone(), mode, Threads(1));
+        let mut tn = GRest::with_threads(init, mode, Threads(4));
+        t1.update(&d).unwrap();
+        tn.update(&d).unwrap();
+        assert_eq!(t1.current().values, tn.current().values);
+        assert_eq!(
+            t1.current().vectors.as_slice(),
+            tn.current().vectors.as_slice(),
+            "RSVD eigenvectors drifted across thread counts"
+        );
+    }
+
+    #[test]
+    fn padded_pipeline_bitwise_matches_materialized_oracle() {
+        // the tentpole contract end-to-end: the Padded-view pipeline
+        // equals the pad_rows oracle to the last bit — over expansion,
+        // pure-expansion (no K block), and edge-only (extra_rows == 0)
+        // deltas, across thread counts, and across consecutive steps
+        // (exercising warmed-workspace buffer reuse).
+        let a = ring_plus_chords(40);
+        let init = init_eigenpairs(&a, 5, 31);
+        let deltas = [
+            expansion_delta(40, 6, 32),
+            all_new_node_delta(46, 5, 33),
+            expansion_delta(51, 0, 34), // edge-only: extra_rows == 0
+        ];
+        for &workers in &[1usize, 4] {
+            let mut tp = GRest::with_threads(init.clone(), SubspaceMode::Full, Threads(workers));
+            let mut tm = GRest::with_phases(
+                init.clone(),
+                SubspaceMode::Full,
+                MaterializedPhases(NativePhases::new(Threads(workers))),
+                0x9E57,
+            );
+            for (step, d) in deltas.iter().enumerate() {
+                tp.update(d).unwrap();
+                tm.update(d).unwrap();
+                assert_eq!(
+                    tp.current().values,
+                    tm.current().values,
+                    "values drifted at step {step} (threads {workers})"
+                );
+                assert_eq!(
+                    tp.current().vectors.as_slice(),
+                    tm.current().vectors.as_slice(),
+                    "vectors drifted at step {step} (threads {workers})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reset_state_restores_initial_in_place() {
+        let a = ring_plus_chords(20);
+        let init = init_eigenpairs(&a, 3, 41);
+        let mut t = GRest::new(init.clone(), SubspaceMode::Full);
+        let d = expansion_delta(20, 3, 42);
+        t.update(&d).unwrap();
+        assert_eq!(t.current().n(), 23);
+        t.reset_state(&init);
+        assert_eq!(t.current().values, init.values);
+        assert_eq!(t.current().vectors.as_slice(), init.vectors.as_slice());
+        // the tracker still updates correctly from the restored state
+        t.update(&d).unwrap();
+        assert_eq!(t.current().n(), 23);
+    }
+
+    #[test]
+    fn reset_state_replays_rsvd_trajectory_bitwise() {
+        // reset must also rewind the RNG: a reset RSVD tracker replays
+        // the exact same randomized sketch and trajectory
+        let a = ring_plus_chords(20);
+        let init = init_eigenpairs(&a, 3, 43);
+        let d = expansion_delta(20, 3, 44);
+        let mut t = GRest::new(init.clone(), SubspaceMode::Rsvd { l: 3, p: 2 });
+        t.update(&d).unwrap();
+        let first_vals = t.current().values.clone();
+        let first_vecs = t.current().vectors.clone();
+        t.reset_state(&init);
+        t.update(&d).unwrap();
+        assert_eq!(t.current().values, first_vals);
+        assert_eq!(t.current().vectors.as_slice(), first_vecs.as_slice());
+    }
+
+    #[test]
+    fn flop_counter_charges_padded_products_at_filled_rows() {
+        // satellite: the Mflop columns must reflect the padding-aware
+        // cost — X̄-touching products run at n_old rows, not padded n
+        let a = ring_plus_chords(60);
+        let init = init_eigenpairs(&a, 6, 21);
+        let (n_old, s, k) = (60usize, 20usize, 6usize);
+        let d = expansion_delta(n_old, s, 22); // expansion-heavy: S = n/3
+        let mut t = GRest::new(init, SubspaceMode::Full);
+        t.update(&d).unwrap();
+        let n = n_old + s;
+        let m = k + s;
+        let qc = t.last_basis_cols;
+        assert!(qc > 0);
+        let sparse = 2 * d.nnz() as u64 * (k + qc) as u64;
+        // the pre-fix counter charged every X̄ product at padded height n
+        let padded_model = (2 * n * k * m
+            + 2 * n * m * m
+            + n * k * k
+            + 2 * n * k * qc
+            + n * qc * qc
+            + (k + qc).pow(3)
+            + 2 * n * k * k
+            + 2 * n * qc * k) as u64
+            + sparse;
+        let aware_model = (2 * n_old * k * m
+            + 2 * n * m * m
+            + n_old * k * k
+            + 2 * n_old * k * qc
+            + n * qc * qc
+            + (k + qc).pow(3)
+            + 2 * n_old * k * k
+            + 2 * n * qc * k) as u64
+            + sparse;
+        assert_eq!(t.last_step_flops(), aware_model);
+        assert!(
+            t.last_step_flops() < padded_model,
+            "{} !< {}",
+            t.last_step_flops(),
+            padded_model
         );
     }
 

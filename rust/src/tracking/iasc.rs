@@ -4,7 +4,7 @@
 //! expansion, but blind to topological (K-block) updates outside Ran(X̄).
 
 use crate::linalg::eigh::eigh;
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
 use crate::sparse::delta::Delta;
 use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
@@ -49,8 +49,9 @@ impl EigTracker for Iasc {
             }
         }
         if s > 0 {
-            let xbar = x.pad_rows(s);
-            let d2t_x = delta.d2_t_mult(&xbar); // S×K = Δ₂ᵀX̄
+            // Δ₂ᵀX̄ off the Padded view: the zero rows of X̄ are skipped
+            // inside the sparse kernel instead of being materialized.
+            let d2t_x = delta.d2_t_mult(Padded::new(x, s)); // S×K = Δ₂ᵀX̄
             for i in 0..k {
                 for j in 0..s {
                     t.set(i, k + j, d2t_x.get(j, i));

@@ -4,7 +4,7 @@
 //! μ (default 0, matching the paper's experiments).
 
 use crate::linalg::blas;
-use crate::linalg::mat::Mat;
+use crate::linalg::mat::{Mat, Padded};
 use crate::sparse::delta::Delta;
 use crate::tracking::spec::{Algo, TrackerSpec};
 use crate::tracking::traits::{interaction_matrix, EigTracker, EigenPairs};
@@ -49,8 +49,9 @@ impl EigTracker for ResidualModes {
 
         // Residual block: R = (I − X̄X̄ᵀ) Δ X̄  — note the bottom S rows of
         // ΔX̄ (the Gᵀx_j part) pass through untouched (Prop. 1 proof).
-        let xbar = x.pad_rows(delta.s_new);
-        let resid = blas::project_out(&xbar, &dxk); // (N+S)×K
+        // X̄ is the borrowed Padded view: no n×k materialization, and the
+        // projection Gram skips the structurally-zero rows.
+        let resid = blas::project_out(Padded::new(x, delta.s_new), &dxk); // (N+S)×K
 
         let n_new = delta.n_new();
         let mut new_vecs = Mat::zeros(n_new, k);
