@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let svc = TrackingService::spawn(ServiceConfig {
         initial: g,
         k: 32,
-        policy: BatchPolicy::Either { events: 128, new_nodes: 32 },
+        policy: BatchPolicy::Either { events: 128, new_nodes: 32, max_age: None },
         seed: 2,
         // the tracker is built on the worker thread — swap in
         // `grest3@xla` here to serve from the PJRT artifacts

@@ -1,0 +1,175 @@
+//! Fleet micro-benchmarks: the shared worker pool vs thread-per-tenant.
+//!
+//! A tenants × ingest-rate ladder runs the same deterministic per-tenant
+//! event streams twice — once as a [`Fleet`] on a fixed 4-worker pool,
+//! once as dedicated pinned threads — and reports total wall-clock and
+//! the client-observed p95 flush round-trip at each tenant count.  The
+//! two runs must publish bitwise-identical final snapshots per tenant
+//! (asserted here: pooled scheduling reorders *which tenant runs when*,
+//! never what a tenant computes).
+//!
+//! Emits `BENCH_fleet.json` (name → {n, seconds}) next to the other
+//! `BENCH_*.json` files.  `GREST_BENCH_QUICK=1` shrinks the ladder for
+//! CI smoke runs.
+
+use grest::coordinator::{
+    BatchPolicy, Fleet, FleetConfig, ServiceConfig, ServiceHandle, TenantId, TrackingService,
+};
+use grest::graph::stream::GraphEvent;
+use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
+use grest::tracking::TrackerSpec;
+
+const POOL_WORKERS: usize = 4;
+
+struct BenchRecord {
+    name: String,
+    n: usize,
+    seconds: f64,
+}
+
+fn record(records: &mut Vec<BenchRecord>, name: &str, n: usize, seconds: f64) {
+    records.push(BenchRecord { name: name.to_string(), n, seconds });
+}
+
+fn write_json(records: &[BenchRecord]) {
+    let mut out = String::from("{\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {{\"n\": {}, \"seconds\": {:.6e}}}{}\n",
+            r.name,
+            r.n,
+            r.seconds,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    let path = "BENCH_fleet.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("# wrote {path} ({} entries)", records.len()),
+        Err(e) => eprintln!("# failed to write {path}: {e}"),
+    }
+}
+
+fn tenant_config(n: usize, k: usize, seed: u64) -> ServiceConfig {
+    let mut rng = Rng::new(seed);
+    ServiceConfig {
+        initial: grest::graph::generators::erdos_renyi(n, 8.0 / n as f64, &mut rng),
+        k,
+        policy: BatchPolicy::ByCount(32),
+        seed,
+        tracker: TrackerSpec::parse("grest3").unwrap(),
+        threads: Threads::SINGLE,
+    }
+}
+
+/// Deterministic per-tenant event stream (tenant-salted, growing id
+/// space) — identical for the pooled and pinned runs.
+fn event(n: usize, tenant: u64, i: u64) -> GraphEvent {
+    let a = (i * 7919 + tenant * 13) % n as u64;
+    if i % 10 == 9 {
+        GraphEvent::RemoveEdge(a, (i * 104_729 + tenant) % n as u64)
+    } else {
+        let b = (i * 104_729 + tenant + 1) % (n as u64 + n as u64 / 8);
+        GraphEvent::AddEdge(a, b)
+    }
+}
+
+/// Round-robin ingest into every tenant with periodic synchronous
+/// flushes; returns (total wall seconds, p95 flush round-trip seconds).
+fn drive(handles: &[ServiceHandle], n: usize, events_per_tenant: usize) -> (f64, f64) {
+    let t0 = std::time::Instant::now();
+    let mut flush_lat: Vec<f64> = Vec::new();
+    for i in 0..events_per_tenant as u64 {
+        for (t, h) in handles.iter().enumerate() {
+            h.ingest(vec![event(n, t as u64, i)]).unwrap();
+        }
+        if (i + 1) % 64 == 0 {
+            for h in handles {
+                let f0 = std::time::Instant::now();
+                h.flush().unwrap();
+                flush_lat.push(f0.elapsed().as_secs_f64());
+            }
+        }
+    }
+    for h in handles {
+        let f0 = std::time::Instant::now();
+        h.flush().unwrap();
+        flush_lat.push(f0.elapsed().as_secs_f64());
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    flush_lat.sort_by(f64::total_cmp);
+    let p95 = flush_lat[(flush_lat.len() * 95 / 100).min(flush_lat.len() - 1)];
+    (secs, p95)
+}
+
+/// (version, eigenvalues, eigenvector data) per tenant — the bitwise
+/// comparison key between the pooled and pinned runs.
+fn snapshots(handles: &[ServiceHandle]) -> Vec<(u64, Vec<f64>, Vec<f64>)> {
+    handles
+        .iter()
+        .map(|h| {
+            let s = h.snapshot();
+            (s.version, s.pairs.values.clone(), s.pairs.vectors.as_slice().to_vec())
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let (n, k, events_per_tenant) = if quick { (300, 8, 192) } else { (1_000, 16, 640) };
+    let ladder: &[usize] = if quick { &[2, 4, 8] } else { &[2, 4, 8, 16] };
+
+    for &tenants in ladder {
+        // ---- pooled: `tenants` tenants share POOL_WORKERS workers
+        let fleet = Fleet::new(FleetConfig { workers: POOL_WORKERS });
+        for t in 0..tenants as u64 {
+            fleet.spawn(TenantId(t), tenant_config(n, k, 100 + t)).unwrap();
+        }
+        let pooled: Vec<ServiceHandle> =
+            (0..tenants as u64).map(|t| fleet.get(TenantId(t)).unwrap()).collect();
+        let (pool_secs, pool_p95) = drive(&pooled, n, events_per_tenant);
+        let pool_snaps = snapshots(&pooled);
+        drop(pooled);
+        fleet.join();
+
+        // ---- pinned: the same streams, one dedicated thread per tenant
+        let pinned_svcs: Vec<TrackingService> = (0..tenants as u64)
+            .map(|t| TrackingService::spawn_pinned(tenant_config(n, k, 100 + t)).unwrap())
+            .collect();
+        let pinned: Vec<ServiceHandle> =
+            pinned_svcs.iter().map(|s| s.handle.clone()).collect();
+        let (pin_secs, pin_p95) = drive(&pinned, n, events_per_tenant);
+        let pin_snaps = snapshots(&pinned);
+        drop(pinned);
+        for s in pinned_svcs {
+            s.join();
+        }
+
+        // pooled scheduling must not change any tenant's results
+        assert_eq!(
+            pool_snaps, pin_snaps,
+            "pooled vs pinned snapshots diverged at {tenants} tenants"
+        );
+
+        println!(
+            "# {tenants:>2} tenants x {events_per_tenant} events: \
+             pool({POOL_WORKERS}w) {pool_secs:>7.3}s p95_flush {:>8.1}us | \
+             pinned {pin_secs:>7.3}s p95_flush {:>8.1}us",
+            pool_p95 * 1e6,
+            pin_p95 * 1e6,
+        );
+        record(&mut records, &format!("fleet_pool{POOL_WORKERS}_t{tenants}"), tenants, pool_secs);
+        record(
+            &mut records,
+            &format!("fleet_pool{POOL_WORKERS}_t{tenants}_p95flush"),
+            tenants,
+            pool_p95,
+        );
+        record(&mut records, &format!("fleet_pinned_t{tenants}"), tenants, pin_secs);
+        record(&mut records, &format!("fleet_pinned_t{tenants}_p95flush"), tenants, pin_p95);
+    }
+
+    write_json(&records);
+}

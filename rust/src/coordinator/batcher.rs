@@ -4,6 +4,16 @@
 //! Trade-off mirrors the paper's complexity analysis: more events per
 //! batch amortize the O(N(K+L)²) dense phase, but enlarge ‖Δ‖ and hence
 //! the subspace drift per step.
+//!
+//! Count triggers ([`BatchPolicy::ByCount`] / [`ByNewNodes`]
+//! (BatchPolicy::ByNewNodes)) fire at ingest time.  The time trigger
+//! ([`BatchPolicy::MaxAge`], or the `max_age` arm of
+//! [`BatchPolicy::Either`]) bounds staleness for low-rate tenants: a
+//! pending batch flushes once its oldest event reaches the deadline,
+//! with no manual `flush()` — the worker pool's scheduler (and the
+//! pinned-thread loop) wake deadline-armed idle tenants.
+
+use std::time::Duration;
 
 /// Policy deciding when a pending batch should be flushed.
 #[derive(Clone, Copy, Debug)]
@@ -13,18 +23,42 @@ pub enum BatchPolicy {
     /// Flush when this many new nodes accumulated (bounds S, so the
     /// G-REST₃ panel and the artifact tier stay small).
     ByNewNodes(usize),
-    /// Flush when either bound trips.
-    Either { events: usize, new_nodes: usize },
+    /// Flush when the oldest pending event reaches this age (pure time
+    /// trigger; count pressure never closes the batch early).
+    MaxAge(Duration),
+    /// Flush when either count bound trips, or — with `max_age` set —
+    /// when the pending batch outlives the deadline.
+    Either { events: usize, new_nodes: usize, max_age: Option<Duration> },
 }
 
 impl BatchPolicy {
     /// Should the batch (with `events` pending and `new_nodes` pending
-    /// arrivals) be flushed now?
+    /// arrivals) be flushed now, on count pressure alone?  Time
+    /// triggers report through [`BatchPolicy::should_flush_aged`] /
+    /// [`BatchPolicy::max_age`] instead.
     pub fn should_flush(&self, events: usize, new_nodes: usize) -> bool {
         match *self {
             BatchPolicy::ByCount(c) => events >= c,
             BatchPolicy::ByNewNodes(s) => new_nodes >= s,
-            BatchPolicy::Either { events: c, new_nodes: s } => events >= c || new_nodes >= s,
+            BatchPolicy::MaxAge(_) => false,
+            BatchPolicy::Either { events: c, new_nodes: s, .. } => events >= c || new_nodes >= s,
+        }
+    }
+
+    /// [`should_flush`](Self::should_flush) extended with the age of the
+    /// oldest pending event; an empty batch never flushes on age.
+    pub fn should_flush_aged(&self, events: usize, new_nodes: usize, age: Duration) -> bool {
+        self.should_flush(events, new_nodes)
+            || ((events > 0 || new_nodes > 0) && self.max_age().is_some_and(|limit| age >= limit))
+    }
+
+    /// The deadline arm, when this policy has one: how long a non-empty
+    /// pending batch may age before the scheduler must flush it.
+    pub fn max_age(&self) -> Option<Duration> {
+        match *self {
+            BatchPolicy::MaxAge(d) => Some(d),
+            BatchPolicy::Either { max_age, .. } => max_age,
+            _ => None,
         }
     }
 }
@@ -38,6 +72,7 @@ mod tests {
         let p = BatchPolicy::ByCount(3);
         assert!(!p.should_flush(2, 100));
         assert!(p.should_flush(3, 0));
+        assert_eq!(p.max_age(), None);
     }
 
     #[test]
@@ -49,9 +84,41 @@ mod tests {
 
     #[test]
     fn either() {
-        let p = BatchPolicy::Either { events: 5, new_nodes: 2 };
+        let p = BatchPolicy::Either { events: 5, new_nodes: 2, max_age: None };
         assert!(p.should_flush(5, 0));
         assert!(p.should_flush(0, 2));
         assert!(!p.should_flush(4, 1));
+        assert_eq!(p.max_age(), None);
+    }
+
+    #[test]
+    fn max_age_is_a_pure_time_trigger() {
+        let p = BatchPolicy::MaxAge(Duration::from_millis(50));
+        // count pressure alone never closes the batch
+        assert!(!p.should_flush(1_000_000, 1_000_000));
+        assert_eq!(p.max_age(), Some(Duration::from_millis(50)));
+        // age closes it — but only when something is pending
+        assert!(p.should_flush_aged(1, 0, Duration::from_millis(50)));
+        assert!(p.should_flush_aged(1, 0, Duration::from_millis(200)));
+        assert!(!p.should_flush_aged(1, 0, Duration::from_millis(49)));
+        assert!(!p.should_flush_aged(0, 0, Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn either_with_deadline_arm() {
+        let p = BatchPolicy::Either {
+            events: 5,
+            new_nodes: 2,
+            max_age: Some(Duration::from_millis(100)),
+        };
+        assert_eq!(p.max_age(), Some(Duration::from_millis(100)));
+        // counts fire immediately, age-independent
+        assert!(p.should_flush_aged(5, 0, Duration::ZERO));
+        // below the count bounds, the deadline decides
+        assert!(!p.should_flush_aged(4, 1, Duration::from_millis(99)));
+        assert!(p.should_flush_aged(4, 1, Duration::from_millis(100)));
+        assert!(p.should_flush_aged(1, 0, Duration::from_millis(100)));
+        // an empty batch has no age to exceed
+        assert!(!p.should_flush_aged(0, 0, Duration::from_secs(5)));
     }
 }

@@ -1,0 +1,272 @@
+//! The fleet: many independent tenant graphs, each with its own
+//! tracker, seed, and batch policy, multiplexed onto one shared
+//! [`WorkerPool`].
+//!
+//! This is the ROADMAP's "serving system" layer: tenant count is
+//! decoupled from OS thread count (16 tenants on 4 workers is the
+//! tested configuration floor), scheduling is fair round-robin, and
+//! per-tenant [`TenantBudget`]s surface flop/memory overruns through
+//! each tenant's [`Metrics`].  `@xla` tenants transparently fall back
+//! to a dedicated pinned thread (PJRT state is thread-bound) while
+//! still being fleet-managed.
+//!
+//! Isolation contract: tenants share worker threads but nothing else —
+//! a tenant whose tracker fails every batch only burns its own
+//! scheduled steps and its own `update_failures` counter (soak-tested
+//! in `tests/fleet.rs`).
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::service::{
+    SendTrackerFactory, ServiceConfig, ServiceHandle, TrackingService,
+};
+use crate::coordinator::tenant::TenantBudget;
+use crate::tracking::spec::Backend;
+use anyhow::{bail, Result};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Opaque tenant key (caller-assigned).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u64);
+
+impl fmt::Display for TenantId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tenant-{}", self.0)
+    }
+}
+
+/// Fleet-wide configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetConfig {
+    /// Worker threads in the shared pool (`0` = auto, like
+    /// [`Threads::AUTO`](crate::linalg::threads::Threads::AUTO)).
+    pub workers: usize,
+}
+
+/// A multi-tenant coordinator: spawn/get/remove tenants by
+/// [`TenantId`], roll their metrics up fleet-wide.
+pub struct Fleet {
+    pool: WorkerPool,
+    tenants: Mutex<HashMap<TenantId, TrackingService>>,
+}
+
+impl Fleet {
+    /// Start a fleet with its own worker pool.
+    pub fn new(config: FleetConfig) -> Fleet {
+        Fleet { pool: WorkerPool::new(config.workers), tenants: Mutex::new(HashMap::new()) }
+    }
+
+    /// Worker threads in the shared pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Spawn a tenant with the default (unbounded) budget.
+    pub fn spawn(&self, id: TenantId, config: ServiceConfig) -> Result<ServiceHandle> {
+        self.spawn_budgeted(id, config, TenantBudget::default())
+    }
+
+    /// Spawn a tenant with a resource budget.  Native-backend tenants
+    /// join the shared pool; `@xla` tenants get a dedicated pinned
+    /// thread (PJRT state is thread-bound) but stay fleet-managed.
+    pub fn spawn_budgeted(
+        &self,
+        id: TenantId,
+        config: ServiceConfig,
+        budget: TenantBudget,
+    ) -> Result<ServiceHandle> {
+        self.check_free(id)?;
+        let svc = if config.tracker.backend == Backend::Xla {
+            TrackingService::spawn_pinned_budgeted(config, budget)?
+        } else {
+            TrackingService::spawn_on(&self.pool, config, budget)?
+        };
+        self.insert(id, svc)
+    }
+
+    /// Spawn a pool-resident tenant from a hand-written `Send` tracker
+    /// factory (`config.tracker` is ignored) — the escape hatch for
+    /// trackers the registry can't build, e.g. fault-injection wrappers
+    /// in the isolation tests.
+    pub fn spawn_with_factory(
+        &self,
+        id: TenantId,
+        config: ServiceConfig,
+        budget: TenantBudget,
+        factory: SendTrackerFactory,
+    ) -> Result<ServiceHandle> {
+        self.check_free(id)?;
+        let svc = TrackingService::spawn_on_with_factory(&self.pool, config, budget, factory)?;
+        self.insert(id, svc)
+    }
+
+    /// Fast-path duplicate check before paying for tracker
+    /// construction; [`insert`](Self::insert) re-checks authoritatively.
+    fn check_free(&self, id: TenantId) -> Result<()> {
+        if self.tenants.lock().unwrap().contains_key(&id) {
+            bail!("{id} already exists");
+        }
+        Ok(())
+    }
+
+    fn insert(&self, id: TenantId, svc: TrackingService) -> Result<ServiceHandle> {
+        let handle = svc.handle.clone();
+        match self.tenants.lock().unwrap().entry(id) {
+            // a concurrent spawn won the race: drop `svc` (its Drop
+            // retires the just-registered tenant) and report the dup
+            Entry::Occupied(_) => bail!("{id} already exists"),
+            Entry::Vacant(slot) => {
+                slot.insert(svc);
+                Ok(handle)
+            }
+        }
+    }
+
+    /// Handle to a live tenant.
+    pub fn get(&self, id: TenantId) -> Option<ServiceHandle> {
+        self.tenants.lock().unwrap().get(&id).map(|svc| svc.handle.clone())
+    }
+
+    /// A tenant's own metric set.
+    pub fn metrics(&self, id: TenantId) -> Option<Arc<Metrics>> {
+        self.get(id).map(|h| h.metrics())
+    }
+
+    /// Live tenant ids, sorted.
+    pub fn ids(&self) -> Vec<TenantId> {
+        let mut ids: Vec<TenantId> = self.tenants.lock().unwrap().keys().copied().collect();
+        ids.sort();
+        ids
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.lock().unwrap().is_empty()
+    }
+
+    /// Retire a tenant (waits until no worker will touch it again).
+    /// Returns whether the id was live.
+    pub fn remove(&self, id: TenantId) -> bool {
+        // take the service out of the map first, so the join below
+        // never holds the fleet lock while waiting on a worker
+        let svc = self.tenants.lock().unwrap().remove(&id);
+        match svc {
+            Some(svc) => {
+                svc.join();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Fleet-wide metrics roll-up: counters summed, latency histograms
+    /// merged bucket-wise across every live tenant.
+    pub fn metrics_rollup(&self) -> Metrics {
+        let rollup = Metrics::default();
+        for svc in self.tenants.lock().unwrap().values() {
+            rollup.merge_from(&svc.handle.metrics());
+        }
+        rollup
+    }
+
+    /// Retire every tenant and stop the pool (also what `Drop` does).
+    pub fn join(self) {}
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        // retire tenants while the pool still runs (each Shutdown needs
+        // a worker to ack it), then stop the pool
+        let tenants: Vec<TrackingService> =
+            self.tenants.lock().unwrap().drain().map(|(_, svc)| svc).collect();
+        for svc in tenants {
+            svc.join();
+        }
+        self.pool.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::graph::stream::GraphEvent;
+    use crate::linalg::rng::Rng;
+    use crate::linalg::threads::Threads;
+    use crate::tracking::spec::TrackerSpec;
+    use std::sync::atomic::Ordering;
+
+    fn config(seed: u64) -> ServiceConfig {
+        let mut rng = Rng::new(seed);
+        ServiceConfig {
+            initial: crate::graph::generators::erdos_renyi(30, 0.1, &mut rng),
+            k: 3,
+            policy: BatchPolicy::ByCount(2),
+            seed,
+            tracker: TrackerSpec::default(),
+            threads: Threads::SINGLE,
+        }
+    }
+
+    #[test]
+    fn spawn_get_remove_lifecycle() {
+        let fleet = Fleet::new(FleetConfig { workers: 2 });
+        assert_eq!(fleet.workers(), 2);
+        assert!(fleet.is_empty());
+        let h = fleet.spawn(TenantId(1), config(1)).unwrap();
+        fleet.spawn(TenantId(2), config(2)).unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet.ids(), vec![TenantId(1), TenantId(2)]);
+        h.ingest(vec![GraphEvent::AddEdge(0, 600), GraphEvent::AddEdge(1, 601)]).unwrap();
+        let v = h.flush().unwrap();
+        assert!(v >= 1);
+        assert!(fleet.get(TenantId(1)).is_some());
+        assert!(fleet.get(TenantId(9)).is_none());
+        assert!(fleet.remove(TenantId(1)));
+        assert!(!fleet.remove(TenantId(1)));
+        assert_eq!(fleet.len(), 1);
+        // the removed tenant's handle is dead, the survivor lives on
+        assert!(h.ingest(vec![GraphEvent::AddEdge(0, 602)]).is_err());
+        let h2 = fleet.get(TenantId(2)).unwrap();
+        h2.ingest(vec![GraphEvent::AddEdge(0, 700), GraphEvent::AddEdge(1, 701)]).unwrap();
+        assert!(h2.flush().unwrap() >= 1);
+        fleet.join();
+    }
+
+    #[test]
+    fn duplicate_tenant_id_is_rejected() {
+        let fleet = Fleet::new(FleetConfig { workers: 1 });
+        fleet.spawn(TenantId(7), config(3)).unwrap();
+        let err = fleet.spawn(TenantId(7), config(4)).unwrap_err();
+        assert!(err.to_string().contains("tenant-7"), "{err}");
+        assert_eq!(fleet.len(), 1);
+    }
+
+    #[test]
+    fn rollup_sums_tenant_metrics() {
+        let fleet = Fleet::new(FleetConfig { workers: 2 });
+        for id in 0..3u64 {
+            let h = fleet.spawn(TenantId(id), config(10 + id)).unwrap();
+            h.ingest(vec![
+                GraphEvent::AddEdge(0, 500 + id),
+                GraphEvent::AddEdge(1, 510 + id),
+            ])
+            .unwrap();
+            h.flush().unwrap();
+        }
+        let rollup = fleet.metrics_rollup();
+        assert_eq!(rollup.events_ingested.load(Ordering::Relaxed), 6);
+        assert_eq!(rollup.batches_applied.load(Ordering::Relaxed), 3);
+        assert_eq!(rollup.update_latency.count(), 3);
+        assert!(rollup.resident_bytes.load(Ordering::Relaxed) > 0);
+        // per-tenant metrics stay scoped
+        let m0 = fleet.metrics(TenantId(0)).unwrap();
+        assert_eq!(m0.events_ingested.load(Ordering::Relaxed), 2);
+    }
+}

@@ -43,21 +43,39 @@ impl Histogram {
         std::time::Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
+    /// Approximate quantile from bucket boundaries (upper bound),
+    /// clamped to the observed maximum — a single 300µs sample must
+    /// report p99 = 300µs, not the 512µs bucket edge.
     pub fn quantile(&self, q: f64) -> std::time::Duration {
         let total = self.count();
         if total == 0 {
             return std::time::Duration::ZERO;
         }
+        let max_us = self.max_us.load(Ordering::Relaxed);
         let target = (q * total as f64).ceil() as u64;
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return std::time::Duration::from_micros(1u64 << (i + 1));
+                let upper = 1u64 << (i + 1);
+                return std::time::Duration::from_micros(upper.min(max_us));
             }
         }
         self.max()
+    }
+
+    /// Fold another histogram into this one (bucket-wise sums, max of
+    /// maxima) — the fleet-wide metrics roll-up.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 }
 
@@ -75,6 +93,19 @@ pub struct Metrics {
     pub queries_cached: AtomicU64,
     /// Queries that actually computed their derived result.
     pub queries_computed: AtomicU64,
+    /// Tracker-reported FLOPs charged at each applied batch (the fleet's
+    /// per-tenant compute-budget ledger).
+    pub flops_applied: AtomicU64,
+    /// Applied batches whose FLOP cost exceeded the tenant's
+    /// [`crate::coordinator::tenant::TenantBudget::max_flops_per_flush`].
+    pub flop_budget_overruns: AtomicU64,
+    /// Estimated resident bytes (committed CSR + published eigenpairs +
+    /// id map) as of the last flush; a gauge per tenant, a sum across a
+    /// fleet roll-up.
+    pub resident_bytes: AtomicU64,
+    /// Flushes that left the tenant above its
+    /// [`crate::coordinator::tenant::TenantBudget::max_resident_bytes`].
+    pub mem_budget_overruns: AtomicU64,
     pub update_latency: Histogram,
     /// Latency of *pure* cache hits (should sit orders of magnitude
     /// below `query_latency_computed` — the read-storm contract).
@@ -102,9 +133,37 @@ impl Metrics {
         }
     }
 
+    /// Fold another metric set into this one: counters sum, histograms
+    /// merge bucket-wise.  `resident_bytes` gauges also sum — across a
+    /// fleet that is the aggregate resident footprint.
+    pub fn merge_from(&self, other: &Metrics) {
+        let add = |dst: &AtomicU64, src: &AtomicU64| {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        };
+        add(&self.events_ingested, &other.events_ingested);
+        add(&self.batches_applied, &other.batches_applied);
+        add(&self.update_failures, &other.update_failures);
+        add(&self.nodes_added, &other.nodes_added);
+        add(&self.queries_cached, &other.queries_cached);
+        add(&self.queries_computed, &other.queries_computed);
+        add(&self.flops_applied, &other.flops_applied);
+        add(&self.flop_budget_overruns, &other.flop_budget_overruns);
+        add(&self.resident_bytes, &other.resident_bytes);
+        add(&self.mem_budget_overruns, &other.mem_budget_overruns);
+        self.update_latency.merge(&other.update_latency);
+        self.query_latency_cached.merge(&other.query_latency_cached);
+        self.query_latency_computed.merge(&other.query_latency_computed);
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "events={} batches={} update_failures={} nodes_added={} update_mean={:?} update_p99={:?} update_max={:?} queries_computed={} queries_cached={} hit_rate={:.1}% q_computed_mean={:?} q_cached_mean={:?}",
+            "events={} batches={} update_failures={} nodes_added={} update_mean={:?} \
+             update_p99={:?} update_max={:?} queries_computed={} queries_cached={} \
+             hit_rate={:.1}% q_computed_mean={:?} q_cached_mean={:?} flops={} \
+             resident_bytes={} budget_overruns={}/{}",
             self.events_ingested.load(Ordering::Relaxed),
             self.batches_applied.load(Ordering::Relaxed),
             self.update_failures.load(Ordering::Relaxed),
@@ -117,6 +176,10 @@ impl Metrics {
             100.0 * self.query_cache_hit_rate(),
             self.query_latency_computed.mean(),
             self.query_latency_cached.mean(),
+            self.flops_applied.load(Ordering::Relaxed),
+            self.resident_bytes.load(Ordering::Relaxed),
+            self.flop_budget_overruns.load(Ordering::Relaxed),
+            self.mem_budget_overruns.load(Ordering::Relaxed),
         )
     }
 }
@@ -147,6 +210,62 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p50 <= p99);
         assert!(p99.as_micros() >= 512);
+    }
+
+    #[test]
+    fn quantile_never_exceeds_observed_max() {
+        // regression: quantile() returned the bucket's upper bound
+        // unconditionally, reporting p99 > max() — a single 300µs sample
+        // landed in bucket [256, 512) and reported 512µs
+        let h = Histogram::new();
+        h.observe(Duration::from_micros(300));
+        assert_eq!(h.quantile(0.99), Duration::from_micros(300));
+        assert_eq!(h.quantile(0.99), h.max());
+        // and over an arbitrary sample set the invariant holds at every q
+        let h = Histogram::new();
+        for us in [3u64, 17, 100, 999, 5000, 77_777] {
+            h.observe(Duration::from_micros(us));
+        }
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert!(h.quantile(q) <= h.max(), "q={q}: {:?} > {:?}", h.quantile(q), h.max());
+        }
+    }
+
+    #[test]
+    fn histogram_merge_sums_counts_and_keeps_max() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for i in 1..=100u64 {
+            a.observe(Duration::from_micros(i));
+            b.observe(Duration::from_micros(10 * i));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), Duration::from_micros(1000));
+        // mean of 1..=100 plus 10..=1000 step 10 = (5050 + 50500) / 200
+        assert_eq!(a.mean(), Duration::from_micros(55550 / 200));
+        assert!(a.quantile(0.99) <= a.max());
+    }
+
+    #[test]
+    fn metrics_merge_from_sums_counters_and_histograms() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.events_ingested.fetch_add(3, Ordering::Relaxed);
+        b.events_ingested.fetch_add(4, Ordering::Relaxed);
+        b.update_failures.fetch_add(2, Ordering::Relaxed);
+        b.flops_applied.fetch_add(1000, Ordering::Relaxed);
+        a.resident_bytes.store(10, Ordering::Relaxed);
+        b.resident_bytes.store(32, Ordering::Relaxed);
+        a.update_latency.observe(Duration::from_micros(50));
+        b.update_latency.observe(Duration::from_micros(70));
+        a.merge_from(&b);
+        assert_eq!(a.events_ingested.load(Ordering::Relaxed), 7);
+        assert_eq!(a.update_failures.load(Ordering::Relaxed), 2);
+        assert_eq!(a.flops_applied.load(Ordering::Relaxed), 1000);
+        assert_eq!(a.resident_bytes.load(Ordering::Relaxed), 42);
+        assert_eq!(a.update_latency.count(), 2);
+        assert_eq!(a.update_latency.max(), Duration::from_micros(70));
     }
 
     #[test]

@@ -1,23 +1,40 @@
-//! L3 coordinator: a streaming embedding-tracking service.
+//! L3 coordinator: a streaming embedding-tracking service, multi-tenant
+//! on a shared worker pool.
 //!
-//! Edge events flow in; a batching policy groups them into time steps; a
-//! dedicated worker thread applies each batch to the configured tracker
-//! (native or PJRT-backed — the PJRT client is thread-bound, which is
-//! exactly why the tracker lives on one worker thread); versioned
-//! snapshots of the embedding — eigenpairs plus the frozen
+//! Edge events flow in; a batching policy ([`batcher::BatchPolicy`] —
+//! count pressure and/or a `max_age` staleness deadline) groups them
+//! into time steps; each tenant is a resumable state machine
+//! ([`tenant::TenantState`]) stepped by a fixed pool of workers
+//! ([`pool::WorkerPool`]) — fair round-robin, at most one worker per
+//! tenant, deadline wakeups for idle tenants.  `@xla` tenants are the
+//! exception: the PJRT client is thread-bound, so they run pinned to a
+//! dedicated thread driving the same state machine.
+//!
+//! Versioned snapshots of the embedding — eigenpairs plus the frozen
 //! internal↔external id map — are published for lock-cheap concurrent
 //! reads; every derived query (centrality, clustering, embeddings,
 //! similarity) is answered off-worker by the [`query::QueryEngine`]
 //! with a version-keyed memo cache; metrics record ingest/update
-//! latencies and cached/computed query counts.
+//! latencies, cached/computed query counts, and per-tenant flop/memory
+//! budget accounting, with a fleet-wide roll-up.
+//!
+//! Single-tenant callers use the [`service::TrackingService`] facade;
+//! multi-tenant callers manage [`fleet::TenantId`]-keyed tenants
+//! through a [`fleet::Fleet`].
 
 pub mod batcher;
+pub mod fleet;
 pub mod metrics;
+pub mod pool;
 pub mod query;
 pub mod service;
 pub mod snapshot;
+pub mod tenant;
 
 pub use batcher::BatchPolicy;
+pub use fleet::{Fleet, FleetConfig, TenantId};
+pub use pool::WorkerPool;
 pub use query::{ClusterAssignment, QueryEngine};
 pub use service::{ServiceConfig, ServiceHandle, TrackingService};
 pub use snapshot::EmbeddingSnapshot;
+pub use tenant::TenantBudget;

@@ -1,9 +1,20 @@
-//! The tracking service: a worker thread that owns the graph state and
-//! the tracker, fed by an mpsc command channel.
+//! The tracking service: a single-tenant facade over the shared
+//! [`WorkerPool`].
 //!
-//! Why a dedicated thread: the PJRT client and compiled executables are
-//! thread-bound (`Rc` internals), so the XLA-backed tracker must be
-//! constructed *and* driven on one thread.  The handle is `Clone + Send`.
+//! Native-backend services no longer own an OS thread: `spawn` builds a
+//! [`TenantState`] and registers it on the process-wide pool
+//! ([`WorkerPool::global`]), where a fixed set of workers steps any
+//! number of tenants.  Multi-tenant callers use
+//! [`Fleet`](crate::coordinator::fleet::Fleet) directly; this facade
+//! keeps every single-tenant call site (`grest track --serve`, the
+//! `embedding_server` example, the soak tests) compiling unchanged.
+//!
+//! The one exception is `@xla`: the PJRT client and compiled
+//! executables are thread-bound (`Rc` internals), so XLA-backed
+//! trackers are constructed *and* driven on one dedicated pinned
+//! thread ([`TrackingService::spawn_pinned`]) — driving the same state
+//! machine, so pooled and pinned runs are bitwise identical for equal
+//! command sequences.
 //!
 //! The worker's only job is ingest: apply batches, publish snapshots.
 //! Every read — raw snapshots and all derived queries (central nodes,
@@ -13,29 +24,36 @@
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{Tenant, WorkerPool};
 use crate::coordinator::query::{ClusterAssignment, QueryEngine};
 use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
+use crate::coordinator::tenant::{Applied, TenantBudget, TenantCmd, TenantState};
 use crate::graph::graph::Graph;
 use crate::graph::stream::{DeltaBuilder, GraphEvent, IdMap};
 use crate::linalg::threads::Threads;
 use crate::sparse::csr::Csr;
-use crate::tracking::spec::TrackerSpec;
+use crate::tracking::spec::{Backend, TrackerSpec};
 use crate::tracking::traits::{EigTracker, EigenPairs};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Builds the tracker inside the worker thread (lets callers choose the
-/// native or XLA backend without `Send` bounds on the tracker itself).
-/// A build error is reported back through [`TrackingService::spawn`] /
+/// Builds the tracker inside the pinned worker thread (lets callers
+/// choose the XLA backend without `Send` bounds on the tracker).  A
+/// build error is reported back through [`TrackingService::spawn`] /
 /// [`TrackingService::spawn_with_factory`], which then fail instead of
-/// leaving a dead worker behind.  Derived from [`ServiceConfig::tracker`]
-/// by [`TrackingService::spawn`]; hand-written closures remain available
-/// through [`TrackingService::spawn_with_factory`].
+/// leaving a dead worker behind.
 pub type TrackerFactory =
     Box<dyn FnOnce(&Csr, &EigenPairs) -> Result<Box<dyn EigTracker>> + Send>;
+
+/// [`TrackerFactory`] for pool-resident tenants: the tracker hops
+/// between worker threads, so it must be `Send` (every native-backend
+/// registry tracker is; `@xla` is not — see
+/// [`TrackerSpec::build_seeded_send`]).
+pub type SendTrackerFactory =
+    Box<dyn FnOnce(&Csr, &EigenPairs) -> Result<Box<dyn EigTracker + Send>> + Send>;
 
 /// Service configuration.
 pub struct ServiceConfig {
@@ -49,44 +67,55 @@ pub struct ServiceConfig {
     /// the reader-side clustering seed (two services with different
     /// seeds never share k-means randomness).
     pub seed: u64,
-    /// Declarative tracker to serve (built on the worker thread).
+    /// Declarative tracker to serve.
     pub tracker: TrackerSpec,
     /// Worker budget for reader-side query kernels (k-means assignment);
     /// results are bitwise identical for every thread count.
     pub threads: Threads,
 }
 
-enum Command {
-    Events(Vec<GraphEvent>),
-    Flush(Sender<u64>),
-    Adjacency(Sender<Csr>),
-    Shutdown,
+/// Where the tenant lives: on a shared pool, or on its own pinned
+/// thread (`@xla`).
+#[derive(Clone)]
+enum TenantRef {
+    Pooled { pool: WorkerPool, tenant: Arc<Tenant> },
+    Pinned { tx: Sender<TenantCmd> },
 }
 
 /// Cloneable, Send handle to the service.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: Sender<Command>,
+    tenant: TenantRef,
     snapshots: SnapshotStore,
     metrics: Arc<Metrics>,
     query: Arc<QueryEngine>,
 }
 
 impl ServiceHandle {
-    /// Ingest a batch of events (non-blocking; worker applies policy).
+    fn submit(&self, cmd: TenantCmd) -> Result<()> {
+        match &self.tenant {
+            TenantRef::Pooled { pool, tenant } => pool.submit(tenant, cmd),
+            TenantRef::Pinned { tx } => {
+                tx.send(cmd).map_err(|_| anyhow!("tracker worker is shut down"))
+            }
+        }
+    }
+
+    /// Ingest a batch of events (non-blocking; the worker applies the
+    /// policy).  `events_ingested` counts only successful enqueues — a
+    /// send to a shut-down worker must not inflate it.
     pub fn ingest(&self, events: Vec<GraphEvent>) -> Result<()> {
-        self.metrics
-            .events_ingested
-            .fetch_add(events.len() as u64, Ordering::Relaxed);
-        self.tx.send(Command::Events(events))?;
+        let n = events.len() as u64;
+        self.submit(TenantCmd::Events(events))?;
+        self.metrics.events_ingested.fetch_add(n, Ordering::Relaxed);
         Ok(())
     }
 
     /// Force a flush; returns the published snapshot version.
     pub fn flush(&self) -> Result<u64> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Command::Flush(rtx))?;
-        Ok(rrx.recv()?)
+        self.submit(TenantCmd::Flush(rtx))?;
+        rrx.recv().map_err(|_| anyhow!("tracker worker is shut down"))
     }
 
     /// Latest embedding snapshot (never blocks the worker).
@@ -99,8 +128,8 @@ impl ServiceHandle {
     /// cross-check it against a from-scratch rebuild.
     pub fn adjacency(&self) -> Result<Csr> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Command::Adjacency(rtx))?;
-        Ok(rrx.recv()?)
+        self.submit(TenantCmd::Adjacency(rtx))?;
+        rrx.recv().map_err(|_| anyhow!("tracker worker is shut down"))
     }
 
     /// Top-J central nodes by subgraph centrality on the latest
@@ -145,58 +174,143 @@ impl ServiceHandle {
         self.metrics.clone()
     }
 
-    /// Stop the worker (drains outstanding commands first).
+    /// Stop the tenant and wait until no worker will touch it again
+    /// (outstanding queued commands are dropped; their reply channels
+    /// error out).  Idempotent across handle clones.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Command::Shutdown);
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if self.submit(TenantCmd::Shutdown(ack_tx)).is_ok() {
+            // Err here means the worker exited with the ack sender —
+            // either way the tenant is retired once recv returns
+            let _ = ack_rx.recv();
+        }
     }
 }
 
-/// The running service (join handle + public handle).
+/// The running service: a public handle, plus a join handle only for
+/// pinned (`@xla`) tenants — pool-resident tenants own no thread.
 pub struct TrackingService {
     pub handle: ServiceHandle,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl TrackingService {
-    /// Spawn the worker serving the tracker described by
-    /// `config.tracker` (the declarative path every production caller
-    /// uses).  The tracker itself is built on the worker thread — the
-    /// XLA backend's PJRT state is thread-bound.
+    /// Spawn the service described by `config.tracker` (the declarative
+    /// path every production caller uses).  Native-backend trackers run
+    /// on the process-wide shared [`WorkerPool::global`]; `@xla` falls
+    /// back to a dedicated pinned thread (PJRT state is thread-bound).
     pub fn spawn(config: ServiceConfig) -> Result<TrackingService> {
+        config.tracker.validate_buildable()?;
+        if config.tracker.backend == Backend::Xla {
+            return Self::spawn_pinned(config);
+        }
+        Self::spawn_on(WorkerPool::global(), config, TenantBudget::default())
+    }
+
+    /// Spawn as a tenant of a specific pool, with a resource budget
+    /// (the [`Fleet`](crate::coordinator::fleet::Fleet) entry point).
+    /// Rejects `@xla` specs — those need [`spawn_pinned`]
+    /// (Self::spawn_pinned).
+    pub fn spawn_on(
+        pool: &WorkerPool,
+        config: ServiceConfig,
+        budget: TenantBudget,
+    ) -> Result<TrackingService> {
         config.tracker.validate_buildable()?;
         let spec = config.tracker.clone();
         let seed = config.seed;
-        Self::spawn_with_factory(
+        Self::spawn_on_with_factory(
+            pool,
             config,
+            budget,
+            Box::new(move |a0, init| spec.build_seeded_send(a0, init, seed)),
+        )
+    }
+
+    /// Pool-tenant escape hatch: a hand-written `Send` tracker factory
+    /// (ad-hoc or experimental trackers the registry doesn't know).
+    /// `config.tracker` is ignored.
+    pub fn spawn_on_with_factory(
+        pool: &WorkerPool,
+        config: ServiceConfig,
+        budget: TenantBudget,
+        factory: SendTrackerFactory,
+    ) -> Result<TrackingService> {
+        let a0 = config.initial.adjacency();
+        let init = crate::tracking::traits::init_eigenpairs(&a0, config.k, config.seed);
+        // built synchronously on the caller's thread: a broken factory
+        // (or a @xla spec routed here) fails the spawn directly
+        let tracker = factory(&a0, &init)?;
+        let (store, metrics, query) = read_side(&a0, &init, &config);
+        let state = TenantState::new(
+            tracker,
+            DeltaBuilder::from_graph(config.initial),
+            a0,
+            config.policy,
+            store.clone(),
+            metrics.clone(),
+            budget,
+        );
+        let tenant = pool.register(state);
+        let handle = ServiceHandle {
+            tenant: TenantRef::Pooled { pool: pool.clone(), tenant },
+            snapshots: store,
+            metrics,
+            query,
+        };
+        Ok(TrackingService { handle, worker: None })
+    }
+
+    /// Spawn on a dedicated pinned thread — required for `@xla`,
+    /// available to anyone wanting thread-per-tenant isolation (the
+    /// fleet bench uses it as the comparison baseline).
+    pub fn spawn_pinned(config: ServiceConfig) -> Result<TrackingService> {
+        Self::spawn_pinned_budgeted(config, TenantBudget::default())
+    }
+
+    /// [`spawn_pinned`](Self::spawn_pinned) with a resource budget.
+    pub fn spawn_pinned_budgeted(
+        config: ServiceConfig,
+        budget: TenantBudget,
+    ) -> Result<TrackingService> {
+        config.tracker.validate_buildable()?;
+        let spec = config.tracker.clone();
+        let seed = config.seed;
+        Self::spawn_with_factory_budgeted(
+            config,
+            budget,
             Box::new(move |a0, init| spec.build_seeded(a0, init, seed)),
         )
     }
 
-    /// Escape hatch: spawn with a hand-written factory (ad-hoc or
-    /// experimental trackers the registry doesn't know).
+    /// Pinned-thread escape hatch: spawn with a hand-written factory.
     /// `config.tracker` is ignored; the factory runs on the worker
     /// thread with the initial adjacency and the Lanczos-computed
-    /// initial pairs.
+    /// initial pairs (this is the only spawn path whose tracker may be
+    /// `!Send`).
     pub fn spawn_with_factory(
         config: ServiceConfig,
         factory: TrackerFactory,
     ) -> Result<TrackingService> {
+        Self::spawn_with_factory_budgeted(config, TenantBudget::default(), factory)
+    }
+
+    /// [`spawn_with_factory`](Self::spawn_with_factory) with a budget.
+    pub fn spawn_with_factory_budgeted(
+        config: ServiceConfig,
+        budget: TenantBudget,
+        factory: TrackerFactory,
+    ) -> Result<TrackingService> {
         let a0 = config.initial.adjacency();
         let init = crate::tracking::traits::init_eigenpairs(&a0, config.k, config.seed);
-        let store = SnapshotStore::new(EmbeddingSnapshot {
-            version: 0,
-            n_nodes: a0.n_rows,
-            pairs: init.clone(),
-            // the seed graph's external ids are 0..n by the
-            // DeltaBuilder::from_graph contract
-            ids: Arc::new(IdMap::identity(a0.n_rows)),
-            published_at: Instant::now(),
-        });
-        let metrics = Metrics::new();
-        let query = Arc::new(QueryEngine::new(config.seed, config.threads, metrics.clone()));
+        let (store, metrics, query) = read_side(&a0, &init, &config);
         let (tx, rx) = mpsc::channel();
-        let handle =
-            ServiceHandle { tx, snapshots: store.clone(), metrics: metrics.clone(), query };
+        let handle = ServiceHandle {
+            tenant: TenantRef::Pinned { tx },
+            snapshots: store.clone(),
+            metrics: metrics.clone(),
+            query,
+        };
         let cfg_policy = config.policy;
         let initial_graph = config.initial;
         // the worker reports whether the factory succeeded, so a broken
@@ -206,7 +320,7 @@ impl TrackingService {
         let worker = std::thread::Builder::new()
             .name("grest-tracker".into())
             .spawn(move || {
-                worker_loop(
+                pinned_loop(
                     rx,
                     initial_graph,
                     a0,
@@ -215,24 +329,29 @@ impl TrackingService {
                     cfg_policy,
                     store,
                     metrics,
+                    budget,
                     ready_tx,
                 )
             })?;
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(TrackingService { handle: handle.clone(), worker: Some(worker) }),
+            Ok(Ok(())) => Ok(TrackingService { handle, worker: Some(worker) }),
             Ok(Err(e)) => {
                 let _ = worker.join();
                 Err(e)
             }
             Err(_) => {
                 let _ = worker.join();
-                Err(anyhow::anyhow!("tracker worker died during startup"))
+                Err(anyhow!("tracker worker died during startup"))
             }
         }
     }
 
     /// Shut down and join.
     pub fn join(mut self) {
+        self.shutdown_and_wait();
+    }
+
+    fn shutdown_and_wait(&mut self) {
         self.handle.shutdown();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
@@ -242,16 +361,37 @@ impl TrackingService {
 
 impl Drop for TrackingService {
     fn drop(&mut self) {
-        self.handle.shutdown();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.shutdown_and_wait();
     }
 }
 
+/// The read side shared by both spawn paths: version-0 snapshot store,
+/// metrics, and the snapshot-only query engine.
+fn read_side(
+    a0: &Csr,
+    init: &EigenPairs,
+    config: &ServiceConfig,
+) -> (SnapshotStore, Arc<Metrics>, Arc<QueryEngine>) {
+    let store = SnapshotStore::new(EmbeddingSnapshot {
+        version: 0,
+        n_nodes: a0.n_rows,
+        pairs: init.clone(),
+        // the seed graph's external ids are 0..n by the
+        // DeltaBuilder::from_graph contract
+        ids: Arc::new(IdMap::identity(a0.n_rows)),
+        published_at: Instant::now(),
+    });
+    let metrics = Metrics::new();
+    let query = Arc::new(QueryEngine::new(config.seed, config.threads, metrics.clone()));
+    (store, metrics, query)
+}
+
+/// Dedicated-thread driver: the same [`TenantState`] machine the pool
+/// steps, fed from an mpsc channel, with `recv_timeout` standing in for
+/// the pool's timer heap on `max_age` deadlines.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    rx: Receiver<Command>,
+fn pinned_loop(
+    rx: Receiver<TenantCmd>,
     initial_graph: Graph,
     a0: Csr,
     init: EigenPairs,
@@ -259,9 +399,10 @@ fn worker_loop(
     policy: BatchPolicy,
     store: SnapshotStore,
     metrics: Arc<Metrics>,
+    budget: TenantBudget,
     ready: Sender<Result<()>>,
 ) {
-    let mut tracker = match factory(&a0, &init) {
+    let tracker = match factory(&a0, &init) {
         Ok(t) => {
             let _ = ready.send(Ok(()));
             t
@@ -271,69 +412,41 @@ fn worker_loop(
             return;
         }
     };
-    let mut builder = DeltaBuilder::from_graph(initial_graph);
-    let mut adjacency = a0;
-    let mut version = 0u64;
-
-    let flush =
-        |builder: &mut DeltaBuilder, adjacency: &mut Csr, tracker: &mut Box<dyn EigTracker>, version: &mut u64| {
-            match builder.prepare() {
-                // batch netted out to no change: drop the pending events,
-                // committed state is already consistent
-                None => builder.commit(),
-                Some(delta) => {
-                    let t0 = Instant::now();
-                    match tracker.update(&delta) {
-                        Ok(()) => {
-                            // commit builder + adjacency only after the
-                            // tracker accepted the batch, so a failure
-                            // never leaves them diverged from the tracker
-                            builder.commit();
-                            metrics.nodes_added.fetch_add(delta.s_new as u64, Ordering::Relaxed);
-                            metrics.update_latency.observe(t0.elapsed());
-                            metrics.batches_applied.fetch_add(1, Ordering::Relaxed);
-                            // incremental row-merge: only rows touched by
-                            // Δ are rewritten, never a full rebuild
-                            *adjacency = adjacency.apply_delta(&delta);
-                            *version += 1;
-                            store.publish(EmbeddingSnapshot {
-                                version: *version,
-                                n_nodes: adjacency.n_rows,
-                                pairs: tracker.current().clone(),
-                                // O(1): Arc clone, copy-on-write at commit
-                                ids: builder.committed_ids(),
-                                published_at: Instant::now(),
-                            });
-                        }
-                        Err(_) => {
-                            // batch stays pending; the next flush retries
-                            // the accumulated delta against the same
-                            // committed state
-                            metrics.update_failures.fetch_add(1, Ordering::Relaxed);
-                        }
+    let mut state: TenantState<dyn EigTracker> = TenantState::new(
+        tracker,
+        DeltaBuilder::from_graph(initial_graph),
+        a0,
+        policy,
+        store,
+        metrics,
+        budget,
+    );
+    loop {
+        let cmd = match state.next_deadline() {
+            None => match rx.recv() {
+                Ok(cmd) => cmd,
+                // every handle dropped without shutdown: retire
+                Err(_) => return,
+            },
+            Some(at) => {
+                let now = Instant::now();
+                if at <= now {
+                    state.poll_deadline(now);
+                    continue;
+                }
+                match rx.recv_timeout(at - now) {
+                    Ok(cmd) => cmd,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        state.poll_deadline(Instant::now());
+                        continue;
                     }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
                 }
             }
         };
-
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Command::Events(events) => {
-                for ev in events {
-                    builder.push(ev);
-                }
-                if policy.should_flush(builder.pending_events(), builder.pending_new_nodes()) {
-                    flush(&mut builder, &mut adjacency, &mut tracker, &mut version);
-                }
-            }
-            Command::Flush(reply) => {
-                flush(&mut builder, &mut adjacency, &mut tracker, &mut version);
-                let _ = reply.send(version);
-            }
-            Command::Adjacency(reply) => {
-                let _ = reply.send(adjacency.clone());
-            }
-            Command::Shutdown => break,
+        if let Applied::Stopped(ack) = state.apply(cmd) {
+            let _ = ack.send(());
+            return;
         }
     }
 }
@@ -661,6 +774,25 @@ mod tests {
             Ok(_) => panic!("spawn must propagate the factory error"),
             Err(e) => assert!(e.to_string().contains("artifacts missing"), "{e}"),
         }
+        // same contract on the pooled path
+        let g = base_graph(20, 11);
+        let res = TrackingService::spawn_on_with_factory(
+            WorkerPool::global(),
+            ServiceConfig {
+                initial: g,
+                k: 3,
+                policy: BatchPolicy::ByCount(4),
+                seed: 1,
+                tracker: TrackerSpec::default(),
+                threads: Threads::SINGLE,
+            },
+            TenantBudget::default(),
+            Box::new(|_a0, _init| anyhow::bail!("artifacts missing")),
+        );
+        match res {
+            Ok(_) => panic!("spawn_on must propagate the factory error"),
+            Err(e) => assert!(e.to_string().contains("artifacts missing"), "{e}"),
+        }
     }
 
     #[test]
@@ -677,6 +809,72 @@ mod tests {
         match res {
             Ok(_) => panic!("trip@xla must be rejected before the worker spawns"),
             Err(e) => assert!(e.to_string().contains("G-REST"), "{e}"),
+        }
+    }
+
+    #[test]
+    fn ingest_counts_only_on_successful_enqueue() {
+        // regression: ingest() bumped events_ingested *before* the send,
+        // so ingesting into a joined service inflated the counter
+        for pinned in [false, true] {
+            let config = || ServiceConfig {
+                initial: base_graph(25, 13),
+                k: 3,
+                policy: BatchPolicy::ByCount(1_000_000),
+                seed: 13,
+                tracker: TrackerSpec::default(),
+                threads: Threads::SINGLE,
+            };
+            let svc = if pinned {
+                TrackingService::spawn_pinned(config()).unwrap()
+            } else {
+                TrackingService::spawn(config()).unwrap()
+            };
+            let h = svc.handle.clone();
+            h.ingest(vec![GraphEvent::AddEdge(0, 800), GraphEvent::AddEdge(1, 801)]).unwrap();
+            assert_eq!(h.metrics().events_ingested.load(Ordering::Relaxed), 2);
+            svc.join();
+            let err = h.ingest(vec![GraphEvent::AddEdge(2, 802)]);
+            assert!(err.is_err(), "ingest into a joined service must fail (pinned={pinned})");
+            assert_eq!(
+                h.metrics().events_ingested.load(Ordering::Relaxed),
+                2,
+                "failed enqueue must not count (pinned={pinned})"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_service_flushes_on_max_age_without_manual_flush() {
+        // deadline trigger end-to-end on the shared pool: ingest below
+        // every count bound, then wait for the scheduler's timer wakeup
+        for pinned in [false, true] {
+            let config = ServiceConfig {
+                initial: base_graph(25, 17),
+                k: 3,
+                policy: BatchPolicy::MaxAge(Duration::from_millis(40)),
+                seed: 17,
+                tracker: TrackerSpec::default(),
+                threads: Threads::SINGLE,
+            };
+            let svc = if pinned {
+                TrackingService::spawn_pinned(config).unwrap()
+            } else {
+                TrackingService::spawn(config).unwrap()
+            };
+            let h = &svc.handle;
+            h.ingest(vec![GraphEvent::AddEdge(0, 850), GraphEvent::AddEdge(1, 851)]).unwrap();
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while h.snapshot().version == 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            assert_eq!(
+                h.snapshot().version,
+                1,
+                "max_age must flush with no manual flush (pinned={pinned})"
+            );
+            assert!(h.snapshot().n_nodes > 25);
+            svc.join();
         }
     }
 }

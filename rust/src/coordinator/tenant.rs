@@ -1,0 +1,395 @@
+//! The per-tenant state machine: everything the old per-service worker
+//! thread owned — graph, committed CSR, tracker, pending batch — packed
+//! into a [`TenantState`] value with a resumable [`step`]
+//! (TenantState::step).
+//!
+//! Extracting the state from the thread is what makes the fleet
+//! possible: a worker-pool thread can pick up any runnable tenant, run
+//! one `step` (drain queued commands, at most one flush), and put it
+//! back.  The pinned-thread path for `@xla` tenants drives the *same*
+//! state machine from a dedicated thread, so pooled and pinned runs are
+//! bitwise identical given identical command sequences.
+//!
+//! `TenantState` is generic over the tracker's sizedness: the pool
+//! stores `TenantState<dyn EigTracker + Send>` (trackers hop between
+//! worker threads), the pinned path `TenantState<dyn EigTracker>`
+//! (PJRT state never leaves its thread).
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
+use crate::graph::stream::{DeltaBuilder, GraphEvent};
+use crate::sparse::csr::Csr;
+use crate::tracking::traits::EigTracker;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A command queued into a tenant's inbox.  Mirrors the old private
+/// service `Command`, with `Shutdown` carrying an ack so joiners can
+/// wait for the tenant to actually retire.
+pub enum TenantCmd {
+    /// Ingest events (the policy decides whether to flush).
+    Events(Vec<GraphEvent>),
+    /// Force a flush; replies with the published snapshot version.
+    Flush(Sender<u64>),
+    /// Reply with a clone of the committed adjacency.
+    Adjacency(Sender<Csr>),
+    /// Retire the tenant; the ack fires once no worker will touch it.
+    Shutdown(Sender<()>),
+}
+
+/// What applying one command did.
+pub enum Applied {
+    /// Keep draining the inbox.
+    Continue,
+    /// A flush ran — yield so one step never runs two dense phases.
+    Flushed,
+    /// Shutdown was requested; the caller owns the ack.
+    Stopped(Sender<()>),
+}
+
+/// What a [`TenantState::step`] left behind.
+pub enum StepOutcome {
+    /// Inbox drained, no deadline armed.
+    Idle,
+    /// Inbox drained (or step yielded after a flush) and a non-empty
+    /// pending batch has a [`BatchPolicy::max_age`] deadline: the
+    /// scheduler must wake this tenant by then even with no new input.
+    WaitUntil(Instant),
+    /// The tenant retired; send the ack after unpublishing it.
+    Stopped(Sender<()>),
+}
+
+/// Per-tenant resource budget.  Soft limits: overruns are *counted*
+/// (surfaced through [`Metrics`]) rather than enforced, so a fleet
+/// operator can find noisy tenants without the coordinator refusing
+/// work mid-stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantBudget {
+    /// Tracker-reported FLOPs one applied batch may cost before it
+    /// counts as a [`Metrics::flop_budget_overruns`] overrun.
+    pub max_flops_per_flush: Option<u64>,
+    /// Estimated resident bytes (committed CSR + published pairs + id
+    /// map) the tenant may hold before each flush counts as a
+    /// [`Metrics::mem_budget_overruns`] overrun.
+    pub max_resident_bytes: Option<u64>,
+}
+
+/// The state machine.  `T` is `dyn EigTracker + Send` on the pool and
+/// `dyn EigTracker` on a pinned thread; the unsized field must be last.
+pub struct TenantState<T: ?Sized + EigTracker = dyn EigTracker + Send> {
+    builder: DeltaBuilder,
+    adjacency: Csr,
+    policy: BatchPolicy,
+    store: SnapshotStore,
+    metrics: Arc<Metrics>,
+    budget: TenantBudget,
+    version: u64,
+    /// When the oldest event of the current pending batch arrived;
+    /// `None` while the batch is empty.  A failed flush re-arms it to
+    /// "now" so a broken tracker under a `max_age` policy retries at
+    /// the deadline cadence instead of hot-spinning.
+    pending_since: Option<Instant>,
+    tracker: Box<T>,
+}
+
+impl<T: ?Sized + EigTracker> TenantState<T> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        tracker: Box<T>,
+        builder: DeltaBuilder,
+        adjacency: Csr,
+        policy: BatchPolicy,
+        store: SnapshotStore,
+        metrics: Arc<Metrics>,
+        budget: TenantBudget,
+    ) -> TenantState<T> {
+        TenantState {
+            builder,
+            adjacency,
+            policy,
+            store,
+            metrics,
+            budget,
+            version: 0,
+            pending_since: None,
+            tracker,
+        }
+    }
+
+    /// Last published snapshot version.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Apply one command.
+    pub fn apply(&mut self, cmd: TenantCmd) -> Applied {
+        match cmd {
+            TenantCmd::Events(events) => {
+                for ev in events {
+                    self.builder.push(ev);
+                }
+                let (events, new_nodes) =
+                    (self.builder.pending_events(), self.builder.pending_new_nodes());
+                if (events > 0 || new_nodes > 0) && self.pending_since.is_none() {
+                    self.pending_since = Some(Instant::now());
+                }
+                if self.policy.should_flush(events, new_nodes) {
+                    self.flush();
+                    Applied::Flushed
+                } else {
+                    Applied::Continue
+                }
+            }
+            TenantCmd::Flush(reply) => {
+                self.flush();
+                let _ = reply.send(self.version);
+                Applied::Flushed
+            }
+            TenantCmd::Adjacency(reply) => {
+                let _ = reply.send(self.adjacency.clone());
+                Applied::Continue
+            }
+            TenantCmd::Shutdown(ack) => Applied::Stopped(ack),
+        }
+    }
+
+    /// Close the pending batch and run one tracker update.  On error
+    /// the batch stays pending (retried at the next flush); on success
+    /// the committed CSR advances by row-merge and a new snapshot
+    /// publishes.
+    pub fn flush(&mut self) {
+        match self.builder.prepare() {
+            // batch netted out to no change: drop the pending events,
+            // committed state is already consistent
+            None => {
+                self.builder.commit();
+                self.pending_since = None;
+            }
+            Some(delta) => {
+                let t0 = Instant::now();
+                match self.tracker.update(&delta) {
+                    Ok(()) => {
+                        // commit builder + adjacency only after the
+                        // tracker accepted the batch, so a failure
+                        // never leaves them diverged from the tracker
+                        self.builder.commit();
+                        self.pending_since = None;
+                        let m = &self.metrics;
+                        m.nodes_added.fetch_add(delta.s_new as u64, Ordering::Relaxed);
+                        m.update_latency.observe(t0.elapsed());
+                        m.batches_applied.fetch_add(1, Ordering::Relaxed);
+                        // incremental row-merge: only rows touched by
+                        // Δ are rewritten, never a full rebuild
+                        self.adjacency = self.adjacency.apply_delta(&delta);
+                        self.charge_budget();
+                        self.version += 1;
+                        self.store.publish(EmbeddingSnapshot {
+                            version: self.version,
+                            n_nodes: self.adjacency.n_rows,
+                            pairs: self.tracker.current().clone(),
+                            // O(1): Arc clone, copy-on-write at commit
+                            ids: self.builder.committed_ids(),
+                            published_at: Instant::now(),
+                        });
+                    }
+                    Err(_) => {
+                        // batch stays pending; the next flush retries
+                        // the accumulated delta against the same
+                        // committed state
+                        self.metrics.update_failures.fetch_add(1, Ordering::Relaxed);
+                        if self.pending_since.is_some() {
+                            self.pending_since = Some(Instant::now());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Charge the just-applied batch against the tenant's budget.
+    fn charge_budget(&self) {
+        let flops = self.tracker.last_step_flops();
+        self.metrics.flops_applied.fetch_add(flops, Ordering::Relaxed);
+        if self.budget.max_flops_per_flush.is_some_and(|cap| flops > cap) {
+            self.metrics.flop_budget_overruns.fetch_add(1, Ordering::Relaxed);
+        }
+        let resident = self.resident_bytes();
+        self.metrics.resident_bytes.store(resident, Ordering::Relaxed);
+        if self.budget.max_resident_bytes.is_some_and(|cap| resident > cap) {
+            self.metrics.mem_budget_overruns.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Estimated resident footprint: committed CSR arrays, tracked
+    /// eigenpairs, and the id map (external array + intern table).
+    pub fn resident_bytes(&self) -> u64 {
+        let usz = std::mem::size_of::<usize>() as u64;
+        let csr = (self.adjacency.indptr.len() as u64 + self.adjacency.indices.len() as u64) * usz
+            + self.adjacency.data.len() as u64 * 8;
+        let pairs = self.tracker.current();
+        let eig = (pairs.n() as u64 * pairs.k() as u64 + pairs.k() as u64) * 8;
+        let ids = self.builder.committed_ids().len() as u64 * 3 * usz;
+        csr + eig + ids
+    }
+
+    /// Flush if the pending batch has outlived the policy's `max_age`
+    /// deadline (the scheduler calls this on timer wakeups).
+    pub fn poll_deadline(&mut self, now: Instant) {
+        if let Some(since) = self.pending_since {
+            let age = now.duration_since(since);
+            let (events, new_nodes) =
+                (self.builder.pending_events(), self.builder.pending_new_nodes());
+            if self.policy.should_flush_aged(events, new_nodes, age) {
+                self.flush();
+            }
+        }
+    }
+
+    /// When the scheduler must next wake this tenant with no new input:
+    /// the pending batch's deadline, if the policy has a `max_age` arm
+    /// and a batch is pending.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        Some(self.pending_since? + self.policy.max_age()?)
+    }
+
+    /// One schedulable unit of work: drain the inbox (stopping after at
+    /// most one flush so a busy tenant cannot monopolize a pool worker)
+    /// and report how the scheduler should treat this tenant next.
+    pub fn step(&mut self, inbox: &Mutex<VecDeque<TenantCmd>>) -> StepOutcome {
+        let mut flushed = false;
+        loop {
+            let cmd = inbox.lock().unwrap().pop_front();
+            let Some(cmd) = cmd else { break };
+            match self.apply(cmd) {
+                Applied::Continue => {}
+                Applied::Flushed => {
+                    flushed = true;
+                    break;
+                }
+                Applied::Stopped(ack) => return StepOutcome::Stopped(ack),
+            }
+        }
+        if !flushed {
+            self.poll_deadline(Instant::now());
+        }
+        match self.next_deadline() {
+            Some(at) => StepOutcome::WaitUntil(at),
+            None => StepOutcome::Idle,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stream::IdMap;
+    use crate::linalg::rng::Rng;
+    use crate::linalg::threads::Threads;
+    use crate::tracking::spec::TrackerSpec;
+    use std::time::Duration;
+
+    fn make_state(policy: BatchPolicy) -> (TenantState, SnapshotStore, Arc<Metrics>) {
+        let mut rng = Rng::new(5);
+        let g = crate::graph::generators::erdos_renyi(30, 0.1, &mut rng);
+        let a0 = g.adjacency();
+        let init = crate::tracking::traits::init_eigenpairs(&a0, 3, 1);
+        let tracker = TrackerSpec::default().build_seeded_send(&a0, &init, 1).unwrap();
+        let store = SnapshotStore::new(EmbeddingSnapshot {
+            version: 0,
+            n_nodes: a0.n_rows,
+            pairs: init,
+            ids: Arc::new(IdMap::identity(a0.n_rows)),
+            published_at: Instant::now(),
+        });
+        let metrics = Metrics::new();
+        let state = TenantState::new(
+            tracker,
+            DeltaBuilder::from_graph(g),
+            a0,
+            policy,
+            store.clone(),
+            metrics.clone(),
+            TenantBudget::default(),
+        );
+        (state, store, metrics)
+    }
+
+    #[test]
+    fn step_drains_inbox_and_flushes_on_count() {
+        let (mut state, store, _) = make_state(BatchPolicy::ByCount(2));
+        let inbox = Mutex::new(VecDeque::new());
+        inbox.lock().unwrap().push_back(TenantCmd::Events(vec![
+            GraphEvent::AddEdge(0, 500),
+            GraphEvent::AddEdge(1, 501),
+        ]));
+        match state.step(&inbox) {
+            StepOutcome::Idle => {}
+            _ => panic!("count policy leaves no deadline"),
+        }
+        assert_eq!(state.version(), 1);
+        assert_eq!(store.latest().version, 1);
+        assert!(store.latest().n_nodes > 30);
+    }
+
+    #[test]
+    fn step_reports_deadline_for_aged_policy() {
+        let (mut state, store, _) = make_state(BatchPolicy::MaxAge(Duration::from_secs(3600)));
+        let inbox = Mutex::new(VecDeque::new());
+        inbox.lock().unwrap().push_back(TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)]));
+        let armed_at = Instant::now();
+        match state.step(&inbox) {
+            StepOutcome::WaitUntil(at) => {
+                let lead = at.duration_since(armed_at);
+                assert!(lead <= Duration::from_secs(3600));
+                assert!(lead > Duration::from_secs(3500));
+            }
+            _ => panic!("pending batch under MaxAge must arm a deadline"),
+        }
+        // nothing published yet: the deadline, not counts, closes it
+        assert_eq!(store.latest().version, 0);
+        // once past the deadline, poll_deadline flushes
+        state.poll_deadline(armed_at + Duration::from_secs(3601));
+        assert_eq!(state.version(), 1);
+        assert!(state.next_deadline().is_none());
+    }
+
+    #[test]
+    fn budget_overruns_are_counted_not_enforced() {
+        let mut rng = Rng::new(5);
+        let g = crate::graph::generators::erdos_renyi(30, 0.1, &mut rng);
+        let a0 = g.adjacency();
+        let init = crate::tracking::traits::init_eigenpairs(&a0, 3, 1);
+        let spec = TrackerSpec::default().with_threads(Threads::SINGLE);
+        let tracker = spec.build_seeded_send(&a0, &init, 1).unwrap();
+        let store = SnapshotStore::new(EmbeddingSnapshot {
+            version: 0,
+            n_nodes: a0.n_rows,
+            pairs: init,
+            ids: Arc::new(IdMap::identity(a0.n_rows)),
+            published_at: Instant::now(),
+        });
+        let metrics = Metrics::new();
+        let mut state = TenantState::new(
+            tracker,
+            DeltaBuilder::from_graph(g),
+            a0,
+            BatchPolicy::ByCount(1),
+            store,
+            metrics.clone(),
+            // caps of 1 flop / 1 byte: every flush overruns both
+            TenantBudget { max_flops_per_flush: Some(1), max_resident_bytes: Some(1) },
+        );
+        let inbox = Mutex::new(VecDeque::new());
+        inbox.lock().unwrap().push_back(TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)]));
+        state.step(&inbox);
+        assert_eq!(state.version(), 1, "soft budgets never block the flush");
+        assert_eq!(metrics.flop_budget_overruns.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.mem_budget_overruns.load(Ordering::Relaxed), 1);
+        assert!(metrics.flops_applied.load(Ordering::Relaxed) > 0);
+        assert!(metrics.resident_bytes.load(Ordering::Relaxed) > 0);
+    }
+}

@@ -10,6 +10,8 @@
 //!                                  side-by-side comparison of several
 //!   serve-demo [--events N] [--tracker SPEC]
 //!                                  run the streaming coordinator demo
+//!   fleet [--tenants N] [--workers W] [--events E] [--tracker SPEC]
+//!                                  run N tenants on a W-worker shared pool
 //!   generate --dataset D --out F   write a synthetic dataset edge list
 //!
 //! Global flags:
@@ -66,6 +68,13 @@ fn known_flags(cmd: &str) -> Vec<Flag> {
             bflag("xla"),
         ]),
         "serve-demo" => flags.extend([vflag("events"), vflag("tracker"), vflag("seed")]),
+        "fleet" => flags.extend([
+            vflag("tenants"),
+            vflag("workers"),
+            vflag("events"),
+            vflag("tracker"),
+            vflag("seed"),
+        ]),
         "generate" => flags.extend([vflag("dataset"), vflag("out")]),
         _ => {}
     }
@@ -129,7 +138,7 @@ fn flag_num<T: std::str::FromStr>(
     }
 }
 
-const COMMANDS: &[&str] = &["table2", "experiment", "track", "serve-demo", "generate"];
+const COMMANDS: &[&str] = &["table2", "experiment", "track", "serve-demo", "fleet", "generate"];
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -169,6 +178,9 @@ fn main() -> anyhow::Result<()> {
         "serve-demo" => {
             cmd_serve_demo(&flags, threads)?;
         }
+        "fleet" => {
+            cmd_fleet(&flags, threads)?;
+        }
         "generate" => {
             cmd_generate(&flags)?;
         }
@@ -182,7 +194,7 @@ fn main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "grest — Graph Rayleigh-Ritz Eigenspace Tracking\n\
-         usage: grest <table2|experiment|track|serve-demo|generate> [flags]\n\
+         usage: grest <table2|experiment|track|serve-demo|fleet|generate> [flags]\n\
          trackers are declarative specs: name[:key=value,...][@backend]\n\
          (`grest track --tracker list` prints the registry)\n\
          see rust/src/main.rs header for details"
@@ -515,7 +527,7 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
     let svc = TrackingService::spawn(ServiceConfig {
         initial: g,
         k: 16,
-        policy: BatchPolicy::Either { events: 64, new_nodes: 16 },
+        policy: BatchPolicy::Either { events: 64, new_nodes: 16, max_age: None },
         seed,
         tracker: tspec,
         threads,
@@ -587,6 +599,88 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
     );
     println!("metrics: {}", m.report());
     svc.join();
+    Ok(())
+}
+
+/// `grest fleet`: the multi-tenant coordinator demo — N independent
+/// tenant graphs on a W-worker shared pool, round-robin ingest, then a
+/// per-tenant report plus the fleet-wide metrics roll-up.
+fn cmd_fleet(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Result<()> {
+    use grest::coordinator::{BatchPolicy, Fleet, FleetConfig, ServiceConfig, TenantId};
+    use grest::graph::stream::GraphEvent;
+    use std::sync::atomic::Ordering;
+    let tenants: usize = flag_num(flags, "tenants", 8usize)?;
+    let workers: usize = flag_num(flags, "workers", 4usize)?;
+    let n_events: usize = flag_num(flags, "events", 400usize)?;
+    let seed: u64 = flag_num(flags, "seed", 5u64)?;
+    let mut tspec = TrackerSpec::parse(
+        flags.get("tracker").map(|s| s.as_str()).unwrap_or("grest3"),
+    )?;
+    apply_cli_defaults(&mut tspec, threads, 1024);
+    let fleet = Fleet::new(FleetConfig { workers });
+    println!(
+        "fleet: {tenants} tenants of `{tspec}` on {} pool workers",
+        fleet.workers()
+    );
+    for t in 0..tenants as u64 {
+        let mut rng = Rng::new(seed + t);
+        let g = grest::graph::generators::erdos_renyi(200, 0.03, &mut rng);
+        fleet.spawn(
+            TenantId(t),
+            ServiceConfig {
+                initial: g,
+                k: 8,
+                policy: BatchPolicy::Either {
+                    events: 32,
+                    new_nodes: 8,
+                    // the deadline arm keeps low-rate tenants fresh
+                    // with no manual flush
+                    max_age: Some(std::time::Duration::from_millis(200)),
+                },
+                seed: seed + t,
+                tracker: tspec.clone(),
+                threads,
+            },
+        )?;
+    }
+    let t0 = std::time::Instant::now();
+    let mut rngs: Vec<Rng> =
+        (0..tenants as u64).map(|t| Rng::new(900 + seed + t)).collect();
+    for _ in 0..n_events {
+        // round-robin: one event per tenant per lap
+        for (t, rng) in rngs.iter_mut().enumerate() {
+            let h = fleet.get(TenantId(t as u64)).expect("tenant is live");
+            let ev = if rng.flip(0.85) {
+                GraphEvent::AddEdge(rng.below(200) as u64, rng.below(260) as u64)
+            } else {
+                GraphEvent::RemoveEdge(rng.below(200) as u64, rng.below(200) as u64)
+            };
+            h.ingest(vec![ev])?;
+        }
+    }
+    let mut table =
+        Table::new(&["Tenant", "version", "nodes", "batches", "p95_update", "Mflops"]);
+    for id in fleet.ids() {
+        let h = fleet.get(id).expect("tenant is live");
+        let v = h.flush()?;
+        let snap = h.snapshot();
+        let m = h.metrics();
+        table.row(vec![
+            id.to_string(),
+            v.to_string(),
+            snap.n_nodes.to_string(),
+            m.batches_applied.load(Ordering::Relaxed).to_string(),
+            format!("{:?}", m.update_latency.quantile(0.95)),
+            format!("{:.2}", m.flops_applied.load(Ordering::Relaxed) as f64 / 1e6),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "ingest+track {} for {n_events} events x {tenants} tenants",
+        fmt_secs(t0.elapsed())
+    );
+    println!("fleet rollup: {}", fleet.metrics_rollup().report());
+    fleet.join();
     Ok(())
 }
 

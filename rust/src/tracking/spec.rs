@@ -292,7 +292,49 @@ impl TrackerSpec {
         init: &EigenPairs,
         fallback_seed: u64,
     ) -> Result<Box<dyn EigTracker>> {
+        if self.backend == Backend::Xla {
+            self.validate_buildable()?;
+            let seed = self.seed.unwrap_or(fallback_seed);
+            let mode = match &self.algo {
+                Algo::Grest2 => SubspaceMode::Rm,
+                Algo::Grest3 => SubspaceMode::Full,
+                Algo::GrestRsvd { l, p } => SubspaceMode::Rsvd { l: *l, p: *p },
+                // validate_buildable rejects @xla outside the G-REST family
+                _ => unreachable!(),
+            };
+            let manifest = match &self.artifacts_dir {
+                Some(dir) => crate::runtime::ArtifactManifest::load(dir)?,
+                None => crate::runtime::ArtifactManifest::load_default()?,
+            };
+            let k = init.k();
+            let n = if self.n_cap > 0 { self.n_cap } else { a0.n_rows };
+            let m = if self.panel_cap > 0 { self.panel_cap } else { k + 128 };
+            let phases = crate::runtime::XlaPhases::for_problem(manifest, n, k, m)?;
+            return Ok(Box::new(GRest::with_phases(init.clone(), mode, phases, seed)));
+        }
+        let tracker: Box<dyn EigTracker> = self.build_seeded_send(a0, init, fallback_seed)?;
+        Ok(tracker)
+    }
+
+    /// [`build_seeded`](Self::build_seeded) for the native backend only,
+    /// returning a `Send` tracker that may hop between worker-pool
+    /// threads.  `@xla` specs are rejected here: PJRT executable state
+    /// is thread-bound, so XLA tenants must stay on a dedicated pinned
+    /// thread (use `build_seeded` from that thread instead).
+    pub fn build_seeded_send(
+        &self,
+        a0: &Csr,
+        init: &EigenPairs,
+        fallback_seed: u64,
+    ) -> Result<Box<dyn EigTracker + Send>> {
         self.validate_buildable()?;
+        if self.backend == Backend::Xla {
+            bail!(
+                "spec `{self}` requests the @xla backend, whose PJRT state is \
+                 thread-bound; @xla tenants need a pinned thread, not the shared \
+                 worker pool"
+            );
+        }
         let seed = self.seed.unwrap_or(fallback_seed);
         let grest_mode = match &self.algo {
             Algo::Grest2 => Some(SubspaceMode::Rm),
@@ -301,25 +343,12 @@ impl TrackerSpec {
             _ => None,
         };
         if let Some(mode) = grest_mode {
-            return match self.backend {
-                Backend::Native => Ok(Box::new(GRest::with_phases(
-                    init.clone(),
-                    mode,
-                    NativePhases::new(self.threads),
-                    seed,
-                ))),
-                Backend::Xla => {
-                    let manifest = match &self.artifacts_dir {
-                        Some(dir) => crate::runtime::ArtifactManifest::load(dir)?,
-                        None => crate::runtime::ArtifactManifest::load_default()?,
-                    };
-                    let k = init.k();
-                    let n = if self.n_cap > 0 { self.n_cap } else { a0.n_rows };
-                    let m = if self.panel_cap > 0 { self.panel_cap } else { k + 128 };
-                    let phases = crate::runtime::XlaPhases::for_problem(manifest, n, k, m)?;
-                    Ok(Box::new(GRest::with_phases(init.clone(), mode, phases, seed)))
-                }
-            };
+            return Ok(Box::new(GRest::with_phases(
+                init.clone(),
+                mode,
+                NativePhases::new(self.threads),
+                seed,
+            )));
         }
         Ok(match &self.algo {
             Algo::TripBasic => Box::new(TripBasic::new(init.clone())),

@@ -1,0 +1,210 @@
+//! Fleet integration tests: the multi-tenant coordinator on a shared
+//! worker pool.
+//!
+//! The acceptance contract of the pool refactor: 16 native-backend
+//! tenants multiplexed onto 4 workers must behave exactly like 16
+//! dedicated threads — every tenant publishes monotone snapshot
+//! versions and bitwise-identical results to a pinned run of the same
+//! seeds/specs.  Plus the isolation soak: a tenant whose tracker fails
+//! every batch must not disturb its neighbours.
+
+use grest::coordinator::{
+    BatchPolicy, Fleet, FleetConfig, ServiceConfig, ServiceHandle, TenantBudget, TenantId,
+    TrackingService,
+};
+use grest::graph::stream::GraphEvent;
+use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
+use grest::sparse::delta::Delta;
+use grest::tracking::traits::{EigTracker, EigenPairs};
+use grest::tracking::TrackerSpec;
+
+/// One registry spec per tenant, cycled — the pool must schedule
+/// heterogeneous tenants, not just 16 copies of one tracker.
+const SPECS: &[&str] =
+    &["grest3", "grest2", "grest-rsvd:l=6,p=4", "trip", "iasc", "timers", "trip-basic"];
+
+fn tenant_config(t: u64) -> ServiceConfig {
+    let mut rng = Rng::new(100 + t);
+    ServiceConfig {
+        initial: grest::graph::generators::erdos_renyi(60, 0.15, &mut rng),
+        k: 4,
+        policy: BatchPolicy::ByCount(4),
+        seed: 100 + t,
+        tracker: TrackerSpec::parse(SPECS[t as usize % SPECS.len()]).unwrap(),
+        threads: Threads::SINGLE,
+    }
+}
+
+/// Deterministic tenant-salted event stream (shared by the pooled and
+/// pinned runs).
+fn event(t: u64, i: u64) -> GraphEvent {
+    let a = (i * 7919 + t * 13) % 60;
+    if i % 9 == 8 {
+        GraphEvent::RemoveEdge(a, (i * 104_729 + t) % 60)
+    } else {
+        GraphEvent::AddEdge(a, (i * 104_729 + t + 1) % 70)
+    }
+}
+
+/// Ingest the per-tenant streams with interleaved flushes; returns, per
+/// tenant, the flush-version sequence plus the final snapshot
+/// (version, eigenvalues, eigenvector data) for bitwise comparison.
+fn drive(handles: &[ServiceHandle]) -> Vec<(Vec<u64>, u64, Vec<f64>, Vec<f64>)> {
+    let mut flush_versions: Vec<Vec<u64>> = vec![Vec::new(); handles.len()];
+    for i in 0..48u64 {
+        for (t, h) in handles.iter().enumerate() {
+            h.ingest(vec![event(t as u64, i)]).unwrap();
+        }
+        if (i + 1) % 16 == 0 {
+            for (t, h) in handles.iter().enumerate() {
+                flush_versions[t].push(h.flush().unwrap());
+            }
+        }
+    }
+    handles
+        .iter()
+        .zip(flush_versions)
+        .map(|(h, fv)| {
+            let s = h.snapshot();
+            (fv, s.version, s.pairs.values.clone(), s.pairs.vectors.as_slice().to_vec())
+        })
+        .collect()
+}
+
+/// The acceptance test of the worker-pool refactor: 16 native tenants
+/// on 4 workers, versions monotone, results bitwise-identical to
+/// thread-per-tenant.
+#[test]
+fn sixteen_tenants_on_four_workers_match_dedicated_threads_bitwise() {
+    const TENANTS: u64 = 16;
+
+    // pooled run: one Fleet, 4 shared workers
+    let fleet = Fleet::new(FleetConfig { workers: 4 });
+    assert_eq!(fleet.workers(), 4);
+    for t in 0..TENANTS {
+        fleet.spawn(TenantId(t), tenant_config(t)).unwrap();
+    }
+    let pooled: Vec<ServiceHandle> =
+        (0..TENANTS).map(|t| fleet.get(TenantId(t)).unwrap()).collect();
+    let pool_results = drive(&pooled);
+    drop(pooled);
+    fleet.join();
+
+    // pinned run: same seeds/specs/streams, one dedicated thread each
+    let pinned_svcs: Vec<TrackingService> =
+        (0..TENANTS).map(|t| TrackingService::spawn_pinned(tenant_config(t)).unwrap()).collect();
+    let pinned: Vec<ServiceHandle> = pinned_svcs.iter().map(|s| s.handle.clone()).collect();
+    let pin_results = drive(&pinned);
+    drop(pinned);
+    for s in pinned_svcs {
+        s.join();
+    }
+
+    for (t, (pool_r, pin_r)) in pool_results.iter().zip(&pin_results).enumerate() {
+        // every tenant made progress and its flush versions are
+        // strictly monotone, ending at the snapshot version
+        let (flush_versions, version, values, vectors) = pool_r;
+        assert!(*version >= 1, "tenant {t} never published");
+        assert!(
+            flush_versions.windows(2).all(|w| w[0] <= w[1]),
+            "tenant {t} flush versions not monotone: {flush_versions:?}"
+        );
+        assert_eq!(*version, *flush_versions.last().unwrap(), "tenant {t}");
+        // bitwise-identical to the dedicated-thread run
+        assert_eq!(flush_versions, &pin_r.0, "tenant {t} version sequences diverged");
+        assert_eq!(*version, pin_r.1, "tenant {t} final versions diverged");
+        assert_eq!(values, &pin_r.2, "tenant {t} eigenvalues diverged");
+        assert_eq!(vectors, &pin_r.3, "tenant {t} eigenvectors diverged");
+    }
+}
+
+/// A tracker that rejects every update — the fault injector for the
+/// isolation soak.
+struct FailingTracker {
+    pairs: EigenPairs,
+}
+
+impl EigTracker for FailingTracker {
+    fn descriptor(&self) -> TrackerSpec {
+        TrackerSpec::custom("always-fails")
+    }
+
+    fn update(&mut self, _delta: &Delta) -> anyhow::Result<()> {
+        anyhow::bail!("injected tracker fault")
+    }
+
+    fn current(&self) -> &EigenPairs {
+        &self.pairs
+    }
+}
+
+/// Isolation soak: one tenant errors on every batch; its neighbours'
+/// snapshot versions advance normally, their flushes stay responsive,
+/// and `update_failures` stays scoped to the faulty tenant.
+#[test]
+fn flaky_tenant_does_not_disturb_healthy_tenants() {
+    use std::sync::atomic::Ordering;
+
+    const HEALTHY: u64 = 3;
+    const ROUNDS: u64 = 30;
+    let fleet = Fleet::new(FleetConfig { workers: 2 });
+
+    let flaky_id = TenantId(99);
+    let flaky = fleet
+        .spawn_with_factory(
+            flaky_id,
+            tenant_config(99),
+            TenantBudget::default(),
+            Box::new(|_a0, init| Ok(Box::new(FailingTracker { pairs: init.clone() }))),
+        )
+        .unwrap();
+    let healthy: Vec<ServiceHandle> =
+        (0..HEALTHY).map(|t| fleet.spawn(TenantId(t), tenant_config(t)).unwrap()).collect();
+
+    let mut flush_lat = Vec::new();
+    for i in 0..ROUNDS {
+        // the flaky tenant gets the same traffic as everyone else; every
+        // one of its flushes fails inside the pool worker
+        flaky.ingest(vec![event(99, i)]).unwrap();
+        for (t, h) in healthy.iter().enumerate() {
+            h.ingest(vec![event(t as u64, i)]).unwrap();
+        }
+        if (i + 1) % 5 == 0 {
+            let _ = flaky.flush().unwrap();
+            for h in &healthy {
+                let t0 = std::time::Instant::now();
+                h.flush().unwrap();
+                flush_lat.push(t0.elapsed());
+            }
+        }
+    }
+
+    // healthy tenants: versions advanced, zero failures
+    for (t, h) in healthy.iter().enumerate() {
+        let m = h.metrics();
+        assert_eq!(
+            m.update_failures.load(Ordering::Relaxed),
+            0,
+            "healthy tenant {t} saw failures"
+        );
+        assert!(h.snapshot().version >= ROUNDS / 5, "healthy tenant {t} starved");
+    }
+    // flushes stayed responsive while sharing workers with the faulty
+    // tenant (generous bound: this guards against starvation/deadlock,
+    // not micro-latency)
+    flush_lat.sort();
+    let p95 = flush_lat[(flush_lat.len() * 95 / 100).min(flush_lat.len() - 1)];
+    assert!(p95 < std::time::Duration::from_secs(5), "healthy p95 flush {p95:?}");
+
+    // the faulty tenant: every flush failed, nothing ever published,
+    // and the damage is scoped to its own metrics
+    let fm = fleet.metrics(flaky_id).unwrap();
+    assert!(fm.update_failures.load(Ordering::Relaxed) >= ROUNDS / 5);
+    assert_eq!(fm.batches_applied.load(Ordering::Relaxed), 0);
+    assert_eq!(flaky.snapshot().version, 0);
+    // ...and the fleet still removes it cleanly
+    assert!(fleet.remove(flaky_id));
+    assert!(flaky.ingest(vec![event(99, 0)]).is_err());
+    fleet.join();
+}
