@@ -110,8 +110,8 @@ fn main() -> anyhow::Result<()> {
     let m = svc.handle.metrics();
     println!(
         "query cache: {} computed / {} cached (hit-rate {:.0}%), snapshot age {:?}",
-        m.queries_computed.load(Ordering::Relaxed),
-        m.queries_cached.load(Ordering::Relaxed),
+        m.queries_computed.get(),
+        m.queries_cached.get(),
         100.0 * m.query_cache_hit_rate(),
         svc.handle.snapshot_age()
     );

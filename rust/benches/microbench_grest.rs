@@ -27,21 +27,35 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: a pure pass-through to `System` — every pointer and layout is
+// forwarded unchanged, so `System`'s GlobalAlloc contract (the only
+// source of allocator correctness here) is preserved verbatim.  The
+// counter bump allocates nothing (a relaxed fetch_add on a static),
+// which keeps the implementation reentrancy-free.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: caller upholds GlobalAlloc's contract for `layout`
+        // (non-zero size); it is forwarded unchanged.
+        unsafe { System.alloc(layout) }
     }
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: as in `alloc` — the caller's `layout` obligations
+        // transfer directly to `System`.
+        unsafe { System.alloc_zeroed(layout) }
     }
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: caller guarantees `ptr` came from this allocator with
+        // `layout`, and this allocator allocates via `System`, so the
+        // triple is valid for `System.realloc` unchanged.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: caller guarantees `ptr`/`layout` describe a live block
+        // from this allocator, which always allocates through `System`.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

@@ -1,0 +1,30 @@
+//! Loom model-checking harness for the grest worker-pool scheduler and
+//! the memo cache.
+//!
+//! The modules under test are **the production sources**, included by
+//! `#[path]` — not copies.  `coordinator/pool_core.rs` and
+//! `coordinator/memo_core.rs` in the main crate import all their
+//! concurrency primitives from `crate::sync`, so compiling them here
+//! against a loom-backed `sync` module puts the exact shipped
+//! lock/CAS/condvar protocol under exhaustive interleaving exploration.
+//!
+//! Two flavors:
+//!
+//! * `--cfg loom`: `sync` is [`sync_loom`]-backed; `loom::model` in the
+//!   `tests/` directory explores every interleaving.
+//! * default: `sync` is the main crate's std facade, and the same tests
+//!   run once each as plain smoke tests.
+
+#[cfg(loom)]
+#[path = "sync_loom.rs"]
+pub mod sync;
+
+#[cfg(not(loom))]
+#[path = "../../src/sync.rs"]
+pub mod sync;
+
+#[path = "../../src/coordinator/pool_core.rs"]
+pub mod pool_core;
+
+#[path = "../../src/coordinator/memo_core.rs"]
+pub mod memo_core;

@@ -1,0 +1,110 @@
+//! The loom twin of the main crate's `sync` facade (`rust/src/sync.rs`).
+//!
+//! Only the surface actually consumed by `pool_core`, `memo_core`, and
+//! the model tests is mirrored: `atomic`, `Arc`, `Mutex`, `Condvar`,
+//! `OnceSlot`, and `thread::spawn_named`.  Two deliberate deviations
+//! from the std flavor:
+//!
+//! * `Mutex` is sized-only (loom's mutex does not support unsized
+//!   payloads); nothing under model check needs `?Sized`.
+//! * `OnceSlot` is a `Mutex<Option<T>>` — loom has no `OnceLock` — which
+//!   models the same contract the std flavor gets from
+//!   `OnceLock::get_or_init`: at most one in-flight initializer, racing
+//!   readers block on it.
+
+pub use loom::sync::atomic;
+pub use loom::sync::{Arc, MutexGuard};
+
+/// Loom mutex with the facade's panic-on-poison `lock()` signature.
+#[derive(Debug)]
+pub struct Mutex<T>(loom::sync::Mutex<T>);
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Mutex<T> {
+        Mutex(loom::sync::Mutex::new(value))
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.0.lock().expect("mutex poisoned: a thread panicked while holding this lock")
+    }
+}
+
+/// Loom condvar with the facade's guard-in/guard-out wait methods.
+#[derive(Debug, Default)]
+pub struct Condvar(loom::sync::Condvar);
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar(loom::sync::Condvar::new())
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.0.wait(guard).expect("mutex poisoned during condvar wait")
+    }
+
+    /// Wait with a timeout; returns the reacquired guard and whether the
+    /// wait timed out.  Loom models the timeout nondeterministically —
+    /// both the fired and the notified branch are explored.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let (guard, res) =
+            self.0.wait_timeout(guard, dur).expect("mutex poisoned during condvar wait");
+        (guard, res.timed_out())
+    }
+
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+}
+
+/// Write-once cell for `Clone` values (see the std flavor's docs).
+#[derive(Debug)]
+pub struct OnceSlot<T>(Mutex<Option<T>>);
+
+impl<T: Clone> OnceSlot<T> {
+    pub fn new() -> OnceSlot<T> {
+        OnceSlot(Mutex::new(None))
+    }
+
+    /// The value, if some caller already initialized the slot.
+    pub fn try_get(&self) -> Option<T> {
+        self.0.lock().clone()
+    }
+
+    /// The value, initializing the slot with `f` if empty.  Holding the
+    /// slot lock across `f` is exactly the contract under test: one
+    /// in-flight compute, racing readers block on it.
+    pub fn get_or_init(&self, f: impl FnOnce() -> T) -> T {
+        let mut slot = self.0.lock();
+        if let Some(v) = &*slot {
+            return v.clone();
+        }
+        let v = f();
+        *slot = Some(v.clone());
+        v
+    }
+}
+
+impl<T: Clone> Default for OnceSlot<T> {
+    fn default() -> OnceSlot<T> {
+        OnceSlot::new()
+    }
+}
+
+pub mod thread {
+    //! Model-thread spawning; names are dropped (loom threads are
+    //! anonymous).
+
+    pub use loom::thread::JoinHandle;
+
+    pub fn spawn_named(_name: &str, f: impl FnOnce() + Send + 'static) -> JoinHandle<()> {
+        loom::thread::spawn(f)
+    }
+}

@@ -1,0 +1,295 @@
+//! Exhaustive interleaving checks of the worker-pool scheduler protocol
+//! and the memo cache — the machine proofs behind the invariants stated
+//! in `rust/src/coordinator/pool_core.rs` and `docs/CONCURRENCY.md`.
+//!
+//! Run the real model check with:
+//!
+//! ```text
+//! cd rust/loom-model
+//! RUSTFLAGS="--cfg loom -C debug-assertions=on" \
+//!   LOOM_MAX_PREEMPTIONS=3 cargo test --release --test loom_pool
+//! ```
+//!
+//! Without `--cfg loom` the same tests compile against the production
+//! std facade and each run once as a plain smoke test, so `cargo test`
+//! in this directory always exercises the code paths.
+//!
+//! Thread budget: loom's default `MAX_THREADS` is 4 including the model
+//! main thread; every model below spawns at most 2 threads.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use grest_loom_model::memo_core::{Memo, MemoHow};
+use grest_loom_model::pool_core::{PoolCore, StepOutcome, Stepper, SubmitError};
+use grest_loom_model::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use grest_loom_model::sync::{thread, Arc, Mutex};
+
+#[cfg(loom)]
+fn model(f: impl Fn() + Sync + Send + 'static) {
+    loom::model(f);
+}
+
+#[cfg(not(loom))]
+fn model(f: impl Fn() + Sync + Send + 'static) {
+    f();
+}
+
+enum Cmd {
+    Work,
+    Stop,
+}
+
+/// Counters shared between the probe stepper inside the pool and the
+/// model's final assertions.  SeqCst throughout: these are the
+/// *observers*, not the protocol under test, and must not themselves
+/// introduce subtle ordering.
+struct Obs {
+    steps: AtomicUsize,
+    processed: AtomicUsize,
+    drains: AtomicUsize,
+    in_step: AtomicBool,
+    acked: AtomicBool,
+}
+
+impl Obs {
+    fn new() -> Arc<Obs> {
+        Arc::new(Obs {
+            steps: AtomicUsize::new(0),
+            processed: AtomicUsize::new(0),
+            drains: AtomicUsize::new(0),
+            in_step: AtomicBool::new(false),
+            acked: AtomicBool::new(false),
+        })
+    }
+}
+
+/// Minimal `Stepper` that *asserts the pool's contract from the inside*:
+/// no concurrent steps for one tenant, no step after retirement, no
+/// deadline drain after retirement.
+struct Probe {
+    obs: Arc<Obs>,
+    /// Arm a due-immediately deadline after the first inbox drain
+    /// (models a `BatchPolicy::MaxAge` pending batch).
+    wait_once: bool,
+    armed: bool,
+    stopped: bool,
+}
+
+impl Probe {
+    fn new(obs: Arc<Obs>, wait_once: bool) -> Probe {
+        Probe { obs, wait_once, armed: false, stopped: false }
+    }
+}
+
+impl Stepper for Probe {
+    type Cmd = Cmd;
+
+    fn step(&mut self, inbox: &Mutex<VecDeque<Cmd>>) -> StepOutcome {
+        assert!(!self.stopped, "a retired tenant must never be stepped again");
+        assert!(
+            !self.obs.in_step.swap(true, Ordering::SeqCst),
+            "two workers stepped one tenant concurrently"
+        );
+        self.obs.steps.fetch_add(1, Ordering::SeqCst);
+        loop {
+            let cmd = inbox.lock().pop_front();
+            match cmd {
+                None => break,
+                Some(Cmd::Work) => {
+                    self.obs.processed.fetch_add(1, Ordering::SeqCst);
+                }
+                Some(Cmd::Stop) => {
+                    self.stopped = true;
+                    let obs = self.obs.clone();
+                    self.obs.in_step.store(false, Ordering::SeqCst);
+                    return StepOutcome::Stopped(Box::new(move || {
+                        obs.acked.store(true, Ordering::SeqCst);
+                    }));
+                }
+            }
+        }
+        let outcome = if self.wait_once && !self.armed {
+            self.armed = true;
+            StepOutcome::WaitUntil(Instant::now())
+        } else {
+            StepOutcome::Idle
+        };
+        self.obs.in_step.store(false, Ordering::SeqCst);
+        outcome
+    }
+
+    fn drain_deadline(&mut self) {
+        assert!(!self.stopped, "a retired tenant must never have its deadline drained");
+        self.obs.drains.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Invariant 1 (no lost wakeups): two racing submitters against a live
+/// worker — every `Ok` submit is processed before the pool quiesces, in
+/// every interleaving of the push / `queued` CAS / clear / re-check
+/// protocol.  A stranded command (inbox non-empty, nobody queued) fails
+/// the `processed == 2` assertion.
+#[test]
+fn submit_vs_turn_never_loses_a_command() {
+    model(|| {
+        let obs = Obs::new();
+        let core = Arc::new(PoolCore::new());
+        let tenant = core.register(Probe::new(obs.clone(), false));
+        let worker = {
+            let core = core.clone();
+            thread::spawn_named("worker", move || core.worker_loop())
+        };
+        let submitter = {
+            let (core, tenant) = (core.clone(), tenant.clone());
+            thread::spawn_named("submitter", move || {
+                core.submit(&tenant, Cmd::Work).expect("tenant is live");
+            })
+        };
+        core.submit(&tenant, Cmd::Work).expect("tenant is live");
+        submitter.join().expect("submitter thread");
+        core.begin_shutdown();
+        worker.join().expect("worker thread");
+
+        assert_eq!(obs.processed.load(Ordering::SeqCst), 2, "a submitted command was lost");
+        assert_eq!(tenant.inbox_len(), 0, "inbox must end empty");
+        assert!(!tenant.is_queued(), "a live drained tenant must not stay queued");
+    });
+}
+
+/// Invariant 2 (at-most-one-worker-per-tenant): two workers, one tenant
+/// whose first turn arms a due-immediately deadline, two submits racing
+/// the timer promotion.  The probe's `in_step` swap asserts the
+/// exclusion from inside every turn; the counters assert no command is
+/// lost or doubled while promotion and submission race for the same
+/// `queued` flag.
+#[test]
+fn timer_promotion_respects_the_queued_exclusion() {
+    model(|| {
+        let obs = Obs::new();
+        let core = Arc::new(PoolCore::new());
+        let tenant = core.register(Probe::new(obs.clone(), true));
+        let w1 = {
+            let core = core.clone();
+            thread::spawn_named("w1", move || core.worker_loop())
+        };
+        let w2 = {
+            let core = core.clone();
+            thread::spawn_named("w2", move || core.worker_loop())
+        };
+        core.submit(&tenant, Cmd::Work).expect("tenant is live");
+        core.submit(&tenant, Cmd::Work).expect("tenant is live");
+        core.begin_shutdown();
+        w1.join().expect("worker 1");
+        w2.join().expect("worker 2");
+
+        assert_eq!(obs.processed.load(Ordering::SeqCst), 2, "a submitted command was lost");
+        assert_eq!(tenant.inbox_len(), 0, "inbox must end empty");
+        assert!(obs.drains.load(Ordering::SeqCst) <= 1, "a deadline drained more than once");
+    });
+}
+
+/// Invariant 3 (retirement latch): a `Stop` races a `Work` submitter.
+/// After quiescence: the stop was acknowledged exactly once, the
+/// `queued` latch stays armed forever, the inbox is empty (a raced
+/// submitter's command is discarded, never executed post-stop — the
+/// probe asserts that from the inside), and fresh submits fail.
+#[test]
+fn retirement_latches_and_discards_racing_submits() {
+    model(|| {
+        let obs = Obs::new();
+        let core = Arc::new(PoolCore::new());
+        let tenant = core.register(Probe::new(obs.clone(), false));
+        let worker = {
+            let core = core.clone();
+            thread::spawn_named("worker", move || core.worker_loop())
+        };
+        let racer = {
+            let (core, tenant) = (core.clone(), tenant.clone());
+            thread::spawn_named("racer", move || {
+                // Ok (enqueued while live — may still be discarded by
+                // the retirement) or a clean TenantStopped; never a
+                // hang, never PoolShutdown here.
+                if let Err(e) = core.submit(&tenant, Cmd::Work) {
+                    assert_eq!(e, SubmitError::TenantStopped);
+                }
+            })
+        };
+        core.submit(&tenant, Cmd::Stop).expect("tenant is live at the stop submit");
+        racer.join().expect("racer thread");
+        core.begin_shutdown();
+        worker.join().expect("worker thread");
+
+        assert!(obs.acked.load(Ordering::SeqCst), "retirement was never acknowledged");
+        assert!(tenant.is_stopped());
+        assert!(tenant.is_queued(), "the queued latch must stay armed after retirement");
+        assert_eq!(tenant.inbox_len(), 0, "inbox must end empty");
+        assert!(obs.processed.load(Ordering::SeqCst) <= 1, "a discarded command executed");
+        assert_eq!(core.submit(&tenant, Cmd::Work), Err(SubmitError::TenantStopped));
+    });
+}
+
+/// Satellite fix under model check: a turn arms a `WaitUntil` deadline
+/// while the pool shuts down.  In every interleaving the pending work
+/// runs exactly once — promoted into a second turn, or drained by
+/// `begin_shutdown` / the `add_timer` shutdown path — never stranded,
+/// never doubled.
+#[test]
+fn shutdown_flushes_an_armed_deadline_exactly_once() {
+    model(|| {
+        let obs = Obs::new();
+        let core = Arc::new(PoolCore::new());
+        let tenant = core.register(Probe::new(obs.clone(), true));
+        let worker = {
+            let core = core.clone();
+            thread::spawn_named("worker", move || core.worker_loop())
+        };
+        core.submit(&tenant, Cmd::Work).expect("tenant is live");
+        core.begin_shutdown();
+        worker.join().expect("worker thread");
+
+        assert_eq!(obs.processed.load(Ordering::SeqCst), 1);
+        // Exactly one of: the timer was promoted into a second turn
+        // (steps == 2, drains == 0), or shutdown drained the armed
+        // deadline inline (steps == 1, drains == 1).
+        let steps = obs.steps.load(Ordering::SeqCst);
+        let drains = obs.drains.load(Ordering::SeqCst);
+        assert_eq!(
+            steps + drains,
+            2,
+            "armed deadline stranded or doubled (steps {steps}, drains {drains})"
+        );
+    });
+}
+
+/// Memo-cache contract: two racing `get_or_compute` calls for one key
+/// run the compute closure exactly once; the loser observes the
+/// winner's value, and the settled slot answers as a pure hit.
+#[test]
+fn memo_computes_exactly_once_across_racing_readers() {
+    model(|| {
+        let memo: Arc<Memo<u32, u32>> = Arc::new(Memo::new(4));
+        let computes = Arc::new(Mutex::new(0u32));
+        let reader = {
+            let (memo, computes) = (memo.clone(), computes.clone());
+            thread::spawn_named("reader", move || {
+                let (v, _) = memo.get_or_compute(7, || {
+                    *computes.lock() += 1;
+                    77
+                });
+                assert_eq!(v, 77);
+            })
+        };
+        let (v, _) = memo.get_or_compute(7, || {
+            *computes.lock() += 1;
+            77
+        });
+        assert_eq!(v, 77);
+        reader.join().expect("reader thread");
+
+        assert_eq!(*computes.lock(), 1, "the compute closure ran more than once");
+        assert_eq!(memo.len(), 1);
+        let (v, how) = memo.get_or_compute(7, || panic!("a settled slot must not recompute"));
+        assert_eq!((v, how), (77, MemoHow::Hit));
+    });
+}

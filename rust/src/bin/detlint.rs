@@ -1,0 +1,644 @@
+//! detlint — the zero-dependency concurrency/determinism lint for
+//! `rust/src`.
+//!
+//! Run from the repo root (CI gates on it):
+//!
+//! ```text
+//! cargo run --bin detlint            # lint the tree; exit 1 on findings
+//! cargo run --bin detlint -- --self-test   # prove every rule fires
+//! ```
+//!
+//! Line-oriented by design: no parser, no dependencies, fast enough to
+//! run on every commit.  The rules encode this repo's concurrency and
+//! determinism contracts:
+//!
+//! | rule                      | contract                                                      |
+//! |---------------------------|---------------------------------------------------------------|
+//! | `raw-std-sync`            | all sync primitives come from the `crate::sync` facade, so    |
+//! |                           | the loom harness model-checks the exact shipped protocol      |
+//! | `hash-iter`               | deterministic modules (`linalg/`, `tracking/`, `tasks/`,      |
+//! |                           | `sparse/`) never iterate a `HashMap`/`HashSet` (random order) |
+//! | `into-alloc`              | `_into` kernels are allocation-free (`Vec::new`, `vec!`,      |
+//! |                           | `.to_vec()`, `.clone()`, `hcat` banned in their bodies)       |
+//! | `relaxed-outside-metrics` | `Ordering::Relaxed` only in `coordinator/metrics.rs`          |
+//! | `ordering-comment`        | every `Acquire`/`Release`/`AcqRel` carries an `// ordering:`  |
+//! |                           | justification within the preceding lines                      |
+//! | `coordinator-unwrap`      | no `.unwrap()`/`.expect(` in non-test coordinator code        |
+//! |                           | (poison policy is centralized in `sync.rs`)                   |
+//!
+//! Audited exceptions live in `rust/detlint.allow`, one per line as
+//! `rule:path-suffix:needle`; a finding is suppressed when all three
+//! match.  Heuristic limits: `hash-iter` tracks `let`-bound hash
+//! collections per file, and the `#[cfg(test)] mod tests` tail (this
+//! repo's convention puts tests last) is skipped for the `hash-iter`
+//! and `coordinator-unwrap` rules — test code may unwrap.  The
+//! `relaxed-outside-metrics` rule is deliberately strict: tests inside
+//! `rust/src` hold to it too.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Rule {
+    RawStdSync,
+    HashIter,
+    IntoAlloc,
+    RelaxedOutsideMetrics,
+    OrderingComment,
+    CoordinatorUnwrap,
+}
+
+impl Rule {
+    fn name(self) -> &'static str {
+        match self {
+            Rule::RawStdSync => "raw-std-sync",
+            Rule::HashIter => "hash-iter",
+            Rule::IntoAlloc => "into-alloc",
+            Rule::RelaxedOutsideMetrics => "relaxed-outside-metrics",
+            Rule::OrderingComment => "ordering-comment",
+            Rule::CoordinatorUnwrap => "coordinator-unwrap",
+        }
+    }
+}
+
+struct Finding {
+    rule: Rule,
+    path: String,
+    line: usize,
+    text: String,
+}
+
+/// Strip comments and blank out string/char literal contents, carrying
+/// block-comment state across lines, so rule needles never match inside
+/// comments or message strings.
+fn strip_code(src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_block_comment = false;
+    for line in src.lines() {
+        let mut code = String::with_capacity(line.len());
+        let bytes: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < bytes.len() {
+            if in_block_comment {
+                if bytes[i] == '*' && bytes.get(i + 1) == Some(&'/') {
+                    in_block_comment = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            match bytes[i] {
+                '/' if bytes.get(i + 1) == Some(&'/') => break, // line comment
+                '/' if bytes.get(i + 1) == Some(&'*') => {
+                    in_block_comment = true;
+                    i += 2;
+                }
+                '"' => {
+                    // blank the string body, keep the quotes
+                    code.push('"');
+                    i += 1;
+                    while i < bytes.len() {
+                        if bytes[i] == '\\' {
+                            i += 2;
+                        } else if bytes[i] == '"' {
+                            code.push('"');
+                            i += 1;
+                            break;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                '\'' => {
+                    // char literal ('x' / '\n') vs lifetime ('a)
+                    let is_char = bytes.get(i + 1) == Some(&'\\')
+                        || (bytes.get(i + 2) == Some(&'\'') && bytes.get(i + 1) != Some(&'\''));
+                    if is_char {
+                        code.push_str("' '");
+                        i += 1;
+                        while i < bytes.len() {
+                            if bytes[i] == '\\' {
+                                i += 2;
+                            } else if bytes[i] == '\'' {
+                                i += 1;
+                                break;
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                }
+                c => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(code);
+    }
+    out
+}
+
+/// Index of the `#[cfg(test)] mod tests` tail (this repo keeps unit
+/// tests at the end of each file), or `usize::MAX` when absent.
+fn test_tail_start(raw: &[&str]) -> usize {
+    for (i, l) in raw.iter().enumerate() {
+        if l.trim() == "#[cfg(test)]" {
+            if let Some(next) = raw.get(i + 1) {
+                if next.trim_start().starts_with("mod ") {
+                    return i;
+                }
+            }
+        }
+    }
+    usize::MAX
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Binding name from a `let [mut] name[: ty] = ...HashMap/HashSet...`
+/// line, if any.
+fn hash_binding_name(code: &str) -> Option<String> {
+    let rest = code.trim_start().strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Does this line iterate the hash-collection binding `name`?
+fn iterates(code: &str, name: &str) -> bool {
+    const METHODS: &[&str] = &[
+        ".iter()",
+        ".iter_mut()",
+        ".into_iter()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".drain(",
+        ".retain(",
+    ];
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(name) {
+        let at = start + pos;
+        let bounded_before = at == 0 || !is_ident(code[..at].chars().next_back().unwrap_or(' '));
+        let after = &code[at + name.len()..];
+        let bounded_after = !after.chars().next().map(is_ident).unwrap_or(false);
+        if bounded_before && bounded_after {
+            if METHODS.iter().any(|m| after.starts_with(m)) {
+                return true;
+            }
+            let before = &code[..at];
+            if before.ends_with("in ") || before.ends_with("in &") || before.ends_with("in &mut ")
+            {
+                return true;
+            }
+        }
+        start = at + name.len();
+    }
+    false
+}
+
+/// Function name declared on this line (`fn name(` / `fn name<`), if any.
+fn fn_decl_name(code: &str) -> Option<String> {
+    let mut search = 0;
+    while let Some(pos) = code[search..].find("fn ") {
+        let at = search + pos;
+        let bounded = at == 0 || !is_ident(code[..at].chars().next_back().unwrap_or(' '));
+        if bounded {
+            let name: String =
+                code[at + 3..].trim_start().chars().take_while(|&c| is_ident(c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        search = at + 3;
+    }
+    None
+}
+
+fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
+    // the lint's own source holds every rule needle as a literal
+    if rel == "bin/detlint.rs" {
+        return Vec::new();
+    }
+    let raw: Vec<&str> = src.lines().collect();
+    let code = strip_code(src);
+    let tail = test_tail_start(&raw);
+    let mut out = Vec::new();
+    let mut push = |rule: Rule, line: usize| {
+        out.push(Finding {
+            rule,
+            path: rel.to_string(),
+            line: line + 1,
+            text: raw[line].trim().to_string(),
+        });
+    };
+
+    // raw-std-sync: the facade itself is the one place std::sync appears
+    if rel != "sync.rs" {
+        for (i, c) in code.iter().enumerate() {
+            if c.contains("std::sync") {
+                push(Rule::RawStdSync, i);
+            }
+        }
+    }
+
+    // hash-iter: deterministic modules must not iterate hash collections
+    let deterministic = ["linalg/", "tracking/", "tasks/", "sparse/"]
+        .iter()
+        .any(|p| rel.starts_with(p));
+    if deterministic {
+        let mut names: Vec<String> = Vec::new();
+        for (i, c) in code.iter().enumerate() {
+            if i >= tail {
+                break;
+            }
+            if (c.contains("HashMap") || c.contains("HashSet")) && c.contains("let ") {
+                if let Some(name) = hash_binding_name(c) {
+                    names.push(name);
+                }
+            }
+            if names.iter().any(|n| iterates(c, n)) {
+                push(Rule::HashIter, i);
+            }
+        }
+    }
+
+    // into-alloc: allocation tokens banned inside `_into` kernel bodies
+    const ALLOC_TOKENS: &[&str] = &["Vec::new", "vec!", ".to_vec()", ".clone()", "hcat"];
+    let mut i = 0;
+    while i < code.len() {
+        let is_into = fn_decl_name(&code[i]).is_some_and(|n| n.ends_with("_into"));
+        if !is_into {
+            i += 1;
+            continue;
+        }
+        // walk the body by brace depth, starting at the signature line
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < code.len() {
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if ALLOC_TOKENS.iter().any(|t| code[j].contains(t)) {
+                push(Rule::IntoAlloc, j);
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+
+    // relaxed-outside-metrics: strict — the Counter/Histogram newtypes in
+    // metrics.rs are the only place unordered atomics are acceptable
+    if rel != "coordinator/metrics.rs" {
+        for (i, c) in code.iter().enumerate() {
+            if c.contains("Ordering::Relaxed") {
+                push(Rule::RelaxedOutsideMetrics, i);
+            }
+        }
+    }
+
+    // ordering-comment: Acquire/Release/AcqRel must carry a nearby
+    // `// ordering:` justification (same line or the 12 lines above,
+    // which tolerates multi-line statements under a comment block)
+    for (i, c) in code.iter().enumerate() {
+        let annotated_site = ["Ordering::Acquire", "Ordering::Release", "Ordering::AcqRel"]
+            .iter()
+            .any(|t| c.contains(t));
+        if annotated_site {
+            let lo = i.saturating_sub(12);
+            let justified = raw[lo..=i].iter().any(|l| l.contains("ordering:"));
+            if !justified {
+                push(Rule::OrderingComment, i);
+            }
+        }
+    }
+
+    // coordinator-unwrap: non-test coordinator code never panics on a
+    // Result/Option shortcut (sync.rs centralizes the poison policy)
+    if rel.starts_with("coordinator/") {
+        for (i, c) in code.iter().enumerate() {
+            if i >= tail {
+                break;
+            }
+            if c.contains(".unwrap()") || c.contains(".expect(") {
+                push(Rule::CoordinatorUnwrap, i);
+            }
+        }
+    }
+
+    out
+}
+
+// ---------------------------------------------------------------------
+// allowlist
+
+struct AllowEntry {
+    rule: String,
+    path_suffix: String,
+    needle: String,
+    used: bool,
+}
+
+fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, ':');
+        let fields = (parts.next(), parts.next(), parts.next());
+        if let (Some(rule), Some(path), Some(needle)) = fields {
+            out.push(AllowEntry {
+                rule: rule.to_string(),
+                path_suffix: path.to_string(),
+                needle: needle.to_string(),
+                used: false,
+            });
+        } else {
+            eprintln!("detlint: malformed allowlist line (want rule:path:needle): {line}");
+        }
+    }
+    out
+}
+
+fn allowed(f: &Finding, allow: &mut [AllowEntry]) -> bool {
+    for e in allow.iter_mut() {
+        let hit = e.rule == f.rule.name()
+            && f.path.ends_with(&e.path_suffix)
+            && f.text.contains(&e.needle);
+        if hit {
+            e.used = true;
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// tree walking
+
+fn first_existing(candidates: &[PathBuf]) -> Option<PathBuf> {
+    candidates.iter().find(|p| p.exists()).cloned()
+}
+
+fn src_root() -> Option<PathBuf> {
+    first_existing(&[
+        PathBuf::from("rust/src"),
+        PathBuf::from("src"),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("src"),
+    ])
+}
+
+fn allowlist_path() -> Option<PathBuf> {
+    first_existing(&[
+        PathBuf::from("rust/detlint.allow"),
+        PathBuf::from("detlint.allow"),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("detlint.allow"),
+    ])
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// self-test fixtures: every rule must fire on its seeded bad snippet
+
+const FIXTURES: &[(&str, &str, &str)] = &[
+    ("coordinator/fixture.rs", "use std::sync::Mutex;\n", "raw-std-sync"),
+    (
+        "linalg/fixture.rs",
+        "fn f() {\n    let mut m = std::collections::HashMap::new();\n    m.insert(1, 2);\n    for (k, v) in &m {\n        let _ = (k, v);\n    }\n}\n",
+        "hash-iter",
+    ),
+    (
+        "sparse/fixture.rs",
+        "fn axpy_into(dst: &mut [f64]) {\n    let tmp: Vec<f64> = Vec::new();\n    dst[0] = tmp.len() as f64;\n}\n",
+        "into-alloc",
+    ),
+    (
+        "tracking/fixture.rs",
+        "fn f(x: &AtomicU64) {\n    x.store(1, Ordering::Relaxed);\n}\n",
+        "relaxed-outside-metrics",
+    ),
+    (
+        "coordinator/fixture2.rs",
+        "fn f(x: &AtomicBool) {\n    x.store(true, Ordering::Release);\n}\n",
+        "ordering-comment",
+    ),
+    (
+        "coordinator/fixture3.rs",
+        "fn f(m: &std::collections::HashMap<u32, u32>) {\n    let _ = m.get(&1).unwrap();\n}\n",
+        "coordinator-unwrap",
+    ),
+];
+
+const CLEAN_FIXTURE: (&str, &str) = (
+    "coordinator/clean.rs",
+    "use crate::sync::{Arc, Mutex};\n\nfn f(m: &Mutex<u32>) -> u32 {\n    *m.lock()\n}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        super::f(&crate::sync::Mutex::new(1));\n        Some(1).unwrap();\n    }\n}\n",
+);
+
+fn run_self_test() -> ExitCode {
+    let mut failures = 0;
+    for (rel, src, expect) in FIXTURES {
+        let fired: Vec<&str> = lint_file(rel, src).iter().map(|f| f.rule.name()).collect();
+        if fired.contains(expect) {
+            println!("self-test: {expect:<24} fires on {rel}");
+        } else {
+            eprintln!("self-test FAILED: {expect} did not fire on {rel} (fired: {fired:?})");
+            failures += 1;
+        }
+    }
+    let (rel, src) = CLEAN_FIXTURE;
+    let clean = lint_file(rel, src);
+    if clean.is_empty() {
+        println!("self-test: clean fixture passes ({rel})");
+    } else {
+        for f in &clean {
+            eprintln!("self-test FAILED: false positive [{}] {}:{}", f.rule.name(), f.path, f.line);
+        }
+        failures += 1;
+    }
+    // the allowlist machinery must suppress a matching finding
+    let mut allow = parse_allowlist("into-alloc:sparse/fixture.rs:Vec::new()\n");
+    let findings = lint_file(FIXTURES[2].0, FIXTURES[2].1);
+    let suppressed = findings.iter().filter(|f| allowed(f, &mut allow)).count();
+    if suppressed == 1 && allow[0].used {
+        println!("self-test: allowlist suppression works");
+    } else {
+        eprintln!("self-test FAILED: allowlist did not suppress the seeded finding");
+        failures += 1;
+    }
+    if failures == 0 {
+        println!("detlint self-test: all rules verified");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn main() -> ExitCode {
+    if std::env::args().any(|a| a == "--self-test") {
+        return run_self_test();
+    }
+    let Some(root) = src_root() else {
+        eprintln!("detlint: cannot locate rust/src (run from the repo root)");
+        return ExitCode::FAILURE;
+    };
+    let mut allow = match allowlist_path() {
+        Some(p) => match std::fs::read_to_string(&p) {
+            Ok(text) => parse_allowlist(&text),
+            Err(e) => {
+                eprintln!("detlint: cannot read {}: {e}", p.display());
+                return ExitCode::FAILURE;
+            }
+        },
+        None => Vec::new(),
+    };
+
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files);
+    let mut reported = 0usize;
+    for path in &files {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            eprintln!("detlint: unreadable file {}", path.display());
+            reported += 1;
+            continue;
+        };
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        for f in lint_file(&rel, &src) {
+            if allowed(&f, &mut allow) {
+                continue;
+            }
+            println!("{}/{}:{}: [{}] {}", root.display(), f.path, f.line, f.rule.name(), f.text);
+            reported += 1;
+        }
+    }
+    for e in allow.iter().filter(|e| !e.used) {
+        println!(
+            "detlint: warning: unused allowlist entry {}:{}:{}",
+            e.rule, e.path_suffix, e.needle
+        );
+    }
+    if reported == 0 {
+        println!("detlint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("detlint: {reported} finding(s)");
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_fixture_fires_its_rule() {
+        for (rel, src, expect) in FIXTURES {
+            let fired: Vec<&str> = lint_file(rel, src).iter().map(|f| f.rule.name()).collect();
+            assert!(fired.contains(expect), "{expect} did not fire on {rel}: {fired:?}");
+        }
+    }
+
+    #[test]
+    fn clean_fixture_has_no_findings() {
+        let (rel, src) = CLEAN_FIXTURE;
+        let findings = lint_file(rel, src);
+        assert!(findings.is_empty(), "false positives: {:?}", findings[0].text);
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trigger() {
+        let src = "// std::sync is banned\nfn f() {\n    let msg = \"call .unwrap() on std::sync types\";\n    drop(msg);\n}\n";
+        assert!(lint_file("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_tail_may_unwrap() {
+        let src = "fn f() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n";
+        assert!(lint_file("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ordering_comment_window_accepts_block_above() {
+        let src = "fn f(x: &AtomicBool) {\n    // ordering: Release pairs with the Acquire load in g\n    x.store(true, Ordering::Release);\n}\n";
+        assert!(lint_file("coordinator/x.rs", src).is_empty());
+        let far = format!(
+            "fn f(x: &AtomicBool) {{\n    // ordering: too far away\n{}    x.store(true, Ordering::Release);\n}}\n",
+            "    let _ = 1;\n".repeat(13)
+        );
+        let findings = lint_file("coordinator/x.rs", &far);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule.name(), "ordering-comment");
+    }
+
+    #[test]
+    fn into_alloc_scopes_to_the_kernel_body() {
+        let src = "fn scale(v: &mut [f64]) -> Vec<f64> {\n    v.to_vec()\n}\n\nfn scale_into(dst: &mut [f64]) {\n    let t = dst.to_vec();\n    dst[0] = t[0];\n}\n";
+        let findings = lint_file("sparse/x.rs", src);
+        assert_eq!(findings.len(), 1, "only the _into body is restricted");
+        assert_eq!(findings[0].line, 6);
+    }
+
+    #[test]
+    fn hash_iter_tracks_bindings() {
+        let ok = "fn f() {\n    let mut seen = std::collections::HashSet::new();\n    seen.insert(1);\n    let _ = seen.contains(&1);\n}\n";
+        assert!(lint_file("linalg/x.rs", ok).is_empty());
+        let bad = "fn f() -> usize {\n    let mut seen = std::collections::HashSet::new();\n    seen.insert(1);\n    seen.iter().count()\n}\n";
+        let findings = lint_file("linalg/x.rs", bad);
+        assert!(findings.iter().any(|f| f.rule.name() == "hash-iter"));
+    }
+
+    #[test]
+    fn allowlist_matches_on_all_three_fields() {
+        let mut allow =
+            parse_allowlist("# comment\n\ninto-alloc:sparse/x.rs:dst.to_vec()\nbad-line\n");
+        assert_eq!(allow.len(), 1);
+        let src = "fn scale_into(dst: &mut [f64]) {\n    let t = dst.to_vec();\n    dst[0] = t[0];\n}\n";
+        let findings = lint_file("sparse/x.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert!(allowed(&findings[0], &mut allow));
+        // wrong rule/path → no suppression
+        let mut other = parse_allowlist("hash-iter:sparse/x.rs:dst.to_vec()\n");
+        assert!(!allowed(&findings[0], &mut other));
+    }
+}

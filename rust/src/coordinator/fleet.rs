@@ -26,7 +26,7 @@ use anyhow::{bail, Result};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::{Arc, Mutex};
+use crate::sync::{Arc, Mutex};
 
 /// Opaque tenant key (caller-assigned).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -106,7 +106,7 @@ impl Fleet {
     /// Fast-path duplicate check before paying for tracker
     /// construction; [`insert`](Self::insert) re-checks authoritatively.
     fn check_free(&self, id: TenantId) -> Result<()> {
-        if self.tenants.lock().unwrap().contains_key(&id) {
+        if self.tenants.lock().contains_key(&id) {
             bail!("{id} already exists");
         }
         Ok(())
@@ -114,7 +114,7 @@ impl Fleet {
 
     fn insert(&self, id: TenantId, svc: TrackingService) -> Result<ServiceHandle> {
         let handle = svc.handle.clone();
-        match self.tenants.lock().unwrap().entry(id) {
+        match self.tenants.lock().entry(id) {
             // a concurrent spawn won the race: drop `svc` (its Drop
             // retires the just-registered tenant) and report the dup
             Entry::Occupied(_) => bail!("{id} already exists"),
@@ -127,7 +127,7 @@ impl Fleet {
 
     /// Handle to a live tenant.
     pub fn get(&self, id: TenantId) -> Option<ServiceHandle> {
-        self.tenants.lock().unwrap().get(&id).map(|svc| svc.handle.clone())
+        self.tenants.lock().get(&id).map(|svc| svc.handle.clone())
     }
 
     /// A tenant's own metric set.
@@ -137,17 +137,17 @@ impl Fleet {
 
     /// Live tenant ids, sorted.
     pub fn ids(&self) -> Vec<TenantId> {
-        let mut ids: Vec<TenantId> = self.tenants.lock().unwrap().keys().copied().collect();
+        let mut ids: Vec<TenantId> = self.tenants.lock().keys().copied().collect();
         ids.sort();
         ids
     }
 
     pub fn len(&self) -> usize {
-        self.tenants.lock().unwrap().len()
+        self.tenants.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tenants.lock().unwrap().is_empty()
+        self.tenants.lock().is_empty()
     }
 
     /// Retire a tenant (waits until no worker will touch it again).
@@ -155,7 +155,7 @@ impl Fleet {
     pub fn remove(&self, id: TenantId) -> bool {
         // take the service out of the map first, so the join below
         // never holds the fleet lock while waiting on a worker
-        let svc = self.tenants.lock().unwrap().remove(&id);
+        let svc = self.tenants.lock().remove(&id);
         match svc {
             Some(svc) => {
                 svc.join();
@@ -169,7 +169,7 @@ impl Fleet {
     /// merged bucket-wise across every live tenant.
     pub fn metrics_rollup(&self) -> Metrics {
         let rollup = Metrics::default();
-        for svc in self.tenants.lock().unwrap().values() {
+        for svc in self.tenants.lock().values() {
             rollup.merge_from(&svc.handle.metrics());
         }
         rollup
@@ -184,7 +184,7 @@ impl Drop for Fleet {
         // retire tenants while the pool still runs (each Shutdown needs
         // a worker to ack it), then stop the pool
         let tenants: Vec<TrackingService> =
-            self.tenants.lock().unwrap().drain().map(|(_, svc)| svc).collect();
+            self.tenants.lock().drain().map(|(_, svc)| svc).collect();
         for svc in tenants {
             svc.join();
         }
@@ -200,7 +200,6 @@ mod tests {
     use crate::linalg::rng::Rng;
     use crate::linalg::threads::Threads;
     use crate::tracking::spec::TrackerSpec;
-    use std::sync::atomic::Ordering;
 
     fn config(seed: u64) -> ServiceConfig {
         let mut rng = Rng::new(seed);
@@ -261,12 +260,12 @@ mod tests {
             h.flush().unwrap();
         }
         let rollup = fleet.metrics_rollup();
-        assert_eq!(rollup.events_ingested.load(Ordering::Relaxed), 6);
-        assert_eq!(rollup.batches_applied.load(Ordering::Relaxed), 3);
+        assert_eq!(rollup.events_ingested.get(), 6);
+        assert_eq!(rollup.batches_applied.get(), 3);
         assert_eq!(rollup.update_latency.count(), 3);
-        assert!(rollup.resident_bytes.load(Ordering::Relaxed) > 0);
+        assert!(rollup.resident_bytes.get() > 0);
         // per-tenant metrics stay scoped
         let m0 = fleet.metrics(TenantId(0)).unwrap();
-        assert_eq!(m0.events_ingested.load(Ordering::Relaxed), 2);
+        assert_eq!(m0.events_ingested.get(), 2);
     }
 }

@@ -1,0 +1,151 @@
+//! The one-in-flight-compute memo cell behind the `QueryEngine` cache,
+//! extracted so it can be model-checked.
+//!
+//! Like `pool_core`, this module imports only [`crate::sync`] and std
+//! collections; the `rust/loom-model` crate `#[path]`-includes this
+//! source and proves under exhaustive interleaving that two concurrent
+//! [`Memo::get_or_compute`] calls for the same key run the compute
+//! closure exactly once.  Keep it dependency-free.
+
+use crate::sync::{Arc, Mutex, OnceSlot};
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// How a [`Memo::get_or_compute`] call was answered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoHow {
+    /// The slot was already filled: a pure cache hit.
+    Hit,
+    /// This caller ran the compute closure.
+    Computed,
+    /// Another caller's in-flight compute was joined: nothing was
+    /// recomputed, but the wait was compute-shaped.
+    Waited,
+}
+
+/// A cache slot: concurrent first readers share one in-flight
+/// computation through the [`OnceSlot`] instead of recomputing.
+type Slot<V> = Arc<OnceSlot<V>>;
+
+struct MemoMap<K, V> {
+    map: HashMap<K, (u64, Slot<V>)>,
+    tick: u64,
+    cap: usize,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> MemoMap<K, V> {
+    /// Fetch the slot for `key`, creating it if absent and evicting the
+    /// least-recently-used slot beyond capacity.
+    fn slot(&mut self, key: K) -> Slot<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((t, slot)) = self.map.get_mut(&key) {
+            *t = tick;
+            return slot.clone();
+        }
+        if self.map.len() >= self.cap {
+            // bind first: an if-let scrutinee would hold the iter
+            // borrow across the remove
+            let oldest = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone());
+            if let Some(oldest) = oldest {
+                self.map.remove(&oldest);
+            }
+        }
+        let slot: Slot<V> = Arc::new(OnceSlot::new());
+        self.map.insert(key, (tick, slot.clone()));
+        slot
+    }
+}
+
+/// An LRU-bounded memo table whose values are computed at most once per
+/// live slot.  The map lock is held only for slot bookkeeping, never
+/// during a compute — racing readers block on the slot's [`OnceSlot`],
+/// not on the table.
+pub struct Memo<K, V> {
+    inner: Mutex<MemoMap<K, V>>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Memo<K, V> {
+    /// A memo table holding at most `cap` slots (minimum 1).
+    pub fn new(cap: usize) -> Memo<K, V> {
+        Memo { inner: Mutex::new(MemoMap { map: HashMap::new(), tick: 0, cap: cap.max(1) }) }
+    }
+
+    /// The memoized value for `key`, computing it if this is the first
+    /// caller for a live slot.  Exactly one caller ever runs `compute`
+    /// per slot; concurrent callers of the same key block on that one
+    /// in-flight computation and clone its result.
+    pub fn get_or_compute(&self, key: K, compute: impl FnOnce() -> V) -> (V, MemoHow) {
+        let slot = self.inner.lock().slot(key);
+        if let Some(v) = slot.try_get() {
+            return (v, MemoHow::Hit);
+        }
+        let mut computed_here = false;
+        let value = slot.get_or_init(|| {
+            computed_here = true;
+            compute()
+        });
+        (value, if computed_here { MemoHow::Computed } else { MemoHow::Waited })
+    }
+
+    /// Number of live slots.
+    pub fn len(&self) -> usize {
+        self.inner.lock().map.len()
+    }
+
+    /// True when no slot is live.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn computes_once_then_hits() {
+        let memo: Memo<u32, u32> = Memo::new(8);
+        let (v, how) = memo.get_or_compute(1, || 10);
+        assert_eq!((v, how), (10, MemoHow::Computed));
+        let (v, how) = memo.get_or_compute(1, || panic!("must not recompute"));
+        assert_eq!((v, how), (10, MemoHow::Hit));
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let memo: Memo<u32, u32> = Memo::new(2);
+        memo.get_or_compute(1, || 1);
+        memo.get_or_compute(2, || 2);
+        memo.get_or_compute(1, || panic!("hit")); // touch: 1 most recent
+        memo.get_or_compute(3, || 3); // evicts 2
+        assert_eq!(memo.len(), 2);
+        let (_, how) = memo.get_or_compute(1, || panic!("still cached"));
+        assert_eq!(how, MemoHow::Hit);
+        let (_, how) = memo.get_or_compute(2, || 22);
+        assert_eq!(how, MemoHow::Computed, "evicted key recomputes");
+    }
+
+    #[test]
+    fn concurrent_same_key_computes_once() {
+        let memo: Arc<Memo<u32, u32>> = Arc::new(Memo::new(8));
+        let computes = Arc::new(Mutex::new(0u64));
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let memo = memo.clone();
+            let computes = computes.clone();
+            handles.push(std::thread::spawn(move || {
+                let (v, _) = memo.get_or_compute(7, || {
+                    *computes.lock() += 1;
+                    77
+                });
+                v
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().expect("reader thread"), 77);
+        }
+        assert_eq!(*computes.lock(), 1);
+    }
+}

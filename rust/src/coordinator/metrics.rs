@@ -1,7 +1,54 @@
 //! Lightweight metrics: counters and log-bucketed latency histograms.
+//!
+//! This is the ONE module allowed to use `Ordering::Relaxed` (enforced
+//! by `detlint` rule `relaxed-outside-metrics`): every atomic here is
+//! an independent statistical counter — nothing reads one to make a
+//! control-flow decision about another, so no cross-counter ordering
+//! is ever required.  The [`Counter`] newtype keeps it that way: the
+//! rest of the crate gets `add`/`incr`/`get`/`set` and can't spell an
+//! ordering at all.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::Arc;
+
+/// A monotone (plus one gauge-style `set`) relaxed atomic counter.
+///
+/// Deliberately *not* a general atomic: no compare-exchange, no
+/// ordering parameter.  Counters never synchronize other memory.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current value (a statistical read, not a synchronization point).
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the value — for gauge semantics (e.g. resident bytes),
+    /// where the latest observation replaces the previous one.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the value to `v` if larger.
+    pub fn max_with(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+}
 
 /// Log₂-bucketed duration histogram (1µs … ~1000s).
 #[derive(Debug, Default)]
@@ -82,30 +129,30 @@ impl Histogram {
 /// Shared metric set for the tracking service.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    pub events_ingested: AtomicU64,
-    pub batches_applied: AtomicU64,
+    pub events_ingested: Counter,
+    pub batches_applied: Counter,
     /// Tracker updates that returned an error; the batch stays pending
     /// and is retried at the next flush (never silently dropped).
-    pub update_failures: AtomicU64,
-    pub nodes_added: AtomicU64,
+    pub update_failures: Counter,
+    pub nodes_added: Counter,
     /// Queries answered from the version-keyed memo cache (including
     /// readers that waited on another reader's in-flight computation).
-    pub queries_cached: AtomicU64,
+    pub queries_cached: Counter,
     /// Queries that actually computed their derived result.
-    pub queries_computed: AtomicU64,
+    pub queries_computed: Counter,
     /// Tracker-reported FLOPs charged at each applied batch (the fleet's
     /// per-tenant compute-budget ledger).
-    pub flops_applied: AtomicU64,
+    pub flops_applied: Counter,
     /// Applied batches whose FLOP cost exceeded the tenant's
     /// [`crate::coordinator::tenant::TenantBudget::max_flops_per_flush`].
-    pub flop_budget_overruns: AtomicU64,
+    pub flop_budget_overruns: Counter,
     /// Estimated resident bytes (committed CSR + published eigenpairs +
     /// id map) as of the last flush; a gauge per tenant, a sum across a
     /// fleet roll-up.
-    pub resident_bytes: AtomicU64,
+    pub resident_bytes: Counter,
     /// Flushes that left the tenant above its
     /// [`crate::coordinator::tenant::TenantBudget::max_resident_bytes`].
-    pub mem_budget_overruns: AtomicU64,
+    pub mem_budget_overruns: Counter,
     pub update_latency: Histogram,
     /// Latency of *pure* cache hits (should sit orders of magnitude
     /// below `query_latency_computed` — the read-storm contract).
@@ -124,8 +171,8 @@ impl Metrics {
     /// Fraction of queries served from the memo cache (0 when no
     /// queries ran yet).
     pub fn query_cache_hit_rate(&self) -> f64 {
-        let cached = self.queries_cached.load(Ordering::Relaxed) as f64;
-        let total = cached + self.queries_computed.load(Ordering::Relaxed) as f64;
+        let cached = self.queries_cached.get() as f64;
+        let total = cached + self.queries_computed.get() as f64;
         if total == 0.0 {
             0.0
         } else {
@@ -137,10 +184,10 @@ impl Metrics {
     /// merge bucket-wise.  `resident_bytes` gauges also sum — across a
     /// fleet that is the aggregate resident footprint.
     pub fn merge_from(&self, other: &Metrics) {
-        let add = |dst: &AtomicU64, src: &AtomicU64| {
-            let v = src.load(Ordering::Relaxed);
+        let add = |dst: &Counter, src: &Counter| {
+            let v = src.get();
             if v > 0 {
-                dst.fetch_add(v, Ordering::Relaxed);
+                dst.add(v);
             }
         };
         add(&self.events_ingested, &other.events_ingested);
@@ -164,22 +211,22 @@ impl Metrics {
              update_p99={:?} update_max={:?} queries_computed={} queries_cached={} \
              hit_rate={:.1}% q_computed_mean={:?} q_cached_mean={:?} flops={} \
              resident_bytes={} budget_overruns={}/{}",
-            self.events_ingested.load(Ordering::Relaxed),
-            self.batches_applied.load(Ordering::Relaxed),
-            self.update_failures.load(Ordering::Relaxed),
-            self.nodes_added.load(Ordering::Relaxed),
+            self.events_ingested.get(),
+            self.batches_applied.get(),
+            self.update_failures.get(),
+            self.nodes_added.get(),
             self.update_latency.mean(),
             self.update_latency.quantile(0.99),
             self.update_latency.max(),
-            self.queries_computed.load(Ordering::Relaxed),
-            self.queries_cached.load(Ordering::Relaxed),
+            self.queries_computed.get(),
+            self.queries_cached.get(),
             100.0 * self.query_cache_hit_rate(),
             self.query_latency_computed.mean(),
             self.query_latency_cached.mean(),
-            self.flops_applied.load(Ordering::Relaxed),
-            self.resident_bytes.load(Ordering::Relaxed),
-            self.flop_budget_overruns.load(Ordering::Relaxed),
-            self.mem_budget_overruns.load(Ordering::Relaxed),
+            self.flops_applied.get(),
+            self.resident_bytes.get(),
+            self.flop_budget_overruns.get(),
+            self.mem_budget_overruns.get(),
         )
     }
 }
@@ -198,6 +245,20 @@ mod tests {
         let m = h.mean().as_micros();
         assert_eq!(m, 200);
         assert_eq!(h.max().as_micros(), 300);
+    }
+
+    #[test]
+    fn counter_ops() {
+        let c = Counter::new();
+        assert_eq!(c.get(), 0);
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.set(2);
+        assert_eq!(c.get(), 2);
+        c.max_with(10);
+        c.max_with(7);
+        assert_eq!(c.get(), 10);
     }
 
     #[test]
@@ -251,19 +312,19 @@ mod tests {
     fn metrics_merge_from_sums_counters_and_histograms() {
         let a = Metrics::default();
         let b = Metrics::default();
-        a.events_ingested.fetch_add(3, Ordering::Relaxed);
-        b.events_ingested.fetch_add(4, Ordering::Relaxed);
-        b.update_failures.fetch_add(2, Ordering::Relaxed);
-        b.flops_applied.fetch_add(1000, Ordering::Relaxed);
-        a.resident_bytes.store(10, Ordering::Relaxed);
-        b.resident_bytes.store(32, Ordering::Relaxed);
+        a.events_ingested.add(3);
+        b.events_ingested.add(4);
+        b.update_failures.add(2);
+        b.flops_applied.add(1000);
+        a.resident_bytes.set(10);
+        b.resident_bytes.set(32);
         a.update_latency.observe(Duration::from_micros(50));
         b.update_latency.observe(Duration::from_micros(70));
         a.merge_from(&b);
-        assert_eq!(a.events_ingested.load(Ordering::Relaxed), 7);
-        assert_eq!(a.update_failures.load(Ordering::Relaxed), 2);
-        assert_eq!(a.flops_applied.load(Ordering::Relaxed), 1000);
-        assert_eq!(a.resident_bytes.load(Ordering::Relaxed), 42);
+        assert_eq!(a.events_ingested.get(), 7);
+        assert_eq!(a.update_failures.get(), 2);
+        assert_eq!(a.flops_applied.get(), 1000);
+        assert_eq!(a.resident_bytes.get(), 42);
         assert_eq!(a.update_latency.count(), 2);
         assert_eq!(a.update_latency.max(), Duration::from_micros(70));
     }
@@ -272,8 +333,8 @@ mod tests {
     fn query_cache_hit_rate_counters() {
         let m = Metrics::default();
         assert_eq!(m.query_cache_hit_rate(), 0.0);
-        m.queries_computed.fetch_add(1, Ordering::Relaxed);
-        m.queries_cached.fetch_add(3, Ordering::Relaxed);
+        m.queries_computed.incr();
+        m.queries_cached.add(3);
         assert!((m.query_cache_hit_rate() - 0.75).abs() < 1e-12);
         assert!(m.report().contains("hit_rate=75.0%"), "{}", m.report());
     }

@@ -24,8 +24,10 @@
 
 pub mod batcher;
 pub mod fleet;
+pub mod memo_core;
 pub mod metrics;
 pub mod pool;
+pub mod pool_core;
 pub mod query;
 pub mod service;
 pub mod snapshot;
@@ -34,6 +36,7 @@ pub mod tenant;
 pub use batcher::BatchPolicy;
 pub use fleet::{Fleet, FleetConfig, TenantId};
 pub use pool::WorkerPool;
+pub use pool_core::{Stepper, SubmitError};
 pub use query::{ClusterAssignment, QueryEngine};
 pub use service::{ServiceConfig, ServiceHandle, TrackingService};
 pub use snapshot::EmbeddingSnapshot;

@@ -14,81 +14,35 @@
 //!   discipline from callers.
 //! * **Deadline-aware**: a step that leaves a `max_age`-armed pending
 //!   batch parks the tenant in a timer heap; the pool wakes it at the
-//!   deadline with no new input required.
+//!   deadline with no new input required — and [`WorkerPool::shutdown`]
+//!   flushes any still-armed deadline instead of stranding the batch.
+//!
+//! The scheduling protocol itself (ready queue, timer heap, `queued`
+//! CAS exclusion, lost-wakeup re-check, retirement latch) lives in
+//! [`pool_core`](crate::coordinator::pool_core), which the
+//! `rust/loom-model` crate model-checks under exhaustive thread
+//! interleaving; this module only adds OS threads, the global pool,
+//! and `anyhow` error adaptation.  See `docs/CONCURRENCY.md`.
 //!
 //! `@xla` tenants must NOT run here — PJRT state is thread-bound — so
 //! the service layer gives them a dedicated pinned thread driving the
 //! same state machine (see `coordinator/service.rs`).
 
-use crate::coordinator::tenant::{StepOutcome, TenantCmd, TenantState};
+use crate::coordinator::pool_core::{PoolCore, PoolTenant};
+use crate::coordinator::tenant::{TenantCmd, TenantState};
 use crate::linalg::threads::Threads;
-use anyhow::{bail, Result};
-use std::collections::{BinaryHeap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Instant;
+use crate::sync::{thread, Arc, Mutex, OnceLock};
+use anyhow::Result;
 
-/// A pool-resident tenant: inbox + scheduling flags + the state
-/// machine.  Handles talk to it exclusively through
+/// A pool-resident tenant (inbox + scheduling flags + the state
+/// machine).  Handles talk to it exclusively through
 /// [`WorkerPool::submit`].
-pub struct Tenant {
-    inbox: Mutex<VecDeque<TenantCmd>>,
-    /// True while the tenant is in the ready queue or being stepped —
-    /// the at-most-one-worker-per-tenant exclusion.
-    queued: AtomicBool,
-    /// Set once on shutdown; a stopped tenant is never scheduled again
-    /// (`queued` stays latched true for the same reason).
-    stopped: AtomicBool,
-    state: Mutex<TenantState>,
-}
-
-impl Tenant {
-    /// Has this tenant retired?  (Submissions now fail.)
-    pub fn is_stopped(&self) -> bool {
-        self.stopped.load(Ordering::Acquire)
-    }
-}
-
-/// Timer-heap entry; `Ord` is reversed on `(at, seq)` so the std
-/// max-heap pops the *earliest* deadline first (FIFO among ties).
-struct TimerEntry {
-    at: Instant,
-    seq: u64,
-    tenant: Arc<Tenant>,
-}
-
-impl PartialEq for TimerEntry {
-    fn eq(&self, other: &TimerEntry) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-
-impl Eq for TimerEntry {}
-
-impl PartialOrd for TimerEntry {
-    fn partial_cmp(&self, other: &TimerEntry) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for TimerEntry {
-    fn cmp(&self, other: &TimerEntry) -> std::cmp::Ordering {
-        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-struct Sched {
-    ready: VecDeque<Arc<Tenant>>,
-    timers: BinaryHeap<TimerEntry>,
-    timer_seq: u64,
-    shutdown: bool,
-    handles: Vec<std::thread::JoinHandle<()>>,
-}
+pub type Tenant = PoolTenant<TenantState>;
 
 struct PoolInner {
-    sched: Mutex<Sched>,
-    cv: Condvar,
+    core: Arc<PoolCore<TenantState>>,
     workers: usize,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 /// Cloneable handle to a worker pool.
@@ -102,29 +56,15 @@ impl WorkerPool {
     /// [`Threads::AUTO`]).
     pub fn new(workers: usize) -> WorkerPool {
         let workers = if workers == 0 { Threads::AUTO.resolve() } else { workers };
-        let inner = Arc::new(PoolInner {
-            sched: Mutex::new(Sched {
-                ready: VecDeque::new(),
-                timers: BinaryHeap::new(),
-                timer_seq: 0,
-                shutdown: false,
-                handles: Vec::new(),
-            }),
-            cv: Condvar::new(),
-            workers,
-        });
+        let core = Arc::new(PoolCore::new());
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
-            let inner = inner.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("grest-pool-{i}"))
-                    .spawn(move || worker_loop(&inner))
-                    .expect("spawn pool worker thread"),
-            );
+            let core = core.clone();
+            handles.push(thread::spawn_named(&format!("grest-pool-{i}"), move || {
+                core.worker_loop();
+            }));
         }
-        inner.sched.lock().unwrap().handles = handles;
-        WorkerPool { inner }
+        WorkerPool { inner: Arc::new(PoolInner { core, workers, handles: Mutex::new(handles) }) }
     }
 
     /// The process-wide default pool every native-backend
@@ -142,151 +82,23 @@ impl WorkerPool {
     /// Adopt a tenant state machine.  The tenant is inert until its
     /// first [`submit`](Self::submit).
     pub fn register(&self, state: TenantState) -> Arc<Tenant> {
-        Arc::new(Tenant {
-            inbox: Mutex::new(VecDeque::new()),
-            queued: AtomicBool::new(false),
-            stopped: AtomicBool::new(false),
-            state: Mutex::new(state),
-        })
+        self.inner.core.register(state)
     }
 
     /// Queue a command into the tenant's inbox and mark it runnable.
     pub fn submit(&self, tenant: &Arc<Tenant>, cmd: TenantCmd) -> Result<()> {
-        if tenant.is_stopped() {
-            bail!("tracker worker is shut down");
-        }
-        if self.inner.sched.lock().unwrap().shutdown {
-            bail!("worker pool is shut down");
-        }
-        tenant.inbox.lock().unwrap().push_back(cmd);
-        if tenant.is_stopped() {
-            // raced retirement: the worker that stopped the tenant has
-            // already drained the inbox; drop our command too (any
-            // reply sender in it unblocks its receiver with an Err)
-            tenant.inbox.lock().unwrap().clear();
-            bail!("tracker worker is shut down");
-        }
-        self.inner.schedule(tenant.clone());
-        Ok(())
+        Ok(self.inner.core.submit(tenant, cmd)?)
     }
 
-    /// Stop accepting work, drain the ready queue, and join the worker
-    /// threads.  Idempotent.  Tenants should be shut down (via a
-    /// [`TenantCmd::Shutdown`]) *before* the pool, or their pending
-    /// replies are dropped.
+    /// Stop accepting work, flush armed deadline batches, drain the
+    /// ready queue, and join the worker threads.  Idempotent.  Tenants
+    /// should be shut down (via a [`TenantCmd::Shutdown`]) *before* the
+    /// pool, or their pending replies are dropped.
     pub fn shutdown(&self) {
-        let handles = {
-            let mut sched = self.inner.sched.lock().unwrap();
-            sched.shutdown = true;
-            std::mem::take(&mut sched.handles)
-        };
-        self.inner.cv.notify_all();
+        self.inner.core.begin_shutdown();
+        let handles = std::mem::take(&mut *self.inner.handles.lock());
         for h in handles {
             let _ = h.join();
-        }
-    }
-}
-
-impl PoolInner {
-    /// Mark a tenant runnable if it isn't queued already.
-    fn schedule(&self, tenant: Arc<Tenant>) {
-        if tenant.is_stopped() {
-            return;
-        }
-        if tenant
-            .queued
-            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
-            .is_err()
-        {
-            // already queued or running; the lost-wakeup re-check in
-            // run_turn guarantees the new command is seen
-            return;
-        }
-        let mut sched = self.sched.lock().unwrap();
-        sched.ready.push_back(tenant);
-        self.cv.notify_one();
-    }
-
-    /// Park a tenant until `at` (deadline-armed pending batch).
-    fn add_timer(&self, at: Instant, tenant: Arc<Tenant>) {
-        let mut sched = self.sched.lock().unwrap();
-        if sched.shutdown {
-            return;
-        }
-        let seq = sched.timer_seq;
-        sched.timer_seq += 1;
-        sched.timers.push(TimerEntry { at, seq, tenant });
-        // the new deadline may be earlier than what sleepers wait on
-        self.cv.notify_one();
-    }
-}
-
-fn worker_loop(inner: &Arc<PoolInner>) {
-    let mut sched = inner.sched.lock().unwrap();
-    loop {
-        // promote due timers to the ready queue
-        let now = Instant::now();
-        while sched.timers.peek().is_some_and(|t| t.at <= now) {
-            let entry = sched.timers.pop().unwrap();
-            if !entry.tenant.is_stopped()
-                && entry
-                    .tenant
-                    .queued
-                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
-                    .is_ok()
-            {
-                sched.ready.push_back(entry.tenant);
-                inner.cv.notify_one();
-            }
-        }
-        if let Some(tenant) = sched.ready.pop_front() {
-            drop(sched);
-            run_turn(inner, &tenant);
-            sched = inner.sched.lock().unwrap();
-            continue;
-        }
-        if sched.shutdown {
-            return;
-        }
-        sched = match sched.timers.peek().map(|t| t.at) {
-            None => inner.cv.wait(sched).unwrap(),
-            Some(at) => {
-                let now = Instant::now();
-                if at <= now {
-                    continue;
-                }
-                inner.cv.wait_timeout(sched, at - now).unwrap().0
-            }
-        };
-    }
-}
-
-/// Run one scheduled step of a tenant.  Caller must hold the tenant's
-/// `queued` flag (i.e. have popped it from the ready queue).
-fn run_turn(inner: &Arc<PoolInner>, tenant: &Arc<Tenant>) {
-    if tenant.is_stopped() {
-        // stopped while waiting in the ready queue; `queued` stays
-        // latched so it is never re-queued
-        return;
-    }
-    let outcome = tenant.state.lock().unwrap().step(&tenant.inbox);
-    match outcome {
-        StepOutcome::Stopped(ack) => {
-            tenant.stopped.store(true, Ordering::Release);
-            // drop queued commands — their reply senders unblock any
-            // waiting caller with a recv error
-            tenant.inbox.lock().unwrap().clear();
-            let _ = ack.send(());
-        }
-        outcome => {
-            tenant.queued.store(false, Ordering::Release);
-            // lost-wakeup re-check: a submit that raced the drain saw
-            // `queued == true` and skipped scheduling
-            if !tenant.inbox.lock().unwrap().is_empty() {
-                inner.schedule(tenant.clone());
-            } else if let StepOutcome::WaitUntil(at) = outcome {
-                inner.add_timer(at, tenant.clone());
-            }
         }
     }
 }
@@ -300,17 +112,23 @@ mod tests {
     use crate::coordinator::tenant::TenantBudget;
     use crate::graph::stream::{DeltaBuilder, GraphEvent, IdMap};
     use crate::linalg::rng::Rng;
+    use crate::sync::mpsc;
     use crate::tracking::spec::TrackerSpec;
+    use std::time::{Duration, Instant};
 
     /// Shutdown a tenant and wait until no worker will touch it again.
     fn retire(pool: &WorkerPool, tenant: &Arc<Tenant>) {
-        let (ack_tx, ack_rx) = std::sync::mpsc::channel::<()>();
+        let (ack_tx, ack_rx) = mpsc::channel::<()>();
         if pool.submit(tenant, TenantCmd::Shutdown(ack_tx)).is_ok() {
             let _ = ack_rx.recv();
         }
     }
 
-    fn register_tenant(pool: &WorkerPool, seed: u64) -> (Arc<Tenant>, SnapshotStore) {
+    fn register_tenant(
+        pool: &WorkerPool,
+        seed: u64,
+        policy: BatchPolicy,
+    ) -> (Arc<Tenant>, SnapshotStore) {
         let mut rng = Rng::new(seed);
         let g = crate::graph::generators::erdos_renyi(25, 0.12, &mut rng);
         let a0 = g.adjacency();
@@ -327,7 +145,7 @@ mod tests {
             tracker,
             DeltaBuilder::from_graph(g),
             a0,
-            BatchPolicy::ByCount(1),
+            policy,
             store.clone(),
             Metrics::new(),
             TenantBudget::default(),
@@ -338,12 +156,13 @@ mod tests {
     #[test]
     fn more_tenants_than_workers_all_progress() {
         let pool = WorkerPool::new(2);
-        let tenants: Vec<_> = (0..6).map(|i| register_tenant(&pool, 10 + i)).collect();
+        let tenants: Vec<_> =
+            (0..6).map(|i| register_tenant(&pool, 10 + i, BatchPolicy::ByCount(1))).collect();
         for (t, _) in &tenants {
             pool.submit(t, TenantCmd::Events(vec![GraphEvent::AddEdge(0, 800)])).unwrap();
         }
         for (t, store) in &tenants {
-            let (rtx, rrx) = std::sync::mpsc::channel();
+            let (rtx, rrx) = mpsc::channel();
             pool.submit(t, TenantCmd::Flush(rtx)).unwrap();
             let v = rrx.recv().unwrap();
             assert!(v >= 1, "every tenant must flush on a 2-worker pool");
@@ -358,7 +177,7 @@ mod tests {
     #[test]
     fn submit_to_retired_tenant_fails() {
         let pool = WorkerPool::new(1);
-        let (tenant, _) = register_tenant(&pool, 3);
+        let (tenant, _) = register_tenant(&pool, 3, BatchPolicy::ByCount(1));
         pool.submit(&tenant, TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)])).unwrap();
         retire(&pool, &tenant);
         assert!(tenant.is_stopped());
@@ -372,13 +191,36 @@ mod tests {
     #[test]
     fn shutdown_is_idempotent_and_rejects_new_work() {
         let pool = WorkerPool::new(1);
-        let (tenant, _) = register_tenant(&pool, 4);
+        let (tenant, _) = register_tenant(&pool, 4, BatchPolicy::ByCount(1));
         retire(&pool, &tenant);
         pool.shutdown();
         pool.shutdown();
-        let (t2, _) = register_tenant(&pool, 5);
+        let (t2, _) = register_tenant(&pool, 5, BatchPolicy::ByCount(1));
         let err =
             pool.submit(&t2, TenantCmd::Events(vec![GraphEvent::AddEdge(0, 1)])).unwrap_err();
         assert!(err.to_string().contains("pool is shut down"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_flushes_max_age_pending_batches() {
+        // regression: shutdown used to drop the timer heap on the
+        // floor (add_timer no-oped once `shutdown` was set), so a
+        // pending MaxAge batch was stranded unflushed forever
+        let pool = WorkerPool::new(1);
+        let far = BatchPolicy::MaxAge(Duration::from_secs(3600));
+        let (tenant, store) = register_tenant(&pool, 6, far);
+        pool.submit(&tenant, TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)])).unwrap();
+        // barrier: once Adjacency replies, the Events command has been
+        // applied, so a batch is pending under the far-future deadline
+        let (rtx, rrx) = mpsc::channel();
+        pool.submit(&tenant, TenantCmd::Adjacency(rtx)).unwrap();
+        let _ = rrx.recv().unwrap();
+        assert_eq!(store.latest().version, 0, "deadline is an hour out: nothing flushed yet");
+        pool.shutdown();
+        assert_eq!(
+            store.latest().version,
+            1,
+            "shutdown must flush the armed MaxAge batch, not strand it"
+        );
     }
 }

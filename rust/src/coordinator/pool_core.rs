@@ -1,0 +1,410 @@
+//! The scheduler protocol of the worker pool, extracted from any
+//! tenant-specific state so it can be model-checked.
+//!
+//! This module is deliberately dependency-free: it imports only
+//! [`crate::sync`] (the std/loom facade), std collections, and
+//! `std::time`.  The `rust/loom-model` crate includes this exact source
+//! file via `#[path]` and compiles it against a `loom`-backed facade,
+//! so every lock/CAS/condvar line below is explored under exhaustive
+//! interleaving by `cargo test` in that crate (`--cfg loom`).  Keep it
+//! that way: no `anyhow`, no tracker types, no other crate modules.
+//!
+//! The protocol invariants (see `docs/CONCURRENCY.md` for the full
+//! derivation, and `rust/loom-model/tests/loom_pool.rs` for the machine
+//! checks):
+//!
+//! 1. **No lost wakeups**: a command pushed into an inbox is always
+//!    followed by a turn that observes it — either the submitter wins
+//!    the `queued` CAS and enqueues the tenant, or the worker that owns
+//!    the flag re-checks the inbox after clearing it (`run_turn`).
+//! 2. **At-most-one-worker-per-tenant**: the `queued` flag is acquired
+//!    by exactly one party (submitter or timer promotion) before the
+//!    tenant enters the ready queue, and the queue never holds the same
+//!    tenant twice.
+//! 3. **Retirement latch**: once a turn returns
+//!    [`StepOutcome::Stopped`], `stopped` is set and `queued` stays
+//!    latched `true` forever, so no post-stop command is ever executed
+//!    and the inbox always ends empty (raced submitters clear it
+//!    themselves behind the double-check in [`PoolCore::submit`]).
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Arc, Condvar, Mutex};
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Instant;
+
+/// Acknowledgement callback carried by [`StepOutcome::Stopped`]; the
+/// scheduler invokes it once no worker will ever touch the tenant
+/// again (the pinned path calls it from its dedicated thread).
+pub type StopAck = Box<dyn FnOnce() + Send>;
+
+/// What one [`Stepper::step`] turn left behind.
+pub enum StepOutcome {
+    /// Inbox drained, no deadline armed.
+    Idle,
+    /// Inbox drained (or the step yielded after a flush) and the state
+    /// machine needs a wakeup by `at` even if no new input arrives.
+    WaitUntil(Instant),
+    /// The state machine retired; the scheduler latches the tenant
+    /// stopped, clears its inbox, and fires the ack.
+    Stopped(StopAck),
+}
+
+/// A resumable state machine the pool can drive.  The pool guarantees
+/// `step` and `drain_deadline` are never run concurrently for one
+/// tenant (they run under the tenant's state lock).
+pub trait Stepper: Send + 'static {
+    /// Commands this machine consumes from its inbox.
+    type Cmd: Send;
+
+    /// Run one schedulable unit of work: drain the inbox (bounded — a
+    /// busy tenant must not monopolize a worker) and report how the
+    /// scheduler should treat this tenant next.
+    fn step(&mut self, inbox: &Mutex<VecDeque<Self::Cmd>>) -> StepOutcome;
+
+    /// The pool is shutting down and any armed deadline will never
+    /// fire: complete the deadline's work *now* (e.g. flush a pending
+    /// `max_age` batch) rather than stranding it.
+    fn drain_deadline(&mut self);
+}
+
+/// Why a submit was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The tenant retired (or retired while the command was in flight,
+    /// in which case the command was discarded before execution).
+    TenantStopped,
+    /// The pool is shut down; no tenant runs again.
+    PoolShutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::TenantStopped => write!(f, "tracker worker is shut down"),
+            SubmitError::PoolShutdown => write!(f, "worker pool is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A pool-resident tenant: inbox + scheduling flags + the state
+/// machine.  Callers talk to it exclusively through
+/// [`PoolCore::submit`].
+pub struct PoolTenant<S: Stepper> {
+    inbox: Mutex<VecDeque<S::Cmd>>,
+    /// True while the tenant is in the ready queue or being stepped —
+    /// the at-most-one-worker-per-tenant exclusion.
+    queued: AtomicBool,
+    /// Set once on shutdown; a stopped tenant is never scheduled again
+    /// (`queued` stays latched true for the same reason).
+    stopped: AtomicBool,
+    state: Mutex<S>,
+}
+
+impl<S: Stepper> PoolTenant<S> {
+    fn new(state: S) -> PoolTenant<S> {
+        PoolTenant {
+            inbox: Mutex::new(VecDeque::new()),
+            queued: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            state: Mutex::new(state),
+        }
+    }
+
+    /// Has this tenant retired?  (Submissions now fail.)
+    // ordering: Acquire pairs with the Release store in `run_turn`'s
+    // Stopped arm — a caller that observes `stopped == true` also
+    // observes every effect of the retiring turn (the inbox clear in
+    // particular), so the double-check in `submit` cannot resurrect a
+    // command the stopping worker already discarded.
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::Acquire)
+    }
+
+    /// Is the tenant currently in the ready queue or being stepped?
+    /// (Diagnostics / model assertions; racy by nature for live pools.)
+    // ordering: Acquire pairs with the Release half of the `queued`
+    // CAS/store sites so a reader that sees `true` also sees the
+    // enqueue (or latch) that published it.
+    pub fn is_queued(&self) -> bool {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Number of commands waiting in the inbox (model assertions).
+    pub fn inbox_len(&self) -> usize {
+        self.inbox.lock().len()
+    }
+}
+
+/// Timer-heap entry; `Ord` is reversed on `(at, seq)` so the std
+/// max-heap pops the *earliest* deadline first (FIFO among ties).
+struct TimerEntry<S: Stepper> {
+    at: Instant,
+    seq: u64,
+    tenant: Arc<PoolTenant<S>>,
+}
+
+impl<S: Stepper> PartialEq for TimerEntry<S> {
+    fn eq(&self, other: &TimerEntry<S>) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<S: Stepper> Eq for TimerEntry<S> {}
+
+impl<S: Stepper> PartialOrd for TimerEntry<S> {
+    fn partial_cmp(&self, other: &TimerEntry<S>) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<S: Stepper> Ord for TimerEntry<S> {
+    fn cmp(&self, other: &TimerEntry<S>) -> std::cmp::Ordering {
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct Sched<S: Stepper> {
+    ready: VecDeque<Arc<PoolTenant<S>>>,
+    timers: BinaryHeap<TimerEntry<S>>,
+    timer_seq: u64,
+    shutdown: bool,
+}
+
+/// The scheduler: a FIFO ready queue + deadline timer heap under one
+/// mutex, a condvar for parked workers, and the per-tenant `queued`
+/// exclusion protocol.  Thread management lives in the production
+/// wrapper ([`crate::coordinator::pool::WorkerPool`]); the loom harness
+/// drives [`PoolCore::worker_loop`] from model threads directly.
+pub struct PoolCore<S: Stepper> {
+    sched: Mutex<Sched<S>>,
+    cv: Condvar,
+}
+
+impl<S: Stepper> Default for PoolCore<S> {
+    fn default() -> PoolCore<S> {
+        PoolCore::new()
+    }
+}
+
+impl<S: Stepper> PoolCore<S> {
+    pub fn new() -> PoolCore<S> {
+        PoolCore {
+            sched: Mutex::new(Sched {
+                ready: VecDeque::new(),
+                timers: BinaryHeap::new(),
+                timer_seq: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Adopt a state machine.  The tenant is inert until its first
+    /// [`submit`](Self::submit).
+    pub fn register(&self, state: S) -> Arc<PoolTenant<S>> {
+        Arc::new(PoolTenant::new(state))
+    }
+
+    /// Has [`begin_shutdown`](Self::begin_shutdown) run?
+    pub fn is_shutdown(&self) -> bool {
+        self.sched.lock().shutdown
+    }
+
+    /// Queue a command into the tenant's inbox and mark it runnable.
+    ///
+    /// `Ok` means the command was *enqueued* while the tenant was live;
+    /// it executes unless the tenant retires first, in which case any
+    /// reply channel inside it disconnects and unblocks its receiver
+    /// with an error (no caller is ever stranded).
+    pub fn submit(&self, tenant: &Arc<PoolTenant<S>>, cmd: S::Cmd) -> Result<(), SubmitError> {
+        if tenant.is_stopped() {
+            return Err(SubmitError::TenantStopped);
+        }
+        if self.sched.lock().shutdown {
+            return Err(SubmitError::PoolShutdown);
+        }
+        tenant.inbox.lock().push_back(cmd);
+        if tenant.is_stopped() {
+            // raced retirement: the worker that stopped the tenant may
+            // have drained the inbox before our push landed; discard
+            // our command too (dropping it disconnects any reply
+            // sender, so a blocked caller gets an error, and the
+            // Acquire in is_stopped orders our clear after the
+            // stopping worker's clear)
+            tenant.inbox.lock().clear();
+            return Err(SubmitError::TenantStopped);
+        }
+        self.schedule(tenant.clone());
+        Ok(())
+    }
+
+    /// Mark a tenant runnable if it isn't queued already.
+    pub(crate) fn schedule(&self, tenant: Arc<PoolTenant<S>>) {
+        if tenant.is_stopped() {
+            return;
+        }
+        // ordering: AcqRel on success — the Release half publishes the
+        // inbox push that preceded this CAS to the worker that will
+        // clear `queued` (its clearing store is Release, its CAS here
+        // Acquire), and the Acquire half orders this enqueue after any
+        // prior turn's effects.  Acquire on failure pairs with the
+        // owner's eventual Release clear: seeing `true` means the
+        // owning worker's re-check is still ahead of it and will
+        // observe our push (lost-wakeup invariant).
+        if tenant
+            .queued
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            // already queued or running; the lost-wakeup re-check in
+            // run_turn guarantees the new command is seen
+            return;
+        }
+        let mut sched = self.sched.lock();
+        debug_assert!(
+            !sched.ready.iter().any(|t| Arc::ptr_eq(t, &tenant)),
+            "a tenant must never be in the ready queue twice"
+        );
+        sched.ready.push_back(tenant);
+        self.cv.notify_one();
+    }
+
+    /// Park a tenant until `at` (deadline-armed pending batch).  If the
+    /// pool is already shutting down the timer would never fire, so the
+    /// deadline's work is completed inline instead (see
+    /// [`Stepper::drain_deadline`]).
+    pub(crate) fn add_timer(&self, at: Instant, tenant: Arc<PoolTenant<S>>) {
+        {
+            let mut sched = self.sched.lock();
+            if !sched.shutdown {
+                let seq = sched.timer_seq;
+                sched.timer_seq += 1;
+                sched.timers.push(TimerEntry { at, seq, tenant });
+                // the new deadline may be earlier than what sleepers
+                // wait on
+                self.cv.notify_one();
+                return;
+            }
+        }
+        // shutdown raced in between this turn's WaitUntil and arming
+        // the timer: the heap was (or is being) drained, so flush the
+        // pending work here rather than stranding it
+        if !tenant.is_stopped() {
+            tenant.state.lock().drain_deadline();
+        }
+    }
+
+    /// Stop accepting work and wake every parked worker.  Armed
+    /// deadline timers are drained — each parked tenant's pending work
+    /// runs to completion here — instead of being silently dropped.
+    /// Idempotent.  The caller joins its worker threads afterwards.
+    pub fn begin_shutdown(&self) {
+        let timers = {
+            let mut sched = self.sched.lock();
+            sched.shutdown = true;
+            std::mem::take(&mut sched.timers)
+        };
+        self.cv.notify_all();
+        // outside the sched lock: drain_deadline may run a full tracker
+        // update, and workers need the lock to drain the ready queue.
+        // Lock order here is state-only (never sched→state), matching
+        // run_turn, so this cannot deadlock.
+        for entry in timers {
+            if !entry.tenant.is_stopped() {
+                entry.tenant.state.lock().drain_deadline();
+            }
+        }
+    }
+
+    /// The worker body: promote due timers, run ready tenants, park on
+    /// the condvar (deadline-bounded when timers are armed).  Returns
+    /// when the pool is shut down and the ready queue is drained.
+    pub fn worker_loop(&self) {
+        let mut sched = self.sched.lock();
+        loop {
+            // promote due timers to the ready queue
+            let now = Instant::now();
+            while sched.timers.peek().is_some_and(|t| t.at <= now) {
+                let Some(entry) = sched.timers.pop() else { break };
+                // ordering: same pairing as `schedule` — winning this
+                // CAS is the exclusive right to enqueue the tenant;
+                // losing means a submitter queued it (or a worker runs
+                // it) and that turn's deadline poll covers this wakeup.
+                if !entry.tenant.is_stopped()
+                    && entry
+                        .tenant
+                        .queued
+                        .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                {
+                    sched.ready.push_back(entry.tenant);
+                    self.cv.notify_one();
+                }
+            }
+            if let Some(tenant) = sched.ready.pop_front() {
+                drop(sched);
+                self.run_turn(&tenant);
+                sched = self.sched.lock();
+                continue;
+            }
+            if sched.shutdown {
+                return;
+            }
+            sched = match sched.timers.peek().map(|t| t.at) {
+                None => self.cv.wait(sched),
+                Some(at) => {
+                    let now = Instant::now();
+                    if at <= now {
+                        continue;
+                    }
+                    self.cv.wait_timeout(sched, at - now).0
+                }
+            };
+        }
+    }
+
+    /// Run one scheduled step of a tenant.  Caller must hold the
+    /// tenant's `queued` flag (i.e. have popped it from the ready
+    /// queue).
+    fn run_turn(&self, tenant: &Arc<PoolTenant<S>>) {
+        if tenant.is_stopped() {
+            // stopped while waiting in the ready queue; `queued` stays
+            // latched so it is never re-queued
+            return;
+        }
+        let outcome = tenant.state.lock().step(&tenant.inbox);
+        match outcome {
+            StepOutcome::Stopped(ack) => {
+                // ordering: Release publishes this turn's effects —
+                // crucially the inbox clear just below happens-after
+                // any submitter's push that this store invalidates:
+                // the submitter's double-check loads `stopped` with
+                // Acquire and discards its own command.  `queued` is
+                // deliberately NOT cleared: the latch guarantees no
+                // future schedule() can ever re-enqueue the tenant.
+                tenant.stopped.store(true, Ordering::Release);
+                // drop queued commands — their reply senders unblock
+                // any waiting caller with a recv error
+                tenant.inbox.lock().clear();
+                ack();
+            }
+            outcome => {
+                // ordering: Release pairs with the Acquire CAS in
+                // `schedule` — a submitter that wins the CAS after this
+                // store observes everything this turn consumed, so it
+                // never re-enqueues the tenant for work that was
+                // already drained.
+                tenant.queued.store(false, Ordering::Release);
+                // lost-wakeup re-check: a submit that raced the drain
+                // saw `queued == true` and skipped scheduling
+                if !tenant.inbox.lock().is_empty() {
+                    self.schedule(tenant.clone());
+                } else if let StepOutcome::WaitUntil(at) = outcome {
+                    self.add_timer(at, tenant.clone());
+                }
+            }
+        }
+    }
+}

@@ -7,19 +7,21 @@
 //! Derived results are memoized in a version-keyed cache: the first
 //! reader at a given `(version, query)` computes, concurrent readers of
 //! the same key block on that one in-flight computation (a shared
-//! `OnceLock`, never a second compute), and every later reader answers
-//! with a short mutex hold plus an `Arc` clone.  The cache holds a small
-//! LRU-bounded set of slots, so stale versions age out as the stream
-//! advances.  All results are reported in **external** node ids via the
-//! snapshot's [`IdMap`](crate::graph::stream::IdMap).
+//! write-once slot, never a second compute), and every later reader
+//! answers with a short mutex hold plus an `Arc` clone.  The cache
+//! holds a small LRU-bounded set of slots, so stale versions age out as
+//! the stream advances.  The one-in-flight-compute machinery itself is
+//! [`Memo`](crate::coordinator::memo_core::Memo), whose guarantee is
+//! loom-model-checked (see `rust/loom-model`).  All results are
+//! reported in **external** node ids via the snapshot's
+//! [`IdMap`](crate::graph::stream::IdMap).
 
+use crate::coordinator::memo_core::{Memo, MemoHow};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::snapshot::EmbeddingSnapshot;
 use crate::linalg::threads::Threads;
+use crate::sync::Arc;
 use crate::tasks::{centrality, clustering};
-use std::collections::HashMap;
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 // The assignment type lives in the task layer (which stays free of
@@ -43,42 +45,6 @@ enum QueryValue {
     Similar(Arc<Vec<(u64, f64)>>),
 }
 
-/// A cache slot: concurrent first readers share one in-flight
-/// computation through the `OnceLock` instead of recomputing.
-type Slot = Arc<OnceLock<QueryValue>>;
-
-/// Version-keyed memo cache with a small LRU bound.
-struct MemoCache {
-    map: HashMap<(u64, QueryKey), (u64, Slot)>,
-    tick: u64,
-    cap: usize,
-}
-
-impl MemoCache {
-    /// Fetch the slot for `(version, key)`, creating it if absent and
-    /// evicting the least-recently-used slot beyond capacity.  The map
-    /// lock is held only for this bookkeeping, never during a compute.
-    fn slot(&mut self, version: u64, key: QueryKey) -> Slot {
-        self.tick += 1;
-        let tick = self.tick;
-        if let Some((t, slot)) = self.map.get_mut(&(version, key.clone())) {
-            *t = tick;
-            return slot.clone();
-        }
-        if self.map.len() >= self.cap {
-            // bind first: an if-let scrutinee would hold the iter borrow
-            // across the remove
-            let oldest = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone());
-            if let Some(oldest) = oldest {
-                self.map.remove(&oldest);
-            }
-        }
-        let slot: Slot = Arc::new(OnceLock::new());
-        self.map.insert((version, key), (tick, slot.clone()));
-        slot
-    }
-}
-
 /// Default LRU bound: a handful of versions × a handful of distinct
 /// queries per version.
 const DEFAULT_CACHE_CAP: usize = 128;
@@ -88,7 +54,7 @@ pub struct QueryEngine {
     seed: u64,
     threads: Threads,
     metrics: Arc<Metrics>,
-    cache: Mutex<MemoCache>,
+    cache: Memo<(u64, QueryKey), QueryValue>,
 }
 
 impl QueryEngine {
@@ -102,12 +68,7 @@ impl QueryEngine {
         metrics: Arc<Metrics>,
         cap: usize,
     ) -> QueryEngine {
-        QueryEngine {
-            seed,
-            threads,
-            metrics,
-            cache: Mutex::new(MemoCache { map: HashMap::new(), tick: 0, cap: cap.max(1) }),
-        }
+        QueryEngine { seed, threads, metrics, cache: Memo::new(cap) }
     }
 
     /// Memoize `compute` under `(snap.version, key)`: exactly one caller
@@ -119,30 +80,27 @@ impl QueryEngine {
         compute: impl FnOnce() -> QueryValue,
     ) -> QueryValue {
         let t0 = Instant::now();
-        let slot = self.cache.lock().unwrap().slot(version, key);
-        if let Some(v) = slot.get() {
-            // pure hit: the only latencies the cached histogram records
-            self.metrics.queries_cached.fetch_add(1, Ordering::Relaxed);
-            self.metrics.query_latency_cached.observe(t0.elapsed());
-            return v.clone();
+        let (value, how) = self.cache.get_or_compute((version, key), compute);
+        match how {
+            MemoHow::Hit => {
+                // pure hit: the only latencies the cached histogram
+                // records
+                self.metrics.queries_cached.incr();
+                self.metrics.query_latency_cached.observe(t0.elapsed());
+            }
+            MemoHow::Computed => {
+                self.metrics.queries_computed.incr();
+                self.metrics.query_latency_computed.observe(t0.elapsed());
+            }
+            MemoHow::Waited => {
+                // a reader that lost the race waited for the in-flight
+                // compute: it counts as cached (nothing was recomputed)
+                // but its latency is compute-shaped, so it must not
+                // pollute the cached histogram
+                self.metrics.queries_cached.incr();
+                self.metrics.query_latency_computed.observe(t0.elapsed());
+            }
         }
-        let mut computed_here = false;
-        let value = slot
-            .get_or_init(|| {
-                computed_here = true;
-                compute()
-            })
-            .clone();
-        self.metrics
-            .queries_computed
-            .fetch_add(u64::from(computed_here), Ordering::Relaxed);
-        self.metrics
-            .queries_cached
-            .fetch_add(u64::from(!computed_here), Ordering::Relaxed);
-        // a reader that lost the race waited for the in-flight compute:
-        // it counts as cached (nothing was recomputed) but its latency
-        // is compute-shaped, so it must not pollute the cached histogram
-        self.metrics.query_latency_computed.observe(t0.elapsed());
         value
     }
 
@@ -208,7 +166,7 @@ impl QueryEngine {
 
     /// Number of live cache slots (tests/diagnostics).
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().map.len()
+        self.cache.len()
     }
 }
 
@@ -235,10 +193,11 @@ fn cosine_similar(snap: &EmbeddingSnapshot, q: usize, top: usize) -> Vec<(u64, f
         .collect();
     scored.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     scored.truncate(top);
-    scored
-        .into_iter()
-        .map(|(i, s)| (snap.ids.external(i).expect("snapshot ids cover every row"), s))
-        .collect()
+    // publish() asserts the id map covers every row, so the filter_map
+    // drops nothing in practice; it exists so a (debug-asserted)
+    // violation degrades to a shorter answer instead of a panic on the
+    // read path
+    scored.into_iter().filter_map(|(i, s)| Some((snap.ids.external(i)?, s))).collect()
 }
 
 #[cfg(test)]
@@ -272,14 +231,14 @@ mod tests {
         let a = eng.central_nodes(&s1, 5);
         let b = eng.central_nodes(&s1, 5);
         assert!(Arc::ptr_eq(&a, &b), "same version+key must share one result");
-        assert_eq!(m.queries_computed.load(Ordering::Relaxed), 1);
-        assert_eq!(m.queries_cached.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queries_computed.get(), 1);
+        assert_eq!(m.queries_cached.get(), 1);
         // a different J, and a new version, each compute once
         let _ = eng.central_nodes(&s1, 3);
         let s2 = snap_with_vectors(2, Mat::randn(20, 3, &mut rng), (0..20).collect());
         let c = eng.central_nodes(&s2, 5);
         assert!(!Arc::ptr_eq(&a, &c));
-        assert_eq!(m.queries_computed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.queries_computed.get(), 3);
     }
 
     #[test]
@@ -294,11 +253,11 @@ mod tests {
         let _ = eng.central_nodes(&s, 1); // touch: j=1 becomes most recent
         let _ = eng.central_nodes(&s, 3); // evicts j=2
         assert_eq!(eng.cache_len(), 2);
-        let computed = m.queries_computed.load(Ordering::Relaxed);
+        let computed = m.queries_computed.get();
         let _ = eng.central_nodes(&s, 1); // still cached
-        assert_eq!(m.queries_computed.load(Ordering::Relaxed), computed);
+        assert_eq!(m.queries_computed.get(), computed);
         let _ = eng.central_nodes(&s, 2); // was evicted: recomputes
-        assert_eq!(m.queries_computed.load(Ordering::Relaxed), computed + 1);
+        assert_eq!(m.queries_computed.get(), computed + 1);
     }
 
     #[test]
@@ -372,10 +331,10 @@ mod tests {
             assert_eq!(**r, *results[0], "all readers at one version must agree");
         }
         assert_eq!(
-            m.queries_computed.load(Ordering::Relaxed),
+            m.queries_computed.get(),
             1,
             "read storm at one version computes exactly once"
         );
-        assert_eq!(m.queries_cached.load(Ordering::Relaxed), 8 * 50 - 1);
+        assert_eq!(m.queries_cached.get(), 8 * 50 - 1);
     }
 }

@@ -35,9 +35,8 @@ use crate::sparse::csr::Csr;
 use crate::tracking::spec::{Backend, TrackerSpec};
 use crate::tracking::traits::{EigTracker, EigenPairs};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use crate::sync::mpsc::{self, Receiver, Sender};
+use crate::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Builds the tracker inside the pinned worker thread (lets callers
@@ -107,7 +106,7 @@ impl ServiceHandle {
     pub fn ingest(&self, events: Vec<GraphEvent>) -> Result<()> {
         let n = events.len() as u64;
         self.submit(TenantCmd::Events(events))?;
-        self.metrics.events_ingested.fetch_add(n, Ordering::Relaxed);
+        self.metrics.events_ingested.add(n);
         Ok(())
     }
 
@@ -497,7 +496,7 @@ mod tests {
             );
         }
         let m = h.metrics();
-        assert!(m.batches_applied.load(Ordering::Relaxed) >= 1);
+        assert!(m.batches_applied.get() >= 1);
         svc.join();
     }
 
@@ -541,11 +540,11 @@ mod tests {
         // repeated queries at one version hit the memo cache
         let m = h.metrics();
         let a = h.central_nodes(6);
-        let computed = m.queries_computed.load(Ordering::Relaxed);
+        let computed = m.queries_computed.get();
         let b = h.central_nodes(6);
         assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(m.queries_computed.load(Ordering::Relaxed), computed);
-        assert!(m.queries_cached.load(Ordering::Relaxed) >= 1);
+        assert_eq!(m.queries_computed.get(), computed);
+        assert!(m.queries_cached.get() >= 1);
         svc.join();
     }
 
@@ -631,14 +630,14 @@ mod tests {
         // first flush: tracker fails — no snapshot, batch stays pending
         let v = h.flush().unwrap();
         assert_eq!(v, 0, "failed update must not publish");
-        assert_eq!(h.metrics().update_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(h.metrics().update_failures.get(), 1);
         assert_eq!(h.snapshot().n_nodes, 30);
         // second flush: retry succeeds with the SAME accumulated batch
         let v = h.flush().unwrap();
         assert_eq!(v, 1);
         let snap = h.snapshot();
         assert_eq!(snap.n_nodes, 32, "retried batch must include both new nodes");
-        assert_eq!(h.metrics().batches_applied.load(Ordering::Relaxed), 1);
+        assert_eq!(h.metrics().batches_applied.get(), 1);
         svc.join();
     }
 
@@ -689,7 +688,7 @@ mod tests {
             assert_eq!(inc.indices, want.indices, "batch {batch}");
             assert_eq!(inc.data, want.data, "batch {batch}");
         }
-        assert!(h.metrics().batches_applied.load(Ordering::Relaxed) >= 1);
+        assert!(h.metrics().batches_applied.get() >= 1);
         svc.join();
     }
 
@@ -832,12 +831,12 @@ mod tests {
             };
             let h = svc.handle.clone();
             h.ingest(vec![GraphEvent::AddEdge(0, 800), GraphEvent::AddEdge(1, 801)]).unwrap();
-            assert_eq!(h.metrics().events_ingested.load(Ordering::Relaxed), 2);
+            assert_eq!(h.metrics().events_ingested.get(), 2);
             svc.join();
             let err = h.ingest(vec![GraphEvent::AddEdge(2, 802)]);
             assert!(err.is_err(), "ingest into a joined service must fail (pinned={pinned})");
             assert_eq!(
-                h.metrics().events_ingested.load(Ordering::Relaxed),
+                h.metrics().events_ingested.get(),
                 2,
                 "failed enqueue must not count (pinned={pinned})"
             );

@@ -9,8 +9,8 @@
 //! caller's id space — without ever sending a worker command.
 
 use crate::graph::stream::IdMap;
+use crate::sync::{Arc, RwLock};
 use crate::tracking::traits::EigenPairs;
-use std::sync::{Arc, RwLock};
 
 /// An immutable published embedding state.
 pub struct EmbeddingSnapshot {
@@ -57,7 +57,7 @@ impl SnapshotStore {
 
     /// Latest snapshot (cheap: clones an Arc).
     pub fn latest(&self) -> Arc<EmbeddingSnapshot> {
-        self.inner.read().unwrap().clone()
+        self.inner.read().clone()
     }
 
     /// Publish a new snapshot; enforces monotone versions and the
@@ -68,7 +68,7 @@ impl SnapshotStore {
             snap.n_nodes,
             "snapshot id map must cover every node"
         );
-        let mut w = self.inner.write().unwrap();
+        let mut w = self.inner.write();
         assert!(
             snap.version > w.version,
             "snapshot versions must be monotone ({} -> {})",

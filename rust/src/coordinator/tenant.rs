@@ -17,15 +17,19 @@
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool_core::Stepper;
 use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
 use crate::graph::stream::{DeltaBuilder, GraphEvent};
 use crate::sparse::csr::Csr;
+use crate::sync::mpsc::Sender;
+use crate::sync::{Arc, Mutex};
 use crate::tracking::traits::EigTracker;
 use std::collections::VecDeque;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+// The step-outcome vocabulary lives in the model-checked scheduler
+// core; re-exported here so tenant-facing code keeps one import path.
+pub use crate::coordinator::pool_core::{StepOutcome, StopAck};
 
 /// A command queued into a tenant's inbox.  Mirrors the old private
 /// service `Command`, with `Shutdown` carrying an ack so joiners can
@@ -48,18 +52,6 @@ pub enum Applied {
     /// A flush ran — yield so one step never runs two dense phases.
     Flushed,
     /// Shutdown was requested; the caller owns the ack.
-    Stopped(Sender<()>),
-}
-
-/// What a [`TenantState::step`] left behind.
-pub enum StepOutcome {
-    /// Inbox drained, no deadline armed.
-    Idle,
-    /// Inbox drained (or step yielded after a flush) and a non-empty
-    /// pending batch has a [`BatchPolicy::max_age`] deadline: the
-    /// scheduler must wake this tenant by then even with no new input.
-    WaitUntil(Instant),
-    /// The tenant retired; send the ack after unpublishing it.
     Stopped(Sender<()>),
 }
 
@@ -179,9 +171,9 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
                         self.builder.commit();
                         self.pending_since = None;
                         let m = &self.metrics;
-                        m.nodes_added.fetch_add(delta.s_new as u64, Ordering::Relaxed);
+                        m.nodes_added.add(delta.s_new as u64);
                         m.update_latency.observe(t0.elapsed());
-                        m.batches_applied.fetch_add(1, Ordering::Relaxed);
+                        m.batches_applied.incr();
                         // incremental row-merge: only rows touched by
                         // Δ are rewritten, never a full rebuild
                         self.adjacency = self.adjacency.apply_delta(&delta);
@@ -200,7 +192,7 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
                         // batch stays pending; the next flush retries
                         // the accumulated delta against the same
                         // committed state
-                        self.metrics.update_failures.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.update_failures.incr();
                         if self.pending_since.is_some() {
                             self.pending_since = Some(Instant::now());
                         }
@@ -213,14 +205,14 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
     /// Charge the just-applied batch against the tenant's budget.
     fn charge_budget(&self) {
         let flops = self.tracker.last_step_flops();
-        self.metrics.flops_applied.fetch_add(flops, Ordering::Relaxed);
+        self.metrics.flops_applied.add(flops);
         if self.budget.max_flops_per_flush.is_some_and(|cap| flops > cap) {
-            self.metrics.flop_budget_overruns.fetch_add(1, Ordering::Relaxed);
+            self.metrics.flop_budget_overruns.incr();
         }
         let resident = self.resident_bytes();
-        self.metrics.resident_bytes.store(resident, Ordering::Relaxed);
+        self.metrics.resident_bytes.set(resident);
         if self.budget.max_resident_bytes.is_some_and(|cap| resident > cap) {
-            self.metrics.mem_budget_overruns.fetch_add(1, Ordering::Relaxed);
+            self.metrics.mem_budget_overruns.incr();
         }
     }
 
@@ -262,7 +254,7 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
     pub fn step(&mut self, inbox: &Mutex<VecDeque<TenantCmd>>) -> StepOutcome {
         let mut flushed = false;
         loop {
-            let cmd = inbox.lock().unwrap().pop_front();
+            let cmd = inbox.lock().pop_front();
             let Some(cmd) = cmd else { break };
             match self.apply(cmd) {
                 Applied::Continue => {}
@@ -270,7 +262,11 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
                     flushed = true;
                     break;
                 }
-                Applied::Stopped(ack) => return StepOutcome::Stopped(ack),
+                Applied::Stopped(ack) => {
+                    return StepOutcome::Stopped(Box::new(move || {
+                        let _ = ack.send(());
+                    }));
+                }
             }
         }
         if !flushed {
@@ -280,6 +276,27 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
             Some(at) => StepOutcome::WaitUntil(at),
             None => StepOutcome::Idle,
         }
+    }
+
+    /// An armed `max_age` deadline will never fire (the pool is
+    /// shutting down): close the pending batch now rather than strand
+    /// it.  No-op when nothing is pending.
+    pub fn drain_deadline(&mut self) {
+        if self.pending_since.is_some() {
+            self.flush();
+        }
+    }
+}
+
+impl Stepper for TenantState {
+    type Cmd = TenantCmd;
+
+    fn step(&mut self, inbox: &Mutex<VecDeque<TenantCmd>>) -> StepOutcome {
+        TenantState::step(self, inbox)
+    }
+
+    fn drain_deadline(&mut self) {
+        TenantState::drain_deadline(self);
     }
 }
 
@@ -322,7 +339,7 @@ mod tests {
     fn step_drains_inbox_and_flushes_on_count() {
         let (mut state, store, _) = make_state(BatchPolicy::ByCount(2));
         let inbox = Mutex::new(VecDeque::new());
-        inbox.lock().unwrap().push_back(TenantCmd::Events(vec![
+        inbox.lock().push_back(TenantCmd::Events(vec![
             GraphEvent::AddEdge(0, 500),
             GraphEvent::AddEdge(1, 501),
         ]));
@@ -339,7 +356,7 @@ mod tests {
     fn step_reports_deadline_for_aged_policy() {
         let (mut state, store, _) = make_state(BatchPolicy::MaxAge(Duration::from_secs(3600)));
         let inbox = Mutex::new(VecDeque::new());
-        inbox.lock().unwrap().push_back(TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)]));
+        inbox.lock().push_back(TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)]));
         let armed_at = Instant::now();
         match state.step(&inbox) {
             StepOutcome::WaitUntil(at) => {
@@ -384,12 +401,12 @@ mod tests {
             TenantBudget { max_flops_per_flush: Some(1), max_resident_bytes: Some(1) },
         );
         let inbox = Mutex::new(VecDeque::new());
-        inbox.lock().unwrap().push_back(TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)]));
+        inbox.lock().push_back(TenantCmd::Events(vec![GraphEvent::AddEdge(0, 900)]));
         state.step(&inbox);
         assert_eq!(state.version(), 1, "soft budgets never block the flush");
-        assert_eq!(metrics.flop_budget_overruns.load(Ordering::Relaxed), 1);
-        assert_eq!(metrics.mem_budget_overruns.load(Ordering::Relaxed), 1);
-        assert!(metrics.flops_applied.load(Ordering::Relaxed) > 0);
-        assert!(metrics.resident_bytes.load(Ordering::Relaxed) > 0);
+        assert_eq!(metrics.flop_budget_overruns.get(), 1);
+        assert_eq!(metrics.mem_budget_overruns.get(), 1);
+        assert!(metrics.flops_applied.get() > 0);
+        assert!(metrics.resident_bytes.get() > 0);
     }
 }

@@ -17,7 +17,7 @@ use crate::graph::graph::Graph;
 use crate::sparse::coo::Coo;
 use crate::sparse::delta::Delta;
 use std::collections::HashMap;
-use std::sync::Arc;
+use crate::sync::Arc;
 
 /// Frozen bidirectional mapping between the dense internal indices the
 /// trackers operate on (rows of the eigenvector matrix) and the external

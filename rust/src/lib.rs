@@ -39,6 +39,7 @@ pub mod graph;
 pub mod linalg;
 pub mod runtime;
 pub mod sparse;
+pub mod sync;
 pub mod tasks;
 pub mod tracking;
 

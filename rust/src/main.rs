@@ -593,8 +593,8 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
     println!(
         "snapshot age {:?} | query cache: {} computed, {} cached (hit-rate {:.0}%)",
         h.snapshot_age(),
-        m.queries_computed.load(std::sync::atomic::Ordering::Relaxed),
-        m.queries_cached.load(std::sync::atomic::Ordering::Relaxed),
+        m.queries_computed.get(),
+        m.queries_cached.get(),
         100.0 * m.query_cache_hit_rate(),
     );
     println!("metrics: {}", m.report());
@@ -608,7 +608,6 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
 fn cmd_fleet(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Result<()> {
     use grest::coordinator::{BatchPolicy, Fleet, FleetConfig, ServiceConfig, TenantId};
     use grest::graph::stream::GraphEvent;
-    use std::sync::atomic::Ordering;
     let tenants: usize = flag_num(flags, "tenants", 8usize)?;
     let workers: usize = flag_num(flags, "workers", 4usize)?;
     let n_events: usize = flag_num(flags, "events", 400usize)?;
@@ -669,9 +668,9 @@ fn cmd_fleet(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Resul
             id.to_string(),
             v.to_string(),
             snap.n_nodes.to_string(),
-            m.batches_applied.load(Ordering::Relaxed).to_string(),
+            m.batches_applied.get().to_string(),
             format!("{:?}", m.update_latency.quantile(0.95)),
-            format!("{:.2}", m.flops_applied.load(Ordering::Relaxed) as f64 / 1e6),
+            format!("{:.2}", m.flops_applied.get() as f64 / 1e6),
         ]);
     }
     println!("{}", table.render());

@@ -1,0 +1,191 @@
+//! The crate-wide synchronization facade.
+//!
+//! Every module imports its concurrency primitives from here instead of
+//! `std::sync` (enforced by `detlint` rule `raw-std-sync`).  In the
+//! default build these are thin wrappers over — or straight re-exports
+//! of — the std types.  The payoff is model-checkability: the
+//! `rust/loom-model` crate compiles the scheduler protocol
+//! (`coordinator/pool_core.rs`) and the memo-cache core
+//! (`coordinator/memo_core.rs`) against a `loom`-backed twin of this
+//! facade under `--cfg loom`, exploring every interleaving of the
+//! lock/CAS/condvar protocol — without `loom` ever appearing in this
+//! crate's dependency graph (the offline tier-1 build stays
+//! dependency-free).
+//!
+//! The wrappers also centralize poison handling: a poisoned lock means
+//! another thread panicked while holding it, and this crate's policy is
+//! to propagate that panic at the next acquisition (same behavior the
+//! scattered `.lock().unwrap()` calls had, now in one audited place —
+//! `detlint` bans `unwrap`/`expect` in coordinator code).
+
+pub use std::sync::atomic;
+pub use std::sync::mpsc;
+pub use std::sync::{Arc, MutexGuard, OnceLock, RwLockReadGuard, RwLockWriteGuard, Weak};
+
+/// [`std::sync::Mutex`] that panics on poison at acquisition instead of
+/// returning a `Result` (callers never see a `LockResult`).
+#[derive(Debug, Default)]
+pub struct Mutex<T: ?Sized>(std::sync::Mutex<T>);
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Mutex<T> {
+        Mutex(std::sync::Mutex::new(value))
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.0.lock().expect("mutex poisoned: a thread panicked while holding this lock")
+    }
+}
+
+/// [`std::sync::RwLock`] with the same poison-panics-here policy.
+#[derive(Debug, Default)]
+pub struct RwLock<T: ?Sized>(std::sync::RwLock<T>);
+
+impl<T> RwLock<T> {
+    pub fn new(value: T) -> RwLock<T> {
+        RwLock(std::sync::RwLock::new(value))
+    }
+}
+
+impl<T: ?Sized> RwLock<T> {
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        self.0.read().expect("rwlock poisoned: a thread panicked while holding this lock")
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        self.0.write().expect("rwlock poisoned: a thread panicked while holding this lock")
+    }
+}
+
+/// [`std::sync::Condvar`] whose wait methods take and return plain
+/// guards (poison panics here, and `wait_timeout` reports the timeout
+/// as a bare `bool`).
+#[derive(Debug, Default)]
+pub struct Condvar(std::sync::Condvar);
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar(std::sync::Condvar::new())
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.0.wait(guard).expect("mutex poisoned during condvar wait")
+    }
+
+    /// Wait with a timeout; returns the reacquired guard and whether
+    /// the wait timed out (vs. was notified).
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let (guard, res) =
+            self.0.wait_timeout(guard, dur).expect("mutex poisoned during condvar wait");
+        (guard, res.timed_out())
+    }
+
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+}
+
+/// A write-once cell for `Clone` values: concurrent readers of an
+/// unfilled slot share exactly one in-flight `get_or_init` computation.
+///
+/// This is the memo-cache primitive.  It deliberately exposes a
+/// *clone-based* API (values out, never references) so the loom twin
+/// can implement it with a `Mutex<Option<T>>` — `loom` has no
+/// `OnceLock` — while the std flavor rides the real
+/// [`std::sync::OnceLock`] blocking-initializer guarantee.
+#[derive(Debug, Default)]
+pub struct OnceSlot<T>(std::sync::OnceLock<T>);
+
+impl<T: Clone> OnceSlot<T> {
+    pub fn new() -> OnceSlot<T> {
+        OnceSlot(std::sync::OnceLock::new())
+    }
+
+    /// The value, if some caller already initialized the slot.
+    pub fn try_get(&self) -> Option<T> {
+        self.0.get().cloned()
+    }
+
+    /// The value, initializing the slot with `f` if empty.  At most one
+    /// caller ever runs `f`; racing callers block on that computation.
+    pub fn get_or_init(&self, f: impl FnOnce() -> T) -> T {
+        self.0.get_or_init(f).clone()
+    }
+}
+
+pub mod thread {
+    //! Thread spawning for pool workers.  The loom twin maps
+    //! `spawn_named` onto `loom::thread::spawn` (names are a
+    //! diagnostics nicety the model checker doesn't have).
+
+    pub use std::thread::JoinHandle;
+
+    /// Spawn an OS thread with a descriptive name (visible in
+    /// debuggers, panics, and `/proc`).
+    pub fn spawn_named(name: &str, f: impl FnOnce() + Send + 'static) -> JoinHandle<()> {
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("the OS refused to spawn a thread")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_and_condvar_roundtrip() {
+        let m = Arc::new(Mutex::new(0u32));
+        let cv = Arc::new(Condvar::new());
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            *g = 7;
+            cv2.notify_one();
+        });
+        let mut g = m.lock();
+        while *g == 0 {
+            g = cv.wait(g);
+        }
+        assert_eq!(*g, 7);
+        drop(g);
+        t.join().expect("helper thread");
+    }
+
+    #[test]
+    fn wait_timeout_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (_g, timed_out) = cv.wait_timeout(g, std::time::Duration::from_millis(1));
+        assert!(timed_out);
+    }
+
+    #[test]
+    fn once_slot_initializes_exactly_once() {
+        let slot = OnceSlot::new();
+        assert_eq!(slot.try_get(), None);
+        assert_eq!(slot.get_or_init(|| 41), 41);
+        assert_eq!(slot.get_or_init(|| 99), 41, "second init must be ignored");
+        assert_eq!(slot.try_get(), Some(41));
+    }
+
+    #[test]
+    fn rwlock_read_write() {
+        let l = RwLock::new(5u64);
+        assert_eq!(*l.read(), 5);
+        *l.write() = 6;
+        assert_eq!(*l.read(), 6);
+    }
+}

@@ -119,6 +119,61 @@ fn sixteen_tenants_on_four_workers_match_dedicated_threads_bitwise() {
     }
 }
 
+/// Retirement-vs-submit stress: every tenant is removed, one at a time,
+/// while three hammer threads keep firing ingests/flushes/queries at
+/// all of them through cloned handles.  The scheduler's retirement
+/// latch must hold under fire: no deadlock (every hammer joins), no
+/// post-stop execution (a removed tenant answers with a clean `Err`,
+/// and `remove` is immediately sticky), no panic from a raced reply
+/// channel.
+#[test]
+fn removing_tenants_under_fire_stays_clean() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    const TENANTS: u64 = 6;
+    let fleet = Fleet::new(FleetConfig { workers: 2 });
+    let handles: Vec<ServiceHandle> =
+        (0..TENANTS).map(|t| fleet.spawn(TenantId(t), tenant_config(t)).unwrap()).collect();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut hammers = Vec::new();
+    for w in 0..3u64 {
+        let handles = handles.clone();
+        let stop = stop.clone();
+        hammers.push(std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                for (t, h) in handles.iter().enumerate() {
+                    // live tenants answer Ok; removed tenants must
+                    // answer a clean Err — never hang, never panic
+                    let _ = h.ingest(vec![event(t as u64, w * 1000 + i)]);
+                    if i % 7 == w {
+                        let _ = h.flush();
+                    }
+                    let _ = h.snapshot().version;
+                }
+                i += 1;
+            }
+        }));
+    }
+
+    for t in 0..TENANTS {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(fleet.remove(TenantId(t)), "tenant {t} was already gone");
+        // retirement is immediately sticky from every handle's view
+        assert!(handles[t as usize].ingest(vec![event(t, 0)]).is_err());
+        assert!(handles[t as usize].flush().is_err());
+        assert!(fleet.get(TenantId(t)).is_none());
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    for h in hammers {
+        h.join().expect("hammer thread must exit cleanly (no deadlock, no post-stop panic)");
+    }
+    fleet.join();
+}
+
 /// A tracker that rejects every update — the fault injector for the
 /// isolation soak.
 struct FailingTracker {
@@ -144,8 +199,6 @@ impl EigTracker for FailingTracker {
 /// and `update_failures` stays scoped to the faulty tenant.
 #[test]
 fn flaky_tenant_does_not_disturb_healthy_tenants() {
-    use std::sync::atomic::Ordering;
-
     const HEALTHY: u64 = 3;
     const ROUNDS: u64 = 30;
     let fleet = Fleet::new(FleetConfig { workers: 2 });
@@ -183,11 +236,7 @@ fn flaky_tenant_does_not_disturb_healthy_tenants() {
     // healthy tenants: versions advanced, zero failures
     for (t, h) in healthy.iter().enumerate() {
         let m = h.metrics();
-        assert_eq!(
-            m.update_failures.load(Ordering::Relaxed),
-            0,
-            "healthy tenant {t} saw failures"
-        );
+        assert_eq!(m.update_failures.get(), 0, "healthy tenant {t} saw failures");
         assert!(h.snapshot().version >= ROUNDS / 5, "healthy tenant {t} starved");
     }
     // flushes stayed responsive while sharing workers with the faulty
@@ -200,8 +249,8 @@ fn flaky_tenant_does_not_disturb_healthy_tenants() {
     // the faulty tenant: every flush failed, nothing ever published,
     // and the damage is scoped to its own metrics
     let fm = fleet.metrics(flaky_id).unwrap();
-    assert!(fm.update_failures.load(Ordering::Relaxed) >= ROUNDS / 5);
-    assert_eq!(fm.batches_applied.load(Ordering::Relaxed), 0);
+    assert!(fm.update_failures.get() >= ROUNDS / 5);
+    assert_eq!(fm.batches_applied.get(), 0);
     assert_eq!(flaky.snapshot().version, 0);
     // ...and the fleet still removes it cleanly
     assert!(fleet.remove(flaky_id));

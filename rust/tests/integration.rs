@@ -306,10 +306,9 @@ fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
     assert_eq!(v, 2, "no-op batch must not publish a new version");
 
     let m = h.metrics();
-    use std::sync::atomic::Ordering;
-    assert_eq!(m.batches_applied.load(Ordering::Relaxed), 2);
-    assert_eq!(m.update_failures.load(Ordering::Relaxed), 0);
-    assert_eq!(m.nodes_added.load(Ordering::Relaxed), 3);
+    assert_eq!(m.batches_applied.get(), 2);
+    assert_eq!(m.update_failures.get(), 0);
+    assert_eq!(m.nodes_added.get(), 3);
     svc.join();
 }
 
@@ -423,10 +422,10 @@ fn read_storm_soak_queries_never_touch_the_worker() {
 
     let m = h.metrics();
     assert!(
-        m.queries_cached.load(Ordering::Relaxed) > 0,
+        m.queries_cached.get() > 0,
         "read storm must hit the memo cache"
     );
-    assert!(m.queries_computed.load(Ordering::Relaxed) > 0);
+    assert!(m.queries_computed.get() > 0);
     svc.join();
 }
 
