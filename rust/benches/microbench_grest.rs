@@ -137,7 +137,10 @@ fn main() {
     // ---- latency ladder: n × k × batch, padded vs materialized,
     //      expansion-heavy vs edge-only
     let sizes: &[usize] = if quick { &[1500] } else { &[2000, 8000] };
-    let ks: &[usize] = if quick { &[32] } else { &[32, 96] };
+    // k=8 probes the small-k regime where per-step cost is dominated by
+    // kernel dispatch rather than flops — the case the persistent
+    // kernel pool (and the recalibrated `PAR_MIN_FLOPS`) targets.
+    let ks: &[usize] = if quick { &[32] } else { &[8, 32, 96] };
     let budget = if quick { 400 } else { 1200 };
     for &n in sizes {
         for &k in ks {

@@ -1,7 +1,9 @@
 //! Micro-benchmarks of the hot-path kernels (the §Perf instrument):
-//! naive vs blocked vs blocked+threaded GEMM, Gram / project-out /
-//! orthonormalize, small eigh, SpMM, and the per-step G-REST update
-//! (native and, if artifacts exist, XLA-backed).
+//! the four-rung GEMM ladder (naive, blocked, blocked+pool,
+//! packed+pool), the kernel-pool dispatch overhead vs per-call scoped
+//! spawns, Gram / project-out / orthonormalize, small eigh, SpMM, and
+//! the per-step G-REST update (native and, if artifacts exist,
+//! XLA-backed).
 //!
 //! Emits `BENCH_linalg.json` (name → {n, seconds, gflops}) in the
 //! working directory (`rust/` under `cargo bench`, which sets cwd to
@@ -11,7 +13,8 @@
 
 mod common;
 
-use grest::linalg::threads::Threads;
+use grest::linalg::blas::GemmKernel;
+use grest::linalg::threads::{self, Threads};
 use grest::linalg::{blas, eigh::eigh, mat::Mat, qr, rng::Rng};
 use grest::sparse::coo::Coo;
 use grest::sparse::delta::Delta;
@@ -75,9 +78,12 @@ fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
     let mut rng = Rng::new(1);
 
-    // ---- GEMM ladder: naive (seed-style) vs blocked vs blocked+threaded
+    // ---- GEMM ladder: naive (seed-style) vs blocked vs blocked+pool
+    // vs packed+pool.  Rungs above naive are pinned via `GemmKernel` so
+    // each record measures exactly one rung (production `Auto` picks
+    // per chunk; pinning keeps the trajectory comparable across PRs).
     let gemm_sizes: &[usize] = if quick { &[256, 512] } else { &[256, 512, 1024] };
-    println!("# GEMM ladder (square n×n·n×n), naive vs blocked vs threaded");
+    println!("# GEMM ladder (square n×n·n×n): naive / blocked / blocked+pool / packed+pool");
     for &n in gemm_sizes {
         let a = Mat::randn(n, n, &mut rng);
         let b = Mat::randn(n, n, &mut rng);
@@ -87,15 +93,50 @@ fn main() {
             std::hint::black_box(naive_gemm(&a, &b));
         });
         record(&mut records, &format!("gemm_naive_{n}"), n, flops, s);
-        let s = common::micro_secs(&format!("gemm blocked 1t   n={n}"), budget, || {
-            std::hint::black_box(blas::gemm_with(&a, &b, Threads::SINGLE));
-        });
-        record(&mut records, &format!("gemm_blocked_1t_{n}"), n, flops, s);
-        let s = common::micro_secs(&format!("gemm blocked auto n={n}"), budget, || {
-            std::hint::black_box(blas::gemm_with(&a, &b, Threads::AUTO));
-        });
-        record(&mut records, &format!("gemm_blocked_mt_{n}"), n, flops, s);
+        let mut c = Mat::zeros(n, n);
+        let rungs = [
+            ("gemm blocked 1t  ", "gemm_blocked_1t", Threads::SINGLE, GemmKernel::Blocked),
+            ("gemm blocked pool", "gemm_blocked_mt", Threads::AUTO, GemmKernel::Blocked),
+            ("gemm packed  1t  ", "gemm_packed_1t", Threads::SINGLE, GemmKernel::Packed),
+            ("gemm packed  pool", "gemm_packed_mt", Threads::AUTO, GemmKernel::Packed),
+        ];
+        for (label, name, threads, kernel) in rungs {
+            let s = common::micro_secs(&format!("{label} n={n}"), budget, || {
+                c.reset(n, n);
+                blas::gemm_acc_with_kernel(&mut c, &a, &b, 1.0, threads, kernel);
+                std::hint::black_box(c.get(0, 0));
+            });
+            record(&mut records, &format!("{name}_{n}"), n, flops, s);
+        }
     }
+
+    // ---- dispatch overhead: parked-pool handoff vs per-call scoped
+    // spawns, on parts tiny enough that the work itself is noise.  This
+    // pair is the measurement behind the `PAR_MIN_FLOPS` recalibration
+    // in `linalg::threads` (pool handoff is a mutex/condvar wake; the
+    // scoped baseline pays a full spawn+join per part).
+    println!("# dispatch overhead (8 tiny parts): pool handoff vs scoped spawn");
+    let n_parts = 8usize;
+    let mut slabs = vec![vec![0.0f64; 64]; n_parts];
+    let tiny_flops = (n_parts * 64) as f64;
+    let s = common::micro_secs("dispatch pool   (8 tiny parts)", 400, || {
+        let parts: Vec<&mut Vec<f64>> = slabs.iter_mut().collect();
+        threads::kernel_pool().run(parts, |buf: &mut Vec<f64>| {
+            for v in buf.iter_mut() {
+                *v += 1.0;
+            }
+        });
+    });
+    record(&mut records, "dispatch_pool_smallk", n_parts, tiny_flops, s);
+    let s = common::micro_secs("dispatch scoped (8 tiny parts)", 400, || {
+        let parts: Vec<&mut Vec<f64>> = slabs.iter_mut().collect();
+        threads::run_scoped_baseline(parts, |buf: &mut Vec<f64>| {
+            for v in buf.iter_mut() {
+                *v += 1.0;
+            }
+        });
+    });
+    record(&mut records, "dispatch_scoped_smallk", n_parts, tiny_flops, s);
 
     // ---- panel-shaped kernels at tracker scale
     let n: usize = if quick { 2048 } else { 16384 };
@@ -227,17 +268,30 @@ fn main() {
     }
 
     // ---- speedup summary + JSON
+    let get = |records: &[BenchRecord], name: &str| {
+        records
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.seconds)
+            .unwrap_or(f64::NAN)
+    };
     for &n in gemm_sizes {
-        let get = |name: &str| {
-            records
-                .iter()
-                .find(|r| r.name == name)
-                .map(|r| r.seconds)
-                .unwrap_or(f64::NAN)
-        };
-        let naive = get(&format!("gemm_naive_{n}"));
-        let mt = get(&format!("gemm_blocked_mt_{n}"));
-        println!("# speedup blocked+threaded vs naive @ n={n}: {:.2}x", naive / mt);
+        let naive = get(&records, &format!("gemm_naive_{n}"));
+        let blocked_mt = get(&records, &format!("gemm_blocked_mt_{n}"));
+        let packed_mt = get(&records, &format!("gemm_packed_mt_{n}"));
+        println!(
+            "# speedup vs naive @ n={n}: blocked+pool {:.2}x, packed+pool {:.2}x",
+            naive / blocked_mt,
+            naive / packed_mt
+        );
     }
+    let pool = get(&records, "dispatch_pool_smallk");
+    let scoped = get(&records, "dispatch_scoped_smallk");
+    println!(
+        "# dispatch overhead (8 tiny parts): pool {:.1} us vs scoped {:.1} us ({})",
+        pool * 1e6,
+        scoped * 1e6,
+        if pool < scoped { "pool below scoped" } else { "scoped below pool" }
+    );
     write_json(&records);
 }

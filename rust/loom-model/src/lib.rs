@@ -2,8 +2,9 @@
 //! the memo cache.
 //!
 //! The modules under test are **the production sources**, included by
-//! `#[path]` — not copies.  `coordinator/pool_core.rs` and
-//! `coordinator/memo_core.rs` in the main crate import all their
+//! `#[path]` — not copies.  `coordinator/pool_core.rs`,
+//! `coordinator/memo_core.rs`, and `linalg/kernel_core.rs` (the kernel
+//! pool's dispatch protocol) in the main crate import all their
 //! concurrency primitives from `crate::sync`, so compiling them here
 //! against a loom-backed `sync` module puts the exact shipped
 //! lock/CAS/condvar protocol under exhaustive interleaving exploration.
@@ -28,3 +29,6 @@ pub mod pool_core;
 
 #[path = "../../src/coordinator/memo_core.rs"]
 pub mod memo_core;
+
+#[path = "../../src/linalg/kernel_core.rs"]
+pub mod kernel_core;

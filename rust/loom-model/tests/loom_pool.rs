@@ -1,6 +1,8 @@
-//! Exhaustive interleaving checks of the worker-pool scheduler protocol
-//! and the memo cache — the machine proofs behind the invariants stated
-//! in `rust/src/coordinator/pool_core.rs` and `docs/CONCURRENCY.md`.
+//! Exhaustive interleaving checks of the worker-pool scheduler
+//! protocol, the memo cache, and the kernel pool's dispatch protocol —
+//! the machine proofs behind the invariants stated in
+//! `rust/src/coordinator/pool_core.rs`, `rust/src/linalg/kernel_core.rs`,
+//! and `docs/CONCURRENCY.md`.
 //!
 //! Run the real model check with:
 //!
@@ -20,6 +22,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use grest_loom_model::kernel_core::{ChunkRunner, DispatchCore};
 use grest_loom_model::memo_core::{Memo, MemoHow};
 use grest_loom_model::pool_core::{PoolCore, StepOutcome, Stepper, SubmitError};
 use grest_loom_model::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -261,6 +264,108 @@ fn shutdown_flushes_an_armed_deadline_exactly_once() {
         );
     });
 }
+
+// ---------------------------------------------------------------------
+// kernel pool (linalg/kernel_core.rs)
+
+/// Probe job for the kernel dispatch core: counts how many times each
+/// chunk index runs.  SeqCst observer counters, same convention as
+/// [`Obs`].
+#[derive(Clone)]
+struct CountJob {
+    counts: Arc<Vec<AtomicUsize>>,
+}
+
+impl ChunkRunner for CountJob {
+    fn run_chunk(&self, chunk: usize) {
+        self.counts[chunk].fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+fn chunk_counts(n: usize) -> Arc<Vec<AtomicUsize>> {
+    Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect())
+}
+
+fn assert_each_ran_once(counts: &[AtomicUsize]) {
+    for (i, c) in counts.iter().enumerate() {
+        assert_eq!(c.load(Ordering::SeqCst), 1, "chunk {i} did not run exactly once");
+    }
+}
+
+/// Kernel invariant 1 (publish → pickup → check-in, no lost wakeup):
+/// a publisher races one parked worker over a 3-chunk descriptor.  In
+/// every interleaving of the publish-notify vs. the worker's
+/// park/drain cycle, every chunk runs exactly once before
+/// `publish_and_wait` returns — whether the worker claims chunks or
+/// the participating caller drains them all itself.
+#[test]
+fn kernel_publish_runs_every_chunk_exactly_once() {
+    model(|| {
+        let counts = chunk_counts(3);
+        let core = Arc::new(DispatchCore::new());
+        let worker = {
+            let core = core.clone();
+            thread::spawn_named("kernel-worker", move || core.worker_loop())
+        };
+        core.publish_and_wait(CountJob { counts: counts.clone() }, 3);
+        assert_each_ran_once(&counts);
+        core.shutdown();
+        worker.join().expect("kernel worker");
+    });
+}
+
+/// Kernel invariant 2 (no stale-epoch execution): two back-to-back
+/// publishes through one worker.  A worker waking late from the first
+/// notification must never re-run the retired first descriptor —
+/// `CheckIn` asserts the epoch match from the inside, and the counters
+/// assert neither call's chunks run twice or leak into the other.
+#[test]
+fn kernel_second_publish_never_reruns_the_first() {
+    model(|| {
+        let first = chunk_counts(2);
+        let second = chunk_counts(2);
+        let core = Arc::new(DispatchCore::new());
+        let worker = {
+            let core = core.clone();
+            thread::spawn_named("kernel-worker", move || core.worker_loop())
+        };
+        core.publish_and_wait(CountJob { counts: first.clone() }, 2);
+        core.publish_and_wait(CountJob { counts: second.clone() }, 2);
+        assert_each_ran_once(&first);
+        assert_each_ran_once(&second);
+        core.shutdown();
+        worker.join().expect("kernel worker");
+    });
+}
+
+/// Kernel invariant 3 (shutdown-in-flight completes the call): a
+/// shutdown races a publish against one worker.  Whatever the
+/// ordering — worker exits before the publish, claims chunks first,
+/// or wakes into the shutdown flag mid-descriptor — the participating
+/// caller completes every chunk exactly once and both helper threads
+/// join cleanly.
+#[test]
+fn kernel_shutdown_in_flight_completes_the_call() {
+    model(|| {
+        let counts = chunk_counts(2);
+        let core = Arc::new(DispatchCore::new());
+        let worker = {
+            let core = core.clone();
+            thread::spawn_named("kernel-worker", move || core.worker_loop())
+        };
+        let stopper = {
+            let core = core.clone();
+            thread::spawn_named("stopper", move || core.shutdown())
+        };
+        core.publish_and_wait(CountJob { counts: counts.clone() }, 2);
+        assert_each_ran_once(&counts);
+        stopper.join().expect("stopper thread");
+        worker.join().expect("kernel worker");
+    });
+}
+
+// ---------------------------------------------------------------------
+// memo cache (coordinator/memo_core.rs)
 
 /// Memo-cache contract: two racing `get_or_compute` calls for one key
 /// run the compute closure exactly once; the loser observes the

@@ -25,15 +25,18 @@
 //! |                           | justification within the preceding lines                      |
 //! | `coordinator-unwrap`      | no `.unwrap()`/`.expect(` in non-test coordinator code        |
 //! |                           | (poison policy is centralized in `sync.rs`)                   |
+//! | `thread-spawn`            | no `std::thread::scope`/`spawn` outside `linalg/threads.rs`   |
+//! |                           | and `sync.rs` — kernels dispatch on the persistent pool       |
 //!
 //! Audited exceptions live in `rust/detlint.allow`, one per line as
 //! `rule:path-suffix:needle`; a finding is suppressed when all three
 //! match.  Heuristic limits: `hash-iter` tracks `let`-bound hash
 //! collections per file, and the `#[cfg(test)] mod tests` tail (this
-//! repo's convention puts tests last) is skipped for the `hash-iter`
-//! and `coordinator-unwrap` rules — test code may unwrap.  The
-//! `relaxed-outside-metrics` rule is deliberately strict: tests inside
-//! `rust/src` hold to it too.
+//! repo's convention puts tests last) is skipped for the `hash-iter`,
+//! `coordinator-unwrap`, and `thread-spawn` rules — test code may
+//! unwrap and spawn helper threads.  The `relaxed-outside-metrics`
+//! rule is deliberately strict: tests inside `rust/src` hold to it
+//! too.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -46,6 +49,7 @@ enum Rule {
     RelaxedOutsideMetrics,
     OrderingComment,
     CoordinatorUnwrap,
+    ThreadSpawn,
 }
 
 impl Rule {
@@ -57,6 +61,7 @@ impl Rule {
             Rule::RelaxedOutsideMetrics => "relaxed-outside-metrics",
             Rule::OrderingComment => "ordering-comment",
             Rule::CoordinatorUnwrap => "coordinator-unwrap",
+            Rule::ThreadSpawn => "thread-spawn",
         }
     }
 }
@@ -348,6 +353,23 @@ fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
         }
     }
 
+    // thread-spawn: raw thread creation lives in exactly two places —
+    // the kernel pool (linalg/threads.rs, incl. the bench-only scoped
+    // baseline) and the sync facade's spawn_named.  Everything else
+    // dispatches on the persistent pool, so there are no per-call
+    // spawns to measure or model-check around.  Test tails may spawn
+    // helper threads.
+    if rel != "sync.rs" && rel != "linalg/threads.rs" {
+        for (i, c) in code.iter().enumerate() {
+            if i >= tail {
+                break;
+            }
+            if c.contains("std::thread::scope") || c.contains("std::thread::spawn") {
+                push(Rule::ThreadSpawn, i);
+            }
+        }
+    }
+
     out
 }
 
@@ -464,6 +486,11 @@ const FIXTURES: &[(&str, &str, &str)] = &[
         "coordinator/fixture3.rs",
         "fn f(m: &std::collections::HashMap<u32, u32>) {\n    let _ = m.get(&1).unwrap();\n}\n",
         "coordinator-unwrap",
+    ),
+    (
+        "tasks/fixture2.rs",
+        "fn f() {\n    std::thread::spawn(|| {}).join().ok();\n    std::thread::scope(|s| {\n        s.spawn(|| {});\n    });\n}\n",
+        "thread-spawn",
     ),
 ];
 
@@ -626,6 +653,18 @@ mod tests {
         let bad = "fn f() -> usize {\n    let mut seen = std::collections::HashSet::new();\n    seen.insert(1);\n    seen.iter().count()\n}\n";
         let findings = lint_file("linalg/x.rs", bad);
         assert!(findings.iter().any(|f| f.rule.name() == "hash-iter"));
+    }
+
+    #[test]
+    fn thread_spawn_exempts_the_pool_file_and_test_tails() {
+        let bad = "fn f() {\n    std::thread::scope(|s| { s.spawn(|| {}); });\n}\n";
+        let findings = lint_file("tasks/x.rs", bad);
+        assert!(findings.iter().any(|f| f.rule.name() == "thread-spawn"));
+        // the kernel pool's home (and the facade's spawn_named) may spawn
+        assert!(lint_file("linalg/threads.rs", bad).is_empty());
+        // test tails may spawn helper threads
+        let tail_only = "fn f() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        std::thread::spawn(|| {}).join().ok();\n    }\n}\n";
+        assert!(lint_file("tasks/x.rs", tail_only).is_empty());
     }
 
     #[test]

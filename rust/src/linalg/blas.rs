@@ -10,8 +10,19 @@
 //!   outputs.
 //! * **Drivers** (`gemm_with`, `gemm_tn_with`, `syrk_tn_with`,
 //!   `proj_gram_with` and their `_into` variants) partition output
-//!   columns across a `std::thread::scope` worker pool sized by the
-//!   [`Threads`] budget.
+//!   columns into per-chunk work descriptors dispatched on the
+//!   process-wide persistent [`KernelPool`](crate::linalg::threads::KernelPool)
+//!   (workers stay parked between calls — no per-call thread spawns),
+//!   sized by the [`Threads`] budget.
+//!
+//! `gemm_acc` additionally dispatches each chunk down a kernel ladder —
+//! `naive → blocked → blocked+pool → packed+pool` — where the fourth
+//! rung is the BLIS-style packed micro-kernel of
+//! [`gemm_packed`](crate::linalg::gemm_packed), taken when the chunk
+//! shape amortizes panel packing ([`gemm_packed::profitable`]); the
+//! packed rung is bitwise identical to the blocked one, so the choice
+//! is invisible to results.  [`GemmKernel`] pins a rung explicitly
+//! (benches/tests).
 //!
 //! Because the partition is over *output* columns, every output element
 //! is produced by exactly one worker with a fixed sequential reduction
@@ -34,9 +45,10 @@
 //! Panels in this codebase are tall-skinny (N×K, K ≤ a few hundred), so
 //! the kernels are tuned for that regime.
 
+use crate::linalg::gemm_packed;
 use crate::linalg::mat::{Mat, Padded};
 pub use crate::linalg::threads::Threads;
-use crate::linalg::threads::balanced_col_chunks;
+use crate::linalg::threads::{balanced_col_chunks, kernel_pool};
 
 /// Cache block along the shared (k) dimension.
 const BLOCK_K: usize = 64;
@@ -77,15 +89,42 @@ pub fn gemm_acc<'a>(c: &mut Mat, a: impl Into<Padded<'a>>, b: &Mat, alpha: f64) 
     gemm_acc_with(c, a, b, alpha, Threads::AUTO);
 }
 
-/// C += alpha · A · B — blocked, thread-parallel over output columns.
-/// With a [`Padded`] A, rows of C beyond the filled block are untouched
-/// (their materialized-oracle contribution is an exact ±0.0 no-op).
+/// C += alpha · A · B — thread-parallel over output columns, each chunk
+/// dispatched down the kernel ladder (see module docs).  With a
+/// [`Padded`] A, rows of C beyond the filled block are untouched (their
+/// materialized-oracle contribution is an exact ±0.0 no-op).
 pub fn gemm_acc_with<'a>(
     c: &mut Mat,
     a: impl Into<Padded<'a>>,
     b: &Mat,
     alpha: f64,
     threads: Threads,
+) {
+    gemm_acc_with_kernel(c, a, b, alpha, threads, GemmKernel::Auto);
+}
+
+/// Which rung of the `gemm_acc` kernel ladder to run.  All rungs are
+/// bitwise identical; production code uses `Auto` (shape heuristic),
+/// benches and tests pin a rung to measure/compare it.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum GemmKernel {
+    /// Per chunk: packed when [`gemm_packed::profitable`], else blocked.
+    #[default]
+    Auto,
+    /// The cache-blocked 4-column kernel (the bitwise oracle).
+    Blocked,
+    /// The packed 8×4 micro-kernel, regardless of shape.
+    Packed,
+}
+
+/// [`gemm_acc_with`] with an explicitly pinned ladder rung.
+pub fn gemm_acc_with_kernel<'a>(
+    c: &mut Mat,
+    a: impl Into<Padded<'a>>,
+    b: &Mat,
+    alpha: f64,
+    threads: Threads,
+    kernel: GemmKernel,
 ) {
     let a = a.into();
     let (m, kk) = (a.rows(), a.cols());
@@ -94,24 +133,50 @@ pub fn gemm_acc_with<'a>(
     assert_eq!((c.rows(), c.cols()), (m, n));
     let workers = threads.for_flops(2 * a.filled() * kk * n).min(n.max(1));
     if workers <= 1 {
-        gemm_acc_cols(c.as_mut_slice(), m, 0..n, a, b, alpha);
+        run_gemm_chunk(kernel, c.as_mut_slice(), m, 0..n, a, b, alpha);
         return;
     }
     let chunks = balanced_col_chunks(n, workers, |_| 1);
-    std::thread::scope(|s| {
-        let mut buf = c.as_mut_slice();
-        for &(lo, hi) in &chunks {
-            let (head, rest) = buf.split_at_mut((hi - lo) * m);
-            buf = rest;
-            s.spawn(move || gemm_acc_cols(head, m, lo..hi, a, b, alpha));
-        }
-    });
+    let mut parts = Vec::with_capacity(chunks.len());
+    let mut buf = c.as_mut_slice();
+    for &(lo, hi) in &chunks {
+        let (head, rest) = buf.split_at_mut((hi - lo) * m);
+        buf = rest;
+        parts.push((lo, hi, head));
+    }
+    kernel_pool().run(parts, |(lo, hi, head)| run_gemm_chunk(kernel, head, m, lo..hi, a, b, alpha));
+}
+
+/// Route one column chunk to its ladder rung.
+#[inline]
+fn run_gemm_chunk(
+    kernel: GemmKernel,
+    c_cols: &mut [f64],
+    m: usize,
+    jr: std::ops::Range<usize>,
+    a: Padded<'_>,
+    b: &Mat,
+    alpha: f64,
+) {
+    let packed = match kernel {
+        GemmKernel::Auto => gemm_packed::profitable(a.filled(), a.cols(), jr.len()),
+        GemmKernel::Blocked => false,
+        GemmKernel::Packed => true,
+    };
+    if packed {
+        gemm_packed::gemm_acc_cols_packed(c_cols, m, jr, a, b, alpha);
+    } else {
+        gemm_acc_cols_blocked(c_cols, m, jr, a, b, alpha);
+    }
 }
 
 /// Compute columns `jr` of C += alpha·A·B into `c_cols` (the contiguous
 /// column-major storage of exactly those columns, stride `m` = the full
 /// logical height); only the top `a.filled()` rows are written.
-fn gemm_acc_cols(
+///
+/// `pub` so benches can time this rung in isolation; production enters
+/// through the drivers.
+pub fn gemm_acc_cols_blocked(
     c_cols: &mut [f64],
     m: usize,
     jr: std::ops::Range<usize>,
@@ -203,14 +268,14 @@ pub fn gemm_tn_into<'a>(c: &mut Mat, a: impl Into<Padded<'a>>, b: &Mat, threads:
         return;
     }
     let chunks = balanced_col_chunks(n, workers, |_| 1);
-    std::thread::scope(|s| {
-        let mut buf = c.as_mut_slice();
-        for &(lo, hi) in &chunks {
-            let (head, rest) = buf.split_at_mut((hi - lo) * k);
-            buf = rest;
-            s.spawn(move || gemm_tn_cols(head, lo..hi, a, b));
-        }
-    });
+    let mut parts = Vec::with_capacity(chunks.len());
+    let mut buf = c.as_mut_slice();
+    for &(lo, hi) in &chunks {
+        let (head, rest) = buf.split_at_mut((hi - lo) * k);
+        buf = rest;
+        parts.push((lo, hi, head));
+    }
+    kernel_pool().run(parts, |(lo, hi, head)| gemm_tn_cols(head, lo..hi, a, b));
 }
 
 fn gemm_tn_cols(c_cols: &mut [f64], jr: std::ops::Range<usize>, a: Padded<'_>, b: &Mat) {
@@ -278,14 +343,14 @@ pub fn syrk_tn_into<'a>(c: &mut Mat, a: impl Into<Padded<'a>>, b: &Mat, threads:
         syrk_tn_cols(c.as_mut_slice(), 0..p, a, b);
     } else {
         let chunks = balanced_col_chunks(p, workers, |j| j + 1);
-        std::thread::scope(|s| {
-            let mut buf = c.as_mut_slice();
-            for &(lo, hi) in &chunks {
-                let (head, rest) = buf.split_at_mut((hi - lo) * p);
-                buf = rest;
-                s.spawn(move || syrk_tn_cols(head, lo..hi, a, b));
-            }
-        });
+        let mut parts = Vec::with_capacity(chunks.len());
+        let mut buf = c.as_mut_slice();
+        for &(lo, hi) in &chunks {
+            let (head, rest) = buf.split_at_mut((hi - lo) * p);
+            buf = rest;
+            parts.push((lo, hi, head));
+        }
+        kernel_pool().run(parts, |(lo, hi, head)| syrk_tn_cols(head, lo..hi, a, b));
     }
     mirror_upper(c);
 }
@@ -352,17 +417,18 @@ pub fn proj_gram_into<'a>(
         proj_gram_cols(c.as_mut_slice(), g.as_mut_slice(), 0..m, x, p);
     } else {
         let chunks = balanced_col_chunks(m, workers, |j| k + j + 1);
-        std::thread::scope(|s| {
-            let mut cbuf = c.as_mut_slice();
-            let mut gbuf = g.as_mut_slice();
-            for &(lo, hi) in &chunks {
-                let (chead, crest) = cbuf.split_at_mut((hi - lo) * k);
-                let (ghead, grest) = gbuf.split_at_mut((hi - lo) * m);
-                cbuf = crest;
-                gbuf = grest;
-                s.spawn(move || proj_gram_cols(chead, ghead, lo..hi, x, p));
-            }
-        });
+        let mut parts = Vec::with_capacity(chunks.len());
+        let mut cbuf = c.as_mut_slice();
+        let mut gbuf = g.as_mut_slice();
+        for &(lo, hi) in &chunks {
+            let (chead, crest) = cbuf.split_at_mut((hi - lo) * k);
+            let (ghead, grest) = gbuf.split_at_mut((hi - lo) * m);
+            cbuf = crest;
+            gbuf = grest;
+            parts.push((lo, hi, chead, ghead));
+        }
+        kernel_pool()
+            .run(parts, |(lo, hi, chead, ghead)| proj_gram_cols(chead, ghead, lo..hi, x, p));
     }
     mirror_upper(g);
 }
@@ -562,6 +628,33 @@ mod tests {
         let seq_tn = gemm_tn_with(&a, &a, Threads::SINGLE);
         let par_tn = gemm_tn_with(&a, &a, Threads(3));
         assert_eq!(seq_tn.as_slice(), par_tn.as_slice(), "gemm_tn not bitwise stable");
+    }
+
+    #[test]
+    fn every_ladder_rung_is_bitwise_identical() {
+        // the packed rung's contract: pinning any rung, at any thread
+        // count, changes nothing in the output bits
+        let mut rng = Rng::new(21);
+        let a = Mat::randn(200, 48, &mut rng);
+        let b = Mat::randn(48, 60, &mut rng);
+        let mut want = Mat::zeros(200, 60);
+        gemm_acc_with_kernel(&mut want, &a, &b, 1.0, Threads::SINGLE, GemmKernel::Blocked);
+        for &kernel in &[GemmKernel::Auto, GemmKernel::Packed, GemmKernel::Blocked] {
+            for &tc in &[Threads(1), Threads(4)] {
+                let mut c = Mat::zeros(200, 60);
+                gemm_acc_with_kernel(&mut c, &a, &b, 1.0, tc, kernel);
+                assert_eq!(c.as_slice(), want.as_slice(), "{kernel:?} t={}", tc.0);
+            }
+        }
+        // sub-gate shapes fall back to blocked under Auto but must still
+        // agree when the packed rung is forced
+        let a2 = Mat::randn(13, 9, &mut rng);
+        let b2 = Mat::randn(9, 3, &mut rng);
+        let mut w2 = Mat::zeros(13, 3);
+        gemm_acc_with_kernel(&mut w2, &a2, &b2, -2.0, Threads::SINGLE, GemmKernel::Blocked);
+        let mut p2 = Mat::zeros(13, 3);
+        gemm_acc_with_kernel(&mut p2, &a2, &b2, -2.0, Threads::SINGLE, GemmKernel::Packed);
+        assert_eq!(w2.as_slice(), p2.as_slice());
     }
 
     #[test]

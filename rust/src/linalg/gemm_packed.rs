@@ -1,0 +1,376 @@
+//! The packed GEMM micro-kernel — the fourth rung of the dispatch
+//! ladder (`naive → blocked → blocked+pool → packed+pool`).
+//!
+//! BLIS-style structure: per (column-tile, k-block) the alpha-scaled B
+//! weights are packed into k-major quads, per (k-block, row-block) the
+//! A panel is packed into `MR`-row panels, and an `MR`×`NR` (8×4)
+//! register tile accumulates over the whole k-block with C loaded into
+//! registers once per block instead of streamed through memory on
+//! every k — the blocked kernel's 2 C-accesses per multiply drop to
+//! ~2/`BLOCK_K`.
+//!
+//! ## Bitwise contract (the blocked kernel is the oracle)
+//!
+//! For every output element, this kernel performs *exactly* the same
+//! ordered sequence of individually-rounded `c = c + (w · a)` updates
+//! as [`gemm_acc_cols`](crate::linalg::blas): k-blocks ascending, k
+//! ascending within a block, the same quad grouping (`NR` columns from
+//! the tile base), the same all-four-weights-zero skip per (quad, k),
+//! and the same scalar tail for leftover columns.  Packing only copies
+//! values; register accumulation only changes *where* the running sum
+//! lives between updates, not the update sequence — so results are
+//! bitwise identical (property-tested across tile-straddling shapes,
+//! `k ∈ {0, 1}`, and [`Padded`] views).  No FMA: Rust never contracts
+//! separate `*`/`+` float ops.
+//!
+//! Pack buffers live in a grow-only thread-local [`PackScratch`]
+//! (taken/replaced around each call, so an unexpectedly nested kernel
+//! falls back to a fresh scratch instead of aborting on a RefCell
+//! double-borrow).  A per-`&mut StepWorkspace` home was considered and
+//! rejected: chunks of one invocation run concurrently on pool workers
+//! and cannot share the caller's workspace; thread-locals give each
+//! executor its own reusable buffers with zero steady-state
+//! allocations after warm-up (the counting-allocator bench holds).
+
+use crate::linalg::mat::{Mat, Padded};
+use std::cell::RefCell;
+
+/// Micro-kernel register-tile height (rows of A/C per panel).
+pub(crate) const MR: usize = 8;
+/// Micro-kernel register-tile width — must equal the blocked kernel's
+/// quad width, or the skip decisions would diverge.
+pub(crate) const NR: usize = 4;
+/// Row-block height: the packed A block is `MC`×`BLOCK_K` ≈ 64 KiB,
+/// sized to sit in L2 while the register tile sweeps it `nq` times.
+const MC: usize = 128;
+/// Cache block along the shared (k) dimension — must match the blocked
+/// kernel's `BLOCK_K` (the per-element k-grouping is part of the
+/// bitwise contract).
+const BLOCK_K: usize = 64;
+/// Column tile — must match the blocked kernel's `BLOCK_J` (quad
+/// boundaries are `NR`-strides from the tile base).
+const BLOCK_J: usize = 64;
+
+/// Grow-only pack buffers, one set per executor thread.
+#[derive(Default)]
+struct PackScratch {
+    /// A panels: `MR`-row panels, k-major within a panel.
+    apack: Vec<f64>,
+    /// Alpha-scaled B quads: `NR` weights per k, k-major per quad.
+    wpack: Vec<f64>,
+    /// 1 where a (quad, k) has all `NR` weights exactly 0.0 — the
+    /// blocked kernel's skip predicate, precomputed.
+    skip: Vec<u8>,
+}
+
+thread_local! {
+    static PACK: RefCell<PackScratch> = RefCell::new(PackScratch::default());
+}
+
+/// Should `gemm_acc` route a chunk of this shape through the packed
+/// kernel?  Purely a performance heuristic — both kernels produce
+/// bitwise-identical output — requiring enough rows to fill register
+/// panels, enough k for the C-in-registers reuse to amortize packing,
+/// and at least one full quad of columns.
+pub(crate) fn profitable(mt: usize, kk: usize, ncols: usize) -> bool {
+    mt >= 4 * MR && kk >= 16 && ncols >= NR
+}
+
+/// Packed twin of [`gemm_acc_cols`](crate::linalg::blas): compute
+/// columns `jr` of C += alpha·A·B into `c_cols` (contiguous
+/// column-major storage of those columns, stride `m`), touching only
+/// the top `a.filled()` rows.  Bitwise identical to the blocked kernel
+/// (see module docs).
+pub(crate) fn gemm_acc_cols_packed(
+    c_cols: &mut [f64],
+    m: usize,
+    jr: std::ops::Range<usize>,
+    a: Padded<'_>,
+    b: &Mat,
+    alpha: f64,
+) {
+    let kk = a.cols();
+    let mt = a.filled();
+    let j0 = jr.start;
+    let n = jr.end;
+    if j0 >= n || kk == 0 || mt == 0 {
+        return;
+    }
+    // take/replace: a nested call on this thread sees a fresh default
+    // (allocates once, still correct) instead of a RefCell panic
+    let mut s = PACK.with(|p| p.take());
+    let mut jt = j0;
+    while jt < n {
+        let jt_end = (jt + BLOCK_J).min(n);
+        let nq = (jt_end - jt) / NR;
+        for k0 in (0..kk).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(kk);
+            let kb = k1 - k0;
+            pack_weights(&mut s, b, alpha, jt, nq, k0, k1);
+            for i0 in (0..mt).step_by(MC) {
+                let i1 = (i0 + MC).min(mt);
+                let n_panels = (i1 - i0) / MR;
+                pack_a_panels(&mut s, a, i0, n_panels, k0, k1);
+                let rem_lo = i0 + n_panels * MR;
+                for q in 0..nq {
+                    let j = jt + q * NR;
+                    let base = (j - j0) * m;
+                    let (c0, rest) = c_cols[base..].split_at_mut(m);
+                    let (c1, rest) = rest.split_at_mut(m);
+                    let (c2, c3s) = rest.split_at_mut(m);
+                    let c3 = &mut c3s[..m];
+                    let wq = &s.wpack[q * kb * NR..(q + 1) * kb * NR];
+                    let sq = &s.skip[q * kb..(q + 1) * kb];
+                    for p in 0..n_panels {
+                        let ip = i0 + p * MR;
+                        let ap = &s.apack[p * MR * kb..(p + 1) * MR * kb];
+                        microkernel(c0, c1, c2, c3, ip, ap, wq, sq, kb);
+                    }
+                    // row remainder of this i-block: the blocked
+                    // kernel's quad loop verbatim, restricted to the
+                    // leftover rows (same per-element k order)
+                    if rem_lo < i1 {
+                        for kidx in 0..kb {
+                            if sq[kidx] != 0 {
+                                continue;
+                            }
+                            let w = &wq[kidx * NR..kidx * NR + NR];
+                            let ak = a.col_top(k0 + kidx);
+                            for i in rem_lo..i1 {
+                                let av = ak[i];
+                                c0[i] += w[0] * av;
+                                c1[i] += w[1] * av;
+                                c2[i] += w[2] * av;
+                                c3[i] += w[3] * av;
+                            }
+                        }
+                    }
+                }
+                // column tail (tile width % NR): identical to the
+                // blocked kernel's scalar tail, restricted to this
+                // i-block's rows
+                for j in (jt + nq * NR)..jt_end {
+                    let bj = b.col(j);
+                    let cj = &mut c_cols[(j - j0) * m..(j - j0 + 1) * m];
+                    for k in k0..k1 {
+                        let w = alpha * bj[k];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let ak = a.col_top(k);
+                        for i in i0..i1 {
+                            cj[i] += w * ak[i];
+                        }
+                    }
+                }
+            }
+        }
+        jt = jt_end;
+    }
+    PACK.with(|p| p.replace(s));
+}
+
+/// Pack the alpha-scaled weights of the tile's full quads (k-major per
+/// quad) and precompute the blocked kernel's all-zero skip predicate.
+fn pack_weights(
+    s: &mut PackScratch,
+    b: &Mat,
+    alpha: f64,
+    jt: usize,
+    nq: usize,
+    k0: usize,
+    k1: usize,
+) {
+    let kb = k1 - k0;
+    s.wpack.clear();
+    s.wpack.resize(nq * kb * NR, 0.0);
+    s.skip.clear();
+    s.skip.resize(nq * kb, 0);
+    for q in 0..nq {
+        let j = jt + q * NR;
+        let (b0, b1, b2, b3) = (b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3));
+        for (kidx, k) in (k0..k1).enumerate() {
+            // the same four products the blocked kernel forms per k
+            let w0 = alpha * b0[k];
+            let w1 = alpha * b1[k];
+            let w2 = alpha * b2[k];
+            let w3 = alpha * b3[k];
+            let o = (q * kb + kidx) * NR;
+            s.wpack[o] = w0;
+            s.wpack[o + 1] = w1;
+            s.wpack[o + 2] = w2;
+            s.wpack[o + 3] = w3;
+            s.skip[q * kb + kidx] = u8::from(w0 == 0.0 && w1 == 0.0 && w2 == 0.0 && w3 == 0.0);
+        }
+    }
+}
+
+/// Pack the full `MR`-row panels of A rows `i0..i0 + n_panels·MR` for
+/// k-block `k0..k1`: panel-major, k-major within a panel, `MR`
+/// contiguous rows per k.  Pure copies — values are exact.
+fn pack_a_panels(
+    s: &mut PackScratch,
+    a: Padded<'_>,
+    i0: usize,
+    n_panels: usize,
+    k0: usize,
+    k1: usize,
+) {
+    let kb = k1 - k0;
+    s.apack.clear();
+    s.apack.resize(n_panels * MR * kb, 0.0);
+    for (kidx, k) in (k0..k1).enumerate() {
+        let ak = &a.col_top(k)[i0..i0 + n_panels * MR];
+        for p in 0..n_panels {
+            let dst = p * MR * kb + kidx * MR;
+            s.apack[dst..dst + MR].copy_from_slice(&ak[p * MR..(p + 1) * MR]);
+        }
+    }
+}
+
+/// The 8×4 register tile: load C once, accumulate ascending k across
+/// the whole k-block (one rounded multiply + one rounded add per
+/// update, exactly the blocked kernel's per-element op sequence),
+/// store once.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn microkernel(
+    c0: &mut [f64],
+    c1: &mut [f64],
+    c2: &mut [f64],
+    c3: &mut [f64],
+    ip: usize,
+    ap: &[f64],
+    wq: &[f64],
+    skip: &[u8],
+    kb: usize,
+) {
+    let mut r0 = [0.0f64; MR];
+    let mut r1 = [0.0f64; MR];
+    let mut r2 = [0.0f64; MR];
+    let mut r3 = [0.0f64; MR];
+    r0.copy_from_slice(&c0[ip..ip + MR]);
+    r1.copy_from_slice(&c1[ip..ip + MR]);
+    r2.copy_from_slice(&c2[ip..ip + MR]);
+    r3.copy_from_slice(&c3[ip..ip + MR]);
+    for kidx in 0..kb {
+        if skip[kidx] != 0 {
+            continue;
+        }
+        let a8 = &ap[kidx * MR..(kidx + 1) * MR];
+        let w = &wq[kidx * NR..kidx * NR + NR];
+        let (w0, w1, w2, w3) = (w[0], w[1], w[2], w[3]);
+        for t in 0..MR {
+            let av = a8[t];
+            r0[t] += w0 * av;
+            r1[t] += w1 * av;
+            r2[t] += w2 * av;
+            r3[t] += w3 * av;
+        }
+    }
+    c0[ip..ip + MR].copy_from_slice(&r0);
+    c1[ip..ip + MR].copy_from_slice(&r1);
+    c2[ip..ip + MR].copy_from_slice(&r2);
+    c3[ip..ip + MR].copy_from_slice(&r3);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::gemm_acc_cols_blocked;
+    use crate::linalg::rng::Rng;
+
+    /// Random matrix with exact zeros sprinkled in, to exercise the
+    /// skip predicate (including whole all-zero quads).
+    fn randn_sparse(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::randn(rows, cols, rng);
+        for j in 0..cols {
+            for i in 0..rows {
+                if rng.below(10) < 3 {
+                    m.set(i, j, 0.0);
+                }
+            }
+            if cols >= 4 && j % 7 == 3 {
+                // zero a full column: quads with all-zero k rows appear
+                for i in 0..rows {
+                    m.set(i, j, 0.0);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn packed_is_bitwise_identical_to_blocked_across_tile_straddles() {
+        let mut rng = Rng::new(42);
+        // shapes straddling every MR/NR/BLOCK boundary, plus k ∈ {0, 1}
+        // and sub-tile heights/widths
+        let shapes: &[(usize, usize, usize, usize)] = &[
+            // (filled_rows, extra_rows, k, ncols)
+            (1, 0, 1, 1),
+            (7, 0, 1, 3),
+            (8, 0, 16, 4),
+            (9, 5, 17, 5),
+            (16, 0, 64, 8),
+            (23, 9, 65, 13),
+            (31, 1, 63, 64),
+            (128, 0, 64, 65),
+            (129, 7, 129, 67),
+            (200, 48, 32, 32),
+            (5, 0, 0, 6),
+            (64, 0, 1, 130),
+            (257, 3, 100, 20),
+        ];
+        for &(mt, extra, kk, ncols) in shapes {
+            let x = Mat::randn(mt, kk, &mut rng);
+            let bm = randn_sparse(kk, ncols, &mut rng);
+            let a = Padded::new(&x, extra);
+            let m = mt + extra;
+            for &alpha in &[1.0, -1.0, 0.0, 0.37] {
+                let seed = Mat::randn(m, ncols, &mut rng);
+                let mut c_blocked = seed.clone();
+                let mut c_packed = seed.clone();
+                gemm_acc_cols_blocked(c_blocked.as_mut_slice(), m, 0..ncols, a, &bm, alpha);
+                gemm_acc_cols_packed(c_packed.as_mut_slice(), m, 0..ncols, a, &bm, alpha);
+                assert_eq!(
+                    c_blocked.as_slice(),
+                    c_packed.as_slice(),
+                    "packed drifted from blocked oracle at mt={mt} extra={extra} k={kk} n={ncols} alpha={alpha}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matches_blocked_on_nonzero_column_offsets() {
+        // chunked invocation: the pool hands each chunk a j-range with
+        // j0 > 0; tile bases are chunk-relative, exactly as blocked
+        let mut rng = Rng::new(43);
+        let mt = 70;
+        let kk = 40;
+        let ncols = 90;
+        let x = Mat::randn(mt, kk, &mut rng);
+        let bm = randn_sparse(kk, ncols, &mut rng);
+        let a = Padded::new(&x, 2);
+        let m = mt + 2;
+        for &(lo, hi) in &[(0usize, 37usize), (37, 70), (70, 90), (5, 9), (88, 90)] {
+            let seed = Mat::randn(m, hi - lo, &mut rng);
+            let mut cb = seed.clone();
+            let mut cp = seed.clone();
+            gemm_acc_cols_blocked(cb.as_mut_slice(), m, lo..hi, a, &bm, -0.5);
+            gemm_acc_cols_packed(cp.as_mut_slice(), m, lo..hi, a, &bm, -0.5);
+            assert_eq!(cb.as_slice(), cp.as_slice(), "chunk {lo}..{hi} drifted");
+        }
+    }
+
+    #[test]
+    fn profitability_gate_covers_the_paper_regime() {
+        // the small-k G-REST shapes must take the packed rung...
+        assert!(profitable(2000, 32, 32));
+        assert!(profitable(8000, 96, 96));
+        // ...while sub-panel shapes stay on the blocked kernel
+        assert!(!profitable(16, 64, 64));
+        assert!(!profitable(2000, 8, 32));
+        assert!(!profitable(2000, 32, 3));
+    }
+}

@@ -1,0 +1,241 @@
+//! The kernel-pool dispatch protocol, extracted from any thread or
+//! buffer ownership so it can be model-checked.
+//!
+//! This module is deliberately dependency-free: it imports only
+//! [`crate::sync`] (the std/loom facade).  The `rust/loom-model` crate
+//! includes this exact source file via `#[path]` and compiles it
+//! against a `loom`-backed facade, so every lock/condvar line below is
+//! explored under exhaustive interleaving by `cargo test` in that
+//! crate (`--cfg loom`).  Keep it that way: no `anyhow`, no `Mat`, no
+//! other crate modules.
+//!
+//! ## Protocol
+//!
+//! One caller at a time (callers are serialized by the owning
+//! [`KernelPool`](crate::linalg::threads::KernelPool)) publishes a
+//! descriptor: a cloneable job plus a chunk count.  Publication bumps
+//! the **epoch** and wakes the parked workers; the caller then
+//! *participates* — it claims and runs chunks exactly like a worker —
+//! and finally blocks until every chunk has checked in, at which point
+//! it retires the descriptor and returns.  All dispatch state (epoch,
+//! descriptor, claim cursor, completion count, shutdown flag) lives
+//! under a single mutex: chunk counts are tiny (≤ the thread budget,
+//! ≤ 16), so one lock round-trip per claim is noise next to a chunk's
+//! flop count, and the protocol needs no bare atomics — the mutex
+//! orders everything, which is why this file has no `// ordering:`
+//! sites for detlint to demand.
+//!
+//! ## Invariants (machine-checked in `rust/loom-model/tests/loom_pool.rs`)
+//!
+//! 1. **Every chunk runs exactly once before `publish_and_wait`
+//!    returns.**  The claim cursor hands each index to exactly one
+//!    claimant, and the caller waits for `completed == n_chunks`.  No
+//!    lost wakeup: workers re-check the descriptor under the mutex
+//!    before parking, and publication notifies while holding it.
+//! 2. **No worker runs or completes a stale epoch's descriptor.**  A
+//!    claim carries the epoch it was made under, and check-in asserts
+//!    the descriptor it completes against is that same epoch.  (The
+//!    descriptor is retired by the caller only after all check-ins, so
+//!    a claimed chunk's descriptor cannot be replaced underneath it.)
+//! 3. **Shutdown while a descriptor is in flight completes the call
+//!    before workers exit**: a woken worker drains claimable work
+//!    *before* honoring the shutdown flag, and because the caller
+//!    participates, a publish that races shutdown (or finds every
+//!    worker already gone) still completes — the caller drains the
+//!    remaining chunks itself.
+//!
+//! A panicking chunk behaves like it did under `std::thread::scope`:
+//! the check-in guard still checks in (marking the descriptor
+//! poisoned), the caller's retire guard waits out the surviving chunks
+//! and retires the descriptor even while unwinding, and the panic
+//! surfaces on the calling thread — the pool itself stays usable.
+
+use crate::sync::{Condvar, Mutex, MutexGuard};
+
+/// A cloneable handle to one published kernel invocation: whoever
+/// claims chunk `i` calls `run_chunk(i)` exactly once.  Production
+/// erases a borrowed closure into a raw-pointer job (safe because the
+/// publisher outlives every chunk — it blocks until all check-ins);
+/// the loom models instantiate an `Arc`-counting probe job.
+pub trait ChunkRunner: Clone {
+    fn run_chunk(&self, chunk: usize);
+}
+
+/// One published kernel invocation.
+struct Descriptor<J> {
+    job: J,
+    /// Epoch this descriptor was published under (invariant 2).
+    epoch: u64,
+    n_chunks: usize,
+    /// Claim cursor: next unclaimed chunk index.
+    next: usize,
+    /// Chunks that have finished running and checked back in.
+    completed: usize,
+    /// Set when a chunk checked in by unwinding; the publisher
+    /// re-raises after the call completes.
+    poisoned: bool,
+}
+
+struct State<J> {
+    /// Bumped once per publication; `u64` cannot wrap in practice.
+    epoch: u64,
+    /// The in-flight descriptor, if any.  At most one exists at a time
+    /// (callers are serialized above this core).
+    desc: Option<Descriptor<J>>,
+    shutdown: bool,
+}
+
+/// The dispatch core: all protocol state under one mutex, a condvar
+/// for parked workers, and a condvar for the waiting publisher.
+pub struct DispatchCore<J: ChunkRunner> {
+    state: Mutex<State<J>>,
+    /// Workers park here; notified on publish and on shutdown.
+    work_cv: Condvar,
+    /// The publisher waits here for the last check-in.
+    done_cv: Condvar,
+}
+
+/// Checks a claimed chunk back in on drop — on the normal path *and*
+/// when the chunk body unwinds, so a panicking kernel can never strand
+/// its publisher in the `done_cv` wait.
+struct CheckIn<'a, J: ChunkRunner> {
+    core: &'a DispatchCore<J>,
+    epoch: u64,
+}
+
+impl<J: ChunkRunner> Drop for CheckIn<'_, J> {
+    fn drop(&mut self) {
+        let mut st = self.core.state.lock();
+        let d = st.desc.as_mut().expect("descriptor retired before all of its chunks checked in");
+        // Invariant 2: the descriptor we complete against is the one we
+        // claimed from — a stale claim never completes a newer call.
+        assert_eq!(d.epoch, self.epoch, "check-in against a stale epoch's descriptor");
+        if std::thread::panicking() {
+            d.poisoned = true;
+        }
+        d.completed += 1;
+        if d.completed == d.n_chunks {
+            self.core.done_cv.notify_all();
+        }
+    }
+}
+
+/// The publisher's completion barrier, run on drop so it also fires
+/// while the caller unwinds from a panicking chunk of its own: wait for
+/// every check-in, retire the descriptor, and surface poison.
+struct WaitRetire<'a, J: ChunkRunner> {
+    core: &'a DispatchCore<J>,
+}
+
+impl<J: ChunkRunner> Drop for WaitRetire<'_, J> {
+    fn drop(&mut self) {
+        let mut st = self.core.state.lock();
+        let poisoned = loop {
+            let d = st.desc.as_ref().expect("descriptor retired while its publisher waits");
+            if d.completed == d.n_chunks {
+                break d.poisoned;
+            }
+            st = self.core.done_cv.wait(st);
+        };
+        // Retire: late-waking workers see `desc == None` and park — this
+        // call's job can never run again (invariant 2).
+        st.desc = None;
+        drop(st);
+        if poisoned && !std::thread::panicking() {
+            panic!("a kernel chunk panicked on a pool worker");
+        }
+    }
+}
+
+impl<J: ChunkRunner> Default for DispatchCore<J> {
+    fn default() -> Self {
+        DispatchCore::new()
+    }
+}
+
+impl<J: ChunkRunner> DispatchCore<J> {
+    pub fn new() -> DispatchCore<J> {
+        DispatchCore {
+            state: Mutex::new(State { epoch: 0, desc: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Publish `job` as `n_chunks` chunks, participate in running them,
+    /// and return once every chunk has checked in.  Callers must be
+    /// serialized externally (the pool holds a caller gate).
+    pub fn publish_and_wait(&self, job: J, n_chunks: usize) {
+        if n_chunks == 0 {
+            return;
+        }
+        let mut st = self.state.lock();
+        debug_assert!(st.desc.is_none(), "publish with a descriptor still in flight");
+        st.epoch += 1;
+        st.desc = Some(Descriptor {
+            job,
+            epoch: st.epoch,
+            n_chunks,
+            next: 0,
+            completed: 0,
+            poisoned: false,
+        });
+        // Wake every parked worker while holding the lock: a worker is
+        // either mid-wait (receives the notification) or has not yet
+        // re-checked `desc` (sees it before parking) — no lost wakeup.
+        self.work_cv.notify_all();
+        drop(st);
+        let barrier = WaitRetire { core: self };
+        let st = self.state.lock();
+        drop(self.drain_claimable(st));
+        // The barrier waits for straggler chunks claimed by workers,
+        // retires the descriptor, and re-raises a chunk panic.
+        drop(barrier);
+    }
+
+    /// Claim and run chunks until the current descriptor (if any) has
+    /// none left to hand out.  Returns with the lock re-held.
+    fn drain_claimable<'a>(&'a self, mut st: MutexGuard<'a, State<J>>) -> MutexGuard<'a, State<J>> {
+        loop {
+            let Some(d) = st.desc.as_mut() else { return st };
+            if d.next >= d.n_chunks {
+                return st;
+            }
+            let chunk = d.next;
+            d.next += 1;
+            let epoch = d.epoch;
+            let job = d.job.clone();
+            drop(st);
+            {
+                let _check_in = CheckIn { core: self, epoch };
+                job.run_chunk(chunk);
+            }
+            st = self.state.lock();
+        }
+    }
+
+    /// Body of one pool worker: park until work is published (or
+    /// shutdown), drain claimable chunks, repeat.  Shutdown is honored
+    /// only *after* the drain, so an in-flight descriptor is never
+    /// abandoned (invariant 3).
+    pub fn worker_loop(&self) {
+        let mut st = self.state.lock();
+        loop {
+            st = self.drain_claimable(st);
+            if st.shutdown {
+                return;
+            }
+            st = self.work_cv.wait(st);
+        }
+    }
+
+    /// Ask every worker to exit once currently-claimable work is
+    /// drained.  Publishing after shutdown still completes (the caller
+    /// drains its own chunks); it just runs without helpers.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock();
+        st.shutdown = true;
+        self.work_cv.notify_all();
+        drop(st);
+    }
+}

@@ -345,7 +345,7 @@ impl Mat {
         }
     }
 
-    /// Matrix product via the blocked gemm kernel.
+    /// Matrix product via the gemm kernel ladder (see `blas` docs).
     pub fn matmul(&self, other: &Mat) -> Mat {
         crate::linalg::blas::gemm(self, other)
     }

@@ -10,6 +10,8 @@
 pub mod blas;
 pub mod chol;
 pub mod eigh;
+pub mod gemm_packed;
+pub mod kernel_core;
 pub mod lanczos;
 pub mod lu;
 pub mod mat;

@@ -1,11 +1,28 @@
-//! The `Threads` knob: one explicit worker-thread budget threaded through
-//! the dense kernel layer, `DensePhases`, the experiment harness, and the
-//! CLI (`--threads`).
+//! The `Threads` knob and the persistent [`KernelPool`] behind it: one
+//! explicit worker-thread budget threaded through the dense kernel
+//! layer, `DensePhases`, the experiment harness, and the CLI
+//! (`--threads`) — executed by a process-wide pool of parked workers
+//! instead of per-call `std::thread::scope` spawning.
 //!
-//! Every parallel kernel partitions *output columns* across workers, so
-//! each output element is produced by exactly one thread with the same
-//! sequential reduction order regardless of the worker count — results
-//! are bitwise identical for `Threads(1)` and `Threads(n)`.
+//! Every parallel kernel partitions *output columns* (or rows, for the
+//! sparse panel products) across chunks, so each output element is
+//! produced by exactly one executor with the same sequential reduction
+//! order regardless of the worker count — results are bitwise identical
+//! for `Threads(1)` and `Threads(n)`, and identical no matter which
+//! pool worker (or the caller itself) happens to claim a chunk.
+//!
+//! This file is the only place in `rust/src` allowed to spawn raw
+//! threads (`detlint` rule `thread-spawn`): the pool workers are
+//! created here once, and [`run_scoped_baseline`] keeps the old
+//! spawn-per-call path alive *for benchmarks only* so the dispatch
+//! overhead claim stays measurable.  It is also the crate's only home
+//! of `unsafe`: the lifetime erasure that lets a persistent pool run
+//! borrowed-closure jobs, sound because [`KernelPool::run`] blocks
+//! until every chunk has checked in (see the SAFETY comments).
+
+use crate::linalg::kernel_core::{ChunkRunner, DispatchCore};
+use crate::sync::{Arc, Mutex, OnceLock, OnceSlot};
+use std::cell::Cell;
 
 /// Worker-thread budget for the dense kernels.
 ///
@@ -21,8 +38,29 @@ pub struct Threads(pub usize);
 pub const MAX_AUTO_THREADS: usize = 16;
 
 /// Minimum flop count of a kernel invocation before it fans out across
-/// threads; below this the spawn overhead dominates.
-pub const PAR_MIN_FLOPS: usize = 1 << 22;
+/// the kernel pool; below this the per-call dispatch cost dominates.
+///
+/// Recalibrated for the pool era.  The spawn-per-call path this
+/// replaced cost tens of µs per invocation (thread creation + join —
+/// see `dispatch_scoped_smallk` in `BENCH_linalg.json`, measured via
+/// [`run_scoped_baseline`]), which justified the old `1 << 22` gate:
+/// a kernel needed milliseconds of work before fan-out paid.  Waking
+/// parked workers is a mutex/condvar handoff (`dispatch_pool_smallk`,
+/// single-digit µs), so the break-even shrinks by roughly the same
+/// factor: `1 << 19` flops is ~100 µs of sequential kernel work at the
+/// few-Gflop/s these scalar kernels sustain, comfortably above the
+/// handoff cost while letting the paper's small-k regime (k ≤ 96)
+/// fan out where the old gate kept it sequential.
+pub const PAR_MIN_FLOPS: usize = 1 << 19;
+
+/// Machine parallelism, detected once per process ([`OnceSlot`]-cached
+/// so the kernel hot path never re-queries the OS).
+fn detected_parallelism() -> usize {
+    static DETECTED: OnceSlot<usize> = OnceSlot::new();
+    DETECTED.get_or_init(|| {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    })
+}
 
 impl Threads {
     /// Resolve the worker count from the machine.
@@ -35,10 +73,7 @@ impl Threads {
         if self.0 != 0 {
             return self.0;
         }
-        std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-            .min(MAX_AUTO_THREADS)
+        detected_parallelism().min(MAX_AUTO_THREADS)
     }
 
     /// Worker count for a kernel performing `flops` floating-point ops:
@@ -91,6 +126,204 @@ pub fn balanced_col_chunks(
     chunks
 }
 
+// ---------------------------------------------------------------------
+// the persistent kernel pool
+
+thread_local! {
+    /// True while this thread is executing a pool chunk.  A kernel
+    /// invoked from inside one (nested parallelism) must not publish to
+    /// the pool — the outer call holds the caller gate, so re-entering
+    /// would deadlock.  [`KernelPool::run`] checks this flag and runs
+    /// nested work inline instead (bitwise-identical, see module docs).
+    static IN_POOL_CHUNK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Restores the [`IN_POOL_CHUNK`] flag on drop, so a panicking chunk
+/// unwinding through a worker leaves the flag consistent.
+struct ChunkFlagGuard {
+    prev: bool,
+}
+
+impl ChunkFlagGuard {
+    fn enter() -> ChunkFlagGuard {
+        ChunkFlagGuard { prev: IN_POOL_CHUNK.with(|f| f.replace(true)) }
+    }
+}
+
+impl Drop for ChunkFlagGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL_CHUNK.with(|f| f.set(prev));
+    }
+}
+
+/// The borrowed per-call context a published job points at.  Lives on
+/// the publisher's stack for the duration of `publish_and_wait`.
+struct RunCtx<'a, T, F> {
+    /// One slot per chunk; the claimant of chunk `i` takes part `i` by
+    /// value.  Exactly-once claiming is the dispatch core's contract;
+    /// the mutex makes slot handoff race-free without `unsafe`.
+    parts: &'a [Mutex<Option<T>>],
+    f: &'a F,
+}
+
+/// Type-erased trampoline: recovers the concrete `RunCtx<T, F>` and
+/// runs part `chunk` under the re-entrancy flag.
+///
+/// # Safety
+///
+/// `ctx` must point to a live `RunCtx<T, F>` whose `parts` bank has at
+/// least `chunk + 1` slots.  [`KernelPool::run`] guarantees this: the
+/// context outlives every invocation because `publish_and_wait` blocks
+/// until all chunks check in, and chunk indices come from the dispatch
+/// cursor bounded by the bank length.
+unsafe fn run_part<T: Send, F: Fn(T) + Sync>(ctx: *const (), chunk: usize) {
+    // SAFETY: per this function's contract, `ctx` points to a live
+    // `RunCtx<T, F>` for the duration of the call (the publisher is
+    // blocked inside `publish_and_wait` until we check in).
+    let ctx = unsafe { &*ctx.cast::<RunCtx<'_, T, F>>() };
+    let part = ctx.parts[chunk].lock().take().expect("kernel chunk dispatched twice");
+    let _flag = ChunkFlagGuard::enter();
+    (ctx.f)(part);
+}
+
+/// The lifetime-erased job the pool dispatches: a trampoline fn pointer
+/// plus the publisher-stack context it reconstitutes.
+#[derive(Clone, Copy)]
+struct ErasedJob {
+    run: unsafe fn(*const (), usize),
+    ctx: *const (),
+}
+
+// SAFETY: `ctx` is only dereferenced by `run` (inside `run_chunk`)
+// while the publishing thread is blocked in `publish_and_wait`, so the
+// pointee — a `RunCtx` of `Sync` shared references (`&[Mutex<Option<T>>]`
+// with `T: Send`, `&F` with `F: Sync`) — is live and safe to share with
+// the worker threads the job crosses to.
+unsafe impl Send for ErasedJob {}
+
+impl ChunkRunner for ErasedJob {
+    fn run_chunk(&self, chunk: usize) {
+        // SAFETY: `self.ctx`/`self.run` were built as a matching pair by
+        // `KernelPool::run` from a context that outlives this call (the
+        // publisher blocks until every chunk checks in), satisfying
+        // `run_part`'s contract.
+        unsafe { (self.run)(self.ctx, chunk) }
+    }
+}
+
+/// A persistent pool of parked kernel workers.
+///
+/// One process-wide instance ([`kernel_pool`]) executes every parallel
+/// kernel invocation: the caller publishes a chunked work descriptor,
+/// participates in running chunks, and returns when all have checked in
+/// — a drop-in replacement for the old per-call `std::thread::scope`
+/// blocks, minus the ~tens-of-µs spawn/join cost per invocation.
+/// Callers are serialized by a gate (one descriptor in flight at a
+/// time), which is also what keeps the coordinator's `WorkerPool` and
+/// this pool composable: however many tenants step concurrently, at
+/// most `workers + 1` kernel threads are ever running.
+pub struct KernelPool {
+    core: Arc<DispatchCore<ErasedJob>>,
+    /// Parked helper threads (the caller is the `+1`th executor).
+    workers: usize,
+    handles: Mutex<Vec<crate::sync::thread::JoinHandle<()>>>,
+    /// Serializes publishers: the dispatch core holds at most one
+    /// descriptor, and a second publisher must not overwrite it.
+    gate: Mutex<()>,
+}
+
+impl KernelPool {
+    /// Pool with `workers` parked helper threads (tests; the global
+    /// pool sizes itself from the machine).
+    pub fn with_workers(workers: usize) -> KernelPool {
+        let core = Arc::new(DispatchCore::new());
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let core: Arc<DispatchCore<ErasedJob>> = Arc::clone(&core);
+            handles.push(crate::sync::thread::spawn_named(
+                &format!("grest-kernel-{i}"),
+                move || core.worker_loop(),
+            ));
+        }
+        KernelPool { core, workers, handles: Mutex::new(handles), gate: Mutex::new(()) }
+    }
+
+    /// Run `f` once per part, distributing parts across the pool's
+    /// workers and the calling thread.  Blocks until every part has
+    /// been processed — the closure may therefore borrow freely from
+    /// the caller's stack, exactly like `std::thread::scope`.
+    ///
+    /// Each part is processed by exactly one executor; with parts that
+    /// partition the output (the kernel convention), results are
+    /// bitwise identical to running `f` over `parts` sequentially.
+    /// Nested calls from inside a chunk run inline (no deadlock, same
+    /// results); so do single-part and zero-worker calls.
+    pub fn run<T: Send, F: Fn(T) + Sync>(&self, parts: Vec<T>, f: F) {
+        if parts.len() <= 1 || self.workers == 0 || IN_POOL_CHUNK.with(|c| c.get()) {
+            for p in parts {
+                f(p);
+            }
+            return;
+        }
+        let n = parts.len();
+        let bank: Vec<Mutex<Option<T>>> = parts.into_iter().map(|p| Mutex::new(Some(p))).collect();
+        let ctx = RunCtx { parts: &bank[..], f: &f };
+        let job = ErasedJob {
+            run: run_part::<T, F>,
+            ctx: (&ctx as *const RunCtx<'_, T, F>).cast(),
+        };
+        let _gate = self.gate.lock();
+        // `publish_and_wait` returns only after all `n` chunks checked
+        // in, so `ctx` (and everything it borrows) outlives every
+        // dereference of the erased pointer — the SAFETY obligations of
+        // `run_part` and `ErasedJob` bottom out here.
+        self.core.publish_and_wait(job, n);
+    }
+
+    /// Ask the workers to exit and join them (used by tests and `Drop`;
+    /// the process-wide pool lives for the program's lifetime).
+    fn shutdown(&self) {
+        self.core.shutdown();
+        for h in self.handles.lock().drain(..) {
+            // a worker that panicked mid-chunk already surfaced the
+            // panic at its publisher; ignore the secondary join error
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The process-wide kernel pool, started on first parallel kernel call
+/// with one parked worker per detected core (capped at
+/// [`MAX_AUTO_THREADS`]) *minus one* — the publishing caller is itself
+/// an executor, so total kernel concurrency equals the cap.
+pub fn kernel_pool() -> &'static KernelPool {
+    static POOL: OnceLock<KernelPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        KernelPool::with_workers(detected_parallelism().min(MAX_AUTO_THREADS).saturating_sub(1))
+    })
+}
+
+/// The pre-pool dispatch path: spawn one scoped thread per part, join
+/// them all.  **Benchmark baseline only** — no kernel calls this; it
+/// exists so `microbench_linalg` can measure pool dispatch against the
+/// spawn-per-call cost it replaced (`dispatch_scoped_smallk` vs
+/// `dispatch_pool_smallk` in `BENCH_linalg.json`).
+pub fn run_scoped_baseline<T: Send, F: Fn(T) + Sync>(parts: Vec<T>, f: F) {
+    std::thread::scope(|s| {
+        for p in parts {
+            let f = &f;
+            s.spawn(move || f(p));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +334,8 @@ mod tests {
         assert!(Threads::AUTO.resolve() >= 1);
         assert!(Threads::AUTO.resolve() <= MAX_AUTO_THREADS);
         assert_eq!(Threads::SINGLE.resolve(), 1);
+        // the OnceSlot cache answers consistently across calls
+        assert_eq!(Threads::AUTO.resolve(), Threads::AUTO.resolve());
     }
 
     #[test]
@@ -131,5 +366,90 @@ mod tests {
         assert!(chunks.len() >= 2);
         let (lo, hi) = chunks[chunks.len() - 1];
         assert!(hi - lo < 40, "last chunk too wide: {lo}..{hi}");
+    }
+
+    #[test]
+    fn pool_runs_every_part_exactly_once() {
+        let pool = KernelPool::with_workers(3);
+        let n = 23;
+        let mut out = vec![0u64; n];
+        let parts: Vec<(usize, &mut u64)> = out.iter_mut().enumerate().collect();
+        pool.run(parts, |(i, slot)| *slot = (i as u64 + 1) * 7);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64 + 1) * 7, "part {i} ran wrong or not at all");
+        }
+        // repeated dispatch through the same (persistent) pool
+        for round in 0..5u64 {
+            let parts: Vec<&mut u64> = out.iter_mut().collect();
+            pool.run(parts, |slot| *slot += round);
+        }
+        assert_eq!(out[0], 7 + 10); // rounds added 0+1+2+3+4
+    }
+
+    #[test]
+    fn global_pool_matches_sequential() {
+        let n = 101;
+        let mut a = vec![0.0f64; n];
+        let parts: Vec<(usize, &mut f64)> = a.iter_mut().enumerate().collect();
+        kernel_pool().run(parts, |(i, slot)| *slot = (i as f64).sqrt());
+        for (i, &v) in a.iter().enumerate() {
+            assert_eq!(v.to_bits(), (i as f64).sqrt().to_bits());
+        }
+    }
+
+    #[test]
+    fn nested_run_from_inside_a_chunk_completes_inline() {
+        // the re-entrancy guard: a kernel invoked from a pool chunk must
+        // not publish (the gate is held) — it runs inline instead
+        let pool = KernelPool::with_workers(2);
+        let outer = 4;
+        let inner = 8;
+        let mut out = vec![0u32; outer * inner];
+        let parts: Vec<(usize, &mut [u32])> = out.chunks_mut(inner).enumerate().collect();
+        pool.run(parts, |(oi, block)| {
+            let inner_parts: Vec<(usize, &mut u32)> = block.iter_mut().enumerate().collect();
+            // would deadlock without the IN_POOL_CHUNK inline path
+            pool.run(inner_parts, |(ii, slot)| *slot = (oi * inner + ii) as u32 + 1);
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = KernelPool::with_workers(0);
+        let mut out = [0u8; 5];
+        let parts: Vec<&mut u8> = out.iter_mut().collect();
+        pool.run(parts, |slot| *slot = 9);
+        assert_eq!(out, [9; 5]);
+    }
+
+    #[test]
+    fn chunk_panic_surfaces_at_the_publisher_and_pool_survives() {
+        let pool = KernelPool::with_workers(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(vec![0usize, 1, 2, 3], |i| {
+                assert!(i != 2, "seeded chunk failure");
+            });
+        }));
+        assert!(caught.is_err(), "the chunk panic must reach the publisher");
+        // the descriptor was retired; the pool still dispatches
+        let mut out = [0u8; 4];
+        let parts: Vec<&mut u8> = out.iter_mut().collect();
+        pool.run(parts, |slot| *slot = 3);
+        assert_eq!(out, [3; 4]);
+    }
+
+    #[test]
+    fn scoped_baseline_matches_pool() {
+        let n = 17;
+        let mut a = vec![0u64; n];
+        let parts: Vec<(usize, &mut u64)> = a.iter_mut().enumerate().collect();
+        run_scoped_baseline(parts, |(i, slot)| *slot = i as u64 * 3);
+        let mut b = vec![0u64; n];
+        let parts: Vec<(usize, &mut u64)> = b.iter_mut().enumerate().collect();
+        kernel_pool().run(parts, |(i, slot)| *slot = i as u64 * 3);
+        assert_eq!(a, b);
     }
 }

@@ -5,8 +5,9 @@
 //! default build these are thin wrappers over — or straight re-exports
 //! of — the std types.  The payoff is model-checkability: the
 //! `rust/loom-model` crate compiles the scheduler protocol
-//! (`coordinator/pool_core.rs`) and the memo-cache core
-//! (`coordinator/memo_core.rs`) against a `loom`-backed twin of this
+//! (`coordinator/pool_core.rs`), the memo-cache core
+//! (`coordinator/memo_core.rs`), and the kernel-pool dispatch protocol
+//! (`linalg/kernel_core.rs`) against a `loom`-backed twin of this
 //! facade under `--cfg loom`, exploring every interleaving of the
 //! lock/CAS/condvar protocol — without `loom` ever appearing in this
 //! crate's dependency graph (the offline tier-1 build stays
@@ -107,7 +108,11 @@ impl Condvar {
 pub struct OnceSlot<T>(std::sync::OnceLock<T>);
 
 impl<T: Clone> OnceSlot<T> {
-    pub fn new() -> OnceSlot<T> {
+    /// `const` so a slot can live in a `static` (e.g. the cached
+    /// machine-parallelism lookup in `linalg/threads.rs`).  The loom
+    /// twin's `new` is non-`const` (loom mutexes allocate lazily);
+    /// nothing compiled under `--cfg loom` uses a `static` slot.
+    pub const fn new() -> OnceSlot<T> {
         OnceSlot(std::sync::OnceLock::new())
     }
 

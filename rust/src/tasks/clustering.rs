@@ -10,7 +10,7 @@
 use crate::graph::stream::IdMap;
 use crate::linalg::mat::Mat;
 use crate::linalg::rng::Rng;
-use crate::linalg::threads::Threads;
+use crate::linalg::threads::{kernel_pool, Threads};
 use crate::tracking::traits::EigenPairs;
 
 /// Cluster assignment computed from one published embedding, keyed by
@@ -90,9 +90,10 @@ fn row_dist2(x: &Mat, i: usize, center: &[f64]) -> f64 {
 }
 
 /// Map `f` over row indices `0..n`, partitioned into contiguous chunks
-/// across `workers` threads.  Each output element is produced by exactly
-/// one thread and results are concatenated in chunk order, so the output
-/// is identical to the sequential `(0..n).map(f)` for any worker count.
+/// dispatched on the persistent kernel pool.  Each output element is
+/// produced by exactly one executor and results are concatenated in
+/// chunk order, so the output is identical to the sequential
+/// `(0..n).map(f)` for any worker count.
 fn par_map_rows<T: Send>(
     n: usize,
     workers: usize,
@@ -103,20 +104,26 @@ fn par_map_rows<T: Send>(
         return (0..n).map(f).collect();
     }
     let chunk = n.div_ceil(workers);
-    let mut out = Vec::with_capacity(n);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
-                let lo = (w * chunk).min(n);
-                let hi = ((w + 1) * chunk).min(n);
-                let f = &f;
-                s.spawn(move || (lo..hi).map(f).collect::<Vec<T>>())
-            })
-            .collect();
-        for h in handles {
-            out.extend(h.join().unwrap());
+    // one pre-sized slot per chunk; the pool fills them in place
+    let mut slots: Vec<Vec<T>> = Vec::with_capacity(workers);
+    slots.resize_with(workers, Vec::new);
+    {
+        let fr = &f;
+        let mut parts = Vec::with_capacity(workers);
+        for (w, slot) in slots.iter_mut().enumerate() {
+            let lo = (w * chunk).min(n);
+            let hi = ((w + 1) * chunk).min(n);
+            parts.push((lo, hi, slot));
         }
-    });
+        kernel_pool().run(parts, move |(lo, hi, slot): (usize, usize, &mut Vec<T>)| {
+            slot.reserve_exact(hi - lo);
+            slot.extend((lo..hi).map(fr));
+        });
+    }
+    let mut out = Vec::with_capacity(n);
+    for slot in &mut slots {
+        out.append(slot);
+    }
     out
 }
 
