@@ -12,6 +12,7 @@ use grest::graph::generators;
 use grest::graph::stream::GraphEvent;
 use grest::linalg::rng::Rng;
 use grest::linalg::threads::Threads;
+use grest::linalg::ServePrecision;
 use grest::tracking::TrackerSpec;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -32,6 +33,9 @@ fn main() -> anyhow::Result<()> {
         // reader-side query kernels (k-means assignment) fan out over
         // this budget; results are identical for any thread count
         threads: Threads::AUTO,
+        // flip to ServePrecision::F32 to serve cosine/cluster scans
+        // from the f32-storage/f64-accumulate tier
+        serve_precision: ServePrecision::F64,
     })?;
 
     let stop = Arc::new(AtomicBool::new(false));

@@ -18,6 +18,7 @@ use grest::coordinator::{
 use grest::graph::stream::GraphEvent;
 use grest::linalg::rng::Rng;
 use grest::linalg::threads::Threads;
+use grest::linalg::ServePrecision;
 use grest::tracking::TrackerSpec;
 
 const POOL_WORKERS: usize = 4;
@@ -60,6 +61,7 @@ fn tenant_config(n: usize, k: usize, seed: u64) -> ServiceConfig {
         seed,
         tracker: TrackerSpec::parse("grest3").unwrap(),
         threads: Threads::SINGLE,
+        serve_precision: ServePrecision::F64,
     }
 }
 

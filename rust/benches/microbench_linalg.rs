@@ -1,9 +1,12 @@
 //! Micro-benchmarks of the hot-path kernels (the §Perf instrument):
-//! the four-rung GEMM ladder (naive, blocked, blocked+pool,
-//! packed+pool), the kernel-pool dispatch overhead vs per-call scoped
-//! spawns, Gram / project-out / orthonormalize, small eigh, SpMM, and
-//! the per-step G-REST update (native and, if artifacts exist,
-//! XLA-backed).
+//! the six-rung GEMM ladder (naive, blocked, blocked+pool, packed,
+//! packed+simd, packed+fma — the last rung opt-in and non-bitwise),
+//! the f32-storage/f64-accumulate serving tier vs the f64 snapshot
+//! scan, the kernel-pool dispatch overhead vs per-call scoped spawns,
+//! Gram / project-out / orthonormalize, small eigh, SpMM, and the
+//! per-step G-REST update (native and, if artifacts exist,
+//! XLA-backed).  Every exact rung is bitwise-checked against the
+//! blocked oracle before its timing is recorded.
 //!
 //! Emits `BENCH_linalg.json` (name → {n, seconds, gflops}) in the
 //! working directory (`rust/` under `cargo bench`, which sets cwd to
@@ -14,8 +17,8 @@
 mod common;
 
 use grest::linalg::blas::GemmKernel;
-use grest::linalg::threads::{self, Threads};
-use grest::linalg::{blas, eigh::eigh, mat::Mat, qr, rng::Rng};
+use grest::linalg::threads::{self, simd_level, Threads};
+use grest::linalg::{blas, eigh::eigh, f32mat, mat::Mat, qr, rng::Rng, F32Mat};
 use grest::sparse::coo::Coo;
 use grest::sparse::delta::Delta;
 use grest::tracking::{init_eigenpairs, EigTracker, GRest, SubspaceMode};
@@ -79,11 +82,17 @@ fn main() {
     let mut rng = Rng::new(1);
 
     // ---- GEMM ladder: naive (seed-style) vs blocked vs blocked+pool
-    // vs packed+pool.  Rungs above naive are pinned via `GemmKernel` so
-    // each record measures exactly one rung (production `Auto` picks
-    // per chunk; pinning keeps the trajectory comparable across PRs).
+    // vs packed vs packed+simd vs packed+fma.  Rungs above naive are
+    // pinned via `GemmKernel` so each record measures exactly one rung
+    // (production `Auto` picks per chunk; pinning keeps the trajectory
+    // comparable across PRs).  The fma rung is the one approximate rung
+    // (opt-in, excluded from `Auto`); every other rung is
+    // bitwise-checked against the blocked oracle below.
+    println!("# simd level: {:?}", simd_level());
     let gemm_sizes: &[usize] = if quick { &[256, 512] } else { &[256, 512, 1024] };
-    println!("# GEMM ladder (square n×n·n×n): naive / blocked / blocked+pool / packed+pool");
+    println!(
+        "# GEMM ladder (square n×n·n×n): naive / blocked / blocked+pool / packed / packed+simd / packed+fma"
+    );
     for &n in gemm_sizes {
         let a = Mat::randn(n, n, &mut rng);
         let b = Mat::randn(n, n, &mut rng);
@@ -99,6 +108,10 @@ fn main() {
             ("gemm blocked pool", "gemm_blocked_mt", Threads::AUTO, GemmKernel::Blocked),
             ("gemm packed  1t  ", "gemm_packed_1t", Threads::SINGLE, GemmKernel::Packed),
             ("gemm packed  pool", "gemm_packed_mt", Threads::AUTO, GemmKernel::Packed),
+            ("gemm simd    1t  ", "gemm_simd_1t", Threads::SINGLE, GemmKernel::PackedSimd),
+            ("gemm simd    pool", "gemm_simd_mt", Threads::AUTO, GemmKernel::PackedSimd),
+            ("gemm fma     1t  ", "gemm_fma_1t", Threads::SINGLE, GemmKernel::PackedFma),
+            ("gemm fma     pool", "gemm_fma_mt", Threads::AUTO, GemmKernel::PackedFma),
         ];
         for (label, name, threads, kernel) in rungs {
             let s = common::micro_secs(&format!("{label} n={n}"), budget, || {
@@ -108,6 +121,26 @@ fn main() {
             });
             record(&mut records, &format!("{name}_{n}"), n, flops, s);
         }
+        // bitwise gate over every exact rung (fma is exempt: it is the
+        // documented approximate rung)
+        let mut oracle = Mat::zeros(n, n);
+        blas::gemm_acc_with_kernel(&mut oracle, &a, &b, 1.0, Threads::SINGLE, GemmKernel::Blocked);
+        let exact =
+            [GemmKernel::Blocked, GemmKernel::Packed, GemmKernel::PackedSimd, GemmKernel::Auto];
+        for kernel in exact {
+            for threads in [Threads::SINGLE, Threads::AUTO] {
+                c.reset(n, n);
+                blas::gemm_acc_with_kernel(&mut c, &a, &b, 1.0, threads, kernel);
+                assert!(
+                    c.as_slice()
+                        .iter()
+                        .zip(oracle.as_slice())
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "exact rung {kernel:?} ({threads:?}) diverged from the blocked oracle at n={n}"
+                );
+            }
+        }
+        println!("# bitwise: all exact rungs identical at n={n}");
     }
 
     // ---- dispatch overhead: parked-pool handoff vs per-call scoped
@@ -187,6 +220,59 @@ fn main() {
         std::hint::black_box(eigh(&t));
     });
     record(&mut records, "eigh_small", k + m, 9.0 * ((k + m) as f64).powi(3), s);
+
+    // ---- serving tier: f64 snapshot scan vs f32-storage/f64-accumulate
+    // panel.  Cosine sweep = the QueryEngine `similar_to` hot loop
+    // (dot + row norm per row); gemv = one dense panel-vector product.
+    // The f32 tier halves bytes moved and reads rows contiguously.
+    println!("# serving tier (N={n}, K={k}): f64 snapshot scan vs f32 panel");
+    let panel = F32Mat::from_mat(&x);
+    let qrow: Vec<f64> = (0..k).map(|j| x.get(0, j)).collect();
+    let mut q32 = Vec::new();
+    f32mat::demote_into(&qrow, &mut q32);
+    let serve_flops = (4 * n * k) as f64;
+    let s = common::micro_secs("cosine scan f64 (snapshot)", 600, || {
+        let mut best = (0usize, f64::MIN);
+        for i in 1..n {
+            let mut dot = 0.0;
+            let mut nn = 0.0;
+            for (j, &qj) in qrow.iter().enumerate() {
+                let v = x.get(i, j);
+                dot += qj * v;
+                nn += v * v;
+            }
+            let sim = if nn > 0.0 { dot / nn.sqrt() } else { 0.0 };
+            if sim > best.1 {
+                best = (i, sim);
+            }
+        }
+        std::hint::black_box(best);
+    });
+    record(&mut records, "serve_f64_cosine", n, serve_flops, s);
+    let s = common::micro_secs("cosine scan f32 (panel)   ", 600, || {
+        let mut best = (0usize, f64::MIN);
+        for i in 1..n {
+            let (dot, nn) = f32mat::dot_norm2_f32(&q32, panel.row(i));
+            let sim = if nn > 0.0 { dot / nn.sqrt() } else { 0.0 };
+            if sim > best.1 {
+                best = (i, sim);
+            }
+        }
+        std::hint::black_box(best);
+    });
+    record(&mut records, "serve_f32_cosine", n, serve_flops, s);
+    let xv: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+    let mut xv32 = Vec::new();
+    f32mat::demote_into(&xv, &mut xv32);
+    let gemv_flops = (2 * n * k) as f64;
+    let s = common::micro_secs("gemv f64 (column-major)   ", 600, || {
+        std::hint::black_box(blas::gemv(&x, &xv));
+    });
+    record(&mut records, "serve_f64_gemv", n, gemv_flops, s);
+    let s = common::micro_secs("gemv f32 (row-major panel)", 600, || {
+        std::hint::black_box(f32mat::gemv_f32(&panel, &xv32));
+    });
+    record(&mut records, "serve_f32_gemv", n, gemv_flops, s);
 
     // sparse: power-law graph SpMM
     let w = grest::graph::generators::power_law_weights(n, 2.2, 6 * n);
@@ -279,12 +365,30 @@ fn main() {
         let naive = get(&records, &format!("gemm_naive_{n}"));
         let blocked_mt = get(&records, &format!("gemm_blocked_mt_{n}"));
         let packed_mt = get(&records, &format!("gemm_packed_mt_{n}"));
+        let simd_mt = get(&records, &format!("gemm_simd_mt_{n}"));
         println!(
-            "# speedup vs naive @ n={n}: blocked+pool {:.2}x, packed+pool {:.2}x",
+            "# speedup vs naive @ n={n}: blocked+pool {:.2}x, packed+pool {:.2}x, simd+pool {:.2}x",
             naive / blocked_mt,
-            naive / packed_mt
+            naive / packed_mt,
+            naive / simd_mt
+        );
+        let packed_1t = get(&records, &format!("gemm_packed_1t_{n}"));
+        let simd_1t = get(&records, &format!("gemm_simd_1t_{n}"));
+        println!(
+            "# simd vs packed scalar @ n={n}: {:.2}x (1t), {:.2}x (pool)",
+            packed_1t / simd_1t,
+            packed_mt / simd_mt
         );
     }
+    let f64_cos = get(&records, "serve_f64_cosine");
+    let f32_cos = get(&records, "serve_f32_cosine");
+    let f64_gemv = get(&records, "serve_f64_gemv");
+    let f32_gemv = get(&records, "serve_f32_gemv");
+    println!(
+        "# serving tier f32 vs f64: cosine {:.2}x, gemv {:.2}x",
+        f64_cos / f32_cos,
+        f64_gemv / f32_gemv
+    );
     let pool = get(&records, "dispatch_pool_smallk");
     let scoped = get(&records, "dispatch_scoped_smallk");
     println!(

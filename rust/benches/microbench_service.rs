@@ -19,6 +19,7 @@ use grest::coordinator::{BatchPolicy, QueryEngine, ServiceConfig, TrackingServic
 use grest::graph::stream::GraphEvent;
 use grest::linalg::rng::Rng;
 use grest::linalg::threads::Threads;
+use grest::linalg::ServePrecision;
 use grest::tracking::TrackerSpec;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -62,6 +63,7 @@ fn spawn_service(n: usize, k: usize, batch: usize, seed: u64) -> TrackingService
         seed,
         tracker: TrackerSpec::parse("grest3").unwrap(),
         threads: Threads::SINGLE,
+        serve_precision: ServePrecision::F64,
     })
     .unwrap()
 }

@@ -27,6 +27,8 @@
 //! |                           | (poison policy is centralized in `sync.rs`)                   |
 //! | `thread-spawn`            | no `std::thread::scope`/`spawn` outside `linalg/threads.rs`   |
 //! |                           | and `sync.rs` — kernels dispatch on the persistent pool       |
+//! | `raw-intrinsics`          | no `std::arch`/`core::arch` outside `linalg/gemm_simd.rs` —   |
+//! |                           | one audited home for SIMD `unsafe`, scalar code everywhere else |
 //!
 //! Audited exceptions live in `rust/detlint.allow`, one per line as
 //! `rule:path-suffix:needle`; a finding is suppressed when all three
@@ -50,6 +52,7 @@ enum Rule {
     OrderingComment,
     CoordinatorUnwrap,
     ThreadSpawn,
+    RawIntrinsics,
 }
 
 impl Rule {
@@ -62,6 +65,7 @@ impl Rule {
             Rule::OrderingComment => "ordering-comment",
             Rule::CoordinatorUnwrap => "coordinator-unwrap",
             Rule::ThreadSpawn => "thread-spawn",
+            Rule::RawIntrinsics => "raw-intrinsics",
         }
     }
 }
@@ -370,6 +374,20 @@ fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
         }
     }
 
+    // raw-intrinsics: architecture intrinsics (and the `unsafe` they
+    // drag in) live in exactly one audited file — the SIMD micro-kernel
+    // rungs.  Everywhere else stays scalar so the bitwise oracles don't
+    // grow silent platform-specific forks.  Strict: test code holds to
+    // it too (a test that needs a SIMD path goes through the gemm_simd
+    // entry points, never raw intrinsics).
+    if rel != "linalg/gemm_simd.rs" {
+        for (i, c) in code.iter().enumerate() {
+            if c.contains("std::arch") || c.contains("core::arch") {
+                push(Rule::RawIntrinsics, i);
+            }
+        }
+    }
+
     out
 }
 
@@ -491,6 +509,11 @@ const FIXTURES: &[(&str, &str, &str)] = &[
         "tasks/fixture2.rs",
         "fn f() {\n    std::thread::spawn(|| {}).join().ok();\n    std::thread::scope(|s| {\n        s.spawn(|| {});\n    });\n}\n",
         "thread-spawn",
+    ),
+    (
+        "linalg/fixture2.rs",
+        "use core::arch::x86_64::_mm256_add_pd;\n\nfn f() {\n    use std::arch::is_x86_feature_detected;\n}\n",
+        "raw-intrinsics",
     ),
 ];
 
@@ -665,6 +688,19 @@ mod tests {
         // test tails may spawn helper threads
         let tail_only = "fn f() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        std::thread::spawn(|| {}).join().ok();\n    }\n}\n";
         assert!(lint_file("tasks/x.rs", tail_only).is_empty());
+    }
+
+    #[test]
+    fn raw_intrinsics_exempts_only_the_simd_kernel_home() {
+        let bad = "fn f() {\n    let v = unsafe { std::arch::x86_64::_mm256_setzero_pd() };\n    drop(v);\n}\n";
+        let findings = lint_file("linalg/blas.rs", bad);
+        assert!(findings.iter().any(|f| f.rule.name() == "raw-intrinsics"));
+        // the one audited home of architecture intrinsics
+        assert!(lint_file("linalg/gemm_simd.rs", bad).is_empty());
+        // strict: unlike thread-spawn, test tails hold to it too
+        let tail = "fn f() {}\n\n#[cfg(test)]\nmod tests {\n    use core::arch::x86_64::__m256d;\n}\n";
+        let findings = lint_file("tasks/x.rs", tail);
+        assert!(findings.iter().any(|f| f.rule.name() == "raw-intrinsics"));
     }
 
     #[test]

@@ -197,6 +197,7 @@ mod tests {
     use super::*;
     use crate::coordinator::batcher::BatchPolicy;
     use crate::graph::stream::GraphEvent;
+    use crate::linalg::f32mat::ServePrecision;
     use crate::linalg::rng::Rng;
     use crate::linalg::threads::Threads;
     use crate::tracking::spec::TrackerSpec;
@@ -210,6 +211,7 @@ mod tests {
             seed,
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
+            serve_precision: ServePrecision::F64,
         }
     }
 

@@ -19,6 +19,7 @@
 use crate::coordinator::memo_core::{Memo, MemoHow};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::snapshot::EmbeddingSnapshot;
+use crate::linalg::f32mat::{self, F32Mat, ServePrecision};
 use crate::linalg::threads::Threads;
 use crate::sync::Arc;
 use crate::tasks::{centrality, clustering};
@@ -49,17 +50,43 @@ enum QueryValue {
 /// queries per version.
 const DEFAULT_CACHE_CAP: usize = 128;
 
+/// LRU bound on demoted f32 panels (one per snapshot version).  Small:
+/// readers overwhelmingly query the newest couple of versions, and a
+/// panel is cheap to rebuild.
+const PANEL_CACHE_CAP: usize = 4;
+
 /// Snapshot-only query engine owned by the `ServiceHandle`.
 pub struct QueryEngine {
     seed: u64,
     threads: Threads,
     metrics: Arc<Metrics>,
+    /// Serving precision (`ServiceConfig::serve_precision`): `F64`
+    /// answers from the snapshot bit-for-bit; `F32` serves cosine and
+    /// k-means distance scans from a demoted row-major panel.
+    precision: ServePrecision,
     cache: Memo<(u64, QueryKey), QueryValue>,
+    /// Version-keyed f32 panels (`ServePrecision::F32` only).  A
+    /// separate memo so panel builds never show up in the query
+    /// hit/computed metrics or evict query results.
+    panels: Memo<u64, Arc<F32Mat>>,
 }
 
 impl QueryEngine {
     pub fn new(seed: u64, threads: Threads, metrics: Arc<Metrics>) -> QueryEngine {
         QueryEngine::with_capacity(seed, threads, metrics, DEFAULT_CACHE_CAP)
+    }
+
+    /// [`QueryEngine::new`] with an explicit serving precision (the
+    /// plain constructor serves `F64`).
+    pub fn with_precision(
+        seed: u64,
+        threads: Threads,
+        metrics: Arc<Metrics>,
+        precision: ServePrecision,
+    ) -> QueryEngine {
+        let mut eng = QueryEngine::with_capacity(seed, threads, metrics, DEFAULT_CACHE_CAP);
+        eng.precision = precision;
+        eng
     }
 
     pub fn with_capacity(
@@ -68,7 +95,24 @@ impl QueryEngine {
         metrics: Arc<Metrics>,
         cap: usize,
     ) -> QueryEngine {
-        QueryEngine { seed, threads, metrics, cache: Memo::new(cap) }
+        QueryEngine {
+            seed,
+            threads,
+            metrics,
+            precision: ServePrecision::F64,
+            cache: Memo::new(cap),
+            panels: Memo::new(PANEL_CACHE_CAP),
+        }
+    }
+
+    /// The demoted f32 panel of `snap`, built once per version (shared
+    /// across concurrent readers by the same write-once machinery as
+    /// query results).
+    fn f32_panel(&self, snap: &EmbeddingSnapshot) -> Arc<F32Mat> {
+        let (panel, _) = self
+            .panels
+            .get_or_compute(snap.version, || Arc::new(F32Mat::from_mat(&snap.pairs.vectors)));
+        panel
     }
 
     /// Memoize `compute` under `(snap.version, key)`: exactly one caller
@@ -123,13 +167,14 @@ impl QueryEngine {
     /// (deterministic per `(version, k)`), keyed by external ids.
     pub fn clusters(&self, snap: &EmbeddingSnapshot, k: usize) -> Arc<ClusterAssignment> {
         match self.memoize(snap.version, QueryKey::Clusters(k), || {
-            QueryValue::Clusters(Arc::new(clustering::cluster_assignment(
+            QueryValue::Clusters(Arc::new(clustering::cluster_assignment_precision(
                 &snap.pairs,
                 &snap.ids,
                 snap.version,
                 k,
                 self.seed,
                 self.threads,
+                self.precision,
             )))
         }) {
             QueryValue::Clusters(v) => v,
@@ -157,7 +202,11 @@ impl QueryEngine {
             return None;
         }
         match self.memoize(snap.version, QueryKey::Similar(external, top), || {
-            QueryValue::Similar(Arc::new(cosine_similar(snap, q, top)))
+            let scored = match self.precision {
+                ServePrecision::F64 => cosine_similar(snap, q, top),
+                ServePrecision::F32 => cosine_similar_f32(snap, &self.f32_panel(snap), q, top),
+            };
+            QueryValue::Similar(Arc::new(scored))
         }) {
             QueryValue::Similar(v) => Some(v),
             _ => unreachable!("slot keyed Similar holds Similar"),
@@ -197,6 +246,34 @@ fn cosine_similar(snap: &EmbeddingSnapshot, q: usize, top: usize) -> Vec<(u64, f
     // drops nothing in practice; it exists so a (debug-asserted)
     // violation degrades to a shorter answer instead of a panic on the
     // read path
+    scored.into_iter().filter_map(|(i, s)| Some((snap.ids.external(i)?, s))).collect()
+}
+
+/// [`cosine_similar`] against the demoted row-major f32 panel: f32
+/// loads, f64 accumulation, identical sort and tie-break.  Scores drift
+/// from the f64 path by the documented ~2⁻²⁴-relative storage rounding
+/// (see `linalg::f32mat`), so top-k ranks are stable whenever adjacent
+/// similarities are separated by more than that.
+fn cosine_similar_f32(
+    snap: &EmbeddingSnapshot,
+    panel: &F32Mat,
+    q: usize,
+    top: usize,
+) -> Vec<(u64, f64)> {
+    let n = panel.rows();
+    let qrow = panel.row(q);
+    let (qq, _) = f32mat::dot_norm2_f32(qrow, qrow);
+    let qn = qq.sqrt();
+    let mut scored: Vec<(usize, f64)> = (0..n)
+        .filter(|&i| i != q)
+        .map(|i| {
+            let (dot, nn) = f32mat::dot_norm2_f32(qrow, panel.row(i));
+            let denom = qn * nn.sqrt();
+            (i, if denom > 0.0 { dot / denom } else { 0.0 })
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    scored.truncate(top);
     scored.into_iter().filter_map(|(i, s)| Some((snap.ids.external(i)?, s))).collect()
 }
 
@@ -278,6 +355,111 @@ mod tests {
         assert!((sim[2].1 + 1.0).abs() < 1e-12);
         assert!(sim.iter().all(|&(e, _)| e != 100), "query node excluded");
         assert!(eng.similar_to(&s, 9999, 3).is_none(), "unknown id");
+    }
+
+    #[test]
+    fn default_engine_serves_the_f64_oracle_bitwise() {
+        let (eng, _) = engine();
+        let mut rng = crate::linalg::rng::Rng::new(11);
+        let s = snap_with_vectors(1, Mat::randn(50, 4, &mut rng), (0..50).collect());
+        let got = eng.similar_to(&s, 7, 10).unwrap();
+        let want = cosine_similar(&s, 7, 10);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.0, w.0);
+            assert_eq!(g.1.to_bits(), w.1.to_bits(), "F64 tier must be bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn f32_tier_is_rank_stable_on_conditioned_inputs() {
+        // rows at distinct angles: adjacent cosine gaps are O(1e-2),
+        // far above the documented ~2⁻²⁴ f32-storage drift, so the two
+        // tiers must produce identical top-k orderings
+        let n = 40;
+        let mut v = Mat::zeros(n, 2);
+        for i in 0..n {
+            let theta = 0.07 * i as f64;
+            v.set(i, 0, theta.cos());
+            v.set(i, 1, theta.sin());
+        }
+        let ext: Vec<u64> = (0..n as u64).map(|i| 1000 + i).collect();
+        let s = snap_with_vectors(1, v, ext);
+        let m = Metrics::new();
+        let f64eng = QueryEngine::new(7, Threads::SINGLE, m.clone());
+        let f32eng =
+            QueryEngine::with_precision(7, Threads::SINGLE, m.clone(), ServePrecision::F32);
+        let want = f64eng.similar_to(&s, 1000, 10).unwrap();
+        let got = f32eng.similar_to(&s, 1000, 10).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.0, w.0, "rank order must match the f64 oracle");
+            assert!((g.1 - w.1).abs() < 1e-5, "{} vs {}", g.1, w.1);
+        }
+    }
+
+    #[test]
+    fn f32_tier_scores_track_f64_within_documented_tolerance() {
+        let mut rng = crate::linalg::rng::Rng::new(12);
+        let s = snap_with_vectors(1, Mat::randn(120, 6, &mut rng), (0..120).collect());
+        let m = Metrics::new();
+        let f64eng = QueryEngine::new(7, Threads::SINGLE, m.clone());
+        let f32eng =
+            QueryEngine::with_precision(7, Threads::SINGLE, m.clone(), ServePrecision::F32);
+        // full ranking (top = n-1) so every score is comparable by id
+        let want = f64eng.similar_to(&s, 3, 119).unwrap();
+        let got = f32eng.similar_to(&s, 3, 119).unwrap();
+        assert_eq!(got.len(), 119);
+        assert_eq!(want.len(), 119);
+        let oracle: std::collections::HashMap<u64, f64> = want.iter().copied().collect();
+        for &(id, score) in got.iter() {
+            assert_ne!(id, 3, "query node excluded");
+            let w = oracle[&id];
+            assert!((score - w).abs() < 1e-5, "id {id}: {score} vs {w}");
+        }
+    }
+
+    #[test]
+    fn f32_panel_is_cached_per_version_outside_query_metrics() {
+        let m = Metrics::new();
+        let eng = QueryEngine::with_precision(7, Threads::SINGLE, m.clone(), ServePrecision::F32);
+        let mut rng = crate::linalg::rng::Rng::new(13);
+        let s = snap_with_vectors(5, Mat::randn(30, 3, &mut rng), (0..30).collect());
+        let _ = eng.similar_to(&s, 0, 5);
+        let _ = eng.similar_to(&s, 1, 5);
+        // two distinct query keys computed; the shared panel build does
+        // not inflate the query counters and is reused across them
+        assert_eq!(m.queries_computed.get(), 2);
+        assert_eq!(m.queries_cached.get(), 0);
+        assert_eq!(eng.panels.len(), 1);
+        let s2 = snap_with_vectors(6, Mat::randn(30, 3, &mut rng), (0..30).collect());
+        let _ = eng.similar_to(&s2, 0, 5);
+        assert_eq!(eng.panels.len(), 2, "a new version demotes a new panel");
+    }
+
+    #[test]
+    fn f32_engine_routes_clusters_through_the_precision_entry_point() {
+        let mut rng = crate::linalg::rng::Rng::new(14);
+        let mut v = Mat::zeros(40, 2);
+        for i in 0..40 {
+            let c = i / 20;
+            v.set(i, 0, c as f64 * 10.0 + 0.1 * rng.normal());
+            v.set(i, 1, 0.1 * rng.normal());
+        }
+        let s = snap_with_vectors(9, v, (0..40).collect());
+        let m = Metrics::new();
+        let eng = QueryEngine::with_precision(7, Threads::SINGLE, m, ServePrecision::F32);
+        let got = eng.clusters(&s, 2);
+        let want = clustering::cluster_assignment_precision(
+            &s.pairs,
+            &s.ids,
+            s.version,
+            2,
+            7,
+            Threads::SINGLE,
+            ServePrecision::F32,
+        );
+        assert_eq!(*got, want);
     }
 
     #[test]

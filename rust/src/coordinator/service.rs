@@ -30,6 +30,7 @@ use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
 use crate::coordinator::tenant::{Applied, TenantBudget, TenantCmd, TenantState};
 use crate::graph::graph::Graph;
 use crate::graph::stream::{DeltaBuilder, GraphEvent, IdMap};
+use crate::linalg::f32mat::ServePrecision;
 use crate::linalg::threads::Threads;
 use crate::sparse::csr::Csr;
 use crate::tracking::spec::{Backend, TrackerSpec};
@@ -71,6 +72,13 @@ pub struct ServiceConfig {
     /// Worker budget for reader-side query kernels (k-means assignment);
     /// results are bitwise identical for every thread count.
     pub threads: Threads,
+    /// Read-side serving precision.  `ServePrecision::F64` (the
+    /// default everywhere in this crate) answers queries from the f64
+    /// snapshot bit-for-bit; `ServePrecision::F32` opts the cosine and
+    /// k-means distance scans into the f32-storage/f64-accumulate tier
+    /// (see `linalg::f32mat` for the documented tolerance).  The update
+    /// step is unaffected either way.
+    pub serve_precision: ServePrecision,
 }
 
 /// Where the tenant lives: on a shared pool, or on its own pinned
@@ -381,7 +389,12 @@ fn read_side(
         published_at: Instant::now(),
     });
     let metrics = Metrics::new();
-    let query = Arc::new(QueryEngine::new(config.seed, config.threads, metrics.clone()));
+    let query = Arc::new(QueryEngine::with_precision(
+        config.seed,
+        config.threads,
+        metrics.clone(),
+        config.serve_precision,
+    ));
     (store, metrics, query)
 }
 
@@ -471,6 +484,7 @@ mod tests {
             seed: 2,
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
+            serve_precision: ServePrecision::F64,
         })
         .unwrap();
         let h = &svc.handle;
@@ -510,6 +524,7 @@ mod tests {
             seed: 5,
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
+            serve_precision: ServePrecision::F64,
         })
         .unwrap();
         let h = &svc.handle;
@@ -562,6 +577,7 @@ mod tests {
                 seed,
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
+                serve_precision: ServePrecision::F64,
             })
             .unwrap();
             let got = svc.handle.clusters(3);
@@ -616,6 +632,7 @@ mod tests {
                 seed: 8,
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
+                serve_precision: ServePrecision::F64,
             },
             Box::new(|_a0, init| {
                 Ok(Box::new(Flaky {
@@ -655,6 +672,7 @@ mod tests {
             seed: 3,
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
+            serve_precision: ServePrecision::F64,
         })
         .unwrap();
         let h = &svc.handle;
@@ -702,6 +720,7 @@ mod tests {
             seed: 4,
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
+            serve_precision: ServePrecision::F64,
         })
         .unwrap();
         let h = svc.handle.clone();
@@ -736,6 +755,7 @@ mod tests {
             seed: 6,
             tracker: TrackerSpec::parse("grest2").unwrap(),
             threads: Threads::SINGLE,
+            serve_precision: ServePrecision::F64,
         })
         .unwrap();
         let h = &svc.handle;
@@ -766,6 +786,7 @@ mod tests {
                 seed: 1,
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
+                serve_precision: ServePrecision::F64,
             },
             Box::new(|_a0, _init| anyhow::bail!("artifacts missing")),
         );
@@ -784,6 +805,7 @@ mod tests {
                 seed: 1,
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
+                serve_precision: ServePrecision::F64,
             },
             TenantBudget::default(),
             Box::new(|_a0, _init| anyhow::bail!("artifacts missing")),
@@ -804,6 +826,7 @@ mod tests {
             seed: 1,
             tracker: TrackerSpec::parse("trip@xla").unwrap(),
             threads: Threads::SINGLE,
+            serve_precision: ServePrecision::F64,
         });
         match res {
             Ok(_) => panic!("trip@xla must be rejected before the worker spawns"),
@@ -823,6 +846,7 @@ mod tests {
                 seed: 13,
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
+                serve_precision: ServePrecision::F64,
             };
             let svc = if pinned {
                 TrackingService::spawn_pinned(config()).unwrap()
@@ -855,6 +879,7 @@ mod tests {
                 seed: 17,
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
+                serve_precision: ServePrecision::F64,
             };
             let svc = if pinned {
                 TrackingService::spawn_pinned(config).unwrap()

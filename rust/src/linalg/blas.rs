@@ -16,12 +16,17 @@
 //!   sized by the [`Threads`] budget.
 //!
 //! `gemm_acc` additionally dispatches each chunk down a kernel ladder —
-//! `naive → blocked → blocked+pool → packed+pool` — where the fourth
-//! rung is the BLIS-style packed micro-kernel of
-//! [`gemm_packed`](crate::linalg::gemm_packed), taken when the chunk
-//! shape amortizes panel packing ([`gemm_packed::profitable`]); the
-//! packed rung is bitwise identical to the blocked one, so the choice
-//! is invisible to results.  [`GemmKernel`] pins a rung explicitly
+//! `naive → blocked → blocked+pool → packed → packed+simd → packed+fma`
+//! — where the packed rungs are the BLIS-style micro-kernels of
+//! [`gemm_packed`](crate::linalg::gemm_packed) and
+//! [`gemm_simd`](crate::linalg::gemm_simd), taken when the chunk shape
+//! amortizes panel packing ([`gemm_packed::profitable`]).  `Auto`
+//! routes a profitable chunk to the AVX2 micro-kernel when
+//! [`simd_level`] detected it (packed scalar otherwise); every
+//! `Auto`-eligible rung is bitwise identical to the blocked one, so the
+//! choice is invisible to results.  The FMA rung changes rounding (one
+//! fused rounding per update) and is therefore **opt-in only** — `Auto`
+//! never selects it.  [`GemmKernel`] pins a rung explicitly
 //! (benches/tests).
 //!
 //! Because the partition is over *output* columns, every output element
@@ -46,9 +51,10 @@
 //! the kernels are tuned for that regime.
 
 use crate::linalg::gemm_packed;
+use crate::linalg::gemm_simd;
 use crate::linalg::mat::{Mat, Padded};
 pub use crate::linalg::threads::Threads;
-use crate::linalg::threads::{balanced_col_chunks, kernel_pool};
+use crate::linalg::threads::{balanced_col_chunks, kernel_pool, simd_level, SimdLevel};
 
 /// Cache block along the shared (k) dimension.
 const BLOCK_K: usize = 64;
@@ -103,18 +109,28 @@ pub fn gemm_acc_with<'a>(
     gemm_acc_with_kernel(c, a, b, alpha, threads, GemmKernel::Auto);
 }
 
-/// Which rung of the `gemm_acc` kernel ladder to run.  All rungs are
-/// bitwise identical; production code uses `Auto` (shape heuristic),
-/// benches and tests pin a rung to measure/compare it.
+/// Which rung of the `gemm_acc` kernel ladder to run.  Every rung
+/// except [`GemmKernel::PackedFma`] is bitwise identical to the blocked
+/// oracle; production code uses `Auto` (shape heuristic × detected
+/// [`SimdLevel`]), benches and tests pin a rung to measure/compare it.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
 pub enum GemmKernel {
-    /// Per chunk: packed when [`gemm_packed::profitable`], else blocked.
+    /// Per chunk: when [`gemm_packed::profitable`], the packed driver
+    /// with the AVX2 micro-kernel where detected (packed scalar
+    /// otherwise); else blocked.  Never FMA.
     #[default]
     Auto,
     /// The cache-blocked 4-column kernel (the bitwise oracle).
     Blocked,
-    /// The packed 8×4 micro-kernel, regardless of shape.
+    /// The packed scalar 8×4 micro-kernel, regardless of shape.
     Packed,
+    /// The packed driver with the AVX2 micro-kernel (bitwise; degrades
+    /// to packed scalar where AVX2 is undetected or force-disabled).
+    PackedSimd,
+    /// The packed driver with the FMA micro-kernel — **not bitwise**
+    /// (fused rounding), opt-in only, never selected by `Auto`;
+    /// degrades to the bitwise SIMD/scalar path without FMA hardware.
+    PackedFma,
 }
 
 /// [`gemm_acc_with`] with an explicitly pinned ladder rung.
@@ -158,15 +174,23 @@ fn run_gemm_chunk(
     b: &Mat,
     alpha: f64,
 ) {
-    let packed = match kernel {
-        GemmKernel::Auto => gemm_packed::profitable(a.filled(), a.cols(), jr.len()),
-        GemmKernel::Blocked => false,
-        GemmKernel::Packed => true,
-    };
-    if packed {
-        gemm_packed::gemm_acc_cols_packed(c_cols, m, jr, a, b, alpha);
-    } else {
-        gemm_acc_cols_blocked(c_cols, m, jr, a, b, alpha);
+    match kernel {
+        GemmKernel::Auto => {
+            if gemm_packed::profitable(a.filled(), a.cols(), jr.len()) {
+                if simd_level() >= SimdLevel::Avx2 {
+                    // bitwise-identical AVX2 tile (never FMA from Auto)
+                    gemm_simd::gemm_acc_cols_simd(c_cols, m, jr, a, b, alpha);
+                } else {
+                    gemm_packed::gemm_acc_cols_packed(c_cols, m, jr, a, b, alpha);
+                }
+            } else {
+                gemm_acc_cols_blocked(c_cols, m, jr, a, b, alpha);
+            }
+        }
+        GemmKernel::Blocked => gemm_acc_cols_blocked(c_cols, m, jr, a, b, alpha),
+        GemmKernel::Packed => gemm_packed::gemm_acc_cols_packed(c_cols, m, jr, a, b, alpha),
+        GemmKernel::PackedSimd => gemm_simd::gemm_acc_cols_simd(c_cols, m, jr, a, b, alpha),
+        GemmKernel::PackedFma => gemm_simd::gemm_acc_cols_fma(c_cols, m, jr, a, b, alpha),
     }
 }
 
@@ -639,7 +663,15 @@ mod tests {
         let b = Mat::randn(48, 60, &mut rng);
         let mut want = Mat::zeros(200, 60);
         gemm_acc_with_kernel(&mut want, &a, &b, 1.0, Threads::SINGLE, GemmKernel::Blocked);
-        for &kernel in &[GemmKernel::Auto, GemmKernel::Packed, GemmKernel::Blocked] {
+        // every exact rung (FMA is the one deliberate exception — it has
+        // its own tolerance test in gemm_simd)
+        let exact = [
+            GemmKernel::Auto,
+            GemmKernel::Packed,
+            GemmKernel::PackedSimd,
+            GemmKernel::Blocked,
+        ];
+        for &kernel in &exact {
             for &tc in &[Threads(1), Threads(4)] {
                 let mut c = Mat::zeros(200, 60);
                 gemm_acc_with_kernel(&mut c, &a, &b, 1.0, tc, kernel);
@@ -647,14 +679,16 @@ mod tests {
             }
         }
         // sub-gate shapes fall back to blocked under Auto but must still
-        // agree when the packed rung is forced
+        // agree when the packed rungs are forced
         let a2 = Mat::randn(13, 9, &mut rng);
         let b2 = Mat::randn(9, 3, &mut rng);
         let mut w2 = Mat::zeros(13, 3);
         gemm_acc_with_kernel(&mut w2, &a2, &b2, -2.0, Threads::SINGLE, GemmKernel::Blocked);
-        let mut p2 = Mat::zeros(13, 3);
-        gemm_acc_with_kernel(&mut p2, &a2, &b2, -2.0, Threads::SINGLE, GemmKernel::Packed);
-        assert_eq!(w2.as_slice(), p2.as_slice());
+        for &kernel in &[GemmKernel::Packed, GemmKernel::PackedSimd] {
+            let mut p2 = Mat::zeros(13, 3);
+            gemm_acc_with_kernel(&mut p2, &a2, &b2, -2.0, Threads::SINGLE, kernel);
+            assert_eq!(w2.as_slice(), p2.as_slice(), "{kernel:?} sub-gate");
+        }
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! The f32-storage / f64-accumulate serving tier.
+//!
+//! Embedding *serving* (cosine top-k, k-means distance scans) is
+//! bandwidth-bound: every query streams the whole n×k panel while the
+//! arithmetic per element is one multiply-add.  Storing the panel in
+//! f32 halves the bytes moved; accumulating in f64 keeps the reduction
+//! error at f64 scale, so the only precision loss is the one-time
+//! rounding of each stored value to f32 (relative error ≤ 2⁻²⁴ per
+//! entry, hence ~2⁻²⁴-relative on dots of well-conditioned rows — the
+//! documented tolerance of the rank-stability tests).
+//!
+//! [`F32Mat`] is **row-major** — the opposite of [`Mat`] — because the
+//! serving scans are row-wise (one embedding row per node): a cosine
+//! sweep reads rows contiguously instead of striding column-major
+//! memory, which is the second half of the win.
+//!
+//! The tier is **opt-in** ([`ServePrecision`] defaults to `F64`): the
+//! f64 snapshot path stays the oracle, and nothing in the update step
+//! ever touches f32.
+
+use crate::linalg::mat::Mat;
+
+/// Precision knob for the read-side serving kernels
+/// (`ServiceConfig::serve_precision`, `QueryEngine`, and the k-means
+/// distance phases).  `F64` — the default — is the oracle path; `F32`
+/// opts into f32-storage/f64-accumulate serving.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServePrecision {
+    /// Serve from the f64 snapshot (bit-for-bit the historical results).
+    #[default]
+    F64,
+    /// Serve from a row-major f32 copy of the panel, accumulating in
+    /// f64 (documented ~2⁻²⁴-relative drift; top-k ranks stable on
+    /// conditioned inputs).
+    F32,
+}
+
+/// Row-major f32 matrix: the serving-tier storage format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct F32Mat {
+    rows: usize,
+    cols: usize,
+    /// `data[i * cols + j]` — row `i` is contiguous.
+    data: Vec<f32>,
+}
+
+impl F32Mat {
+    /// Demote a column-major [`Mat`] to row-major f32 (each entry
+    /// rounds to nearest).
+    pub fn from_mat(m: &Mat) -> F32Mat {
+        F32Mat::from_mat_in(m, Vec::new())
+    }
+
+    /// [`F32Mat::from_mat`] reusing a recycled buffer's capacity (see
+    /// `StepWorkspace::take_f32_buf`).
+    pub fn from_mat_in(m: &Mat, mut buf: Vec<f32>) -> F32Mat {
+        let (rows, cols) = (m.rows(), m.cols());
+        buf.clear();
+        buf.reserve(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                buf.push(m.get(i, j) as f32);
+            }
+        }
+        F32Mat { rows, cols, data: buf }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i` as a contiguous slice (the serving access pattern).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Take the backing buffer (for workspace recycling).
+    #[inline]
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+/// Dot product with f32 loads and f64 accumulation, 4-way unrolled like
+/// `blas::dot` (the lanes only re-associate the f64 sums — the f32
+/// storage rounding dominates the error budget either way).
+#[inline]
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += f64::from(x[i]) * f64::from(y[i]);
+        s1 += f64::from(x[i + 1]) * f64::from(y[i + 1]);
+        s2 += f64::from(x[i + 2]) * f64::from(y[i + 2]);
+        s3 += f64::from(x[i + 3]) * f64::from(y[i + 3]);
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += f64::from(x[i]) * f64::from(y[i]);
+    }
+    s
+}
+
+/// Fused `(x·y, y·y)` in one sweep over `y` — the per-row work of a
+/// cosine scan (dot against the query plus the row's own norm).
+#[inline]
+pub fn dot_norm2_f32(x: &[f32], y: &[f32]) -> (f64, f64) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut dot = 0.0f64;
+    let mut nn = 0.0f64;
+    for (&xi, &yi) in x.iter().zip(y.iter()) {
+        let yv = f64::from(yi);
+        dot += f64::from(xi) * yv;
+        nn += yv * yv;
+    }
+    (dot, nn)
+}
+
+/// y = A·x with f32 loads and f64 accumulation: one dot per (contiguous)
+/// row — the f32 serving twin of `blas::gemv` on a row-major panel.
+pub fn gemv_f32(a: &F32Mat, x: &[f32]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot_f32(a.row(i), x)).collect()
+}
+
+/// Squared Euclidean distance from row `i` of `a` to `center`, with
+/// f32 loads and f64 differences/accumulation — the k-means distance
+/// phase at `ServePrecision::F32`.
+#[inline]
+pub fn row_dist2_f32(a: &F32Mat, i: usize, center: &[f32]) -> f64 {
+    debug_assert_eq!(center.len(), a.cols());
+    let row = a.row(i);
+    let mut s = 0.0f64;
+    for (&v, &c) in row.iter().zip(center.iter()) {
+        let diff = f64::from(v) - f64::from(c);
+        s += diff * diff;
+    }
+    s
+}
+
+/// Demote an f64 slice into a reused f32 buffer (cleared first).
+pub fn demote_into(src: &[f64], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| v as f32));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn from_mat_is_rowmajor_rounding() {
+        let m = Mat::from_rows(2, 3, &[1.0, 2.5, -3.0, 4.0, 0.0, 6.25]);
+        let f = F32Mat::from_mat(&m);
+        assert_eq!((f.rows(), f.cols()), (2, 3));
+        assert_eq!(f.row(0), &[1.0f32, 2.5, -3.0]);
+        assert_eq!(f.row(1), &[4.0f32, 0.0, 6.25]);
+        assert_eq!(f.get(1, 2), 6.25f32);
+        // a value that does not fit f32 exactly rounds to nearest
+        let m2 = Mat::from_rows(1, 1, &[1.0 + 1e-12]);
+        let f2 = F32Mat::from_mat(&m2);
+        assert_eq!(f2.get(0, 0), 1.0f32);
+    }
+
+    #[test]
+    fn from_mat_in_reuses_capacity() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(10, 4, &mut rng);
+        let f = F32Mat::from_mat(&m);
+        let buf = f.into_vec();
+        let ptr = buf.as_ptr();
+        let cap = buf.capacity();
+        let m2 = Mat::randn(8, 5, &mut rng);
+        let f2 = F32Mat::from_mat_in(&m2, buf);
+        assert_eq!((f2.rows(), f2.cols()), (8, 5));
+        let buf2 = f2.into_vec();
+        assert_eq!(buf2.as_ptr(), ptr, "same-or-smaller request reuses the buffer");
+        assert_eq!(buf2.capacity(), cap);
+    }
+
+    #[test]
+    fn dot_f32_tracks_f64_dot_within_storage_rounding() {
+        let mut rng = Rng::new(2);
+        for &n in &[1usize, 3, 4, 7, 64, 257] {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            let want = blas::dot(&x, &y);
+            let got = dot_f32(&xf, &yf);
+            // per-entry storage rounding ≤ 2⁻²⁴ relative; the f64
+            // accumulation adds nothing at this scale
+            let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum::<f64>().max(1.0);
+            assert!(
+                (got - want).abs() <= 4.0 * scale * 2f64.powi(-24),
+                "n={n}: {got} vs {want}"
+            );
+            let (d2, nn) = dot_norm2_f32(&xf, &yf);
+            assert_eq!(d2.to_bits(), {
+                // dot_norm2 accumulates in one lane; compare against the
+                // same sequential reduction
+                let mut s = 0.0f64;
+                for i in 0..n {
+                    s += f64::from(xf[i]) * f64::from(yf[i]);
+                }
+                s.to_bits()
+            });
+            assert!(nn >= 0.0);
+        }
+    }
+
+    #[test]
+    fn gemv_f32_matches_f64_gemv_within_tolerance() {
+        let mut rng = Rng::new(3);
+        let m = Mat::randn(40, 9, &mut rng);
+        let x: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let want = blas::gemv(&m, &x);
+        let a = F32Mat::from_mat(&m);
+        let mut xf = Vec::new();
+        demote_into(&x, &mut xf);
+        let got = gemv_f32(&a, &xf);
+        for i in 0..40 {
+            assert!((got[i] - want[i]).abs() < 1e-5 * (1.0 + want[i].abs()), "row {i}");
+        }
+    }
+
+    #[test]
+    fn row_dist2_f32_matches_f64_within_tolerance() {
+        let mut rng = Rng::new(4);
+        let m = Mat::randn(20, 6, &mut rng);
+        let a = F32Mat::from_mat(&m);
+        let center: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let mut c32 = Vec::new();
+        demote_into(&center, &mut c32);
+        for i in 0..20 {
+            let want: f64 = (0..6).map(|j| (m.get(i, j) - center[j]).powi(2)).sum();
+            let got = row_dist2_f32(&a, i, &c32);
+            assert!((got - want).abs() < 1e-5 * (1.0 + want), "row {i}: {got} vs {want}");
+        }
+    }
+}

@@ -1,5 +1,7 @@
 //! The packed GEMM micro-kernel — the fourth rung of the dispatch
-//! ladder (`naive → blocked → blocked+pool → packed+pool`).
+//! ladder (`naive → blocked → blocked+pool → packed → packed+simd →
+//! packed+fma`), and the shared driver the SIMD rungs plug into (see
+//! [`MicroKernel`] and `linalg::gemm_simd`).
 //!
 //! BLIS-style structure: per (column-tile, k-block) the alpha-scaled B
 //! weights are packed into k-major quads, per (k-block, row-block) the
@@ -76,6 +78,20 @@ pub(crate) fn profitable(mt: usize, kk: usize, ncols: usize) -> bool {
     mt >= 4 * MR && kk >= 16 && ncols >= NR
 }
 
+/// The register-tile contract shared by every packed rung: accumulate
+/// one `MR`×`NR` tile (`c0..c3` at rows `ip..ip+MR`) over a packed A
+/// panel `ap` and weight quad `wq` for `kb` k-steps, honoring `skip`.
+///
+/// The scalar implementation below is the reference; the AVX2/FMA
+/// implementations live in `linalg::gemm_simd` and are injected into
+/// [`gemm_acc_cols_with_micro`] as plain `fn` pointers — packing, tile
+/// walk, row remainder, and column tail are shared verbatim, so the
+/// bitwise-equality argument for a SIMD rung reduces to its micro-kernel
+/// keeping the per-element `c += w·a` sequence.
+#[allow(clippy::type_complexity)]
+pub(crate) type MicroKernel =
+    fn(&mut [f64], &mut [f64], &mut [f64], &mut [f64], usize, &[f64], &[f64], &[u8], usize);
+
 /// Packed twin of [`gemm_acc_cols`](crate::linalg::blas): compute
 /// columns `jr` of C += alpha·A·B into `c_cols` (contiguous
 /// column-major storage of those columns, stride `m`), touching only
@@ -88,6 +104,22 @@ pub(crate) fn gemm_acc_cols_packed(
     a: Padded<'_>,
     b: &Mat,
     alpha: f64,
+) {
+    gemm_acc_cols_with_micro(c_cols, m, jr, a, b, alpha, microkernel);
+}
+
+/// The packed driver with an injected register-tile micro-kernel (see
+/// [`MicroKernel`]).  Everything outside the `MR`×`NR` tile — packing,
+/// the blocked tile walk, the row remainder, and the scalar column tail
+/// — is this one code path for every packed rung.
+pub(crate) fn gemm_acc_cols_with_micro(
+    c_cols: &mut [f64],
+    m: usize,
+    jr: std::ops::Range<usize>,
+    a: Padded<'_>,
+    b: &Mat,
+    alpha: f64,
+    micro: MicroKernel,
 ) {
     let kk = a.cols();
     let mt = a.filled();
@@ -124,7 +156,7 @@ pub(crate) fn gemm_acc_cols_packed(
                     for p in 0..n_panels {
                         let ip = i0 + p * MR;
                         let ap = &s.apack[p * MR * kb..(p + 1) * MR * kb];
-                        microkernel(c0, c1, c2, c3, ip, ap, wq, sq, kb);
+                        micro(c0, c1, c2, c3, ip, ap, wq, sq, kb);
                     }
                     // row remainder of this i-block: the blocked
                     // kernel's quad loop verbatim, restricted to the

@@ -1,0 +1,437 @@
+//! The SIMD rungs of the GEMM dispatch ladder: the packed driver of
+//! [`gemm_packed`] with AVX2 (bitwise) and FMA (opt-in, approximate)
+//! register-tile micro-kernels.
+//!
+//! This is the **only** module in `rust/src` allowed to touch
+//! `std::arch` (detlint rule `raw-intrinsics`); feature *detection*
+//! lives beside `detected_parallelism()` in [`threads::simd_level`] and
+//! uses only the `is_x86_feature_detected!` macro.  Stable intrinsics
+//! only — no nightly, no portable-simd.
+//!
+//! ## Why the AVX2 rung stays bitwise
+//!
+//! The scalar micro-kernel's per-k update of one register tile is
+//!
+//! ```text
+//! for t in 0..MR { r0[t] += w0·a[t]; r1[t] += w1·a[t]; r2[t] += w2·a[t]; r3[t] += w3·a[t]; }
+//! ```
+//!
+//! — per output element `(column c, row t)` that is one individually
+//! rounded multiply followed by one individually rounded add per k,
+//! ascending k.  The AVX2 kernel vectorizes *across the `NR` = 4 output
+//! columns*: accumulator `t` holds the lane quad `(c0[t], c1[t], c2[t],
+//! c3[t])`, each k broadcasts `a[t]` and performs `_mm256_add_pd(acc,
+//! _mm256_mul_pd(w, a))` — separate mul and add, each rounding per lane
+//! exactly as the scalar ops do (Rust never contracts explicit `*`/`+`,
+//! and these intrinsics *are* the explicit ops).  Every lane is a
+//! distinct output element, so no cross-element reassociation happens
+//! and the per-element update sequence is identical to the scalar
+//! micro-kernel — hence identical to the blocked oracle.  The skip
+//! predicate, packing, row remainder, and column tail are the shared
+//! driver's ([`gemm_packed::gemm_acc_cols_with_micro`]), not duplicated
+//! here.
+//!
+//! The FMA kernel replaces mul+add with `_mm256_fmadd_pd` — one rounding
+//! per update instead of two.  That is usually *more* accurate but it is
+//! **not** the oracle's rounding sequence, so the FMA rung is excluded
+//! from `Auto` routing and only runs when a caller pins
+//! `GemmKernel::PackedFma` (see the exactness matrix in the README).
+//!
+//! ## Soundness
+//!
+//! The `#[target_feature]` micro-kernels are reached only through
+//! [`gemm_acc_cols_simd_level`], which clamps the requested level to the
+//! runtime-detected [`simd_level()`] — the single point establishing the
+//! "CPU really has AVX2/FMA" precondition every SAFETY comment below
+//! cites.  On non-x86_64 targets detection is pinned to `Scalar` and
+//! every entry point degrades to the packed scalar rung.
+
+use crate::linalg::gemm_packed;
+use crate::linalg::mat::{Mat, Padded};
+use crate::linalg::threads::{simd_level, SimdLevel};
+
+/// SIMD twin of [`gemm_packed::gemm_acc_cols_packed`] at the machine's
+/// detected [`simd_level`]: AVX2 micro-kernel where detected (bitwise
+/// identical to the packed scalar rung), packed scalar elsewhere.
+/// Never selects FMA — `Auto` routing goes through here.
+pub(crate) fn gemm_acc_cols_simd(
+    c_cols: &mut [f64],
+    m: usize,
+    jr: std::ops::Range<usize>,
+    a: Padded<'_>,
+    b: &Mat,
+    alpha: f64,
+) {
+    // cap at Avx2: the detected level may be Avx2Fma, but FMA changes
+    // rounding and must stay opt-in
+    gemm_acc_cols_simd_level(SimdLevel::Avx2, c_cols, m, jr, a, b, alpha);
+}
+
+/// [`gemm_acc_cols_simd`] at an explicit level, clamped to the detected
+/// one.  `Scalar` *is* the packed scalar rung (the forced-scalar path
+/// tests assert bitwise equality through this entry point); a level the
+/// machine lacks silently degrades — which is what makes handing the
+/// `#[target_feature]` micro-kernels to the safe driver sound.
+pub(crate) fn gemm_acc_cols_simd_level(
+    level: SimdLevel,
+    c_cols: &mut [f64],
+    m: usize,
+    jr: std::ops::Range<usize>,
+    a: Padded<'_>,
+    b: &Mat,
+    alpha: f64,
+) {
+    match level.min(simd_level()) {
+        SimdLevel::Scalar => gemm_packed::gemm_acc_cols_packed(c_cols, m, jr, a, b, alpha),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            gemm_packed::gemm_acc_cols_with_micro(c_cols, m, jr, a, b, alpha, x86::micro_avx2)
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => {
+            gemm_packed::gemm_acc_cols_with_micro(c_cols, m, jr, a, b, alpha, x86::micro_fma)
+        }
+        // non-x86_64: simd_level() is pinned to Scalar, so the clamp
+        // above already routed every call to the first arm
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => gemm_packed::gemm_acc_cols_packed(c_cols, m, jr, a, b, alpha),
+    }
+}
+
+/// The opt-in FMA rung (`GemmKernel::PackedFma`): fused multiply-add in
+/// the register tile where the machine supports it, degrading to the
+/// bitwise AVX2/scalar path elsewhere.  **Not bitwise** against the
+/// oracle on FMA machines — callers opt into a different (typically
+/// tighter) rounding.
+pub(crate) fn gemm_acc_cols_fma(
+    c_cols: &mut [f64],
+    m: usize,
+    jr: std::ops::Range<usize>,
+    a: Padded<'_>,
+    b: &Mat,
+    alpha: f64,
+) {
+    gemm_acc_cols_simd_level(SimdLevel::Avx2Fma, c_cols, m, jr, a, b, alpha);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The register-tile micro-kernels.  Both match the shared driver's
+    //! [`MicroKernel`](super::gemm_packed::MicroKernel) contract: tile
+    //! rows `ip..ip + MR` of the four output columns, packed A panel
+    //! `ap` (k-major, `MR` rows per k), weight quads `wq` (`NR` weights
+    //! per k — already contiguous, one unaligned vector load each), and
+    //! the precomputed all-zero `skip` predicate.
+
+    use crate::linalg::gemm_packed::{MR, NR};
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_set_pd, _mm256_setzero_pd, _mm256_storeu_pd,
+    };
+
+    /// Safe [`MicroKernel`](super::gemm_packed::MicroKernel) wrapper for
+    /// the AVX2 tile.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn micro_avx2(
+        c0: &mut [f64],
+        c1: &mut [f64],
+        c2: &mut [f64],
+        c3: &mut [f64],
+        ip: usize,
+        ap: &[f64],
+        wq: &[f64],
+        skip: &[u8],
+        kb: usize,
+    ) {
+        // SAFETY: this fn is handed to the packed driver only by
+        // `gemm_acc_cols_simd_level` after clamping against the
+        // runtime-detected `simd_level()`, so AVX2 is available on this
+        // CPU.  Slice preconditions (`c*[ip..ip+MR]`, `ap`/`wq`/`skip`
+        // sized for `kb`) are the driver's MicroKernel contract, same as
+        // the scalar tile.
+        unsafe { tile_avx2(c0, c1, c2, c3, ip, ap, wq, skip, kb) }
+    }
+
+    /// Safe wrapper for the FMA tile (reached only via
+    /// `GemmKernel::PackedFma`).
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn micro_fma(
+        c0: &mut [f64],
+        c1: &mut [f64],
+        c2: &mut [f64],
+        c3: &mut [f64],
+        ip: usize,
+        ap: &[f64],
+        wq: &[f64],
+        skip: &[u8],
+        kb: usize,
+    ) {
+        // SAFETY: as for `micro_avx2`, plus the clamp guarantees the
+        // `fma` feature — `Avx2Fma` is only selected when detected.
+        unsafe { tile_fma(c0, c1, c2, c3, ip, ap, wq, skip, kb) }
+    }
+
+    /// AVX2 8×4 register tile, one lane per output column: bitwise
+    /// identical to the scalar tile (see module docs).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn tile_avx2(
+        c0: &mut [f64],
+        c1: &mut [f64],
+        c2: &mut [f64],
+        c3: &mut [f64],
+        ip: usize,
+        ap: &[f64],
+        wq: &[f64],
+        skip: &[u8],
+        kb: usize,
+    ) {
+        // SAFETY: AVX2 is enabled for this fn (checked at selection time
+        // by the caller chain — see `micro_avx2`); the raw loads/stores
+        // stay inside `wq` (`kb·NR` long, offset `kidx·NR + 4 ≤ kb·NR`)
+        // and the stack quad `out`.
+        unsafe {
+            // transpose-load C: acc[t] = (c0[ip+t], c1[ip+t], c2[ip+t],
+            // c3[ip+t]) — _mm256_set_pd takes lanes high-to-low
+            let mut acc = [_mm256_setzero_pd(); MR];
+            for (t, lane) in acc.iter_mut().enumerate() {
+                *lane = _mm256_set_pd(c3[ip + t], c2[ip + t], c1[ip + t], c0[ip + t]);
+            }
+            for kidx in 0..kb {
+                if skip[kidx] != 0 {
+                    continue;
+                }
+                let wv = _mm256_loadu_pd(wq.as_ptr().add(kidx * NR));
+                let a8 = &ap[kidx * MR..(kidx + 1) * MR];
+                for (t, lane) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_pd(a8[t]);
+                    // separate mul + add: two roundings per lane, the
+                    // scalar tile's exact op sequence per element
+                    *lane = _mm256_add_pd(*lane, _mm256_mul_pd(wv, av));
+                }
+            }
+            store_tile(c0, c1, c2, c3, ip, &acc);
+        }
+    }
+
+    /// FMA 8×4 register tile: same lane layout, fused multiply-add (one
+    /// rounding per update — NOT the oracle's sequence).
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn tile_fma(
+        c0: &mut [f64],
+        c1: &mut [f64],
+        c2: &mut [f64],
+        c3: &mut [f64],
+        ip: usize,
+        ap: &[f64],
+        wq: &[f64],
+        skip: &[u8],
+        kb: usize,
+    ) {
+        // SAFETY: AVX2+FMA enabled for this fn (selection-time runtime
+        // detection, see `micro_fma`); bounds as in `tile_avx2`.
+        unsafe {
+            let mut acc = [_mm256_setzero_pd(); MR];
+            for (t, lane) in acc.iter_mut().enumerate() {
+                *lane = _mm256_set_pd(c3[ip + t], c2[ip + t], c1[ip + t], c0[ip + t]);
+            }
+            for kidx in 0..kb {
+                if skip[kidx] != 0 {
+                    continue;
+                }
+                let wv = _mm256_loadu_pd(wq.as_ptr().add(kidx * NR));
+                let a8 = &ap[kidx * MR..(kidx + 1) * MR];
+                for (t, lane) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_pd(a8[t]);
+                    *lane = _mm256_fmadd_pd(wv, av, *lane);
+                }
+            }
+            store_tile(c0, c1, c2, c3, ip, &acc);
+        }
+    }
+
+    /// Scatter the accumulator quads back into the four C columns.
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_tile(
+        c0: &mut [f64],
+        c1: &mut [f64],
+        c2: &mut [f64],
+        c3: &mut [f64],
+        ip: usize,
+        acc: &[__m256d; MR],
+    ) {
+        // SAFETY: AVX2 enabled (callers are the AVX2/FMA tiles); the
+        // store target is a 4-wide stack array.
+        unsafe {
+            let mut out = [0.0f64; NR];
+            for (t, lane) in acc.iter().enumerate() {
+                _mm256_storeu_pd(out.as_mut_ptr(), *lane);
+                c0[ip + t] = out[0];
+                c1[ip + t] = out[1];
+                c2[ip + t] = out[2];
+                c3[ip + t] = out[3];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gemm_acc_with_kernel, GemmKernel, Threads};
+    use crate::linalg::rng::Rng;
+
+    /// Random matrix with exact zeros sprinkled in (including whole
+    /// all-zero columns) to exercise the shared skip predicate.
+    fn randn_sparse(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::randn(rows, cols, rng);
+        for j in 0..cols {
+            for i in 0..rows {
+                if rng.below(10) < 3 {
+                    m.set(i, j, 0.0);
+                }
+            }
+            if cols >= 4 && j % 7 == 3 {
+                for i in 0..rows {
+                    m.set(i, j, 0.0);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn simd_is_bitwise_identical_to_packed_across_tile_straddles() {
+        let mut rng = Rng::new(52);
+        // the packed rung's shape battery: every MR/NR/BLOCK straddle,
+        // k ∈ {0, 1}, sub-tile heights/widths, Padded extras
+        let shapes: &[(usize, usize, usize, usize)] = &[
+            // (filled_rows, extra_rows, k, ncols)
+            (1, 0, 1, 1),
+            (7, 0, 1, 3),
+            (8, 0, 16, 4),
+            (9, 5, 17, 5),
+            (16, 0, 64, 8),
+            (23, 9, 65, 13),
+            (31, 1, 63, 64),
+            (128, 0, 64, 65),
+            (129, 7, 129, 67),
+            (200, 48, 32, 32),
+            (5, 0, 0, 6),
+            (64, 0, 1, 130),
+            (257, 3, 100, 20),
+        ];
+        for &(mt, extra, kk, ncols) in shapes {
+            let x = Mat::randn(mt, kk, &mut rng);
+            let bm = randn_sparse(kk, ncols, &mut rng);
+            let a = Padded::new(&x, extra);
+            let m = mt + extra;
+            for &alpha in &[1.0, -1.0, 0.0, 0.37] {
+                let seed = Mat::randn(m, ncols, &mut rng);
+                let mut c_packed = seed.clone();
+                let mut c_simd = seed.clone();
+                let jr = 0..ncols;
+                gemm_packed::gemm_acc_cols_packed(c_packed.as_mut_slice(), m, jr, a, &bm, alpha);
+                gemm_acc_cols_simd(c_simd.as_mut_slice(), m, 0..ncols, a, &bm, alpha);
+                assert_eq!(
+                    c_packed.as_slice(),
+                    c_simd.as_slice(),
+                    "simd drifted from packed oracle at mt={mt} extra={extra} k={kk} n={ncols} alpha={alpha}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_packed_on_nonzero_column_offsets() {
+        // chunked invocation: the pool hands each chunk a j-range with
+        // j0 > 0; tile bases are chunk-relative, exactly as packed
+        let mut rng = Rng::new(53);
+        let mt = 70;
+        let kk = 40;
+        let ncols = 90;
+        let x = Mat::randn(mt, kk, &mut rng);
+        let bm = randn_sparse(kk, ncols, &mut rng);
+        let a = Padded::new(&x, 2);
+        let m = mt + 2;
+        for &(lo, hi) in &[(0usize, 37usize), (37, 70), (70, 90), (5, 9), (88, 90)] {
+            let seed = Mat::randn(m, hi - lo, &mut rng);
+            let mut cp = seed.clone();
+            let mut cs = seed.clone();
+            gemm_packed::gemm_acc_cols_packed(cp.as_mut_slice(), m, lo..hi, a, &bm, -0.5);
+            gemm_acc_cols_simd(cs.as_mut_slice(), m, lo..hi, a, &bm, -0.5);
+            assert_eq!(cp.as_slice(), cs.as_slice(), "chunk {lo}..{hi} drifted");
+        }
+    }
+
+    #[test]
+    fn forced_scalar_level_reproduces_the_packed_rung_bitwise() {
+        // the satellite contract: pinning SimdLevel::Scalar through the
+        // explicit-level entry point IS the packed scalar rung
+        let mut rng = Rng::new(54);
+        let x = Mat::randn(150, 40, &mut rng);
+        let bm = randn_sparse(40, 48, &mut rng);
+        let a = Padded::new(&x, 6);
+        let m = 156;
+        let seed = Mat::randn(m, 48, &mut rng);
+        let mut cp = seed.clone();
+        let mut cs = seed.clone();
+        gemm_packed::gemm_acc_cols_packed(cp.as_mut_slice(), m, 0..48, a, &bm, 1.25);
+        gemm_acc_cols_simd_level(SimdLevel::Scalar, cs.as_mut_slice(), m, 0..48, a, &bm, 1.25);
+        assert_eq!(cp.as_slice(), cs.as_slice());
+    }
+
+    #[test]
+    fn simd_rung_is_bitwise_across_thread_counts() {
+        // shapes × threads through the public ladder: every chunk the
+        // pool dispatches runs the same micro-kernel sequence
+        let mut rng = Rng::new(55);
+        for &(mt, extra, kk, ncols) in
+            &[(64usize, 0usize, 32usize, 40usize), (150, 10, 48, 90), (257, 3, 100, 20)]
+        {
+            let x = Mat::randn(mt, kk, &mut rng);
+            let bm = randn_sparse(kk, ncols, &mut rng);
+            let a = Padded::new(&x, extra);
+            let m = mt + extra;
+            let seed = Mat::randn(m, ncols, &mut rng);
+            let mut want = seed.clone();
+            gemm_acc_with_kernel(&mut want, a, &bm, -0.75, Threads::SINGLE, GemmKernel::Packed);
+            for &tc in &[Threads(1), Threads(4)] {
+                let mut c = seed.clone();
+                gemm_acc_with_kernel(&mut c, a, &bm, -0.75, tc, GemmKernel::PackedSimd);
+                assert_eq!(
+                    c.as_slice(),
+                    want.as_slice(),
+                    "mt={mt} extra={extra} k={kk} n={ncols} t={}",
+                    tc.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fma_rung_is_close_but_opt_in() {
+        // FMA is allowed to differ in the last bits (one rounding per
+        // update instead of two) but must stay within a tight relative
+        // tolerance of the oracle; on machines without FMA it degrades
+        // to the bitwise path, which this bound also accepts
+        let mut rng = Rng::new(56);
+        let x = Mat::randn(200, 64, &mut rng);
+        let bm = randn_sparse(64, 48, &mut rng);
+        let a = Padded::new(&x, 0);
+        let seed = Mat::randn(200, 48, &mut rng);
+        let mut want = seed.clone();
+        let mut got = seed.clone();
+        gemm_packed::gemm_acc_cols_packed(want.as_mut_slice(), 200, 0..48, a, &bm, 1.0);
+        gemm_acc_cols_fma(got.as_mut_slice(), 200, 0..48, a, &bm, 1.0);
+        let scale = want.max_abs().max(1.0);
+        let mut diff = got.clone();
+        diff.axpy(-1.0, &want);
+        assert!(
+            diff.max_abs() <= 1e-12 * scale,
+            "fma rung drifted beyond rounding noise: {}",
+            diff.max_abs()
+        );
+    }
+}

@@ -10,7 +10,9 @@
 pub mod blas;
 pub mod chol;
 pub mod eigh;
+pub mod f32mat;
 pub mod gemm_packed;
+pub mod gemm_simd;
 pub mod kernel_core;
 pub mod lanczos;
 pub mod lu;
@@ -22,5 +24,6 @@ pub mod svd;
 pub mod threads;
 pub mod workspace;
 
+pub use f32mat::{F32Mat, ServePrecision};
 pub use threads::Threads;
 pub use workspace::StepWorkspace;

@@ -62,6 +62,69 @@ fn detected_parallelism() -> usize {
     })
 }
 
+/// CPU vector-capability tiers of the packed GEMM micro-kernel rungs
+/// (`GemmKernel::{PackedSimd, PackedFma}` in `linalg::blas`).  Ordered:
+/// a higher level implies every capability of the lower ones, so rungs
+/// clamp a requested level with `min` against the detected one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// No runtime-detected vector extensions beyond the compile-time
+    /// baseline; the packed scalar micro-kernel runs everywhere.
+    Scalar,
+    /// AVX2: 4-lane f64 vectors with separate mul/add rounding — the
+    /// *bitwise* SIMD rung.
+    Avx2,
+    /// AVX2 + FMA: fused multiply-add, one rounding per update — faster
+    /// but **not** bitwise against the scalar oracle; opt-in only.
+    Avx2Fma,
+}
+
+/// The machine's SIMD capability, detected once per process — the same
+/// [`OnceSlot`] pattern as [`detected_parallelism`], because the
+/// per-chunk `Auto` routing in `blas::run_gemm_chunk` must not re-run
+/// feature detection on the kernel hot path.
+///
+/// `GREST_SIMD=off` (or `scalar`) forces [`SimdLevel::Scalar`] — the CI
+/// leg proving the ladder's results don't depend on the vector units —
+/// and `GREST_SIMD=avx2` caps detection below FMA.  The variable is read
+/// once, at first detection; tests that need a specific level pass it
+/// explicitly (`gemm_simd::gemm_acc_cols_simd_level`) rather than racing
+/// this cache.
+pub fn simd_level() -> SimdLevel {
+    static LEVEL: OnceSlot<SimdLevel> = OnceSlot::new();
+    LEVEL.get_or_init(|| {
+        let detected = detect_simd_level();
+        match std::env::var("GREST_SIMD").ok().as_deref() {
+            Some("off") | Some("scalar") => SimdLevel::Scalar,
+            Some("avx2") => detected.min(SimdLevel::Avx2),
+            _ => detected,
+        }
+    })
+}
+
+/// Raw cpuid-backed detection ignoring the env override.  Uses only the
+/// `is_x86_feature_detected!` macro — `std::arch` intrinsics themselves
+/// are confined to `linalg/gemm_simd.rs` (detlint rule `raw-intrinsics`).
+#[cfg(target_arch = "x86_64")]
+fn detect_simd_level() -> SimdLevel {
+    if is_x86_feature_detected!("avx2") {
+        if is_x86_feature_detected!("fma") {
+            SimdLevel::Avx2Fma
+        } else {
+            SimdLevel::Avx2
+        }
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+/// Non-x86_64 targets have no stable-intrinsics rung: everything runs
+/// the packed scalar micro-kernel (bitwise identical by construction).
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_simd_level() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
 impl Threads {
     /// Resolve the worker count from the machine.
     pub const AUTO: Threads = Threads(0);
@@ -336,6 +399,16 @@ mod tests {
         assert_eq!(Threads::SINGLE.resolve(), 1);
         // the OnceSlot cache answers consistently across calls
         assert_eq!(Threads::AUTO.resolve(), Threads::AUTO.resolve());
+    }
+
+    #[test]
+    fn simd_level_is_cached_and_ordered() {
+        // the OnceSlot cache answers consistently across calls
+        assert_eq!(simd_level(), simd_level());
+        // the ordering the clamp in gemm_simd relies on
+        assert!(SimdLevel::Scalar < SimdLevel::Avx2);
+        assert!(SimdLevel::Avx2 < SimdLevel::Avx2Fma);
+        assert_eq!(SimdLevel::Avx2Fma.min(simd_level()), simd_level());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! re-introduces steady-state allocations.
 
 use crate::linalg::eigh::EighWork;
+use crate::linalg::f32mat::F32Mat;
 use crate::linalg::mat::Mat;
 
 /// Upper bound on pooled buffers.  The native G-REST step keeps ~20 in
@@ -33,6 +34,9 @@ const POOL_CAP: usize = 32;
 pub struct StepWorkspace {
     pool: Vec<Vec<f64>>,
     flag_pool: Vec<Vec<bool>>,
+    /// f32 buffers of the serving tier (panel demotion scratch — see
+    /// `linalg::f32mat`); same LIFO/[`POOL_CAP`] discipline as `pool`.
+    f32_pool: Vec<Vec<f32>>,
     /// Surviving panel-column indices of the last `build_basis`.
     pub kept: Vec<usize>,
     /// Ritz-pair ordering scratch (`order_by_magnitude_into`).
@@ -52,10 +56,37 @@ impl StepWorkspace {
         StepWorkspace {
             pool: Vec::new(),
             flag_pool: Vec::new(),
+            f32_pool: Vec::new(),
             kept: Vec::new(),
             order: Vec::new(),
             eig: EighWork::new(),
         }
+    }
+
+    /// An empty `Vec<f32>` with recycled capacity (length 0).
+    pub fn take_f32_buf(&mut self) -> Vec<f32> {
+        let mut buf = self.f32_pool.pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    /// Return an f32 scratch vector to the pool (dropped at
+    /// [`POOL_CAP`]).
+    pub fn give_f32_buf(&mut self, buf: Vec<f32>) {
+        if self.f32_pool.len() < POOL_CAP {
+            self.f32_pool.push(buf);
+        }
+    }
+
+    /// Demote `m` into an [`F32Mat`] backed by a recycled buffer.
+    pub fn take_f32_mat(&mut self, m: &Mat) -> F32Mat {
+        let buf = self.take_f32_buf();
+        F32Mat::from_mat_in(m, buf)
+    }
+
+    /// Return an [`F32Mat`]'s backing buffer to the pool.
+    pub fn give_f32_mat(&mut self, m: F32Mat) {
+        self.give_f32_buf(m.into_vec());
     }
 
     /// A zero-filled rows×cols matrix backed by a recycled buffer.
@@ -142,9 +173,30 @@ mod tests {
         for _ in 0..3 * POOL_CAP {
             ws.give_buf(vec![0.0; 8]);
             ws.give_flags(vec![true; 8]);
+            ws.give_f32_buf(vec![0.0f32; 8]);
         }
         assert_eq!(ws.pool.len(), POOL_CAP);
         assert_eq!(ws.flag_pool.len(), POOL_CAP);
+        assert_eq!(ws.f32_pool.len(), POOL_CAP);
+    }
+
+    #[test]
+    fn f32_pool_recycles_through_f32mat() {
+        let mut ws = StepWorkspace::new();
+        let m = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let f = ws.take_f32_mat(&m);
+        assert_eq!(f.row(1), &[3.0f32, 4.0]);
+        let ptr = f.row(0).as_ptr();
+        ws.give_f32_mat(f);
+        // same-or-smaller demotion reuses the returned buffer
+        let f2 = ws.take_f32_mat(&m);
+        assert_eq!(f2.row(0).as_ptr(), ptr);
+        assert_eq!(f2.row(0), &[1.0f32, 2.0]);
+        ws.give_f32_mat(f2);
+        let buf = ws.take_f32_buf();
+        assert_eq!(buf.len(), 0);
+        assert!(buf.capacity() >= 4);
+        ws.give_f32_buf(buf);
     }
 
     #[test]

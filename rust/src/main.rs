@@ -8,7 +8,7 @@
 //!         [--t T] [--seed S] [--eval-every N] [--quick] [--xla]
 //!                                  run one tracker over one dataset, or a
 //!                                  side-by-side comparison of several
-//!   serve-demo [--events N] [--tracker SPEC]
+//!   serve-demo [--events N] [--tracker SPEC] [--serve-precision f64|f32]
 //!                                  run the streaming coordinator demo
 //!   fleet [--tenants N] [--workers W] [--events E] [--tracker SPEC]
 //!                                  run N tenants on a W-worker shared pool
@@ -67,7 +67,12 @@ fn known_flags(cmd: &str) -> Vec<Flag> {
             bflag("quick"),
             bflag("xla"),
         ]),
-        "serve-demo" => flags.extend([vflag("events"), vflag("tracker"), vflag("seed")]),
+        "serve-demo" => flags.extend([
+            vflag("events"),
+            vflag("tracker"),
+            vflag("seed"),
+            vflag("serve-precision"),
+        ]),
         "fleet" => flags.extend([
             vflag("tenants"),
             vflag("workers"),
@@ -512,8 +517,14 @@ fn cmd_track_compare(
 fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Result<()> {
     use grest::coordinator::{BatchPolicy, ServiceConfig, TrackingService};
     use grest::graph::stream::GraphEvent;
+    use grest::linalg::ServePrecision;
     let n_events: usize = flag_num(flags, "events", 2000usize)?;
     let seed: u64 = flag_num(flags, "seed", 5u64)?;
+    let serve_precision = match flags.get("serve-precision").map(|s| s.as_str()) {
+        None | Some("f64") => ServePrecision::F64,
+        Some("f32") => ServePrecision::F32,
+        Some(other) => anyhow::bail!("--serve-precision expects f64 or f32, got `{other}`"),
+    };
     let mut tspec = TrackerSpec::parse(
         flags.get("tracker").map(|s| s.as_str()).unwrap_or("grest3"),
     )?;
@@ -531,6 +542,7 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
         seed,
         tracker: tspec,
         threads,
+        serve_precision,
     })?;
     let h = svc.handle.clone();
     let t0 = std::time::Instant::now();
@@ -639,6 +651,7 @@ fn cmd_fleet(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Resul
                 seed: seed + t,
                 tracker: tspec.clone(),
                 threads,
+                serve_precision: grest::linalg::ServePrecision::F64,
             },
         )?;
     }

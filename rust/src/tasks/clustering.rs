@@ -6,8 +6,19 @@
 //! label/distance is produced by exactly one thread with a fixed
 //! reduction order, so results are **bitwise identical across thread
 //! counts** — the same determinism contract as the dense kernels.
+//!
+//! The distance phases optionally run on the f32-storage /
+//! f64-accumulate serving tier ([`ServePrecision::F32`]): the points
+//! are demoted once to a row-major [`F32Mat`] and each scan loads f32
+//! rows while accumulating distances in f64.  Center *updates* (the
+//! mean step) and the empty-cluster re-seed stay f64 — only the
+//! bandwidth-bound scans change.  The f32 path keeps the same
+//! bitwise-across-thread-counts guarantee (same chunk-ordered
+//! partition, same per-point arithmetic); it differs from the f64
+//! *oracle* path by the documented f32 storage rounding.
 
 use crate::graph::stream::IdMap;
+use crate::linalg::f32mat::{self, F32Mat, ServePrecision};
 use crate::linalg::mat::Mat;
 use crate::linalg::rng::Rng;
 use crate::linalg::threads::{kernel_pool, Threads};
@@ -63,11 +74,32 @@ pub fn kmeans_with(
     rng: &mut Rng,
     threads: Threads,
 ) -> KMeansResult {
+    kmeans_with_precision(x, k, n_init, max_iter, rng, threads, ServePrecision::F64)
+}
+
+/// [`kmeans_with`] with an explicit distance-phase precision.  `F64` is
+/// the oracle; `F32` demotes the points once and runs the seeding and
+/// assign scans on the serving tier (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn kmeans_with_precision(
+    x: &Mat,
+    k: usize,
+    n_init: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+    threads: Threads,
+    precision: ServePrecision,
+) -> KMeansResult {
     assert!(k >= 1);
     let n = x.rows();
+    // one demotion for every restart and every distance phase
+    let xf = match precision {
+        ServePrecision::F64 => None,
+        ServePrecision::F32 => Some(F32Mat::from_mat(x)),
+    };
     let mut best: Option<KMeansResult> = None;
     for _ in 0..n_init.max(1) {
-        let r = kmeans_single(x, k, max_iter, rng, threads);
+        let r = kmeans_single(x, xf.as_ref(), k, max_iter, rng, threads);
         if best.as_ref().map(|b| r.inertia < b.inertia).unwrap_or(true) {
             best = Some(r);
         }
@@ -129,6 +161,7 @@ fn par_map_rows<T: Send>(
 
 fn kmeans_single(
     x: &Mat,
+    xf: Option<&F32Mat>,
     k: usize,
     max_iter: usize,
     rng: &mut Rng,
@@ -142,14 +175,24 @@ fn kmeans_single(
     // inherit the assign step's fan-out decision)
     let workers = threads.for_flops(3 * n * k * d.max(1));
     let seed_workers = threads.for_flops(3 * n * d.max(1));
+    // f32 center scratch of the serving-tier distance phases, demoted
+    // fresh before each scan (centers move; the points were demoted
+    // once in kmeans_with_precision)
+    let mut c32: Vec<f32> = Vec::new();
     // k-means++ seeding
     let mut centers = Mat::zeros(d, k); // column c = center c
     let first = rng.below(n.max(1));
     for c in 0..d {
         centers.set(c, 0, x.get(first, c));
     }
-    let mut min_d2: Vec<f64> =
-        par_map_rows(n, seed_workers, |i| row_dist2(x, i, centers.col(0)));
+    let mut min_d2: Vec<f64> = match xf {
+        None => par_map_rows(n, seed_workers, |i| row_dist2(x, i, centers.col(0))),
+        Some(xf) => {
+            f32mat::demote_into(centers.col(0), &mut c32);
+            let c0: &[f32] = &c32;
+            par_map_rows(n, seed_workers, |i| f32mat::row_dist2_f32(xf, i, c0))
+        }
+    };
     for cidx in 1..k {
         let total: f64 = min_d2.iter().sum();
         let pick = if total <= 0.0 {
@@ -169,14 +212,28 @@ fn kmeans_single(
         for c in 0..d {
             centers.set(c, cidx, x.get(pick, c));
         }
-        min_d2 = par_map_rows(n, seed_workers, |i| {
-            let nd = row_dist2(x, i, centers.col(cidx));
-            if nd < min_d2[i] {
-                nd
-            } else {
-                min_d2[i]
+        min_d2 = match xf {
+            None => par_map_rows(n, seed_workers, |i| {
+                let nd = row_dist2(x, i, centers.col(cidx));
+                if nd < min_d2[i] {
+                    nd
+                } else {
+                    min_d2[i]
+                }
+            }),
+            Some(xf) => {
+                f32mat::demote_into(centers.col(cidx), &mut c32);
+                let cc: &[f32] = &c32;
+                par_map_rows(n, seed_workers, |i| {
+                    let nd = f32mat::row_dist2_f32(xf, i, cc);
+                    if nd < min_d2[i] {
+                        nd
+                    } else {
+                        min_d2[i]
+                    }
+                })
             }
-        });
+        };
     }
     // Lloyd iterations
     let mut labels = vec![0usize; n];
@@ -185,18 +242,39 @@ fn kmeans_single(
         // assign: per-point nearest center, row-partitioned; the inertia
         // reduction stays sequential over per-point values so the sum
         // order (and hence the restart selection) is thread-independent
-        let assign: Vec<(usize, f64)> = par_map_rows(n, workers, |i| {
-            let mut bestc = 0;
-            let mut bestd = f64::INFINITY;
-            for c in 0..k {
-                let dd = row_dist2(x, i, centers.col(c));
-                if dd < bestd {
-                    bestd = dd;
-                    bestc = c;
+        let assign: Vec<(usize, f64)> = match xf {
+            None => par_map_rows(n, workers, |i| {
+                let mut bestc = 0;
+                let mut bestd = f64::INFINITY;
+                for c in 0..k {
+                    let dd = row_dist2(x, i, centers.col(c));
+                    if dd < bestd {
+                        bestd = dd;
+                        bestc = c;
+                    }
                 }
+                (bestc, bestd)
+            }),
+            Some(xf) => {
+                // demote all k centers once per iteration; the d×k
+                // column-major buffer keeps center c contiguous at
+                // c·d..(c+1)·d
+                f32mat::demote_into(centers.as_slice(), &mut c32);
+                let cs: &[f32] = &c32;
+                par_map_rows(n, workers, |i| {
+                    let mut bestc = 0;
+                    let mut bestd = f64::INFINITY;
+                    for c in 0..k {
+                        let dd = f32mat::row_dist2_f32(xf, i, &cs[c * d..(c + 1) * d]);
+                        if dd < bestd {
+                            bestd = dd;
+                            bestc = c;
+                        }
+                    }
+                    (bestc, bestd)
+                })
             }
-            (bestc, bestd)
-        });
+        };
         let mut changed = false;
         let mut new_inertia = 0.0;
         for (i, &(bestc, bestd)) in assign.iter().enumerate() {
@@ -268,9 +346,21 @@ pub fn spectral_cluster(eigvecs: &Mat, k: usize, seed: u64) -> Vec<usize> {
 /// [`spectral_cluster`] with an explicit worker budget; bitwise
 /// identical to the sequential path for every thread count.
 pub fn spectral_cluster_with(eigvecs: &Mat, k: usize, seed: u64, threads: Threads) -> Vec<usize> {
+    spectral_cluster_precision(eigvecs, k, seed, threads, ServePrecision::F64)
+}
+
+/// [`spectral_cluster_with`] with an explicit distance-phase precision
+/// (row normalization stays f64; only the k-means scans change tier).
+pub fn spectral_cluster_precision(
+    eigvecs: &Mat,
+    k: usize,
+    seed: u64,
+    threads: Threads,
+    precision: ServePrecision,
+) -> Vec<usize> {
     let mut rng = Rng::new(seed);
     let xn = normalize_rows(eigvecs);
-    kmeans_with(&xn, k, 5, 100, &mut rng, threads).labels
+    kmeans_with_precision(&xn, k, 5, 100, &mut rng, threads, precision).labels
 }
 
 /// Pure snapshot-facing entry point: cluster a published embedding
@@ -285,7 +375,24 @@ pub fn cluster_assignment(
     seed: u64,
     threads: Threads,
 ) -> ClusterAssignment {
-    let labels = spectral_cluster_with(&pairs.vectors, k, seed, threads);
+    cluster_assignment_precision(pairs, ids, version, k, seed, threads, ServePrecision::F64)
+}
+
+/// [`cluster_assignment`] with an explicit distance-phase precision —
+/// the entry point the `QueryEngine` routes its `ServiceConfig` knob
+/// through.  Deterministic in `(version, k, seed, precision)`
+/// regardless of `threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn cluster_assignment_precision(
+    pairs: &EigenPairs,
+    ids: &IdMap,
+    version: u64,
+    k: usize,
+    seed: u64,
+    threads: Threads,
+    precision: ServePrecision,
+) -> ClusterAssignment {
+    let labels = spectral_cluster_precision(&pairs.vectors, k, seed, threads, precision);
     ClusterAssignment { version, nodes: ids.externals().to_vec(), labels }
 }
 
@@ -346,6 +453,74 @@ mod tests {
         let vals = par_map_rows(1003, 5, |i| (i * 31) % 17);
         let want: Vec<usize> = (0..1003).map(|i| (i * 31) % 17).collect();
         assert_eq!(vals, want);
+    }
+
+    #[test]
+    fn f32_distance_phases_recover_the_same_blobs() {
+        // well-separated blobs: the serving tier's ~2⁻²⁴ storage
+        // rounding cannot flip any assignment
+        let mut rng = Rng::new(21);
+        let n = 90;
+        let mut x = Mat::zeros(n, 2);
+        for i in 0..n {
+            let c = i / 30;
+            x.set(i, 0, c as f64 * 10.0 + 0.3 * rng.normal());
+            x.set(i, 1, (c as f64 - 1.0) * 8.0 + 0.3 * rng.normal());
+        }
+        let mut r64 = Rng::new(5);
+        let mut r32 = Rng::new(5);
+        let f64run =
+            kmeans_with_precision(&x, 3, 4, 100, &mut r64, Threads::SINGLE, ServePrecision::F64);
+        let f32run =
+            kmeans_with_precision(&x, 3, 4, 100, &mut r32, Threads::SINGLE, ServePrecision::F32);
+        // compare partitions, not raw label ids (seeding picks may
+        // permute cluster indices between tiers)
+        let ari = crate::tasks::ari::adjusted_rand_index(&f64run.labels, &f32run.labels);
+        assert!(ari > 0.999, "tiers disagree on the partition: ARI {ari}");
+        for blob in 0..3 {
+            let l0 = f32run.labels[blob * 30];
+            assert!(f32run.labels[blob * 30..(blob + 1) * 30].iter().all(|&l| l == l0));
+        }
+        // inertias agree to f32 storage rounding on these magnitudes
+        assert!((f64run.inertia - f32run.inertia).abs() < 1e-4 * (1.0 + f64run.inertia));
+    }
+
+    #[test]
+    fn f32_tier_is_bitwise_stable_across_thread_counts() {
+        // the serving tier keeps the chunk-ordered determinism contract:
+        // same seed -> identical labels/centers/inertia for any worker
+        // count, exactly like the f64 path
+        let mut rng = Rng::new(22);
+        let x = Mat::randn(30_000, 8, &mut rng);
+        let k = 6;
+        assert!(3 * x.rows() * k * x.cols() >= crate::linalg::threads::PAR_MIN_FLOPS);
+        let mut r1 = Rng::new(42);
+        let mut r4 = Rng::new(42);
+        let seq =
+            kmeans_with_precision(&x, k, 2, 25, &mut r1, Threads::SINGLE, ServePrecision::F32);
+        let par = kmeans_with_precision(&x, k, 2, 25, &mut r4, Threads(4), ServePrecision::F32);
+        assert_eq!(seq.labels, par.labels);
+        assert_eq!(seq.centers.as_slice(), par.centers.as_slice());
+        assert!(seq.inertia == par.inertia);
+    }
+
+    #[test]
+    fn cluster_assignment_precision_f64_is_the_plain_entry_point() {
+        let mut rng = Rng::new(23);
+        let x = Mat::randn(120, 3, &mut rng);
+        let pairs = EigenPairs { values: vec![3.0, 2.0, 1.0], vectors: x };
+        let ids = IdMap::from_externals((0..120u64).map(|i| 900 + i).collect());
+        let a = cluster_assignment(&pairs, &ids, 9, 3, 7, Threads::SINGLE);
+        let b = cluster_assignment_precision(
+            &pairs,
+            &ids,
+            9,
+            3,
+            7,
+            Threads::SINGLE,
+            ServePrecision::F64,
+        );
+        assert_eq!(a, b, "F64 precision is the default path");
     }
 
     #[test]

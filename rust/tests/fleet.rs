@@ -15,6 +15,7 @@ use grest::coordinator::{
 use grest::graph::stream::GraphEvent;
 use grest::linalg::rng::Rng;
 use grest::linalg::threads::Threads;
+use grest::linalg::ServePrecision;
 use grest::sparse::delta::Delta;
 use grest::tracking::traits::{EigTracker, EigenPairs};
 use grest::tracking::TrackerSpec;
@@ -33,6 +34,7 @@ fn tenant_config(t: u64) -> ServiceConfig {
         seed: 100 + t,
         tracker: TrackerSpec::parse(SPECS[t as usize % SPECS.len()]).unwrap(),
         threads: Threads::SINGLE,
+        serve_precision: ServePrecision::F64,
     }
 }
 

@@ -226,6 +226,7 @@ fn coordinator_survives_burst_and_preserves_order() {
         seed: 2,
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
         threads: grest::linalg::threads::Threads::SINGLE,
+        serve_precision: grest::linalg::ServePrecision::F64,
     })
     .unwrap();
     // burst: add then remove the same edge repeatedly; final state must
@@ -264,6 +265,7 @@ fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
         seed: 4,
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
         threads: grest::linalg::threads::Threads::SINGLE,
+        serve_precision: grest::linalg::ServePrecision::F64,
     })
     .unwrap();
     let h = &svc.handle;
@@ -335,6 +337,7 @@ fn read_storm_soak_queries_never_touch_the_worker() {
         seed: 9,
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
         threads: grest::linalg::threads::Threads::SINGLE,
+        serve_precision: grest::linalg::ServePrecision::F64,
     })
     .unwrap();
     let h = svc.handle.clone();
