@@ -62,6 +62,7 @@ fn tenant_config(n: usize, k: usize, seed: u64) -> ServiceConfig {
         tracker: TrackerSpec::parse("grest3").unwrap(),
         threads: Threads::SINGLE,
         serve_precision: ServePrecision::F64,
+        durability: None,
     }
 }
 

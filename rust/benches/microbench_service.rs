@@ -64,6 +64,7 @@ fn spawn_service(n: usize, k: usize, batch: usize, seed: u64) -> TrackingService
         tracker: TrackerSpec::parse("grest3").unwrap(),
         threads: Threads::SINGLE,
         serve_precision: ServePrecision::F64,
+        durability: None,
     })
     .unwrap()
 }

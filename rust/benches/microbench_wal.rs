@@ -1,0 +1,277 @@
+//! Durability-tier micro-benchmarks: WAL append/group-fsync throughput,
+//! fsync latency, checkpoint store cost, and recovery/replay time as a
+//! function of WAL length.
+//!
+//! Append throughput is measured over both backends — [`Memory`] (pure
+//! framing + CRC cost) and [`FileBackend`] (real `O_APPEND` writes and
+//! `fdatasync`) — so the fsync share of the batch budget is visible as
+//! the gap between the two.  Recovery drives the *real* spawn recipe
+//! (checkpoint load → WAL scan → tenant replay through the normal flush
+//! path), so the reported seconds are what a tenant respawn actually
+//! pays.
+//!
+//! Emits `BENCH_wal.json` (name → {n, seconds}) next to the other
+//! `BENCH_*.json` files.  `GREST_BENCH_QUICK=1` shrinks the ladders for
+//! CI smoke runs.
+
+use grest::coordinator::durability::backend::{FileBackend, Memory, StorageBackend};
+use grest::coordinator::durability::checkpoint::Checkpoint;
+use grest::coordinator::durability::recover::{self, Recovered};
+use grest::coordinator::durability::wal::Wal;
+use grest::coordinator::metrics::Metrics;
+use grest::coordinator::snapshot::{EmbeddingSnapshot, PublishStamp, SnapshotStore};
+use grest::coordinator::tenant::{TenantBudget, TenantCmd, TenantState};
+use grest::coordinator::BatchPolicy;
+use grest::graph::stream::{DeltaBuilder, GraphEvent, IdMap};
+use grest::linalg::rng::Rng;
+use grest::tracking::spec::TrackerSpec;
+use grest::tracking::traits::init_eigenpairs;
+use std::sync::Arc;
+use std::time::Instant;
+
+const K: usize = 8;
+const SEED: u64 = 5;
+
+struct BenchRecord {
+    name: String,
+    n: usize,
+    seconds: f64,
+}
+
+fn record(records: &mut Vec<BenchRecord>, name: &str, n: usize, seconds: f64) {
+    records.push(BenchRecord { name: name.to_string(), n, seconds });
+}
+
+fn write_json(records: &[BenchRecord]) {
+    let mut out = String::from("{\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {{\"n\": {}, \"seconds\": {:.6e}}}{}\n",
+            r.name,
+            r.n,
+            r.seconds,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    let path = "BENCH_wal.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("# wrote {path} ({} entries)", records.len()),
+        Err(e) => eprintln!("# failed to write {path}: {e}"),
+    }
+}
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("grest-bench-wal-{tag}-{}", std::process::id()))
+}
+
+// ---------------------------------------------------------------------
+// append throughput + group-fsync latency
+
+/// Append `total` events in `batch`-sized group commits (events frame +
+/// commit frame + one sync per batch); returns (seconds, bytes written,
+/// per-sync latencies).
+fn run_append(
+    backend: Box<dyn StorageBackend>,
+    total: usize,
+    batch: usize,
+) -> (f64, u64, Vec<f64>) {
+    let (mut wal, _) = Wal::open(backend, 0).expect("open wal");
+    let events: Vec<GraphEvent> =
+        (0..batch as u64).map(|i| GraphEvent::AddEdge(i, i + 1)).collect();
+    let mut bytes = 0u64;
+    let mut sync_lat = Vec::with_capacity(total / batch + 1);
+    let t0 = Instant::now();
+    let mut version = 0u64;
+    let mut done = 0;
+    while done < total {
+        wal.append_events(&events);
+        version += 1;
+        wal.append_commit(version);
+        bytes += wal.buffered_len() as u64;
+        let s0 = Instant::now();
+        wal.sync().expect("sync");
+        sync_lat.push(s0.elapsed().as_secs_f64());
+        done += batch;
+    }
+    (t0.elapsed().as_secs_f64(), bytes, sync_lat)
+}
+
+fn percentile(sorted: &[f64], p: usize) -> f64 {
+    sorted[(sorted.len() * p / 100).min(sorted.len() - 1)]
+}
+
+fn bench_append(records: &mut Vec<BenchRecord>, quick: bool) {
+    let total = if quick { 20_000 } else { 200_000 };
+    let batches: &[usize] = if quick { &[16, 256] } else { &[16, 256, 4096] };
+    for &batch in batches {
+        let (mem_secs, mem_bytes, _) = run_append(Box::new(Memory::new()), total, batch);
+        let path = temp_path(&format!("append-b{batch}"));
+        let (file_secs, file_bytes, mut lat) =
+            run_append(Box::new(FileBackend::new(&path)), total, batch);
+        let _ = std::fs::remove_file(path);
+        lat.sort_by(f64::total_cmp);
+        let (p50, p95) = (percentile(&lat, 50), percentile(&lat, 95));
+        println!(
+            "# append b{batch:<5} mem {:>9.0} ev/s ({:>6.1} MB/s) | file {:>9.0} ev/s \
+             ({:>6.1} MB/s) fsync p50 {:>7.1}us p95 {:>7.1}us",
+            total as f64 / mem_secs,
+            mem_bytes as f64 / mem_secs / 1e6,
+            total as f64 / file_secs,
+            file_bytes as f64 / file_secs / 1e6,
+            p50 * 1e6,
+            p95 * 1e6,
+        );
+        record(records, &format!("wal_append_mem_b{batch}"), total, mem_secs);
+        record(records, &format!("wal_append_file_b{batch}"), total, file_secs);
+        record(records, &format!("wal_fsync_file_b{batch}_p95"), lat.len(), p95);
+    }
+}
+
+// ---------------------------------------------------------------------
+// checkpoint store cost
+
+fn bench_checkpoint(records: &mut Vec<BenchRecord>, quick: bool) {
+    let sizes: &[usize] = if quick { &[1_000] } else { &[1_000, 10_000] };
+    for &n in sizes {
+        let mut rng = Rng::new(SEED);
+        let g = grest::graph::generators::erdos_renyi(n, 8.0 / n as f64, &mut rng);
+        let a0 = g.adjacency();
+        let init = init_eigenpairs(&a0, K, SEED);
+        let tracker =
+            TrackerSpec::default().build_seeded_send(&a0, &init, SEED).expect("tracker");
+        let ckpt = Checkpoint {
+            next_seq: 1,
+            version: 1,
+            wall_us: 0,
+            pairs: init,
+            ids: IdMap::identity(n).externals().to_vec(),
+            adjacency: a0,
+            tracker: tracker.save_state().expect("save_state"),
+        };
+        let path = temp_path(&format!("ckpt-n{n}"));
+        let mut backend = FileBackend::new(&path);
+        let iters = if quick { 5 } else { 20 };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            ckpt.store(&mut backend).expect("store");
+        }
+        let secs = t0.elapsed().as_secs_f64() / iters as f64;
+        let bytes = ckpt.encode().len();
+        drop(backend);
+        let _ = std::fs::remove_file(path);
+        println!(
+            "# checkpoint n{n:<6} {:>8.0} KB image, store {:>8.2} ms ({:>6.1} MB/s)",
+            bytes as f64 / 1e3,
+            secs * 1e3,
+            bytes as f64 / secs / 1e6,
+        );
+        record(records, &format!("ckpt_store_n{n}"), n, secs);
+    }
+}
+
+// ---------------------------------------------------------------------
+// recovery/replay time vs WAL length
+
+/// The spawn recipe over injectable backends (mirrors
+/// `coordinator/service.rs::build_state`); replay runs through the
+/// normal tenant flush path.
+fn spawn_tenant(
+    wal: Box<dyn StorageBackend>,
+    ckpt: Box<dyn StorageBackend>,
+    n0: usize,
+) -> TenantState {
+    let mut rng = Rng::new(SEED);
+    let g = grest::graph::generators::erdos_renyi(n0, 8.0 / n0 as f64, &mut rng);
+    let a0 = g.adjacency();
+    let init = init_eigenpairs(&a0, K, SEED);
+    let mut tracker =
+        TrackerSpec::default().build_seeded_send(&a0, &init, SEED).expect("tracker");
+    let store = SnapshotStore::new(EmbeddingSnapshot {
+        version: 0,
+        n_nodes: a0.n_rows,
+        pairs: init.clone(),
+        ids: Arc::new(IdMap::identity(a0.n_rows)),
+        published_at: PublishStamp::now(),
+    });
+    let Recovered { checkpoint, tail, wal, ckpt_backend, .. } =
+        recover::load(wal, ckpt).expect("recover");
+    let mut state = match checkpoint {
+        Some(c) => {
+            tracker.restore_state(c.tracker).expect("restore");
+            let builder = DeltaBuilder::from_committed(&c.adjacency, c.ids.clone());
+            let mut st = TenantState::new(
+                tracker,
+                builder,
+                c.adjacency.clone(),
+                BatchPolicy::ByCount(1),
+                store.clone(),
+                Metrics::new(),
+                TenantBudget::default(),
+            );
+            st.restore_version(c.version);
+            st
+        }
+        None => TenantState::new(
+            tracker,
+            DeltaBuilder::from_graph(g),
+            a0,
+            BatchPolicy::ByCount(1),
+            store,
+            Metrics::new(),
+            TenantBudget::default(),
+        ),
+    };
+    state.replay(&tail).expect("replay");
+    state.attach_durability(grest::coordinator::durability::TenantDurability::new(
+        wal,
+        ckpt_backend,
+        usize::MAX, // replay cost only: never checkpoint
+    ));
+    state
+}
+
+fn bench_recovery(records: &mut Vec<BenchRecord>, quick: bool) {
+    let n0 = 300;
+    let walls: &[usize] = if quick { &[16, 64] } else { &[16, 64, 256] };
+    for &batches in walls {
+        let wal_mem = Memory::new();
+        let ckpt_mem = Memory::new();
+        {
+            let mut live =
+                spawn_tenant(Box::new(wal_mem.clone()), Box::new(ckpt_mem.clone()), n0);
+            let mut rng = Rng::new(99);
+            for b in 0..batches as u64 {
+                let mut evs = vec![GraphEvent::AddEdge(rng.below(n0) as u64, 10_000 + b)];
+                for _ in 0..7 {
+                    evs.push(GraphEvent::AddEdge(
+                        rng.below(n0) as u64,
+                        rng.below(n0 + 64) as u64,
+                    ));
+                }
+                let _ = live.apply(TenantCmd::Events(evs));
+            }
+            assert_eq!(live.version(), batches as u64);
+        }
+        wal_mem.crash();
+        let t0 = Instant::now();
+        let rec = spawn_tenant(Box::new(wal_mem.clone()), Box::new(ckpt_mem.clone()), n0);
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(rec.version(), batches as u64, "recovery must replay every batch");
+        println!(
+            "# recover {batches:>4}-batch wal: {:>8.2} ms ({:>7.2} ms/batch)",
+            secs * 1e3,
+            secs * 1e3 / batches as f64,
+        );
+        record(records, &format!("recover_replay_w{batches}"), batches, secs);
+    }
+}
+
+fn main() {
+    let quick = std::env::var("GREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    bench_append(&mut records, quick);
+    bench_checkpoint(&mut records, quick);
+    bench_recovery(&mut records, quick);
+    write_json(&records);
+}

@@ -29,14 +29,18 @@
 //! |                           | and `sync.rs` — kernels dispatch on the persistent pool       |
 //! | `raw-intrinsics`          | no `std::arch`/`core::arch` outside `linalg/gemm_simd.rs` —   |
 //! |                           | one audited home for SIMD `unsafe`, scalar code everywhere else |
+//! | `raw-fs`                  | no `std::fs`/`File::create` outside the durability tier's     |
+//! |                           | `StorageBackend` impls and the audited plain-file I/O homes   |
+//! |                           | (`graph/io.rs`, `eval/table.rs`, `runtime/artifact.rs`,       |
+//! |                           | `main.rs`) — durable writes must be fault-injectable          |
 //!
 //! Audited exceptions live in `rust/detlint.allow`, one per line as
 //! `rule:path-suffix:needle`; a finding is suppressed when all three
 //! match.  Heuristic limits: `hash-iter` tracks `let`-bound hash
 //! collections per file, and the `#[cfg(test)] mod tests` tail (this
 //! repo's convention puts tests last) is skipped for the `hash-iter`,
-//! `coordinator-unwrap`, and `thread-spawn` rules — test code may
-//! unwrap and spawn helper threads.  The `relaxed-outside-metrics`
+//! `coordinator-unwrap`, `thread-spawn`, and `raw-fs` rules — test
+//! code may unwrap, spawn helper threads, and touch temp files.  The `relaxed-outside-metrics`
 //! rule is deliberately strict: tests inside `rust/src` hold to it
 //! too.
 
@@ -53,6 +57,7 @@ enum Rule {
     CoordinatorUnwrap,
     ThreadSpawn,
     RawIntrinsics,
+    RawFs,
 }
 
 impl Rule {
@@ -66,6 +71,7 @@ impl Rule {
             Rule::CoordinatorUnwrap => "coordinator-unwrap",
             Rule::ThreadSpawn => "thread-spawn",
             Rule::RawIntrinsics => "raw-intrinsics",
+            Rule::RawFs => "raw-fs",
         }
     }
 }
@@ -388,6 +394,28 @@ fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
         }
     }
 
+    // raw-fs: every durable write goes through the `StorageBackend`
+    // trait in `coordinator/durability/` so the fault-injection harness
+    // can kill it at any syscall boundary.  The audited plain-file
+    // homes — edge-list/snapshot I/O, eval tables, artifact loading,
+    // and the CLI — predate the tier and stay exempt; test tails may
+    // touch temp files directly.
+    let fs_exempt = rel.starts_with("coordinator/durability/")
+        || rel == "graph/io.rs"
+        || rel == "eval/table.rs"
+        || rel == "runtime/artifact.rs"
+        || rel == "main.rs";
+    if !fs_exempt {
+        for (i, c) in code.iter().enumerate() {
+            if i >= tail {
+                break;
+            }
+            if c.contains("std::fs") || c.contains("File::create") {
+                push(Rule::RawFs, i);
+            }
+        }
+    }
+
     out
 }
 
@@ -514,6 +542,11 @@ const FIXTURES: &[(&str, &str, &str)] = &[
         "linalg/fixture2.rs",
         "use core::arch::x86_64::_mm256_add_pd;\n\nfn f() {\n    use std::arch::is_x86_feature_detected;\n}\n",
         "raw-intrinsics",
+    ),
+    (
+        "coordinator/fixture4.rs",
+        "fn f() -> std::io::Result<()> {\n    let data = std::fs::read(\"state.bin\")?;\n    let _ = std::fs::File::create(\"state.bin\")?;\n    drop(data);\n    Ok(())\n}\n",
+        "raw-fs",
     ),
 ];
 
@@ -701,6 +734,27 @@ mod tests {
         let tail = "fn f() {}\n\n#[cfg(test)]\nmod tests {\n    use core::arch::x86_64::__m256d;\n}\n";
         let findings = lint_file("tasks/x.rs", tail);
         assert!(findings.iter().any(|f| f.rule.name() == "raw-intrinsics"));
+    }
+
+    #[test]
+    fn raw_fs_exempts_durability_and_audited_io_homes() {
+        let bad = "fn f() {\n    let _ = std::fs::remove_file(\"wal.log\");\n}\n";
+        let findings = lint_file("coordinator/tenant.rs", bad);
+        assert!(findings.iter().any(|f| f.rule.name() == "raw-fs"));
+        // the StorageBackend homes and the audited plain-file users pass
+        assert!(lint_file("coordinator/durability/backend.rs", bad).is_empty());
+        assert!(lint_file("coordinator/durability/recover.rs", bad).is_empty());
+        assert!(lint_file("graph/io.rs", bad).is_empty());
+        assert!(lint_file("eval/table.rs", bad).is_empty());
+        assert!(lint_file("runtime/artifact.rs", bad).is_empty());
+        assert!(lint_file("main.rs", bad).is_empty());
+        // `File::create` via a `use std::fs::File` import is caught too
+        let aliased = "use std::io::Write;\nfn f(p: &str) {\n    let _ = File::create(p);\n}\n";
+        let findings = lint_file("tracking/x.rs", aliased);
+        assert!(findings.iter().any(|f| f.rule.name() == "raw-fs"));
+        // test tails may touch temp files directly
+        let tail_only = "fn f() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let _ = std::fs::remove_file(\"tmp\");\n    }\n}\n";
+        assert!(lint_file("coordinator/x.rs", tail_only).is_empty());
     }
 
     #[test]

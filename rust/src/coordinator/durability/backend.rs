@@ -1,0 +1,496 @@
+//! Storage backends for the durability tier: one byte-log abstraction
+//! ([`StorageBackend`]) with an in-memory implementation (tests, the
+//! crash harness) and a file implementation (production), mirroring the
+//! memory/file storage split of CRDT sync engines.
+//!
+//! The contract is deliberately tiny — an append-only byte log with an
+//! explicit durability point (`sync`) and an atomic whole-log `replace`
+//! — so the WAL and checkpoint layers above can be property-tested
+//! against [`Memory`] (where "crash" = discard everything after the
+//! last sync) and fault-injected through [`FaultyBackend`] without any
+//! real I/O.
+
+use crate::sync::{Arc, Mutex};
+use std::path::{Path, PathBuf};
+
+/// A storage-layer failure.  `Injected` marks faults planted by the
+/// test harness ([`FaultyBackend`]) so assertions can tell a planned
+/// crash from an unexpected I/O error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StorageError {
+    /// A real I/O error from the OS.
+    Io { op: &'static str, detail: String },
+    /// A fault planted by a [`FaultPlan`] at syscall index `syscall`.
+    Injected { op: &'static str, syscall: usize },
+}
+
+impl std::fmt::Display for StorageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StorageError::Io { op, detail } => write!(f, "storage {op} failed: {detail}"),
+            StorageError::Injected { op, syscall } => {
+                write!(f, "injected fault during {op} (syscall #{syscall})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+/// An append-only byte log with an explicit durability point.
+///
+/// Semantics the layers above rely on:
+/// - `append` buffers or writes bytes at the end of the log; bytes are
+///   NOT durable until a subsequent `sync` returns `Ok`.
+/// - `sync` makes every previously appended byte durable (group
+///   commit: one fsync covers any number of appends).
+/// - `replace` atomically swaps the entire log content (checkpoint
+///   files, WAL truncation); on return the new content is durable and
+///   a crash at any point yields either the old or the new content,
+///   never a mix.
+/// - `read_all` returns the current log content (durable prefix plus
+///   any successfully appended-but-unsynced tail that survived — after
+///   a real crash only the durable prefix remains).
+pub trait StorageBackend: Send {
+    fn read_all(&mut self) -> Result<Vec<u8>, StorageError>;
+    fn append(&mut self, bytes: &[u8]) -> Result<(), StorageError>;
+    fn sync(&mut self) -> Result<(), StorageError>;
+    fn replace(&mut self, bytes: &[u8]) -> Result<(), StorageError>;
+}
+
+/// Shared state of a [`Memory`] backend: the full byte log plus the
+/// durable high-water mark (`synced_len`).  `crash` rewinds to the
+/// durable prefix, modeling a power cut after unsynced appends.
+struct MemState {
+    data: Vec<u8>,
+    synced_len: usize,
+}
+
+/// In-memory backend.  Clones share the same underlying log, so a test
+/// can keep one handle, hand another to a tenant, drop the tenant, call
+/// [`Memory::crash`], and recover from exactly what a real file would
+/// have held.
+#[derive(Clone)]
+pub struct Memory {
+    inner: Arc<Mutex<MemState>>,
+}
+
+impl Default for Memory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Memory {
+    pub fn new() -> Memory {
+        Memory { inner: Arc::new(Mutex::new(MemState { data: Vec::new(), synced_len: 0 })) }
+    }
+
+    /// Simulate a crash: every byte appended after the last `sync` is
+    /// lost (as it would be from the page cache).
+    pub fn crash(&self) {
+        let mut st = self.inner.lock();
+        let keep = st.synced_len;
+        st.data.truncate(keep);
+    }
+
+    /// Bytes currently held (durable or not) — for test assertions.
+    pub fn len(&self) -> usize {
+        self.inner.lock().data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Corrupt the log for tests: flip one bit at `byte` (no-op past
+    /// the end).  Counts as durable damage, like media corruption.
+    pub fn flip_bit(&self, byte: usize, bit: u8) {
+        let mut st = self.inner.lock();
+        if let Some(b) = st.data.get_mut(byte) {
+            *b ^= 1 << (bit & 7);
+        }
+    }
+}
+
+impl StorageBackend for Memory {
+    fn read_all(&mut self) -> Result<Vec<u8>, StorageError> {
+        Ok(self.inner.lock().data.clone())
+    }
+
+    fn append(&mut self, bytes: &[u8]) -> Result<(), StorageError> {
+        self.inner.lock().data.extend_from_slice(bytes);
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<(), StorageError> {
+        let mut st = self.inner.lock();
+        st.synced_len = st.data.len();
+        Ok(())
+    }
+
+    fn replace(&mut self, bytes: &[u8]) -> Result<(), StorageError> {
+        let mut st = self.inner.lock();
+        st.data.clear();
+        st.data.extend_from_slice(bytes);
+        st.synced_len = st.data.len();
+        Ok(())
+    }
+}
+
+fn io_err(op: &'static str, e: std::io::Error) -> StorageError {
+    StorageError::Io { op, detail: e.to_string() }
+}
+
+/// Probe that `dir` exists (creating it if needed) and is writable —
+/// the spawn-time check behind `ConfigError::DirUnwritable`.  Lives
+/// here rather than in the coordinator because this module is the
+/// crate's only sanctioned `std::fs` user (detlint rule `raw-fs`).
+pub fn probe_dir(dir: &Path) -> Result<(), String> {
+    std::fs::create_dir_all(dir).map_err(|e| format!("create dir: {e}"))?;
+    let probe = dir.join(".write-probe");
+    std::fs::write(&probe, b"ok").map_err(|e| format!("write probe: {e}"))?;
+    let _ = std::fs::remove_file(&probe);
+    Ok(())
+}
+
+/// File-backed log.  `append` writes through an `O_APPEND` handle,
+/// `sync` is `fdatasync`, and `replace` is the classic
+/// write-temp + fsync + rename + fsync-parent-dir sequence, so a crash
+/// mid-replace leaves the old content intact.
+pub struct FileBackend {
+    path: PathBuf,
+    file: Option<std::fs::File>,
+}
+
+impl FileBackend {
+    pub fn new(path: impl Into<PathBuf>) -> FileBackend {
+        FileBackend { path: path.into(), file: None }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn handle(&mut self) -> Result<&mut std::fs::File, StorageError> {
+        if self.file.is_none() {
+            let f = std::fs::OpenOptions::new()
+                .append(true)
+                .create(true)
+                .open(&self.path)
+                .map_err(|e| io_err("open", e))?;
+            self.file = Some(f);
+        }
+        match self.file.as_mut() {
+            Some(f) => Ok(f),
+            None => Err(StorageError::Io { op: "open", detail: "handle lost".into() }),
+        }
+    }
+}
+
+impl StorageBackend for FileBackend {
+    fn read_all(&mut self) -> Result<Vec<u8>, StorageError> {
+        match std::fs::read(&self.path) {
+            Ok(bytes) => Ok(bytes),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
+            Err(e) => Err(io_err("read", e)),
+        }
+    }
+
+    fn append(&mut self, bytes: &[u8]) -> Result<(), StorageError> {
+        use std::io::Write;
+        self.handle()?.write_all(bytes).map_err(|e| io_err("append", e))
+    }
+
+    fn sync(&mut self) -> Result<(), StorageError> {
+        // nothing ever appended -> nothing to make durable
+        if let Some(f) = self.file.as_mut() {
+            f.sync_data().map_err(|e| io_err("fsync", e))?;
+        }
+        Ok(())
+    }
+
+    fn replace(&mut self, bytes: &[u8]) -> Result<(), StorageError> {
+        use std::io::Write;
+        let tmp = self.path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp).map_err(|e| io_err("create-tmp", e))?;
+            f.write_all(bytes).map_err(|e| io_err("write-tmp", e))?;
+            f.sync_all().map_err(|e| io_err("fsync-tmp", e))?;
+        }
+        std::fs::rename(&tmp, &self.path).map_err(|e| io_err("rename", e))?;
+        // make the rename itself durable: fsync the containing directory
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                let dir = std::fs::File::open(parent).map_err(|e| io_err("open-dir", e))?;
+                dir.sync_all().map_err(|e| io_err("fsync-dir", e))?;
+            }
+        }
+        // the old append handle now points at the unlinked inode
+        self.file = None;
+        Ok(())
+    }
+}
+
+/// How an injected fault manifests at the chosen syscall.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The process dies at this syscall: the op fails and every later
+    /// op fails too (nothing after this point reaches storage).
+    Kill,
+    /// A torn write: only a prefix of the bytes lands, then the
+    /// process dies.  On `replace` the rename never happens (the
+    /// atomicity contract), so the old content survives unchanged.
+    TornWrite,
+    /// Silent media corruption: the write "succeeds" but one bit is
+    /// flipped.  The process keeps running — recovery must *detect*
+    /// this via CRC, never replay it.
+    BitFlip,
+}
+
+/// One planned fault: fail the `fail_at`-th storage op (0-based, over
+/// the backend's lifetime) in the given mode.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub fail_at: usize,
+    pub mode: FaultMode,
+}
+
+struct FaultState {
+    ops: usize,
+    plan: Option<FaultPlan>,
+    dead: bool,
+}
+
+/// Shared handle to a [`FaultyBackend`]'s fault state: the harness
+/// keeps one clone to count ops on a clean reference run, then arms a
+/// plan and asserts the "process" died where intended.
+#[derive(Clone)]
+pub struct FaultHandle {
+    inner: Arc<Mutex<FaultState>>,
+}
+
+impl Default for FaultHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultHandle {
+    pub fn new() -> FaultHandle {
+        FaultHandle { inner: Arc::new(Mutex::new(FaultState { ops: 0, plan: None, dead: false })) }
+    }
+
+    /// Total storage ops issued so far (the fault-point space).
+    pub fn ops(&self) -> usize {
+        self.inner.lock().ops
+    }
+
+    /// Arm a fault at op index `fail_at`.
+    pub fn arm(&self, fail_at: usize, mode: FaultMode) {
+        self.inner.lock().plan = Some(FaultPlan { fail_at, mode });
+    }
+
+    /// Did an armed Kill/TornWrite fault fire (the "process" is dead)?
+    pub fn is_dead(&self) -> bool {
+        self.inner.lock().dead
+    }
+
+    /// Decide the fate of the op that was just issued.
+    fn admit(&self, op: &'static str) -> Result<Option<FaultPlan>, StorageError> {
+        let mut st = self.inner.lock();
+        let idx = st.ops;
+        st.ops += 1;
+        if st.dead {
+            return Err(StorageError::Injected { op, syscall: idx });
+        }
+        match st.plan {
+            Some(plan) if plan.fail_at == idx => {
+                if plan.mode != FaultMode::BitFlip {
+                    st.dead = true;
+                }
+                Ok(Some(plan))
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Wraps any backend and fails ops according to a [`FaultPlan`] — the
+/// crash harness ISSUE 10 asks for: kill at every syscall boundary,
+/// torn writes, silent bit flips.
+pub struct FaultyBackend<B: StorageBackend> {
+    inner: B,
+    state: FaultHandle,
+}
+
+impl<B: StorageBackend> FaultyBackend<B> {
+    pub fn new(inner: B, state: FaultHandle) -> FaultyBackend<B> {
+        FaultyBackend { inner, state }
+    }
+
+    pub fn handle(&self) -> FaultHandle {
+        self.state.clone()
+    }
+}
+
+impl<B: StorageBackend> StorageBackend for FaultyBackend<B> {
+    fn read_all(&mut self) -> Result<Vec<u8>, StorageError> {
+        match self.state.admit("read")? {
+            // a read can't tear or flip meaningfully mid-plan: treat
+            // any fault at a read boundary as the process dying there
+            Some(_) => {
+                self.state.inner.lock().dead = true;
+                Err(StorageError::Injected { op: "read", syscall: self.state.ops() - 1 })
+            }
+            None => self.inner.read_all(),
+        }
+    }
+
+    fn append(&mut self, bytes: &[u8]) -> Result<(), StorageError> {
+        match self.state.admit("append")? {
+            Some(FaultPlan { mode: FaultMode::Kill, fail_at }) => {
+                Err(StorageError::Injected { op: "append", syscall: fail_at })
+            }
+            Some(FaultPlan { mode: FaultMode::TornWrite, fail_at }) => {
+                let half = &bytes[..bytes.len() / 2];
+                let _ = self.inner.append(half);
+                Err(StorageError::Injected { op: "append", syscall: fail_at })
+            }
+            Some(FaultPlan { mode: FaultMode::BitFlip, .. }) => {
+                let mut flipped = bytes.to_vec();
+                if let Some(b) = flipped.get_mut(bytes.len() / 2) {
+                    *b ^= 0x10;
+                }
+                self.inner.append(&flipped)
+            }
+            None => self.inner.append(bytes),
+        }
+    }
+
+    fn sync(&mut self) -> Result<(), StorageError> {
+        match self.state.admit("sync")? {
+            Some(plan) => {
+                // a fault at the fsync boundary: the sync never
+                // happened; Kill/Torn both mean the process is gone
+                if plan.mode == FaultMode::BitFlip {
+                    self.state.inner.lock().dead = true;
+                }
+                Err(StorageError::Injected { op: "sync", syscall: plan.fail_at })
+            }
+            None => self.inner.sync(),
+        }
+    }
+
+    fn replace(&mut self, bytes: &[u8]) -> Result<(), StorageError> {
+        match self.state.admit("replace")? {
+            Some(FaultPlan { mode: FaultMode::Kill, fail_at })
+            | Some(FaultPlan { mode: FaultMode::TornWrite, fail_at }) => {
+                // atomic replace: a crash anywhere before the rename
+                // leaves the old content; the rename simply never lands
+                Err(StorageError::Injected { op: "replace", syscall: fail_at })
+            }
+            Some(FaultPlan { mode: FaultMode::BitFlip, .. }) => {
+                let mut flipped = bytes.to_vec();
+                if let Some(b) = flipped.get_mut(bytes.len() / 2) {
+                    *b ^= 0x10;
+                }
+                self.inner.replace(&flipped)
+            }
+            None => self.inner.replace(bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_crash_discards_unsynced_tail() {
+        let mem = Memory::new();
+        let mut b = mem.clone();
+        b.append(b"abc").unwrap();
+        b.sync().unwrap();
+        b.append(b"def").unwrap();
+        mem.crash();
+        assert_eq!(b.read_all().unwrap(), b"abc");
+    }
+
+    #[test]
+    fn memory_replace_is_durable() {
+        let mem = Memory::new();
+        let mut b = mem.clone();
+        b.append(b"old").unwrap();
+        b.sync().unwrap();
+        b.replace(b"new-content").unwrap();
+        mem.crash();
+        assert_eq!(b.read_all().unwrap(), b"new-content");
+    }
+
+    #[test]
+    fn faulty_kill_fails_op_and_everything_after() {
+        let h = FaultHandle::new();
+        let mut b = FaultyBackend::new(Memory::new(), h.clone());
+        b.append(b"one").unwrap(); // op 0
+        h.arm(1, FaultMode::Kill);
+        assert!(b.append(b"two").is_err()); // op 1: dies
+        assert!(h.is_dead());
+        assert!(b.sync().is_err()); // later ops all fail
+        assert_eq!(h.ops(), 3);
+    }
+
+    #[test]
+    fn faulty_torn_write_lands_half() {
+        let h = FaultHandle::new();
+        let mem = Memory::new();
+        let mut b = FaultyBackend::new(mem.clone(), h.clone());
+        h.arm(0, FaultMode::TornWrite);
+        assert!(b.append(b"abcdef").is_err());
+        assert_eq!(mem.len(), 3, "half the bytes landed");
+    }
+
+    #[test]
+    fn faulty_bit_flip_succeeds_silently() {
+        let h = FaultHandle::new();
+        let mem = Memory::new();
+        let mut b = FaultyBackend::new(mem.clone(), h.clone());
+        h.arm(0, FaultMode::BitFlip);
+        b.append(b"abcd").unwrap();
+        assert!(!h.is_dead(), "bit flip is silent");
+        assert_ne!(b.read_all().unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn faulty_replace_crash_preserves_old_content() {
+        let h = FaultHandle::new();
+        let mem = Memory::new();
+        let mut b = FaultyBackend::new(mem.clone(), h.clone());
+        b.replace(b"v1").unwrap();
+        h.arm(1, FaultMode::TornWrite);
+        assert!(b.replace(b"v2-much-longer").is_err());
+        assert_eq!(mem.clone().read_all().unwrap(), b"v1", "old content intact");
+    }
+
+    #[test]
+    fn file_backend_append_sync_replace_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("grest-backend-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.bin");
+        let _ = std::fs::remove_file(&path);
+        let mut b = FileBackend::new(&path);
+        assert_eq!(b.read_all().unwrap(), b"", "missing file reads empty");
+        b.append(b"hello ").unwrap();
+        b.append(b"world").unwrap();
+        b.sync().unwrap();
+        assert_eq!(b.read_all().unwrap(), b"hello world");
+        b.replace(b"fresh").unwrap();
+        assert_eq!(b.read_all().unwrap(), b"fresh");
+        // append after replace goes to the new inode
+        b.append(b"+tail").unwrap();
+        b.sync().unwrap();
+        assert_eq!(b.read_all().unwrap(), b"fresh+tail");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -1,0 +1,350 @@
+//! Checkpoints: a full serialized image of one tenant's tracking state
+//! — committed adjacency, id map, published eigenpairs, tracker
+//! internals ([`TrackerState`]) — written atomically through
+//! [`StorageBackend::replace`] so a crash mid-checkpoint leaves the
+//! previous checkpoint intact.
+//!
+//! Every f64 is serialized as its IEEE bit pattern (`to_bits`
+//! little-endian), so a state that round-trips through a checkpoint is
+//! *bitwise* identical — the property the crash tests assert.
+//!
+//! Format: magic `"GRCKPT01"`, then `crc32(payload): u32`, then the
+//! payload.  `replace` is atomic, so a torn checkpoint cannot exist on
+//! a well-behaved filesystem; any magic/CRC mismatch is therefore loud
+//! corruption, never silently skipped.
+
+use super::backend::StorageBackend;
+use super::wal::crc32;
+use super::DurabilityError;
+use crate::linalg::mat::Mat;
+use crate::sparse::csr::Csr;
+use crate::tracking::traits::{EigenPairs, TrackerState};
+
+const MAGIC: &[u8; 8] = b"GRCKPT01";
+
+/// A tenant's full durable state at one flush boundary.
+pub struct Checkpoint {
+    /// First WAL sequence number NOT covered by this checkpoint —
+    /// recovery replays frames with `seq >= next_seq`.
+    pub next_seq: u64,
+    /// Snapshot version at the checkpoint.
+    pub version: u64,
+    /// Wall-clock micros since the Unix epoch when the checkpointed
+    /// snapshot was published (re-anchors `snapshot_age` after restore).
+    pub wall_us: u64,
+    /// Published eigenpairs.
+    pub pairs: EigenPairs,
+    /// External ids in internal-index order (rebuilds the `IdMap`).
+    pub ids: Vec<u64>,
+    /// Committed adjacency CSR.
+    pub adjacency: Csr,
+    /// Tracker internals from [`EigTracker::save_state`]
+    /// (crate::tracking::traits::EigTracker::save_state).
+    pub tracker: TrackerState,
+}
+
+struct Writer {
+    out: Vec<u8>,
+}
+
+impl Writer {
+    fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn u64s(&mut self, vs: &[u64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    fn usizes(&mut self, vs: &[usize]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.u64(v as u64);
+        }
+    }
+
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    fn mat(&mut self, m: &Mat) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        self.f64s(m.as_slice());
+    }
+
+    fn pairs(&mut self, p: &EigenPairs) {
+        self.f64s(&p.values);
+        self.mat(&p.vectors);
+    }
+
+    fn csr(&mut self, c: &Csr) {
+        self.u64(c.n_rows as u64);
+        self.u64(c.n_cols as u64);
+        self.usizes(&c.indptr);
+        self.usizes(&c.indices);
+        self.f64s(&c.data);
+    }
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn fail(&self, detail: &str) -> DurabilityError {
+        DurabilityError::Corrupt {
+            context: "checkpoint",
+            offset: self.at as u64,
+            detail: detail.to_string(),
+        }
+    }
+
+    fn u64(&mut self) -> Result<u64, DurabilityError> {
+        let b: [u8; 8] = self
+            .data
+            .get(self.at..self.at + 8)
+            .and_then(|s| s.try_into().ok())
+            .ok_or_else(|| self.fail("truncated u64"))?;
+        self.at += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f64(&mut self) -> Result<f64, DurabilityError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len(&mut self) -> Result<usize, DurabilityError> {
+        let n = self.u64()? as usize;
+        // cheap sanity bound: a length field can never exceed the
+        // remaining bytes / 8, so corrupted lengths fail fast instead
+        // of attempting a huge allocation
+        if n > (self.data.len() - self.at) / 8 {
+            return Err(self.fail("implausible length"));
+        }
+        Ok(n)
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>, DurabilityError> {
+        let n = self.len()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn usizes(&mut self) -> Result<Vec<usize>, DurabilityError> {
+        let n = self.len()?;
+        (0..n).map(|_| self.u64().map(|v| v as usize)).collect()
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, DurabilityError> {
+        let n = self.len()?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn mat(&mut self) -> Result<Mat, DurabilityError> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let data = self.f64s()?;
+        if data.len() != rows * cols {
+            return Err(self.fail("matrix shape/data mismatch"));
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    fn pairs(&mut self) -> Result<EigenPairs, DurabilityError> {
+        let values = self.f64s()?;
+        let vectors = self.mat()?;
+        if vectors.cols() != values.len() {
+            return Err(self.fail("eigenpair k mismatch"));
+        }
+        Ok(EigenPairs { values, vectors })
+    }
+
+    fn csr(&mut self) -> Result<Csr, DurabilityError> {
+        let n_rows = self.u64()? as usize;
+        let n_cols = self.u64()? as usize;
+        let indptr = self.usizes()?;
+        let indices = self.usizes()?;
+        let data = self.f64s()?;
+        let csr = Csr { n_rows, n_cols, indptr, indices, data };
+        csr.check_invariants().map_err(|e| self.fail(&format!("invalid CSR: {e}")))?;
+        Ok(csr)
+    }
+}
+
+impl Checkpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer { out: Vec::new() };
+        w.u64(self.next_seq);
+        w.u64(self.version);
+        w.u64(self.wall_us);
+        w.pairs(&self.pairs);
+        w.u64s(&self.ids);
+        w.csr(&self.adjacency);
+        w.pairs(&self.tracker.pairs);
+        w.u64s(&self.tracker.aux_u);
+        w.f64s(&self.tracker.aux_f);
+        match &self.tracker.adjacency {
+            None => w.u64(0),
+            Some(c) => {
+                w.u64(1);
+                w.csr(c);
+            }
+        }
+        let mut out = Vec::with_capacity(12 + w.out.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&crc32(&w.out).to_le_bytes());
+        out.extend_from_slice(&w.out);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, DurabilityError> {
+        let corrupt = |offset: usize, detail: &str| DurabilityError::Corrupt {
+            context: "checkpoint",
+            offset: offset as u64,
+            detail: detail.to_string(),
+        };
+        if bytes.len() < 12 || &bytes[..8] != MAGIC {
+            return Err(corrupt(0, "bad magic"));
+        }
+        let crc_bytes: [u8; 4] =
+            bytes[8..12].try_into().map_err(|_| corrupt(8, "short crc"))?;
+        let payload = &bytes[12..];
+        if crc32(payload) != u32::from_le_bytes(crc_bytes) {
+            return Err(corrupt(8, "checkpoint CRC mismatch"));
+        }
+        let mut r = Reader { data: payload, at: 0 };
+        let next_seq = r.u64()?;
+        let version = r.u64()?;
+        let wall_us = r.u64()?;
+        let pairs = r.pairs()?;
+        let ids = r.u64s()?;
+        let adjacency = r.csr()?;
+        let t_pairs = r.pairs()?;
+        let aux_u = r.u64s()?;
+        let aux_f = r.f64s()?;
+        let t_adj = match r.u64()? {
+            0 => None,
+            1 => Some(r.csr()?),
+            _ => return Err(r.fail("bad option tag")),
+        };
+        if r.at != payload.len() {
+            return Err(r.fail("trailing bytes"));
+        }
+        Ok(Checkpoint {
+            next_seq,
+            version,
+            wall_us,
+            pairs,
+            ids,
+            adjacency,
+            tracker: TrackerState { pairs: t_pairs, aux_u, aux_f, adjacency: t_adj },
+        })
+    }
+
+    /// Atomically persist through `replace`.
+    pub fn store(&self, backend: &mut dyn StorageBackend) -> Result<(), DurabilityError> {
+        backend.replace(&self.encode())?;
+        Ok(())
+    }
+
+    /// Load the checkpoint, `None` if none was ever written.  Damage is
+    /// loud: `replace` is atomic, so a bad image is corruption, not a
+    /// torn write.
+    pub fn load(backend: &mut dyn StorageBackend) -> Result<Option<Checkpoint>, DurabilityError> {
+        let bytes = backend.read_all()?;
+        if bytes.is_empty() {
+            return Ok(None);
+        }
+        Checkpoint::decode(&bytes).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::Memory;
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut coo = crate::sparse::coo::Coo::new(3, 3);
+        coo.push_sym(0, 1, 1.0);
+        coo.push_sym(1, 2, 0.5);
+        let adjacency = coo.to_csr();
+        let pairs = EigenPairs {
+            values: vec![1.25, -0.5],
+            vectors: Mat::from_vec(3, 2, vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]),
+        };
+        Checkpoint {
+            next_seq: 7,
+            version: 3,
+            wall_us: 1_700_000_000_000_000,
+            pairs: pairs.clone(),
+            ids: vec![0, 1, 900],
+            adjacency: adjacency.clone(),
+            tracker: TrackerState {
+                pairs,
+                aux_u: vec![1, 2, 3],
+                aux_f: vec![0.25],
+                adjacency: Some(adjacency),
+            },
+        }
+    }
+
+    #[test]
+    fn encode_decode_bitwise_roundtrip() {
+        let c = sample();
+        let d = Checkpoint::decode(&c.encode()).unwrap();
+        assert_eq!(d.next_seq, c.next_seq);
+        assert_eq!(d.version, c.version);
+        assert_eq!(d.wall_us, c.wall_us);
+        assert_eq!(d.pairs.values, c.pairs.values);
+        assert_eq!(d.pairs.vectors.as_slice(), c.pairs.vectors.as_slice());
+        assert_eq!(d.ids, c.ids);
+        assert_eq!(d.adjacency.indptr, c.adjacency.indptr);
+        assert_eq!(d.adjacency.indices, c.adjacency.indices);
+        assert_eq!(d.adjacency.data, c.adjacency.data);
+        assert_eq!(d.tracker.aux_u, c.tracker.aux_u);
+        assert_eq!(d.tracker.aux_f, c.tracker.aux_f);
+        assert!(d.tracker.adjacency.is_some());
+    }
+
+    #[test]
+    fn store_load_roundtrip_and_missing_is_none() {
+        let mem = Memory::new();
+        assert!(Checkpoint::load(&mut mem.clone()).unwrap().is_none());
+        sample().store(&mut mem.clone()).unwrap();
+        let loaded = Checkpoint::load(&mut mem.clone()).unwrap().unwrap();
+        assert_eq!(loaded.version, 3);
+    }
+
+    #[test]
+    fn corrupted_checkpoint_is_loud() {
+        let mem = Memory::new();
+        sample().store(&mut mem.clone()).unwrap();
+        mem.flip_bit(40, 1);
+        match Checkpoint::load(&mut mem.clone()) {
+            Err(DurabilityError::Corrupt { context, .. }) => assert_eq!(context, "checkpoint"),
+            other => panic!("corrupt checkpoint must be loud, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn nan_values_roundtrip_bitwise() {
+        let mut c = sample();
+        c.pairs.values[0] = f64::NAN;
+        c.tracker.aux_f[0] = -0.0;
+        let d = Checkpoint::decode(&c.encode()).unwrap();
+        assert_eq!(d.pairs.values[0].to_bits(), f64::NAN.to_bits());
+        assert_eq!(d.tracker.aux_f[0].to_bits(), (-0.0f64).to_bits());
+    }
+}

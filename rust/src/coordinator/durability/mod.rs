@@ -1,0 +1,186 @@
+//! Durability tier: WAL + checkpoint/restore + crash recovery.
+//!
+//! Three layers, bottom-up:
+//!
+//! - [`backend`]: the byte-log [`StorageBackend`] abstraction (memory /
+//!   file / fault-injected), the only code in the crate that touches
+//!   `std::fs` (enforced by detlint's `raw-fs` rule).
+//! - [`wal`]: CRC32-framed append-only event log with torn-tail
+//!   detection; [`checkpoint`]: atomic full-state images with bitwise
+//!   f64 round-tripping.
+//! - [`recover`]: open both, validate their seq relationship, and hand
+//!   the coordinator what it needs to resume exactly where the durable
+//!   state left off.
+//!
+//! The ordering invariant the whole tier rests on (*log before flush*):
+//! a tenant fsyncs the events frames of a batch **before** the tracker
+//! consumes the batch, and publishes a snapshot only for state that is
+//! re-derivable from the durable log.  See docs/CONCURRENCY.md.
+
+pub mod backend;
+pub mod checkpoint;
+pub mod recover;
+pub mod wal;
+
+use crate::graph::stream::GraphEvent;
+use backend::{StorageBackend, StorageError};
+use checkpoint::Checkpoint;
+use std::path::PathBuf;
+use wal::Wal;
+
+/// Durability knobs on [`crate::coordinator::ServiceConfig`].
+#[derive(Clone, Debug)]
+pub struct DurabilityConfig {
+    /// Directory holding this tenant's `wal.log` + `checkpoint.bin`
+    /// (fleets append a per-tenant subdirectory keyed by `TenantId`).
+    pub dir: PathBuf,
+    /// Take a checkpoint every this many flushes (must be non-zero;
+    /// enforced by `ServiceConfig::validate`).
+    pub checkpoint_every: usize,
+}
+
+impl DurabilityConfig {
+    pub const DEFAULT_CHECKPOINT_EVERY: usize = 16;
+
+    pub fn new(dir: impl Into<PathBuf>) -> DurabilityConfig {
+        DurabilityConfig { dir: dir.into(), checkpoint_every: Self::DEFAULT_CHECKPOINT_EVERY }
+    }
+
+    pub fn wal_path(&self) -> PathBuf {
+        self.dir.join("wal.log")
+    }
+
+    pub fn checkpoint_path(&self) -> PathBuf {
+        self.dir.join("checkpoint.bin")
+    }
+}
+
+/// Everything that can go wrong in the durability tier.  `Corrupt` and
+/// `ReplayMismatch` are the loud-failure half of the contract: recovery
+/// either resumes bitwise-exact or reports one of these — it never
+/// silently diverges.
+#[derive(Debug)]
+pub enum DurabilityError {
+    /// The storage layer failed (I/O error or injected fault).
+    Storage(StorageError),
+    /// Durable bytes fail validation (CRC, framing, seq continuity).
+    Corrupt { context: &'static str, offset: u64, detail: String },
+    /// Replay reached a commit frame whose version disagrees with the
+    /// recomputed state — the recovered run diverged from the original.
+    ReplayMismatch { seq: u64, expected: u64, got: u64 },
+    /// The configured tracker cannot save/restore its state.
+    Unsupported(String),
+}
+
+impl From<StorageError> for DurabilityError {
+    fn from(e: StorageError) -> Self {
+        DurabilityError::Storage(e)
+    }
+}
+
+impl std::fmt::Display for DurabilityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DurabilityError::Storage(e) => write!(f, "{e}"),
+            DurabilityError::Corrupt { context, offset, detail } => {
+                write!(f, "corrupt {context} at byte {offset}: {detail}")
+            }
+            DurabilityError::ReplayMismatch { seq, expected, got } => write!(
+                f,
+                "replay diverged at wal seq {seq}: commit frame says version {expected}, \
+                 recovered state is at {got}"
+            ),
+            DurabilityError::Unsupported(what) => write!(f, "durability unsupported: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DurabilityError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DurabilityError::Storage(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Per-tenant durability state owned by the `TenantState` machine: the
+/// live WAL plus the checkpoint backend and cadence counter.  All
+/// writes happen on the worker thread inside `apply`/`flush`; `Drop`
+/// performs no I/O (a dropped tenant looks exactly like a crash, which
+/// is what the recovery path is tested against).
+pub struct TenantDurability {
+    wal: Wal,
+    ckpt_backend: Box<dyn StorageBackend>,
+    checkpoint_every: usize,
+    flushes_since_ckpt: usize,
+}
+
+impl TenantDurability {
+    pub fn new(
+        wal: Wal,
+        ckpt_backend: Box<dyn StorageBackend>,
+        checkpoint_every: usize,
+    ) -> TenantDurability {
+        TenantDurability { wal, ckpt_backend, checkpoint_every, flushes_since_ckpt: 0 }
+    }
+
+    /// Buffer an events frame (durable at the next flush's group
+    /// fsync).  Returns the framed byte count, for metrics.
+    pub fn log_events(&mut self, events: &[GraphEvent]) -> u64 {
+        let before = self.wal.buffered_len();
+        self.wal.append_events(events);
+        (self.wal.buffered_len() - before) as u64
+    }
+
+    /// Whether any frames are buffered awaiting a group fsync.
+    pub fn has_buffered(&self) -> bool {
+        self.wal.has_buffered()
+    }
+
+    /// Group-fsync everything buffered so far.  Called at the *start*
+    /// of a flush: the batch's events must be durable before the
+    /// tracker consumes them (log-before-flush).
+    pub fn sync_events(&mut self) -> Result<(), DurabilityError> {
+        self.wal.sync()
+    }
+
+    /// Log + fsync the flush boundary.  On failure the commit frame
+    /// stays buffered for the next sync; the caller publishes anyway
+    /// (the published state is re-derivable from the already-durable
+    /// events frames) and counts the failure.  Returns the framed byte
+    /// count, for metrics.
+    pub fn log_commit(&mut self, version: u64) -> Result<u64, DurabilityError> {
+        let before = self.wal.buffered_len();
+        self.wal.append_commit(version);
+        let bytes = (self.wal.buffered_len() - before) as u64;
+        self.wal.sync()?;
+        Ok(bytes)
+    }
+
+    /// Cadence: returns true when this flush should checkpoint.  Never
+    /// true while the WAL has unsynced frames — truncation would race
+    /// the buffered retry.
+    pub fn due_for_checkpoint(&mut self) -> bool {
+        self.flushes_since_ckpt += 1;
+        self.flushes_since_ckpt >= self.checkpoint_every && !self.wal.has_buffered()
+    }
+
+    /// First WAL seq not yet assigned (what a checkpoint records as
+    /// [`Checkpoint::next_seq`]).
+    pub fn wal_next_seq(&self) -> u64 {
+        self.wal.next_seq()
+    }
+
+    /// Atomically store a checkpoint, then truncate the WAL prefix it
+    /// covers.  Resets the cadence counter even on failure (retrying
+    /// every flush would turn one bad disk into a checkpoint storm).
+    pub fn record_checkpoint(&mut self, ckpt: &Checkpoint) -> Result<(), DurabilityError> {
+        self.flushes_since_ckpt = 0;
+        ckpt.store(self.ckpt_backend.as_mut())?;
+        if ckpt.next_seq > 0 {
+            self.wal.truncate_through(ckpt.next_seq - 1)?;
+        }
+        Ok(())
+    }
+}

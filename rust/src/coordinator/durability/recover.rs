@@ -1,0 +1,157 @@
+//! Recovery: open a tenant's durable state (checkpoint + WAL), validate
+//! that the two agree on sequence numbers, and package what the spawn
+//! path needs to resume tracking.
+//!
+//! The replay itself runs through the normal `TenantState` ingest/flush
+//! machinery (see `TenantState::replay`), so a recovered tenant
+//! executes the *same* code path — and therefore the same floating-
+//! point reduction orders — as the uninterrupted run.  This file only
+//! loads and validates.
+
+use super::backend::{FileBackend, StorageBackend};
+use super::checkpoint::Checkpoint;
+use super::wal::{Frame, Wal};
+use super::{DurabilityConfig, DurabilityError};
+
+/// The durable state of one tenant, loaded and cross-validated.
+pub struct Recovered {
+    /// Latest checkpoint, if one was ever written.
+    pub checkpoint: Option<Checkpoint>,
+    /// WAL frames to replay (already filtered to seqs the checkpoint
+    /// does not cover, in order).
+    pub tail: Vec<Frame>,
+    /// Bytes dropped as a torn WAL tail (0 on a clean shutdown).
+    pub truncated_bytes: u64,
+    /// The opened WAL, positioned to continue appending.
+    pub wal: Wal,
+    /// The checkpoint backend, for the next checkpoint.
+    pub ckpt_backend: Box<dyn StorageBackend>,
+}
+
+/// Open a tenant's durability directory (creating it on first run).
+pub fn load_dir(config: &DurabilityConfig) -> Result<Recovered, DurabilityError> {
+    std::fs::create_dir_all(&config.dir).map_err(|e| {
+        DurabilityError::Storage(super::backend::StorageError::Io {
+            op: "create-dir",
+            detail: format!("{}: {e}", config.dir.display()),
+        })
+    })?;
+    load(
+        Box::new(FileBackend::new(config.wal_path())),
+        Box::new(FileBackend::new(config.checkpoint_path())),
+    )
+}
+
+/// Backend-agnostic load (the crash harness drives this with [`Memory`]
+/// (super::backend::Memory) and [`FaultyBackend`]
+/// (super::backend::FaultyBackend) pairs).
+pub fn load(
+    wal_backend: Box<dyn StorageBackend>,
+    mut ckpt_backend: Box<dyn StorageBackend>,
+) -> Result<Recovered, DurabilityError> {
+    let checkpoint = Checkpoint::load(ckpt_backend.as_mut())?;
+    let next_seq = checkpoint.as_ref().map_or(0, |c| c.next_seq);
+    let (wal, scan) = Wal::open(wal_backend, next_seq)?;
+    // Frames the checkpoint already covers are a stale prefix (left
+    // behind when a crash hit between checkpoint store and WAL
+    // truncation) — skipped, not replayed.  Whatever remains must start
+    // exactly at the checkpoint's next_seq: a gap means frames that
+    // were durably logged have gone missing, which is corruption.
+    let tail: Vec<Frame> = scan.frames.into_iter().filter(|f| f.seq >= next_seq).collect();
+    if let Some(first) = tail.first() {
+        if first.seq != next_seq {
+            return Err(DurabilityError::Corrupt {
+                context: "recover",
+                offset: 0,
+                detail: format!(
+                    "checkpoint covers seqs < {next_seq} but the wal resumes at {}: \
+                     frames are missing",
+                    first.seq
+                ),
+            });
+        }
+    }
+    Ok(Recovered {
+        checkpoint,
+        tail,
+        truncated_bytes: scan.truncated_bytes,
+        wal,
+        ckpt_backend,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::Memory;
+    use super::super::checkpoint::Checkpoint;
+    use super::super::wal::{FramePayload, Wal};
+    use super::*;
+    use crate::graph::stream::GraphEvent;
+    use crate::linalg::mat::Mat;
+    use crate::sparse::csr::Csr;
+    use crate::tracking::traits::{EigenPairs, TrackerState};
+
+    fn tiny_ckpt(next_seq: u64) -> Checkpoint {
+        let pairs =
+            EigenPairs { values: vec![1.0], vectors: Mat::from_vec(1, 1, vec![1.0]) };
+        Checkpoint {
+            next_seq,
+            version: 1,
+            wall_us: 0,
+            pairs: pairs.clone(),
+            ids: vec![0],
+            adjacency: Csr::empty(1, 1),
+            tracker: TrackerState { pairs, aux_u: vec![], aux_f: vec![], adjacency: None },
+        }
+    }
+
+    #[test]
+    fn fresh_dir_recovers_empty() {
+        let r = load(Box::new(Memory::new()), Box::new(Memory::new())).unwrap();
+        assert!(r.checkpoint.is_none());
+        assert!(r.tail.is_empty());
+        assert_eq!(r.wal.next_seq(), 0);
+    }
+
+    #[test]
+    fn stale_wal_prefix_is_skipped_not_replayed() {
+        // crash between checkpoint store and wal truncation: the wal
+        // still holds frames the checkpoint covers
+        let wal_mem = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(wal_mem.clone()), 0).unwrap();
+        wal.append_events(&[GraphEvent::AddEdge(0, 1)]); // seq 0
+        wal.append_commit(1); // seq 1
+        wal.append_events(&[GraphEvent::AddEdge(1, 2)]); // seq 2
+        wal.append_commit(2); // seq 3
+        wal.sync().unwrap();
+        let ckpt_mem = Memory::new();
+        tiny_ckpt(2).store(&mut ckpt_mem.clone()).unwrap();
+        let r = load(Box::new(wal_mem), Box::new(ckpt_mem)).unwrap();
+        assert_eq!(r.tail.len(), 2, "only seqs 2..4 replay");
+        assert_eq!(r.tail[0].seq, 2);
+        assert!(matches!(r.tail[1].payload, FramePayload::Commit { version: 2 }));
+    }
+
+    #[test]
+    fn missing_frames_after_checkpoint_are_loud() {
+        // checkpoint says replay from seq 2, but the wal starts at 3
+        let wal_mem = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(wal_mem.clone()), 3).unwrap();
+        wal.append_commit(2); // seq 3
+        wal.sync().unwrap();
+        let ckpt_mem = Memory::new();
+        tiny_ckpt(2).store(&mut ckpt_mem.clone()).unwrap();
+        match load(Box::new(wal_mem), Box::new(ckpt_mem)) {
+            Err(DurabilityError::Corrupt { context, .. }) => assert_eq!(context, "recover"),
+            _ => panic!("seq gap after checkpoint must be loud"),
+        }
+    }
+
+    #[test]
+    fn empty_wal_resumes_seq_from_checkpoint() {
+        let ckpt_mem = Memory::new();
+        tiny_ckpt(9).store(&mut ckpt_mem.clone()).unwrap();
+        let r = load(Box::new(Memory::new()), Box::new(ckpt_mem)).unwrap();
+        assert_eq!(r.wal.next_seq(), 9, "seq numbering continues monotone");
+    }
+}

@@ -1,0 +1,470 @@
+//! Append-only write-ahead log of edge events.
+//!
+//! Frame format (all integers little-endian):
+//!
+//! ```text
+//! +----------+----------+----------+--------+------------------+
+//! | len: u32 | crc: u32 | seq: u64 | kind:u8|  payload bytes   |
+//! +----------+----------+----------+--------+------------------+
+//!             <-------- crc covers seq|kind|payload ---------->
+//! ```
+//!
+//! `len` counts everything after the crc field (9 + payload bytes);
+//! `seq` is a monotone +1 sequence number.  Two frame kinds exist:
+//!
+//! - **Events** (`kind=1`): a batch of [`GraphEvent`]s as ingested,
+//!   payload `count:u32` then `(tag:u8, u:u64, v:u64)` per event.  The
+//!   tag space is reserved for future event kinds (weighted edges).
+//! - **Commit** (`kind=2`): a flush boundary, payload the snapshot
+//!   `version:u64` after the flush.  Every flush logs one — including
+//!   no-op flushes — so replay reproduces the exact batch boundaries.
+//!
+//! Appends are buffered in memory and hit the backend on [`Wal::sync`]
+//! (group commit: one write + one fsync per flush boundary, not per
+//! event).  [`Wal::open`] parses the whole log, verifies CRCs and seq
+//! continuity, and distinguishes a *torn tail* (invalid bytes at the
+//! very end with no valid frame after them — the normal result of a
+//! crash mid-append, silently truncated and reported) from *corruption*
+//! (an invalid frame followed by a valid one, or a CRC/seq violation in
+//! the interior — always a loud [`DurabilityError::Corrupt`]).
+
+use super::backend::StorageBackend;
+use super::DurabilityError;
+use crate::graph::stream::GraphEvent;
+
+/// CRC32 (IEEE reflected, poly 0xEDB88320) — dependency-free, table
+/// built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+const FRAME_EVENTS: u8 = 1;
+const FRAME_COMMIT: u8 = 2;
+
+const EVENT_ADD: u8 = 1;
+const EVENT_REMOVE: u8 = 2;
+
+/// Fixed bytes before the payload: len(4) + crc(4) + seq(8) + kind(1).
+const HEADER: usize = 17;
+
+/// Decoded content of one WAL frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FramePayload {
+    /// A batch of ingested events.
+    Events(Vec<GraphEvent>),
+    /// A flush boundary; `version` is the snapshot version after it.
+    Commit { version: u64 },
+}
+
+/// One parsed WAL frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub seq: u64,
+    pub payload: FramePayload,
+}
+
+/// Encode a batch of events as a frame payload (public so the
+/// round-trip property test can drive it directly).
+pub fn encode_events(events: &[GraphEvent]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + events.len() * 17);
+    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for ev in events {
+        let (tag, u, v) = match *ev {
+            GraphEvent::AddEdge(u, v) => (EVENT_ADD, u, v),
+            GraphEvent::RemoveEdge(u, v) => (EVENT_REMOVE, u, v),
+        };
+        out.push(tag);
+        out.extend_from_slice(&u.to_le_bytes());
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> Option<u32> {
+    let b: [u8; 4] = bytes.get(at..at + 4)?.try_into().ok()?;
+    Some(u32::from_le_bytes(b))
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> Option<u64> {
+    let b: [u8; 8] = bytes.get(at..at + 8)?.try_into().ok()?;
+    Some(u64::from_le_bytes(b))
+}
+
+/// Decode an events payload.  Errors on truncation, trailing garbage,
+/// or an unknown tag (reserved tag space: readers must reject, not
+/// skip, what they don't understand).
+pub fn decode_events(payload: &[u8]) -> Result<Vec<GraphEvent>, DurabilityError> {
+    let corrupt = |detail: &str| DurabilityError::Corrupt {
+        context: "events payload",
+        offset: 0,
+        detail: detail.to_string(),
+    };
+    let count = read_u32(payload, 0).ok_or_else(|| corrupt("missing count"))? as usize;
+    let mut at = 4;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let tag = *payload.get(at).ok_or_else(|| corrupt("truncated event"))?;
+        let u = read_u64(payload, at + 1).ok_or_else(|| corrupt("truncated event"))?;
+        let v = read_u64(payload, at + 9).ok_or_else(|| corrupt("truncated event"))?;
+        at += 17;
+        out.push(match tag {
+            EVENT_ADD => GraphEvent::AddEdge(u, v),
+            EVENT_REMOVE => GraphEvent::RemoveEdge(u, v),
+            other => return Err(corrupt(&format!("unknown event tag {other}"))),
+        });
+    }
+    if at != payload.len() {
+        return Err(corrupt("trailing bytes after events"));
+    }
+    Ok(out)
+}
+
+/// Try to parse one frame at `at`.  `Ok(None)` means the bytes at `at`
+/// do not form a valid frame (short, bad CRC, bad kind, undecodable
+/// payload) — the caller decides whether that is a torn tail or
+/// corruption.  `Ok(Some((frame, next_offset)))` on success.
+fn parse_frame(data: &[u8], at: usize) -> Option<(Frame, usize)> {
+    let len = read_u32(data, at)? as usize;
+    if len < 9 || at + 8 + len > data.len() {
+        return None;
+    }
+    let crc = read_u32(data, at + 4)?;
+    let body = &data[at + 8..at + 8 + len];
+    if crc32(body) != crc {
+        return None;
+    }
+    let seq = read_u64(body, 0)?;
+    let kind = body[8];
+    let payload = &body[9..];
+    let payload = match kind {
+        FRAME_EVENTS => FramePayload::Events(decode_events(payload).ok()?),
+        FRAME_COMMIT => FramePayload::Commit { version: read_u64(payload, 0)? },
+        _ => return None,
+    };
+    Some((Frame { seq, payload }, at + 8 + len))
+}
+
+/// Result of scanning a log at open: the valid frames, plus how many
+/// trailing bytes were discarded as a torn tail (0 on a clean log).
+pub struct WalScan {
+    pub frames: Vec<Frame>,
+    pub truncated_bytes: u64,
+}
+
+/// The write-ahead log: buffered frame appends over a
+/// [`StorageBackend`], group-fsynced at flush boundaries.
+pub struct Wal {
+    backend: Box<dyn StorageBackend>,
+    buf: Vec<u8>,
+    next_seq: u64,
+}
+
+impl Wal {
+    /// Open (and validate) a log.  Torn tails are truncated in storage
+    /// and reported via [`WalScan::truncated_bytes`]; interior
+    /// corruption is a loud error.  `fallback_next_seq` seeds the
+    /// sequence counter when the log is empty (it continues from the
+    /// checkpointed seq, so a checkpoint + empty log stays monotone).
+    pub fn open(
+        mut backend: Box<dyn StorageBackend>,
+        fallback_next_seq: u64,
+    ) -> Result<(Wal, WalScan), DurabilityError> {
+        let data = backend.read_all()?;
+        let mut frames = Vec::new();
+        let mut at = 0usize;
+        let mut truncated_bytes = 0u64;
+        while at < data.len() {
+            match parse_frame(&data, at) {
+                Some((frame, next)) => {
+                    if let Some(last) = frames.last() {
+                        let last: &Frame = last;
+                        if frame.seq != last.seq + 1 {
+                            return Err(DurabilityError::Corrupt {
+                                context: "wal",
+                                offset: at as u64,
+                                detail: format!(
+                                    "sequence gap: frame {} follows {}",
+                                    frame.seq, last.seq
+                                ),
+                            });
+                        }
+                    }
+                    frames.push(frame);
+                    at = next;
+                }
+                None => {
+                    // Invalid bytes at `at`.  A torn tail is expected
+                    // after a crash mid-append; a valid frame anywhere
+                    // AFTER this point means interior damage instead.
+                    for probe in at + 1..data.len() {
+                        if parse_frame(&data, probe).is_some() {
+                            return Err(DurabilityError::Corrupt {
+                                context: "wal",
+                                offset: at as u64,
+                                detail: format!(
+                                    "invalid frame at byte {at} followed by a valid frame at \
+                                     byte {probe}: interior corruption, refusing to replay"
+                                ),
+                            });
+                        }
+                    }
+                    truncated_bytes = (data.len() - at) as u64;
+                    backend.replace(&data[..at])?;
+                    break;
+                }
+            }
+        }
+        let next_seq = match frames.last() {
+            Some(f) => f.seq + 1,
+            None => fallback_next_seq,
+        };
+        Ok((Wal { backend, buf: Vec::new(), next_seq }, WalScan { frames, truncated_bytes }))
+    }
+
+    fn push_frame(&mut self, kind: u8, payload: &[u8]) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let len = (9 + payload.len()) as u32;
+        let mut body = Vec::with_capacity(9 + payload.len());
+        body.extend_from_slice(&seq.to_le_bytes());
+        body.push(kind);
+        body.extend_from_slice(payload);
+        self.buf.extend_from_slice(&len.to_le_bytes());
+        self.buf.extend_from_slice(&crc32(&body).to_le_bytes());
+        self.buf.extend_from_slice(&body);
+        seq
+    }
+
+    /// Buffer an events frame; durable only after [`Wal::sync`].
+    pub fn append_events(&mut self, events: &[GraphEvent]) -> u64 {
+        let payload = encode_events(events);
+        self.push_frame(FRAME_EVENTS, &payload)
+    }
+
+    /// Buffer a commit (flush-boundary) frame.
+    pub fn append_commit(&mut self, version: u64) -> u64 {
+        self.push_frame(FRAME_COMMIT, &version.to_le_bytes())
+    }
+
+    /// Write buffered frames and fsync (group commit).  On failure the
+    /// buffer is retained, so a later sync retries the same bytes.
+    pub fn sync(&mut self) -> Result<(), DurabilityError> {
+        if !self.buf.is_empty() {
+            self.backend.append(&self.buf)?;
+            self.buf.clear();
+        }
+        self.backend.sync()?;
+        Ok(())
+    }
+
+    /// Are there appended-but-unsynced frames?  Checkpoints must not
+    /// run while true: a truncation would race the buffered retry.
+    pub fn has_buffered(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Bytes buffered but not yet handed to the backend (metrics).
+    pub fn buffered_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Next sequence number to be assigned.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Drop every durable frame with seq <= `through` (checkpoint
+    /// advanced past them).  Caller must ensure no buffered frames
+    /// ([`Wal::has_buffered`] is false).
+    pub fn truncate_through(&mut self, through: u64) -> Result<(), DurabilityError> {
+        debug_assert!(self.buf.is_empty(), "truncate with buffered frames");
+        let data = self.backend.read_all()?;
+        let mut at = 0usize;
+        while at < data.len() {
+            match parse_frame(&data, at) {
+                Some((frame, next)) => {
+                    if frame.seq > through {
+                        break;
+                    }
+                    at = next;
+                }
+                None => break, // torn tail past the cut point: keep it for open() to judge
+            }
+        }
+        if at > 0 {
+            self.backend.replace(&data[at..])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::Memory;
+    use super::*;
+
+    fn events(n: u64) -> Vec<GraphEvent> {
+        (0..n).map(|i| GraphEvent::AddEdge(i, i + 1)).collect()
+    }
+
+    #[test]
+    fn append_sync_reopen_roundtrip() {
+        let mem = Memory::new();
+        let (mut wal, scan) = Wal::open(Box::new(mem.clone()), 0).unwrap();
+        assert!(scan.frames.is_empty());
+        let s0 = wal.append_events(&events(3));
+        let s1 = wal.append_commit(1);
+        assert_eq!((s0, s1), (0, 1));
+        wal.sync().unwrap();
+        let (wal2, scan) = Wal::open(Box::new(mem), 0).unwrap();
+        assert_eq!(scan.truncated_bytes, 0);
+        assert_eq!(scan.frames.len(), 2);
+        assert_eq!(scan.frames[0].payload, FramePayload::Events(events(3)));
+        assert_eq!(scan.frames[1].payload, FramePayload::Commit { version: 1 });
+        assert_eq!(wal2.next_seq(), 2);
+    }
+
+    #[test]
+    fn unsynced_frames_die_with_the_process() {
+        let mem = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(mem.clone()), 0).unwrap();
+        wal.append_events(&events(2));
+        wal.append_commit(1);
+        wal.sync().unwrap();
+        wal.append_events(&events(5)); // never synced
+        mem.crash();
+        let (_, scan) = Wal::open(Box::new(mem), 0).unwrap();
+        assert_eq!(scan.frames.len(), 2, "only synced frames survive");
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_reported() {
+        let mem = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(mem.clone()), 0).unwrap();
+        wal.append_events(&events(2));
+        wal.sync().unwrap();
+        // simulate a torn append: half a frame of garbage at the end
+        {
+            use super::super::backend::StorageBackend;
+            let mut m = mem.clone();
+            m.append(&[0x55; 11]).unwrap();
+            m.sync().unwrap();
+        }
+        let (wal2, scan) = Wal::open(Box::new(mem.clone()), 0).unwrap();
+        assert_eq!(scan.frames.len(), 1);
+        assert_eq!(scan.truncated_bytes, 11);
+        assert_eq!(wal2.next_seq(), 1);
+        // the truncation is durable: a re-open sees a clean log
+        drop(wal2);
+        let (_, scan) = Wal::open(Box::new(mem), 0).unwrap();
+        assert_eq!(scan.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn interior_bit_flip_is_loud_corruption() {
+        let mem = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(mem.clone()), 0).unwrap();
+        wal.append_events(&events(2));
+        wal.append_commit(1);
+        wal.append_events(&events(2));
+        wal.append_commit(2);
+        wal.sync().unwrap();
+        mem.flip_bit(20, 3); // inside the first frame, later frames valid
+        match Wal::open(Box::new(mem), 0) {
+            Err(DurabilityError::Corrupt { .. }) => {}
+            other => panic!("interior corruption must be loud, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn final_frame_bit_flip_truncates_and_reports() {
+        let mem = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(mem.clone()), 0).unwrap();
+        wal.append_events(&events(2));
+        wal.sync().unwrap();
+        let tail = mem.len();
+        wal.append_commit(1);
+        wal.sync().unwrap();
+        mem.flip_bit(tail + 10, 2); // inside the final frame
+        let (_, scan) = Wal::open(Box::new(mem), 0).unwrap();
+        assert_eq!(scan.frames.len(), 1, "damaged final frame dropped");
+        assert!(scan.truncated_bytes > 0, "but the drop is REPORTED, never silent");
+    }
+
+    #[test]
+    fn sequence_gap_is_corruption() {
+        // splice two logs with non-contiguous seqs together
+        let mem_a = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(mem_a.clone()), 0).unwrap();
+        wal.append_commit(1); // seq 0
+        wal.sync().unwrap();
+        let mem_b = Memory::new();
+        let (mut wal_b, _) = Wal::open(Box::new(mem_b.clone()), 5).unwrap();
+        wal_b.append_commit(2); // seq 5
+        wal_b.sync().unwrap();
+        {
+            use super::super::backend::StorageBackend;
+            let spliced = [
+                mem_a.clone().read_all().unwrap(),
+                mem_b.clone().read_all().unwrap(),
+            ]
+            .concat();
+            let mut m = mem_a.clone();
+            m.replace(&spliced).unwrap();
+        }
+        match Wal::open(Box::new(mem_a), 0) {
+            Err(DurabilityError::Corrupt { detail, .. }) => {
+                assert!(detail.contains("sequence gap"), "{detail}");
+            }
+            other => panic!("seq gap must be loud, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncate_through_drops_prefix_only() {
+        let mem = Memory::new();
+        let (mut wal, _) = Wal::open(Box::new(mem.clone()), 0).unwrap();
+        wal.append_events(&events(1)); // seq 0
+        wal.append_commit(1); // seq 1
+        wal.append_events(&events(1)); // seq 2
+        wal.append_commit(2); // seq 3
+        wal.sync().unwrap();
+        wal.truncate_through(1).unwrap();
+        let (wal2, scan) = Wal::open(Box::new(mem), 10).unwrap();
+        assert_eq!(scan.frames.len(), 2);
+        assert_eq!(scan.frames[0].seq, 2);
+        assert_eq!(wal2.next_seq(), 4, "seq continues after truncation");
+    }
+
+    #[test]
+    fn empty_log_uses_fallback_seq() {
+        let (wal, _) = Wal::open(Box::new(Memory::new()), 42).unwrap();
+        assert_eq!(wal.next_seq(), 42);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC32 of "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

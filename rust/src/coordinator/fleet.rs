@@ -75,10 +75,11 @@ impl Fleet {
     pub fn spawn_budgeted(
         &self,
         id: TenantId,
-        config: ServiceConfig,
+        mut config: ServiceConfig,
         budget: TenantBudget,
     ) -> Result<ServiceHandle> {
         self.check_free(id)?;
+        scope_durability(&mut config, id);
         let svc = if config.tracker.backend == Backend::Xla {
             TrackingService::spawn_pinned_budgeted(config, budget)?
         } else {
@@ -94,11 +95,12 @@ impl Fleet {
     pub fn spawn_with_factory(
         &self,
         id: TenantId,
-        config: ServiceConfig,
+        mut config: ServiceConfig,
         budget: TenantBudget,
         factory: SendTrackerFactory,
     ) -> Result<ServiceHandle> {
         self.check_free(id)?;
+        scope_durability(&mut config, id);
         let svc = TrackingService::spawn_on_with_factory(&self.pool, config, budget, factory)?;
         self.insert(id, svc)
     }
@@ -179,6 +181,16 @@ impl Fleet {
     pub fn join(self) {}
 }
 
+/// Fleet tenants share one configured durability root; each tenant's
+/// WAL + checkpoint live in a `TenantId`-keyed subdirectory so two
+/// tenants never write the same files.  The rewrite happens *before*
+/// `ServiceConfig::validate`, which therefore probes the per-tenant dir.
+fn scope_durability(config: &mut ServiceConfig, id: TenantId) {
+    if let Some(d) = &mut config.durability {
+        d.dir = d.dir.join(id.to_string());
+    }
+}
+
 impl Drop for Fleet {
     fn drop(&mut self) {
         // retire tenants while the pool still runs (each Shutdown needs
@@ -212,7 +224,19 @@ mod tests {
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
             serve_precision: ServePrecision::F64,
+            durability: None,
         }
+    }
+
+    #[test]
+    fn durability_dirs_are_scoped_per_tenant() {
+        let mut cfg = config(1);
+        cfg.durability =
+            Some(crate::coordinator::durability::DurabilityConfig::new("/tmp/fleet-root"));
+        scope_durability(&mut cfg, TenantId(42));
+        let d = cfg.durability.unwrap();
+        assert_eq!(d.dir, std::path::Path::new("/tmp/fleet-root/tenant-42"));
+        assert!(d.wal_path().ends_with("tenant-42/wal.log"));
     }
 
     #[test]

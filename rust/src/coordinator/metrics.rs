@@ -161,6 +161,32 @@ pub struct Metrics {
     /// plus readers that blocked on such an in-flight compute (their
     /// wait is compute-shaped even though they count as cached).
     pub query_latency_computed: Histogram,
+    /// Events frames appended to the WAL (one per non-empty `Events`
+    /// command, not per event).
+    pub wal_appends: Counter,
+    /// Framed bytes appended to the WAL (events + commit frames).
+    pub wal_bytes: Counter,
+    /// WAL append/fsync operations that failed.  Event-sync failures
+    /// abort the flush (the batch retries); commit-frame failures are
+    /// tolerated and the frame retries at the next group fsync.
+    pub wal_failures: Counter,
+    /// Checkpoints written (and the covered WAL prefix truncated).
+    pub checkpoints_written: Counter,
+    /// Checkpoint attempts that failed (tracker can't save, or the
+    /// store/truncate I/O failed); the tenant keeps running off the WAL.
+    pub checkpoint_failures: Counter,
+    /// Successful crash recoveries (checkpoint load + WAL replay).
+    pub recoveries: Counter,
+    /// WAL frames replayed during recovery.
+    pub replayed_frames: Counter,
+    /// Events re-ingested from replayed frames during recovery.
+    pub replayed_events: Counter,
+    /// Torn-tail bytes discarded when opening the WAL (an interrupted
+    /// final write; anything *interior* is corruption and fails loudly
+    /// instead of counting here).
+    pub wal_truncated_bytes: Counter,
+    /// Group-fsync latency at flush boundaries (events + commit frames).
+    pub fsync_latency: Histogram,
 }
 
 impl Metrics {
@@ -200,9 +226,19 @@ impl Metrics {
         add(&self.flop_budget_overruns, &other.flop_budget_overruns);
         add(&self.resident_bytes, &other.resident_bytes);
         add(&self.mem_budget_overruns, &other.mem_budget_overruns);
+        add(&self.wal_appends, &other.wal_appends);
+        add(&self.wal_bytes, &other.wal_bytes);
+        add(&self.wal_failures, &other.wal_failures);
+        add(&self.checkpoints_written, &other.checkpoints_written);
+        add(&self.checkpoint_failures, &other.checkpoint_failures);
+        add(&self.recoveries, &other.recoveries);
+        add(&self.replayed_frames, &other.replayed_frames);
+        add(&self.replayed_events, &other.replayed_events);
+        add(&self.wal_truncated_bytes, &other.wal_truncated_bytes);
         self.update_latency.merge(&other.update_latency);
         self.query_latency_cached.merge(&other.query_latency_cached);
         self.query_latency_computed.merge(&other.query_latency_computed);
+        self.fsync_latency.merge(&other.fsync_latency);
     }
 
     pub fn report(&self) -> String {
@@ -210,7 +246,8 @@ impl Metrics {
             "events={} batches={} update_failures={} nodes_added={} update_mean={:?} \
              update_p99={:?} update_max={:?} queries_computed={} queries_cached={} \
              hit_rate={:.1}% q_computed_mean={:?} q_cached_mean={:?} flops={} \
-             resident_bytes={} budget_overruns={}/{}",
+             resident_bytes={} budget_overruns={}/{} wal_bytes={} wal_failures={} \
+             fsync_p99={:?} checkpoints={}/{} recoveries={} replayed_frames={}",
             self.events_ingested.get(),
             self.batches_applied.get(),
             self.update_failures.get(),
@@ -227,6 +264,13 @@ impl Metrics {
             self.resident_bytes.get(),
             self.flop_budget_overruns.get(),
             self.mem_budget_overruns.get(),
+            self.wal_bytes.get(),
+            self.wal_failures.get(),
+            self.fsync_latency.quantile(0.99),
+            self.checkpoints_written.get(),
+            self.checkpoint_failures.get(),
+            self.recoveries.get(),
+            self.replayed_frames.get(),
         )
     }
 }

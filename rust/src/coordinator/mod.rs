@@ -23,6 +23,7 @@
 //! through a [`fleet::Fleet`].
 
 pub mod batcher;
+pub mod durability;
 pub mod fleet;
 pub mod memo_core;
 pub mod metrics;
@@ -34,10 +35,11 @@ pub mod snapshot;
 pub mod tenant;
 
 pub use batcher::BatchPolicy;
+pub use durability::{DurabilityConfig, DurabilityError};
 pub use fleet::{Fleet, FleetConfig, TenantId};
 pub use pool::WorkerPool;
 pub use pool_core::{Stepper, SubmitError};
 pub use query::{ClusterAssignment, QueryEngine};
-pub use service::{ServiceConfig, ServiceHandle, TrackingService};
-pub use snapshot::EmbeddingSnapshot;
+pub use service::{ConfigError, ServiceConfig, ServiceHandle, TrackingService};
+pub use snapshot::{EmbeddingSnapshot, PublishStamp};
 pub use tenant::TenantBudget;

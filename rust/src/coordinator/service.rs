@@ -23,10 +23,12 @@
 //! traffic never serializes behind pending batch updates.
 
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::durability::recover::{self, Recovered};
+use crate::coordinator::durability::{backend, DurabilityConfig, TenantDurability};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::{Tenant, WorkerPool};
 use crate::coordinator::query::{ClusterAssignment, QueryEngine};
-use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
+use crate::coordinator::snapshot::{EmbeddingSnapshot, PublishStamp, SnapshotStore};
 use crate::coordinator::tenant::{Applied, TenantBudget, TenantCmd, TenantState};
 use crate::graph::graph::Graph;
 use crate::graph::stream::{DeltaBuilder, GraphEvent, IdMap};
@@ -38,6 +40,7 @@ use crate::tracking::traits::{EigTracker, EigenPairs};
 use anyhow::{anyhow, Result};
 use crate::sync::mpsc::{self, Receiver, Sender};
 use crate::sync::Arc;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Builds the tracker inside the pinned worker thread (lets callers
@@ -79,6 +82,58 @@ pub struct ServiceConfig {
     /// (see `linalg::f32mat` for the documented tolerance).  The update
     /// step is unaffected either way.
     pub serve_precision: ServePrecision,
+    /// Durability: when set, the tenant logs every ingested event to a
+    /// WAL under this directory, checkpoints its full state every
+    /// `checkpoint_every` flushes, and recovers from both at spawn.
+    /// `None` (the default everywhere pre-existing) runs purely in
+    /// memory.
+    ///
+    /// Recovery contract: re-spawning with the *same* `initial` graph
+    /// and durability dir resumes bitwise-exactly where the durable
+    /// state left off.
+    pub durability: Option<DurabilityConfig>,
+}
+
+/// A [`ServiceConfig`] that cannot work, caught at spawn instead of
+/// surfacing as a confusing runtime failure.
+#[derive(Debug)]
+pub enum ConfigError {
+    /// `DurabilityConfig::checkpoint_every` is zero — the cadence
+    /// "checkpoint every 0 flushes" has no meaning.
+    ZeroCheckpointInterval,
+    /// The durability directory cannot be created or written.
+    DirUnwritable { path: PathBuf, detail: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroCheckpointInterval => {
+                write!(f, "durability.checkpoint_every must be >= 1")
+            }
+            ConfigError::DirUnwritable { path, detail } => {
+                write!(f, "durability dir {} is not writable: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl ServiceConfig {
+    /// Validate cross-field invariants (currently: the durability
+    /// block).  Every spawn path calls this first.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if let Some(d) = &self.durability {
+            if d.checkpoint_every == 0 {
+                return Err(ConfigError::ZeroCheckpointInterval);
+            }
+            if let Err(detail) = backend::probe_dir(&d.dir) {
+                return Err(ConfigError::DirUnwritable { path: d.dir.clone(), detail });
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Where the tenant lives: on a shared pool, or on its own pinned
@@ -243,21 +298,23 @@ impl TrackingService {
         budget: TenantBudget,
         factory: SendTrackerFactory,
     ) -> Result<TrackingService> {
+        config.validate()?;
         let a0 = config.initial.adjacency();
         let init = crate::tracking::traits::init_eigenpairs(&a0, config.k, config.seed);
         // built synchronously on the caller's thread: a broken factory
         // (or a @xla spec routed here) fails the spawn directly
         let tracker = factory(&a0, &init)?;
         let (store, metrics, query) = read_side(&a0, &init, &config);
-        let state = TenantState::new(
+        let state = build_state(
             tracker,
-            DeltaBuilder::from_graph(config.initial),
+            config.initial,
             a0,
             config.policy,
-            store.clone(),
-            metrics.clone(),
+            config.durability,
             budget,
-        );
+            &store,
+            &metrics,
+        )?;
         let tenant = pool.register(state);
         let handle = ServiceHandle {
             tenant: TenantRef::Pooled { pool: pool.clone(), tenant },
@@ -308,6 +365,7 @@ impl TrackingService {
         budget: TenantBudget,
         factory: TrackerFactory,
     ) -> Result<TrackingService> {
+        config.validate()?;
         let a0 = config.initial.adjacency();
         let init = crate::tracking::traits::init_eigenpairs(&a0, config.k, config.seed);
         let (store, metrics, query) = read_side(&a0, &init, &config);
@@ -319,6 +377,7 @@ impl TrackingService {
             query,
         };
         let cfg_policy = config.policy;
+        let durability = config.durability;
         let initial_graph = config.initial;
         // the worker reports whether the factory succeeded, so a broken
         // tracker spec (e.g. missing XLA artifacts) surfaces here as an
@@ -334,6 +393,7 @@ impl TrackingService {
                     init,
                     factory,
                     cfg_policy,
+                    durability,
                     store,
                     metrics,
                     budget,
@@ -386,7 +446,7 @@ fn read_side(
         // the seed graph's external ids are 0..n by the
         // DeltaBuilder::from_graph contract
         ids: Arc::new(IdMap::identity(a0.n_rows)),
-        published_at: Instant::now(),
+        published_at: PublishStamp::now(),
     });
     let metrics = Metrics::new();
     let query = Arc::new(QueryEngine::with_precision(
@@ -396,6 +456,88 @@ fn read_side(
         config.serve_precision,
     ));
     (store, metrics, query)
+}
+
+/// Build the tenant state machine shared by the pooled and pinned
+/// spawn paths.  Without durability this is just `TenantState::new`
+/// over the initial graph.  With durability it is the recovery flow:
+/// load the latest checkpoint (restore builder + adjacency + tracker +
+/// version + published snapshot), replay the WAL tail through the
+/// normal flush path, then attach the WAL for live logging.
+#[allow(clippy::too_many_arguments)]
+fn build_state<T: ?Sized + EigTracker>(
+    tracker: Box<T>,
+    initial: Graph,
+    a0: Csr,
+    policy: BatchPolicy,
+    durability: Option<DurabilityConfig>,
+    budget: TenantBudget,
+    store: &SnapshotStore,
+    metrics: &Arc<Metrics>,
+) -> Result<TenantState<T>> {
+    let Some(dcfg) = durability else {
+        return Ok(TenantState::new(
+            tracker,
+            DeltaBuilder::from_graph(initial),
+            a0,
+            policy,
+            store.clone(),
+            metrics.clone(),
+            budget,
+        ));
+    };
+    let Recovered { checkpoint, tail, truncated_bytes, wal, ckpt_backend } =
+        recover::load_dir(&dcfg)?;
+    metrics.wal_truncated_bytes.add(truncated_bytes);
+    let recovered_something = checkpoint.is_some() || !tail.is_empty();
+    let mut tracker = tracker;
+    let mut state = match checkpoint {
+        Some(ckpt) => {
+            tracker.restore_state(ckpt.tracker)?;
+            let builder = DeltaBuilder::from_committed(&ckpt.adjacency, ckpt.ids.clone());
+            let mut st = TenantState::new(
+                tracker,
+                builder,
+                ckpt.adjacency.clone(),
+                policy,
+                store.clone(),
+                metrics.clone(),
+                budget,
+            );
+            st.restore_version(ckpt.version);
+            // checkpoints are only taken after a successful flush, so
+            // version >= 1 always holds here; the guard keeps a
+            // hand-built version-0 checkpoint from tripping the
+            // store's monotonicity assert
+            if ckpt.version > 0 {
+                store.publish(EmbeddingSnapshot {
+                    version: ckpt.version,
+                    n_nodes: ckpt.adjacency.n_rows,
+                    pairs: ckpt.pairs,
+                    ids: Arc::new(IdMap::from_externals(ckpt.ids)),
+                    published_at: PublishStamp::restored(ckpt.wall_us),
+                });
+            }
+            st
+        }
+        // no checkpoint yet: the WAL replays on top of the configured
+        // initial graph (the caller must re-spawn with the same one)
+        None => TenantState::new(
+            tracker,
+            DeltaBuilder::from_graph(initial),
+            a0,
+            policy,
+            store.clone(),
+            metrics.clone(),
+            budget,
+        ),
+    };
+    state.replay(&tail)?;
+    if recovered_something {
+        metrics.recoveries.incr();
+    }
+    state.attach_durability(TenantDurability::new(wal, ckpt_backend, dcfg.checkpoint_every));
+    Ok(state)
 }
 
 /// Dedicated-thread driver: the same [`TenantState`] machine the pool
@@ -409,30 +551,34 @@ fn pinned_loop(
     init: EigenPairs,
     factory: TrackerFactory,
     policy: BatchPolicy,
+    durability: Option<DurabilityConfig>,
     store: SnapshotStore,
     metrics: Arc<Metrics>,
     budget: TenantBudget,
     ready: Sender<Result<()>>,
 ) {
-    let tracker = match factory(&a0, &init) {
-        Ok(t) => {
+    let built = factory(&a0, &init).and_then(|tracker| {
+        build_state(
+            tracker,
+            initial_graph,
+            a0,
+            policy,
+            durability,
+            budget,
+            &store,
+            &metrics,
+        )
+    });
+    let mut state: TenantState<dyn EigTracker> = match built {
+        Ok(s) => {
             let _ = ready.send(Ok(()));
-            t
+            s
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let mut state: TenantState<dyn EigTracker> = TenantState::new(
-        tracker,
-        DeltaBuilder::from_graph(initial_graph),
-        a0,
-        policy,
-        store,
-        metrics,
-        budget,
-    );
     loop {
         let cmd = match state.next_deadline() {
             None => match rx.recv() {
@@ -485,6 +631,7 @@ mod tests {
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
             serve_precision: ServePrecision::F64,
+            durability: None,
         })
         .unwrap();
         let h = &svc.handle;
@@ -525,6 +672,7 @@ mod tests {
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
             serve_precision: ServePrecision::F64,
+            durability: None,
         })
         .unwrap();
         let h = &svc.handle;
@@ -578,6 +726,7 @@ mod tests {
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
                 serve_precision: ServePrecision::F64,
+                durability: None,
             })
             .unwrap();
             let got = svc.handle.clusters(3);
@@ -633,6 +782,7 @@ mod tests {
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
                 serve_precision: ServePrecision::F64,
+                durability: None,
             },
             Box::new(|_a0, init| {
                 Ok(Box::new(Flaky {
@@ -673,6 +823,7 @@ mod tests {
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
             serve_precision: ServePrecision::F64,
+            durability: None,
         })
         .unwrap();
         let h = &svc.handle;
@@ -721,6 +872,7 @@ mod tests {
             tracker: TrackerSpec::default(),
             threads: Threads::SINGLE,
             serve_precision: ServePrecision::F64,
+            durability: None,
         })
         .unwrap();
         let h = svc.handle.clone();
@@ -756,6 +908,7 @@ mod tests {
             tracker: TrackerSpec::parse("grest2").unwrap(),
             threads: Threads::SINGLE,
             serve_precision: ServePrecision::F64,
+            durability: None,
         })
         .unwrap();
         let h = &svc.handle;
@@ -787,6 +940,7 @@ mod tests {
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
                 serve_precision: ServePrecision::F64,
+                durability: None,
             },
             Box::new(|_a0, _init| anyhow::bail!("artifacts missing")),
         );
@@ -806,6 +960,7 @@ mod tests {
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
                 serve_precision: ServePrecision::F64,
+                durability: None,
             },
             TenantBudget::default(),
             Box::new(|_a0, _init| anyhow::bail!("artifacts missing")),
@@ -827,6 +982,7 @@ mod tests {
             tracker: TrackerSpec::parse("trip@xla").unwrap(),
             threads: Threads::SINGLE,
             serve_precision: ServePrecision::F64,
+            durability: None,
         });
         match res {
             Ok(_) => panic!("trip@xla must be rejected before the worker spawns"),
@@ -847,6 +1003,7 @@ mod tests {
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
                 serve_precision: ServePrecision::F64,
+                durability: None,
             };
             let svc = if pinned {
                 TrackingService::spawn_pinned(config()).unwrap()
@@ -880,6 +1037,7 @@ mod tests {
                 tracker: TrackerSpec::default(),
                 threads: Threads::SINGLE,
                 serve_precision: ServePrecision::F64,
+                durability: None,
             };
             let svc = if pinned {
                 TrackingService::spawn_pinned(config).unwrap()

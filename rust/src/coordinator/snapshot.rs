@@ -11,6 +11,58 @@
 use crate::graph::stream::IdMap;
 use crate::sync::{Arc, RwLock};
 use crate::tracking::traits::EigenPairs;
+use std::time::{Duration, Instant, SystemTime};
+
+/// When a snapshot was published, on two clocks at once.
+///
+/// `snapshot_age` must come from a *monotonic* clock (wall clocks jump
+/// under NTP skew), but a monotonic anchor alone cannot round-trip
+/// through a checkpoint — `Instant` means nothing across processes.  So
+/// a stamp carries both: a monotonic anchor for age arithmetic in this
+/// process, and wall-clock micros for the checkpoint.  After restore,
+/// `base` pre-loads the age with the wall-clock elapsed time (clamped
+/// at zero, so backwards skew can never yield a negative age) and the
+/// anchor restarts monotone from there.
+#[derive(Clone, Copy, Debug)]
+pub struct PublishStamp {
+    anchor: Instant,
+    base: Duration,
+    wall_us: u64,
+}
+
+impl PublishStamp {
+    /// Stamp for a snapshot published right now.
+    pub fn now() -> PublishStamp {
+        let wall_us = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map_or(0, |d| d.as_micros() as u64);
+        PublishStamp { anchor: Instant::now(), base: Duration::ZERO, wall_us }
+    }
+
+    /// Stamp for a snapshot restored from a checkpoint that recorded
+    /// `wall_us`.  The reported age starts at the wall-clock elapsed
+    /// time since the original publish — or zero if the clock moved
+    /// backwards meanwhile — and grows monotonically from there.
+    pub fn restored(wall_us: u64) -> PublishStamp {
+        let now_us = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map_or(0, |d| d.as_micros() as u64);
+        let base = Duration::from_micros(now_us.saturating_sub(wall_us));
+        PublishStamp { anchor: Instant::now(), base, wall_us }
+    }
+
+    /// Monotone age: never decreases, never negative, regardless of
+    /// wall-clock skew.
+    pub fn age(&self) -> Duration {
+        self.base + self.anchor.elapsed()
+    }
+
+    /// Wall-clock micros since the Unix epoch at the original publish
+    /// (what checkpoints persist).
+    pub fn wall_us(&self) -> u64 {
+        self.wall_us
+    }
+}
 
 /// An immutable published embedding state.
 pub struct EmbeddingSnapshot {
@@ -23,8 +75,9 @@ pub struct EmbeddingSnapshot {
     /// Internal-index ↔ external-id mapping frozen at the batch commit;
     /// covers exactly the rows of `pairs.vectors`.
     pub ids: Arc<IdMap>,
-    /// Wall time of publication.
-    pub published_at: std::time::Instant,
+    /// When this snapshot was published (checkpoint-aware monotone
+    /// clock).
+    pub published_at: PublishStamp,
 }
 
 impl EmbeddingSnapshot {
@@ -38,9 +91,10 @@ impl EmbeddingSnapshot {
         Some((0..self.pairs.k()).map(|j| self.pairs.vectors.get(i, j)).collect())
     }
 
-    /// Wall-clock age of this snapshot (time since publication).
-    pub fn age(&self) -> std::time::Duration {
-        self.published_at.elapsed()
+    /// Age of this snapshot (time since publication) on the monotone
+    /// clock — safe against wall-clock skew, checkpoint-aware.
+    pub fn age(&self) -> Duration {
+        self.published_at.age()
     }
 }
 
@@ -90,7 +144,7 @@ mod tests {
             n_nodes: n,
             pairs: EigenPairs { values: vec![1.0], vectors: Mat::zeros(n, 1) },
             ids: Arc::new(IdMap::identity(n)),
-            published_at: std::time::Instant::now(),
+            published_at: PublishStamp::now(),
         }
     }
 
@@ -123,11 +177,40 @@ mod tests {
             n_nodes: 3,
             pairs: EigenPairs { values: vec![2.0, 1.0], vectors },
             ids: Arc::new(IdMap::from_externals(vec![5, 900, 7])),
-            published_at: std::time::Instant::now(),
+            published_at: PublishStamp::now(),
         };
         assert_eq!(s.embedding(900), Some(vec![10.0, 11.0]));
         assert_eq!(s.embedding(7), Some(vec![20.0, 21.0]));
         assert_eq!(s.embedding(1234), None);
+    }
+
+    #[test]
+    fn publish_stamp_age_is_monotone_and_never_negative() {
+        // regression: `published_at` was an Instant that couldn't
+        // round-trip a checkpoint; a wall-clock-based replacement would
+        // go negative under backwards NTP skew.  The stamp must (a)
+        // report non-decreasing ages and (b) clamp at zero when the
+        // recorded wall time is in the "future" (clock skew).
+        let live = PublishStamp::now();
+        let a0 = live.age();
+        let a1 = live.age();
+        assert!(a1 >= a0, "age must be monotone");
+
+        // restore from a checkpoint written 5 simulated seconds ago:
+        // age starts around 5s, not zero
+        let old = PublishStamp::now().wall_us().saturating_sub(5_000_000);
+        let restored = PublishStamp::restored(old);
+        assert!(restored.age() >= Duration::from_secs(4), "age carries across restore");
+        assert_eq!(restored.wall_us(), old, "wall anchor survives for the next checkpoint");
+
+        // wall clock moved BACKWARDS between publish and restore: the
+        // stamp clamps to zero instead of underflowing
+        let future = PublishStamp::now().wall_us() + 3_600_000_000;
+        let skewed = PublishStamp::restored(future);
+        assert!(skewed.age() < Duration::from_secs(3600), "skew must not inflate age");
+        let b0 = skewed.age();
+        let b1 = skewed.age();
+        assert!(b1 >= b0, "still monotone under skew");
     }
 
     #[test]

@@ -16,9 +16,12 @@
 //! (PJRT state never leaves its thread).
 
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::durability::checkpoint::Checkpoint;
+use crate::coordinator::durability::wal::{Frame, FramePayload};
+use crate::coordinator::durability::{DurabilityError, TenantDurability};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool_core::Stepper;
-use crate::coordinator::snapshot::{EmbeddingSnapshot, SnapshotStore};
+use crate::coordinator::snapshot::{EmbeddingSnapshot, PublishStamp, SnapshotStore};
 use crate::graph::stream::{DeltaBuilder, GraphEvent};
 use crate::sparse::csr::Csr;
 use crate::sync::mpsc::Sender;
@@ -85,6 +88,10 @@ pub struct TenantState<T: ?Sized + EigTracker = dyn EigTracker + Send> {
     /// "now" so a broken tracker under a `max_age` policy retries at
     /// the deadline cadence instead of hot-spinning.
     pending_since: Option<Instant>,
+    /// WAL + checkpoint sink; `None` runs the tenant purely in memory.
+    /// Attached *after* recovery replay, so replayed flushes never
+    /// re-log the frames they came from.
+    durability: Option<TenantDurability>,
     tracker: Box<T>,
 }
 
@@ -108,6 +115,7 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
             budget,
             version: 0,
             pending_since: None,
+            durability: None,
             tracker,
         }
     }
@@ -117,10 +125,36 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
         self.version
     }
 
+    /// Attach the WAL + checkpoint sink.  Must happen *after*
+    /// [`replay`](TenantState::replay) during recovery — a replayed
+    /// flush with durability attached would append the frames it is
+    /// replaying back onto the log.
+    pub fn attach_durability(&mut self, d: TenantDurability) {
+        self.durability = Some(d);
+    }
+
+    /// Overwrite the snapshot version counter.  Recovery uses this to
+    /// resume numbering from the checkpointed version before replaying
+    /// the WAL tail; published versions stay monotone across the crash.
+    pub fn restore_version(&mut self, version: u64) {
+        self.version = version;
+    }
+
     /// Apply one command.
     pub fn apply(&mut self, cmd: TenantCmd) -> Applied {
         match cmd {
             TenantCmd::Events(events) => {
+                // Log the batch as *received* (self-loops and all):
+                // replay pushes the identical sequence through the same
+                // builder path, so the pending counters — and therefore
+                // the policy decisions — reproduce exactly.
+                if let Some(d) = self.durability.as_mut() {
+                    if !events.is_empty() {
+                        let bytes = d.log_events(&events);
+                        self.metrics.wal_appends.incr();
+                        self.metrics.wal_bytes.add(bytes);
+                    }
+                }
                 for ev in events {
                     self.builder.push(ev);
                 }
@@ -154,12 +188,22 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
     /// the committed CSR advances by row-merge and a new snapshot
     /// publishes.
     pub fn flush(&mut self) {
+        // Log-before-flush: every event frame of this batch must be
+        // durable before the tracker consumes it.  A failed fsync
+        // aborts the flush — the batch stays pending and retries at
+        // the deadline cadence — so published state never runs ahead
+        // of the log.
+        if !self.sync_wal_events() {
+            return;
+        }
         match self.builder.prepare() {
             // batch netted out to no change: drop the pending events,
-            // committed state is already consistent
+            // committed state is already consistent — but the commit
+            // frame still goes down so replay reproduces the boundary
             None => {
                 self.builder.commit();
                 self.pending_since = None;
+                self.log_commit_frame();
             }
             Some(delta) => {
                 let t0 = Instant::now();
@@ -179,19 +223,25 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
                         self.adjacency = self.adjacency.apply_delta(&delta);
                         self.charge_budget();
                         self.version += 1;
+                        self.log_commit_frame();
+                        let stamp = PublishStamp::now();
                         self.store.publish(EmbeddingSnapshot {
                             version: self.version,
                             n_nodes: self.adjacency.n_rows,
                             pairs: self.tracker.current().clone(),
                             // O(1): Arc clone, copy-on-write at commit
                             ids: self.builder.committed_ids(),
-                            published_at: Instant::now(),
+                            published_at: stamp,
                         });
+                        self.maybe_checkpoint(stamp.wall_us());
                     }
                     Err(_) => {
                         // batch stays pending; the next flush retries
                         // the accumulated delta against the same
-                        // committed state
+                        // committed state.  No commit frame: replay
+                        // will fold this batch into the next
+                        // successful flush, exactly as the live run
+                        // did.
                         self.metrics.update_failures.incr();
                         if self.pending_since.is_some() {
                             self.pending_since = Some(Instant::now());
@@ -200,6 +250,130 @@ impl<T: ?Sized + EigTracker> TenantState<T> {
                 }
             }
         }
+    }
+
+    /// Fsync any buffered WAL frames (this batch's events, plus a
+    /// commit frame left over from an earlier failed sync).  Returns
+    /// `false` — aborting the flush — when the log could not be made
+    /// durable.
+    fn sync_wal_events(&mut self) -> bool {
+        let Some(d) = self.durability.as_mut() else { return true };
+        if !d.has_buffered() {
+            return true;
+        }
+        let t0 = Instant::now();
+        match d.sync_events() {
+            Ok(()) => {
+                self.metrics.fsync_latency.observe(t0.elapsed());
+                true
+            }
+            Err(_) => {
+                self.metrics.wal_failures.incr();
+                if self.pending_since.is_some() {
+                    self.pending_since = Some(Instant::now());
+                }
+                false
+            }
+        }
+    }
+
+    /// Append + sync this flush's commit frame.  Failure is counted
+    /// but does not block the publish: the published state is
+    /// re-derivable from the already-durable event frames, and the
+    /// buffered frame retries at the next flush's sync.
+    fn log_commit_frame(&mut self) {
+        let Some(d) = self.durability.as_mut() else { return };
+        let t0 = Instant::now();
+        match d.log_commit(self.version) {
+            Ok(bytes) => {
+                self.metrics.fsync_latency.observe(t0.elapsed());
+                self.metrics.wal_bytes.add(bytes);
+            }
+            Err(_) => self.metrics.wal_failures.incr(),
+        }
+    }
+
+    /// Write a checkpoint when the cadence says so.  Failures are
+    /// counted and the tenant keeps running off the WAL alone.
+    fn maybe_checkpoint(&mut self, wall_us: u64) {
+        let due = match self.durability.as_mut() {
+            Some(d) => d.due_for_checkpoint(),
+            None => false,
+        };
+        if !due {
+            return;
+        }
+        let tracker_state = match self.tracker.save_state() {
+            Ok(st) => st,
+            Err(_) => {
+                // tracker can't checkpoint: count it and keep running
+                // off the WAL alone
+                self.metrics.checkpoint_failures.incr();
+                return;
+            }
+        };
+        let ckpt = Checkpoint {
+            next_seq: match self.durability.as_ref() {
+                Some(d) => d.wal_next_seq(),
+                None => return,
+            },
+            version: self.version,
+            wall_us,
+            pairs: self.tracker.current().clone(),
+            ids: self.builder.committed_ids().externals().to_vec(),
+            adjacency: self.adjacency.clone(),
+            tracker: tracker_state,
+        };
+        let Some(d) = self.durability.as_mut() else { return };
+        match d.record_checkpoint(&ckpt) {
+            Ok(()) => self.metrics.checkpoints_written.incr(),
+            Err(_) => self.metrics.checkpoint_failures.incr(),
+        }
+    }
+
+    /// Push events into the pending batch without logging or policy
+    /// checks — recovery's replay path.
+    fn ingest_replayed(&mut self, events: &[GraphEvent]) {
+        for &ev in events {
+            self.builder.push(ev);
+        }
+        let (n_ev, new_nodes) =
+            (self.builder.pending_events(), self.builder.pending_new_nodes());
+        if (n_ev > 0 || new_nodes > 0) && self.pending_since.is_none() {
+            self.pending_since = Some(Instant::now());
+        }
+    }
+
+    /// Re-drive the WAL tail through the normal flush path.  Events
+    /// frames refill the pending batch; each commit frame closes it
+    /// with a flush and cross-checks the resulting version against the
+    /// one the frame recorded — any divergence is a loud
+    /// [`DurabilityError::ReplayMismatch`], never a silent drift.
+    ///
+    /// Call *before* [`attach_durability`](TenantState::attach_durability):
+    /// a replayed flush with durability attached would append the very
+    /// frames it is replaying back onto the log.
+    pub fn replay(&mut self, frames: &[Frame]) -> Result<(), DurabilityError> {
+        for f in frames {
+            match &f.payload {
+                FramePayload::Events(events) => {
+                    self.metrics.replayed_events.add(events.len() as u64);
+                    self.ingest_replayed(events);
+                }
+                FramePayload::Commit { version } => {
+                    self.flush();
+                    if self.version != *version {
+                        return Err(DurabilityError::ReplayMismatch {
+                            seq: f.seq,
+                            expected: *version,
+                            got: self.version,
+                        });
+                    }
+                }
+            }
+            self.metrics.replayed_frames.incr();
+        }
+        Ok(())
     }
 
     /// Charge the just-applied batch against the tenant's budget.
@@ -320,7 +494,7 @@ mod tests {
             n_nodes: a0.n_rows,
             pairs: init,
             ids: Arc::new(IdMap::identity(a0.n_rows)),
-            published_at: Instant::now(),
+            published_at: PublishStamp::now(),
         });
         let metrics = Metrics::new();
         let state = TenantState::new(
@@ -387,7 +561,7 @@ mod tests {
             n_nodes: a0.n_rows,
             pairs: init,
             ids: Arc::new(IdMap::identity(a0.n_rows)),
-            published_at: Instant::now(),
+            published_at: PublishStamp::now(),
         });
         let metrics = Metrics::new();
         let mut state = TenantState::new(

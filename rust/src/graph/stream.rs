@@ -15,6 +15,7 @@
 
 use crate::graph::graph::Graph;
 use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
 use crate::sparse::delta::Delta;
 use std::collections::HashMap;
 use crate::sync::Arc;
@@ -137,6 +138,36 @@ impl DeltaBuilder {
             ids,
             externals: (0..n as u64).collect(),
             committed_map: Arc::new(IdMap::identity(n)),
+            committed_nodes: n,
+            pending_events: 0,
+            net: HashMap::new(),
+        }
+    }
+
+    /// Rebuild a builder whose committed state is an existing adjacency
+    /// with its intern-order external-id list — the checkpoint-restore
+    /// path.  The working graph is reconstructed edge-by-edge from the
+    /// CSR's upper triangle, so a builder restored from a checkpoint is
+    /// indistinguishable from one that ingested the original stream and
+    /// committed at the same point.
+    pub fn from_committed(adjacency: &Csr, externals: Vec<u64>) -> DeltaBuilder {
+        let n = externals.len();
+        debug_assert_eq!(adjacency.n_rows, n, "id list must cover the adjacency");
+        let mut graph = Graph::with_nodes(n);
+        for u in 0..adjacency.n_rows.min(n) {
+            for p in adjacency.indptr[u]..adjacency.indptr[u + 1] {
+                let v = adjacency.indices[p];
+                if u < v && v < n && adjacency.data[p] != 0.0 {
+                    graph.add_edge(u, v);
+                }
+            }
+        }
+        let ids = externals.iter().enumerate().map(|(i, &e)| (e, i)).collect();
+        DeltaBuilder {
+            graph,
+            ids,
+            externals: externals.clone(),
+            committed_map: Arc::new(IdMap::from_externals(externals)),
             committed_nodes: n,
             pending_events: 0,
             net: HashMap::new(),
@@ -389,6 +420,40 @@ mod tests {
         b.commit();
         assert!(!Arc::ptr_eq(&before, &b.committed_ids()));
         assert_eq!(b.committed_ids().internal(600), Some(5));
+    }
+
+    #[test]
+    fn from_committed_reconstructs_builder_exactly() {
+        // build a committed state the streaming way...
+        let mut b = DeltaBuilder::new();
+        b.push(GraphEvent::AddEdge(10, 20));
+        b.push(GraphEvent::AddEdge(20, 30));
+        b.push(GraphEvent::AddEdge(30, 77));
+        b.push(GraphEvent::RemoveEdge(10, 20));
+        b.commit();
+        let committed = b.graph().adjacency();
+        // ...then restore from (adjacency, externals) as recovery does
+        let mut r = DeltaBuilder::from_committed(
+            &committed,
+            b.committed_ids().externals().to_vec(),
+        );
+        assert_eq!(r.committed_nodes(), b.committed_nodes());
+        assert_eq!(r.committed_ids().externals(), b.committed_ids().externals());
+        let ra = r.graph().adjacency();
+        assert_eq!(ra.indptr, committed.indptr);
+        assert_eq!(ra.indices, committed.indices);
+        assert_eq!(ra.data, committed.data);
+        // identical follow-up batches yield identical deltas
+        for x in [&mut b, &mut r] {
+            x.push(GraphEvent::AddEdge(20, 30)); // existing edge: no-op
+            x.push(GraphEvent::AddEdge(77, 99)); // new node
+            x.push(GraphEvent::RemoveEdge(20, 30));
+        }
+        let (db, dr) = (b.emit().unwrap(), r.emit().unwrap());
+        assert_eq!(db.full.indptr, dr.full.indptr);
+        assert_eq!(db.full.indices, dr.full.indices);
+        assert_eq!(db.full.data, dr.full.data);
+        assert_eq!(b.committed_ids().externals(), r.committed_ids().externals());
     }
 
     #[test]

@@ -122,6 +122,18 @@ impl Rng {
     pub fn fork(&mut self) -> Rng {
         Rng::new(self.next_u64() ^ 0xDEADBEEFCAFEF00D)
     }
+
+    /// Full generator state (xoshiro words + the cached Box–Muller
+    /// spare), for checkpointing.  [`Rng::from_state`] round-trips it
+    /// bitwise, so a restored generator emits the identical stream.
+    pub fn state_words(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare)
+    }
+
+    /// Rebuild a generator from [`Rng::state_words`] output.
+    pub fn from_state(s: [u64; 4], spare: Option<f64>) -> Rng {
+        Rng { s, spare }
+    }
 }
 
 #[cfg(test)]

@@ -9,7 +9,12 @@
 //!                                  run one tracker over one dataset, or a
 //!                                  side-by-side comparison of several
 //!   serve-demo [--events N] [--tracker SPEC] [--serve-precision f64|f32]
-//!                                  run the streaming coordinator demo
+//!              [--durability DIR] [--checkpoint-every N]
+//!                                  run the streaming coordinator demo;
+//!                                  with --durability, events WAL to DIR,
+//!                                  state checkpoints every N flushes
+//!                                  (default 16), and a re-run against the
+//!                                  same DIR recovers and resumes
 //!   fleet [--tenants N] [--workers W] [--events E] [--tracker SPEC]
 //!                                  run N tenants on a W-worker shared pool
 //!   generate --dataset D --out F   write a synthetic dataset edge list
@@ -72,6 +77,8 @@ fn known_flags(cmd: &str) -> Vec<Flag> {
             vflag("tracker"),
             vflag("seed"),
             vflag("serve-precision"),
+            vflag("durability"),
+            vflag("checkpoint-every"),
         ]),
         "fleet" => flags.extend([
             vflag("tenants"),
@@ -525,6 +532,22 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
         Some("f32") => ServePrecision::F32,
         Some(other) => anyhow::bail!("--serve-precision expects f64 or f32, got `{other}`"),
     };
+    let durability = match flags.get("durability") {
+        None => None,
+        Some(dir) => {
+            let mut d = grest::coordinator::DurabilityConfig::new(dir.as_str());
+            d.checkpoint_every = flag_num(
+                flags,
+                "checkpoint-every",
+                grest::coordinator::durability::DurabilityConfig::DEFAULT_CHECKPOINT_EVERY,
+            )?;
+            println!(
+                "durability: wal + checkpoints under {dir} (checkpoint every {} flushes)",
+                d.checkpoint_every
+            );
+            Some(d)
+        }
+    };
     let mut tspec = TrackerSpec::parse(
         flags.get("tracker").map(|s| s.as_str()).unwrap_or("grest3"),
     )?;
@@ -543,7 +566,21 @@ fn cmd_serve_demo(flags: &HashMap<String, String>, threads: Threads) -> anyhow::
         tracker: tspec,
         threads,
         serve_precision,
+        durability,
     })?;
+    {
+        let m = svc.handle.metrics();
+        if m.recoveries.get() > 0 {
+            let snap = svc.handle.snapshot();
+            println!(
+                "recovered: v{} over {} nodes ({} wal frames replayed, {} events)",
+                snap.version,
+                snap.n_nodes,
+                m.replayed_frames.get(),
+                m.replayed_events.get()
+            );
+        }
+    }
     let h = svc.handle.clone();
     let t0 = std::time::Instant::now();
     for i in 0..n_events as u64 {
@@ -652,6 +689,7 @@ fn cmd_fleet(flags: &HashMap<String, String>, threads: Threads) -> anyhow::Resul
                 tracker: tspec.clone(),
                 threads,
                 serve_precision: grest::linalg::ServePrecision::F64,
+                durability: None,
             },
         )?;
     }

@@ -493,6 +493,44 @@ impl<P: DensePhases> EigTracker for GRest<P> {
     fn last_step_flops(&self) -> u64 {
         self.flops
     }
+
+    /// aux_u layout: `[s0, s1, s2, s3, spare_flag, flops,
+    /// last_basis_cols]` (xoshiro words first); aux_f: `[spare]` (0.0
+    /// when absent — the flag disambiguates).  The RNG state makes a
+    /// restored RSVD tracker replay the exact same sketches.
+    fn save_state(&self) -> anyhow::Result<crate::tracking::traits::TrackerState> {
+        let (s, spare) = self.rng.state_words();
+        Ok(crate::tracking::traits::TrackerState {
+            pairs: self.state.clone(),
+            aux_u: vec![
+                s[0],
+                s[1],
+                s[2],
+                s[3],
+                spare.is_some() as u64,
+                self.flops,
+                self.last_basis_cols as u64,
+            ],
+            aux_f: vec![spare.unwrap_or(0.0)],
+            adjacency: None,
+        })
+    }
+
+    fn restore_state(
+        &mut self,
+        st: crate::tracking::traits::TrackerState,
+    ) -> anyhow::Result<()> {
+        let (au, af) = (&st.aux_u, &st.aux_f);
+        if au.len() != 7 || af.len() != 1 {
+            anyhow::bail!("G-REST state layout mismatch ({} u64, {} f64)", au.len(), af.len());
+        }
+        let spare = if au[4] != 0 { Some(af[0]) } else { None };
+        self.rng = Rng::from_state([au[0], au[1], au[2], au[3]], spare);
+        self.flops = au[5];
+        self.last_basis_cols = au[6] as usize;
+        self.state = st.pairs;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -54,6 +54,36 @@ impl EigTracker for Reference {
     fn last_step_flops(&self) -> u64 {
         self.flops
     }
+
+    /// aux_u layout: `[seed, flops]`; adjacency: the retained explicit
+    /// copy.  The per-step seed must round-trip so restarted Lanczos
+    /// runs draw the same start vectors as the uninterrupted run.
+    fn save_state(&self) -> anyhow::Result<crate::tracking::traits::TrackerState> {
+        Ok(crate::tracking::traits::TrackerState {
+            pairs: self.state.clone(),
+            aux_u: vec![self.seed, self.flops],
+            aux_f: vec![],
+            adjacency: Some(self.adjacency.clone()),
+        })
+    }
+
+    fn restore_state(
+        &mut self,
+        st: crate::tracking::traits::TrackerState,
+    ) -> anyhow::Result<()> {
+        if st.aux_u.len() != 2 {
+            anyhow::bail!("reference-tracker state layout mismatch");
+        }
+        let adjacency = match st.adjacency {
+            Some(a) => a,
+            None => anyhow::bail!("reference-tracker state missing its adjacency"),
+        };
+        self.seed = st.aux_u[0];
+        self.flops = st.aux_u[1];
+        self.adjacency = adjacency;
+        self.state = st.pairs;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -108,6 +108,44 @@ impl EigTracker for Timers {
     fn last_step_flops(&self) -> u64 {
         self.flops
     }
+
+    /// aux_u layout: `[steps_since_restart, seed, restarts, flops]`;
+    /// aux_f: `[accumulated_fro]`; adjacency: TIMERS' private explicit
+    /// copy.  θ/min_gap/initial_seed travel in the descriptor.
+    fn save_state(&self) -> anyhow::Result<crate::tracking::traits::TrackerState> {
+        Ok(crate::tracking::traits::TrackerState {
+            pairs: self.inner.current().clone(),
+            aux_u: vec![
+                self.steps_since_restart as u64,
+                self.seed,
+                self.restarts as u64,
+                self.flops,
+            ],
+            aux_f: vec![self.accumulated_fro],
+            adjacency: Some(self.adjacency.clone()),
+        })
+    }
+
+    fn restore_state(
+        &mut self,
+        st: crate::tracking::traits::TrackerState,
+    ) -> anyhow::Result<()> {
+        if st.aux_u.len() != 4 || st.aux_f.len() != 1 {
+            anyhow::bail!("TIMERS state layout mismatch");
+        }
+        let adjacency = match st.adjacency {
+            Some(a) => a,
+            None => anyhow::bail!("TIMERS state missing its adjacency"),
+        };
+        self.steps_since_restart = st.aux_u[0] as usize;
+        self.seed = st.aux_u[1];
+        self.restarts = st.aux_u[2] as usize;
+        self.flops = st.aux_u[3];
+        self.accumulated_fro = st.aux_f[0];
+        self.adjacency = adjacency;
+        self.inner = Iasc::new(st.pairs);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -42,6 +42,25 @@ impl EigenPairs {
     }
 }
 
+/// A tracker's complete internal state in a tracker-agnostic container,
+/// for checkpointing (the durability tier).  Every f64 travels by bit
+/// pattern end to end, so save → checkpoint → restore is *bitwise*
+/// lossless.  Each tracker documents its own `aux_u`/`aux_f` layout;
+/// the container stays schema-free so the checkpoint format never
+/// changes when a tracker adds a field.
+#[derive(Clone)]
+pub struct TrackerState {
+    /// The tracked eigenpair estimate.
+    pub pairs: EigenPairs,
+    /// Tracker-specific integer state (RNG words, counters, flops).
+    pub aux_u: Vec<u64>,
+    /// Tracker-specific float state (e.g. accumulated ‖Δ‖_F).
+    pub aux_f: Vec<f64>,
+    /// For trackers that retain the explicit adjacency (TIMERS, the
+    /// reference): their private copy.
+    pub adjacency: Option<Csr>,
+}
+
 /// A tracker consumes a stream of structured updates Δ⁽ᵗ⁾ and maintains
 /// an estimate of the K leading eigenpairs.
 pub trait EigTracker {
@@ -67,6 +86,20 @@ pub trait EigTracker {
     /// (optional; 0 when not tracked).
     fn last_step_flops(&self) -> u64 {
         0
+    }
+
+    /// Serialize the full internal state for checkpointing.  Trackers
+    /// that don't opt in (ad-hoc test trackers) inherit this default
+    /// and simply can't be run with `ServiceConfig::durability`.
+    fn save_state(&self) -> anyhow::Result<TrackerState> {
+        anyhow::bail!("tracker '{}' does not support checkpointing", self.name())
+    }
+
+    /// Restore state captured by [`Self::save_state`] on a tracker
+    /// built from the same descriptor.  Must be bitwise-exact: after
+    /// restore, identical update streams produce identical floats.
+    fn restore_state(&mut self, _state: TrackerState) -> anyhow::Result<()> {
+        anyhow::bail!("tracker '{}' does not support checkpointing", self.name())
     }
 }
 

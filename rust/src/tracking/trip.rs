@@ -83,6 +83,28 @@ impl EigTracker for Trip {
     fn last_step_flops(&self) -> u64 {
         self.flops
     }
+
+    /// aux_u layout: `[flops]`.  TRIP is stateless beyond its pairs.
+    fn save_state(&self) -> anyhow::Result<crate::tracking::traits::TrackerState> {
+        Ok(crate::tracking::traits::TrackerState {
+            pairs: self.state.clone(),
+            aux_u: vec![self.flops],
+            aux_f: vec![],
+            adjacency: None,
+        })
+    }
+
+    fn restore_state(
+        &mut self,
+        st: crate::tracking::traits::TrackerState,
+    ) -> anyhow::Result<()> {
+        if st.aux_u.len() != 1 {
+            anyhow::bail!("TRIP state layout mismatch");
+        }
+        self.flops = st.aux_u[0];
+        self.state = st.pairs;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,577 @@
+//! Durability-tier integration tests: the crash/fault-injection harness.
+//!
+//! The contract under test (ISSUE 10): a tenant killed at **any** batch
+//! boundary — or at **any** storage syscall boundary, including torn
+//! writes and silent bit flips — recovers to a state that is *bitwise
+//! identical* to some prefix of the uninterrupted run, and re-ingesting
+//! the remaining events converges bitwise to the uninterrupted final
+//! state.  Corruption is detected loudly (`DurabilityError::Corrupt`),
+//! never silently replayed.
+//!
+//! The recovery recipe in `spawn_tenant` deliberately mirrors the
+//! private `build_state` flow in `coordinator/service.rs` (load →
+//! restore checkpoint → replay WAL tail → attach durability), driven
+//! here over `Memory`/`FaultyBackend` storage so every fault point is
+//! reachable without real I/O.
+
+use grest::coordinator::durability::backend::{
+    FaultHandle, FaultMode, FaultyBackend, Memory, StorageBackend,
+};
+use grest::coordinator::durability::recover::{self, Recovered};
+use grest::coordinator::durability::wal::{decode_events, encode_events};
+use grest::coordinator::durability::{DurabilityConfig, DurabilityError, TenantDurability};
+use grest::coordinator::metrics::Metrics;
+use grest::coordinator::snapshot::{EmbeddingSnapshot, PublishStamp, SnapshotStore};
+use grest::coordinator::tenant::{TenantBudget, TenantCmd, TenantState};
+use grest::coordinator::{BatchPolicy, ConfigError, ServiceConfig, TrackingService};
+use grest::graph::graph::Graph;
+use grest::graph::stream::{DeltaBuilder, GraphEvent, IdMap};
+use grest::linalg::f32mat::ServePrecision;
+use grest::linalg::rng::Rng;
+use grest::linalg::threads::Threads;
+use grest::tracking::spec::TrackerSpec;
+use grest::tracking::traits::init_eigenpairs;
+use std::sync::Arc;
+
+const SEED: u64 = 5;
+const K: usize = 3;
+const CKPT_EVERY: usize = 3;
+
+fn seed_graph() -> Graph {
+    let mut rng = Rng::new(SEED);
+    grest::graph::generators::erdos_renyi(30, 0.1, &mut rng)
+}
+
+/// Deterministic mixed event stream: every batch interns at least one
+/// brand-new external id (so every flush advances the version by
+/// exactly 1 — version == batches applied), plus random adds/removes
+/// and a self-loop (logged but dropped pre-intern, exercising the
+/// replay-the-raw-stream counting contract).
+fn batches() -> Vec<Vec<GraphEvent>> {
+    let mut rng = Rng::new(77);
+    (0..8u64)
+        .map(|b| {
+            let mut evs = vec![GraphEvent::AddEdge(rng.below(30) as u64, 1000 + b)];
+            for _ in 0..(1 + rng.below(4)) {
+                let u = rng.below(40) as u64;
+                let v = rng.below(40) as u64;
+                evs.push(if rng.flip(0.75) {
+                    GraphEvent::AddEdge(u, v)
+                } else {
+                    GraphEvent::RemoveEdge(u, v)
+                });
+            }
+            evs.push(GraphEvent::AddEdge(b + 50, b + 50)); // self-loop
+            evs
+        })
+        .collect()
+}
+
+/// Bitwise view of the latest published snapshot: version, node count,
+/// eigenvalue bits, eigenvector bits, external id order.
+type Fingerprint = (u64, usize, Vec<u64>, Vec<u64>, Vec<u64>);
+
+fn snap_fingerprint(s: &EmbeddingSnapshot) -> Fingerprint {
+    (
+        s.version,
+        s.n_nodes,
+        s.pairs.values.iter().map(|v| v.to_bits()).collect(),
+        s.pairs.vectors.as_slice().iter().map(|v| v.to_bits()).collect(),
+        s.ids.externals().to_vec(),
+    )
+}
+
+fn fingerprint(store: &SnapshotStore) -> Fingerprint {
+    snap_fingerprint(&store.latest())
+}
+
+/// Build (or recover) a tenant over the given storage, mirroring the
+/// service spawn path: load checkpoint + WAL, restore, replay the tail
+/// through the normal flush machinery, then attach the WAL for live
+/// logging.
+fn spawn_tenant_with_policy(
+    wal: Box<dyn StorageBackend>,
+    ckpt: Box<dyn StorageBackend>,
+    policy: BatchPolicy,
+) -> Result<(TenantState, SnapshotStore, Arc<Metrics>), DurabilityError> {
+    let g = seed_graph();
+    let a0 = g.adjacency();
+    let init = init_eigenpairs(&a0, K, SEED);
+    let mut tracker =
+        TrackerSpec::default().build_seeded_send(&a0, &init, SEED).expect("tracker builds");
+    let store = SnapshotStore::new(EmbeddingSnapshot {
+        version: 0,
+        n_nodes: a0.n_rows,
+        pairs: init.clone(),
+        ids: Arc::new(IdMap::identity(a0.n_rows)),
+        published_at: PublishStamp::now(),
+    });
+    let metrics = Metrics::new();
+    let Recovered { checkpoint, tail, truncated_bytes, wal, ckpt_backend } =
+        recover::load(wal, ckpt)?;
+    metrics.wal_truncated_bytes.add(truncated_bytes);
+    let recovered_something = checkpoint.is_some() || !tail.is_empty();
+    let mut state = match checkpoint {
+        Some(c) => {
+            tracker
+                .restore_state(c.tracker)
+                .map_err(|e| DurabilityError::Unsupported(e.to_string()))?;
+            let builder = DeltaBuilder::from_committed(&c.adjacency, c.ids.clone());
+            let mut st = TenantState::new(
+                tracker,
+                builder,
+                c.adjacency.clone(),
+                policy,
+                store.clone(),
+                metrics.clone(),
+                TenantBudget::default(),
+            );
+            st.restore_version(c.version);
+            if c.version > 0 {
+                store.publish(EmbeddingSnapshot {
+                    version: c.version,
+                    n_nodes: c.adjacency.n_rows,
+                    pairs: c.pairs,
+                    ids: Arc::new(IdMap::from_externals(c.ids)),
+                    published_at: PublishStamp::restored(c.wall_us),
+                });
+            }
+            st
+        }
+        None => TenantState::new(
+            tracker,
+            DeltaBuilder::from_graph(g),
+            a0,
+            policy,
+            store.clone(),
+            metrics.clone(),
+            TenantBudget::default(),
+        ),
+    };
+    state.replay(&tail)?;
+    if recovered_something {
+        metrics.recoveries.incr();
+    }
+    state.attach_durability(TenantDurability::new(wal, ckpt_backend, CKPT_EVERY));
+    Ok((state, store, metrics))
+}
+
+fn spawn_tenant(
+    wal: Box<dyn StorageBackend>,
+    ckpt: Box<dyn StorageBackend>,
+) -> Result<(TenantState, SnapshotStore, Arc<Metrics>), DurabilityError> {
+    // ByCount(1): one Events command closes one batch — one flush, one
+    // version — so "crash after batch b" is exactly "apply b commands"
+    spawn_tenant_with_policy(wal, ckpt, BatchPolicy::ByCount(1))
+}
+
+fn feed(state: &mut TenantState, batches: &[Vec<GraphEvent>]) {
+    for b in batches {
+        let _ = state.apply(TenantCmd::Events(b.clone()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// crash at every batch boundary
+
+#[test]
+fn crash_at_every_batch_boundary_recovers_bitwise_identical() {
+    let bs = batches();
+    let (mut reference, ref_store, _) =
+        spawn_tenant(Box::new(Memory::new()), Box::new(Memory::new())).unwrap();
+    feed(&mut reference, &bs);
+    let want = fingerprint(&ref_store);
+    assert_eq!(want.0, bs.len() as u64, "every batch advances the version");
+
+    for b in 0..=bs.len() {
+        let wal_mem = Memory::new();
+        let ckpt_mem = Memory::new();
+        {
+            let (mut live, _, _) =
+                spawn_tenant(Box::new(wal_mem.clone()), Box::new(ckpt_mem.clone())).unwrap();
+            feed(&mut live, &bs[..b]);
+        } // drop without ceremony: `TenantDurability` does no Drop I/O
+        wal_mem.crash(); // power cut: unsynced page-cache bytes are gone
+        let (mut rec, rec_store, metrics) =
+            spawn_tenant(Box::new(wal_mem.clone()), Box::new(ckpt_mem.clone()))
+                .unwrap_or_else(|e| panic!("recovery after batch {b} failed: {e}"));
+        assert_eq!(rec.version(), b as u64, "recovered version after batch {b}");
+        assert_eq!(metrics.recoveries.get(), u64::from(b > 0));
+        feed(&mut rec, &bs[b..]);
+        assert_eq!(fingerprint(&rec_store), want, "crash after batch {b} diverged");
+    }
+}
+
+#[test]
+fn unsynced_events_die_with_the_process_and_reingest_converges() {
+    // Events ingested but never flushed sit in the WAL's in-process
+    // buffer — a crash loses them, exactly like a real page cache.  The
+    // producer re-sends (at-least-once ingest) and the result converges.
+    let bs = batches();
+    let policy = BatchPolicy::ByCount(1_000_000);
+    let (mut reference, ref_store, _) = spawn_tenant_with_policy(
+        Box::new(Memory::new()),
+        Box::new(Memory::new()),
+        policy,
+    )
+    .unwrap();
+    for b in &bs {
+        let _ = reference.apply(TenantCmd::Events(b.clone()));
+        reference.flush();
+    }
+    let want = fingerprint(&ref_store);
+
+    let wal_mem = Memory::new();
+    let ckpt_mem = Memory::new();
+    {
+        let (mut live, _, _) = spawn_tenant_with_policy(
+            Box::new(wal_mem.clone()),
+            Box::new(ckpt_mem.clone()),
+            policy,
+        )
+        .unwrap();
+        for b in &bs[..4] {
+            let _ = live.apply(TenantCmd::Events(b.clone()));
+            live.flush();
+        }
+        let _ = live.apply(TenantCmd::Events(bs[4].clone())); // never flushed
+        assert_eq!(live.version(), 4);
+    }
+    wal_mem.crash();
+    let (mut rec, rec_store, _) = spawn_tenant_with_policy(
+        Box::new(wal_mem.clone()),
+        Box::new(ckpt_mem.clone()),
+        policy,
+    )
+    .unwrap();
+    assert_eq!(rec.version(), 4, "the unflushed batch is gone, prefix intact");
+    for b in &bs[4..] {
+        let _ = rec.apply(TenantCmd::Events(b.clone()));
+        rec.flush();
+    }
+    assert_eq!(fingerprint(&rec_store), want);
+}
+
+// ---------------------------------------------------------------------
+// fault matrix: kill / torn write at every WAL syscall boundary
+
+/// Run the reference stream once over a fault-counted WAL, returning
+/// the per-version fingerprints, the final fingerprint, and the number
+/// of WAL syscalls (the fault-point space).
+fn wal_reference() -> (Vec<Fingerprint>, Fingerprint, usize) {
+    let bs = batches();
+    let handle = FaultHandle::new();
+    let (mut reference, ref_store, _) = spawn_tenant(
+        Box::new(FaultyBackend::new(Memory::new(), handle.clone())),
+        Box::new(Memory::new()),
+    )
+    .unwrap();
+    let mut fps = vec![fingerprint(&ref_store)];
+    for b in &bs {
+        let _ = reference.apply(TenantCmd::Events(b.clone()));
+        fps.push(fingerprint(&ref_store));
+    }
+    let last = fps.last().cloned().expect("nonempty");
+    (fps, last, handle.ops())
+}
+
+/// After recovery: close any replayed-but-uncommitted batch, re-feed
+/// the batches the durable state had not absorbed, and check bitwise
+/// convergence with the uninterrupted final state.
+fn assert_converges(
+    mut rec: TenantState,
+    rec_store: &SnapshotStore,
+    bs: &[Vec<GraphEvent>],
+    want_final: &Fingerprint,
+    label: &str,
+) {
+    rec.flush(); // applies a fully-replayed pending batch, if any
+    let v = rec.version() as usize;
+    assert!(v <= bs.len(), "{label}: recovered past the stream end");
+    feed(&mut rec, &bs[v..]);
+    assert_eq!(&fingerprint(rec_store), want_final, "{label}: diverged after re-ingest");
+}
+
+#[test]
+fn kill_and_torn_faults_at_every_wal_syscall_recover_prefix_exact() {
+    let bs = batches();
+    let (ref_fps, want_final, wal_ops) = wal_reference();
+    assert!(wal_ops > 12, "fault-point space unexpectedly small: {wal_ops}");
+
+    for fail_at in 0..wal_ops {
+        for mode in [FaultMode::Kill, FaultMode::TornWrite] {
+            let label = format!("{mode:?} at wal syscall {fail_at}");
+            let wal_mem = Memory::new();
+            let ckpt_mem = Memory::new();
+            let handle = FaultHandle::new();
+            handle.arm(fail_at, mode);
+            {
+                // the "process": runs until the fault kills its storage,
+                // then keeps limping (flushes abort, counted) — or dies
+                // at spawn if the fault hits the recovery read
+                let spawned = spawn_tenant(
+                    Box::new(FaultyBackend::new(wal_mem.clone(), handle.clone())),
+                    Box::new(ckpt_mem.clone()),
+                );
+                if let Ok((mut live, _, _)) = spawned {
+                    feed(&mut live, &bs);
+                }
+            }
+            wal_mem.crash();
+            let (rec, rec_store, _) =
+                spawn_tenant(Box::new(wal_mem.clone()), Box::new(ckpt_mem.clone()))
+                    .unwrap_or_else(|e| panic!("{label}: recovery failed: {e}"));
+            let v = rec.version() as usize;
+            assert_eq!(
+                fingerprint(&rec_store),
+                ref_fps[v],
+                "{label}: recovered state is not the reference prefix at version {v}"
+            );
+            assert_converges(rec, &rec_store, &bs, &want_final, &label);
+        }
+    }
+}
+
+#[test]
+fn bit_flips_are_detected_never_silently_replayed() {
+    let bs = batches();
+    let (ref_fps, want_final, wal_ops) = wal_reference();
+
+    for fail_at in 0..wal_ops {
+        let label = format!("BitFlip at wal syscall {fail_at}");
+        let wal_mem = Memory::new();
+        let ckpt_mem = Memory::new();
+        let handle = FaultHandle::new();
+        handle.arm(fail_at, FaultMode::BitFlip);
+        {
+            let spawned = spawn_tenant(
+                Box::new(FaultyBackend::new(wal_mem.clone(), handle.clone())),
+                Box::new(ckpt_mem.clone()),
+            );
+            if let Ok((mut live, _, _)) = spawned {
+                feed(&mut live, &bs);
+            }
+        }
+        wal_mem.crash();
+        match spawn_tenant(Box::new(wal_mem.clone()), Box::new(ckpt_mem.clone())) {
+            // interior damage: refusing to replay is the contract
+            Err(DurabilityError::Corrupt { .. }) => {}
+            Err(e) => panic!("{label}: unexpected recovery error: {e}"),
+            Ok((rec, rec_store, metrics)) => {
+                // tail damage: recovery truncates, REPORTS the loss, and
+                // resumes prefix-exact — any lost progress must show up
+                // in wal_truncated_bytes, never vanish silently
+                let v = rec.version() as usize;
+                assert_eq!(
+                    fingerprint(&rec_store),
+                    ref_fps[v],
+                    "{label}: silent divergence at version {v}"
+                );
+                if v < bs.len() {
+                    assert!(
+                        metrics.wal_truncated_bytes.get() > 0,
+                        "{label}: lost progress (v={v}) without reporting truncation"
+                    );
+                }
+                assert_converges(rec, &rec_store, &bs, &want_final, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn faults_in_checkpoint_storage_never_lose_state() {
+    let bs = batches();
+    let (_, want_final, _) = wal_reference();
+    // count checkpoint-backend syscalls on a clean run
+    let ckpt_handle = FaultHandle::new();
+    {
+        let (mut clean, _, _) = spawn_tenant(
+            Box::new(Memory::new()),
+            Box::new(FaultyBackend::new(Memory::new(), ckpt_handle.clone())),
+        )
+        .unwrap();
+        feed(&mut clean, &bs);
+    }
+    let ckpt_ops = ckpt_handle.ops();
+    assert!(ckpt_ops >= 2, "expected a load read plus checkpoint stores, got {ckpt_ops}");
+
+    for fail_at in 0..ckpt_ops {
+        for mode in [FaultMode::Kill, FaultMode::TornWrite, FaultMode::BitFlip] {
+            let label = format!("{mode:?} at ckpt syscall {fail_at}");
+            let wal_mem = Memory::new();
+            let ckpt_mem = Memory::new();
+            let handle = FaultHandle::new();
+            handle.arm(fail_at, mode);
+            {
+                let spawned = spawn_tenant(
+                    Box::new(wal_mem.clone()),
+                    Box::new(FaultyBackend::new(ckpt_mem.clone(), handle.clone())),
+                );
+                if let Ok((mut live, _, _)) = spawned {
+                    feed(&mut live, &bs);
+                }
+            }
+            wal_mem.crash();
+            match spawn_tenant(Box::new(wal_mem.clone()), Box::new(ckpt_mem.clone())) {
+                Ok((rec, rec_store, _)) => {
+                    assert_converges(rec, &rec_store, &bs, &want_final, &label);
+                }
+                // a silently flipped checkpoint image (with the WAL
+                // prefix it covered already truncated) must refuse to
+                // load — loud corruption beats silent divergence
+                Err(DurabilityError::Corrupt { .. }) if mode == FaultMode::BitFlip => {}
+                Err(e) => panic!("{label}: recovery failed: {e}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// event-frame codec round-trip (satellite: property test)
+
+#[test]
+fn event_frame_roundtrip_is_identity() {
+    // empty batch
+    assert_eq!(decode_events(&encode_events(&[])).unwrap(), Vec::<GraphEvent>::new());
+    // extremes: max/zero ids, self-loops
+    let edge_cases = [
+        GraphEvent::AddEdge(u64::MAX, 0),
+        GraphEvent::RemoveEdge(u64::MAX, u64::MAX),
+        GraphEvent::AddEdge(7, 7),
+        GraphEvent::RemoveEdge(0, 0),
+    ];
+    assert_eq!(decode_events(&encode_events(&edge_cases)).unwrap(), edge_cases);
+    // randomized streams over both event kinds and the full id width
+    let mut rng = Rng::new(123);
+    for _ in 0..200 {
+        let n = rng.below(40);
+        let events: Vec<GraphEvent> = (0..n)
+            .map(|_| {
+                let u = ((rng.below(1 << 30) as u64) << 34) ^ rng.below(1 << 30) as u64;
+                let v = ((rng.below(1 << 30) as u64) << 34) ^ rng.below(1 << 30) as u64;
+                if rng.flip(0.5) {
+                    GraphEvent::AddEdge(u, v)
+                } else {
+                    GraphEvent::RemoveEdge(u, v)
+                }
+            })
+            .collect();
+        assert_eq!(decode_events(&encode_events(&events)).unwrap(), events);
+    }
+}
+
+// ---------------------------------------------------------------------
+// config validation (satellite)
+
+fn service_config(durability: Option<DurabilityConfig>) -> ServiceConfig {
+    ServiceConfig {
+        initial: seed_graph(),
+        k: K,
+        policy: BatchPolicy::ByCount(1_000_000),
+        seed: SEED,
+        tracker: TrackerSpec::default(),
+        threads: Threads::SINGLE,
+        serve_precision: ServePrecision::F64,
+        durability,
+    }
+}
+
+#[test]
+fn config_validation_catches_bad_durability() {
+    // no durability: nothing to validate
+    service_config(None).validate().unwrap();
+
+    // checkpoint_every == 0 is meaningless
+    let mut d = DurabilityConfig::new(std::env::temp_dir().join("grest-durability-unused"));
+    d.checkpoint_every = 0;
+    match service_config(Some(d)).validate() {
+        Err(ConfigError::ZeroCheckpointInterval) => {}
+        other => panic!("zero interval must be rejected, got {other:?}"),
+    }
+
+    // a durability dir nested under a regular file can never be created
+    let file = std::env::temp_dir().join(format!("grest-durability-flat-{}", std::process::id()));
+    std::fs::write(&file, b"not a directory").unwrap();
+    let d = DurabilityConfig::new(file.join("sub"));
+    match service_config(Some(d.clone())).validate() {
+        Err(ConfigError::DirUnwritable { path, .. }) => assert_eq!(path, file.join("sub")),
+        other => panic!("unwritable dir must be rejected, got {other:?}"),
+    }
+    // and the spawn path surfaces the same error instead of limping on
+    let err = match TrackingService::spawn(service_config(Some(d))) {
+        Err(e) => e,
+        Ok(_) => panic!("spawn over an unwritable durability dir must fail"),
+    };
+    assert!(err.to_string().contains("not writable"), "{err}");
+    let _ = std::fs::remove_file(file);
+}
+
+// ---------------------------------------------------------------------
+// end-to-end: the real service over real files
+
+#[test]
+fn service_recovers_from_disk_across_respawn() {
+    let dir = std::env::temp_dir().join(format!("grest-durability-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut d = DurabilityConfig::new(&dir);
+    d.checkpoint_every = 2;
+    let bs = batches();
+
+    // run 1: half the stream, one flush per batch, then an abrupt stop
+    let fp_mid;
+    {
+        let svc = TrackingService::spawn(service_config(Some(d.clone()))).unwrap();
+        let h = &svc.handle;
+        for b in &bs[..4] {
+            h.ingest(b.clone()).unwrap();
+            h.flush().unwrap();
+        }
+        assert_eq!(h.snapshot().version, 4);
+        fp_mid = snap_fingerprint(&h.snapshot());
+        let m = h.metrics();
+        assert_eq!(m.wal_appends.get(), 4);
+        assert!(m.wal_bytes.get() > 0);
+        assert!(m.checkpoints_written.get() >= 1, "checkpoint_every=2 over 4 flushes");
+        assert_eq!(m.wal_failures.get(), 0);
+        svc.join();
+    }
+
+    // run 2: respawn on the same dir — resumes bitwise, versions continue
+    let fp_final;
+    {
+        let svc = TrackingService::spawn(service_config(Some(d.clone()))).unwrap();
+        let h = &svc.handle;
+        assert_eq!(h.metrics().recoveries.get(), 1, "respawn must count a recovery");
+        assert_eq!(h.snapshot().version, 4);
+        assert_eq!(
+            snap_fingerprint(&h.snapshot()),
+            fp_mid,
+            "recovered snapshot must be bitwise the pre-stop one"
+        );
+        for b in &bs[4..] {
+            h.ingest(b.clone()).unwrap();
+            h.flush().unwrap();
+        }
+        assert_eq!(h.snapshot().version, bs.len() as u64);
+        fp_final = snap_fingerprint(&h.snapshot());
+        svc.join();
+    }
+
+    // the crash-interrupted run equals an uninterrupted in-memory run
+    {
+        let svc = TrackingService::spawn(service_config(None)).unwrap();
+        let h = &svc.handle;
+        for b in &bs {
+            h.ingest(b.clone()).unwrap();
+            h.flush().unwrap();
+        }
+        assert_eq!(
+            snap_fingerprint(&h.snapshot()),
+            fp_final,
+            "recovered run must match the uninterrupted run bitwise"
+        );
+        svc.join();
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -35,6 +35,7 @@ fn tenant_config(t: u64) -> ServiceConfig {
         tracker: TrackerSpec::parse(SPECS[t as usize % SPECS.len()]).unwrap(),
         threads: Threads::SINGLE,
         serve_precision: ServePrecision::F64,
+        durability: None,
     }
 }
 

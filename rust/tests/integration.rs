@@ -227,6 +227,7 @@ fn coordinator_survives_burst_and_preserves_order() {
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
         threads: grest::linalg::threads::Threads::SINGLE,
         serve_precision: grest::linalg::ServePrecision::F64,
+        durability: None,
     })
     .unwrap();
     // burst: add then remove the same edge repeatedly; final state must
@@ -266,6 +267,7 @@ fn coordinator_isolated_new_nodes_then_removal_heavy_batches() {
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
         threads: grest::linalg::threads::Threads::SINGLE,
         serve_precision: grest::linalg::ServePrecision::F64,
+        durability: None,
     })
     .unwrap();
     let h = &svc.handle;
@@ -338,6 +340,7 @@ fn read_storm_soak_queries_never_touch_the_worker() {
         tracker: grest::tracking::TrackerSpec::parse("grest3").unwrap(),
         threads: grest::linalg::threads::Threads::SINGLE,
         serve_precision: grest::linalg::ServePrecision::F64,
+        durability: None,
     })
     .unwrap();
     let h = svc.handle.clone();
